@@ -1,0 +1,134 @@
+//! End-to-end driver: trains the demo MLP on synthetic digit glyphs for a
+//! few hundred steps through BOTH compute paths and logs the loss curves:
+//!
+//! * **XLA path** — the Rust coordinator (Batch Queue, epochs, metrics)
+//!   drives the AOT-compiled `mlp_train_step` artifact (JAX fwd/bwd with
+//!   the Pallas fused-matmul + softmax-xent kernels inside) via PJRT.
+//!   Python is not running; the artifact was lowered once by
+//!   `make artifacts`. This proves all three layers compose.
+//! * **Native path** — the same architecture on the NNTrainer engine
+//!   (Algorithm 1 + sorting planner). Both start from identical weights;
+//!   per-step losses must track each other to ~1e-4.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use nntrainer::compiler::CompileOpts;
+use nntrainer::dataset::{BatchQueue, DataProducer, DigitsProducer};
+use nntrainer::metrics::Timer;
+use nntrainer::model::{zoo, ModelBuilder};
+use nntrainer::rng::Rng;
+use nntrainer::runtime::catalog::{self, ArtifactCatalog};
+use nntrainer::runtime::XlaRuntime;
+
+const EPOCHS: usize = 5;
+const DATASET: usize = 1920; // 60 steps/epoch at batch 32 → 300 steps
+
+fn make_producer() -> Box<dyn DataProducer> {
+    Box::new(DigitsProducer::new(DATASET, 16, 1, 1234))
+}
+
+fn main() -> nntrainer::Result<()> {
+    let (bsz, i, h, o) =
+        (catalog::MLP_BATCH, catalog::MLP_IN, catalog::MLP_HIDDEN, catalog::MLP_OUT);
+
+    // identical initial weights for both paths
+    let mut rng = Rng::new(4242);
+    let a0 = (6.0 / (i + h) as f32).sqrt();
+    let a1 = (6.0 / (h + o) as f32).sqrt();
+    let mut w0 = vec![0f32; i * h];
+    let mut w1 = vec![0f32; h * o];
+    rng.fill_uniform(&mut w0, -a0, a0);
+    rng.fill_uniform(&mut w1, -a1, a1);
+    let mut b0 = vec![0f32; h];
+    let mut b1 = vec![0f32; o];
+
+    // ---------------- XLA path (L3 coordinator + PJRT artifact) --------
+    let dir = ArtifactCatalog::default_dir();
+    ArtifactCatalog::open(&dir)?;
+    let mut rt = XlaRuntime::new(dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let (mut xw0, mut xb0, mut xw1, mut xb1) = (w0.clone(), b0.clone(), w1.clone(), b1.clone());
+    let mut xla_curve = Vec::new();
+    let timer = Timer::start();
+    let mut steps = 0usize;
+    for _epoch in 0..EPOCHS {
+        let queue = BatchQueue::spawn(make_producer(), bsz, 2);
+        while let Some(batch) = queue.next() {
+            let out = rt.run_f32(
+                "mlp_train_step",
+                &[
+                    (&xw0[..], &[i, h][..]),
+                    (&xb0[..], &[h][..]),
+                    (&xw1[..], &[h, o][..]),
+                    (&xb1[..], &[o][..]),
+                    (&batch.input[..], &[bsz, i][..]),
+                    (&batch.label[..], &[bsz, o][..]),
+                ],
+            )?;
+            xw0.copy_from_slice(&out[0]);
+            xb0.copy_from_slice(&out[1]);
+            xw1.copy_from_slice(&out[2]);
+            xb1.copy_from_slice(&out[3]);
+            xla_curve.push(out[4][0]);
+            steps += 1;
+        }
+    }
+    let xla_time = timer.elapsed_s();
+    println!("XLA path: {steps} steps in {xla_time:.2}s ({:.1} steps/s)", steps as f64 / xla_time);
+
+    // ---------------- native path (NNTrainer engine) --------------------
+    let mut model = ModelBuilder::new()
+        .add_nodes(zoo::mlp_e2e())
+        .optimizer("sgd", &[("learning_rate", "0.5")]) // = MLP_LR in model.py
+        .compile(&CompileOpts { batch: bsz, ..Default::default() })?;
+    model.exec.write_weight("fc0:weight", &w0)?;
+    model.exec.write_weight("fc0:bias", &b0)?;
+    model.exec.write_weight("fc1:weight", &w1)?;
+    model.exec.write_weight("fc1:bias", &b1)?;
+    println!(
+        "native plan: peak pool {:.2} MiB (ideal {:.2} MiB)",
+        model.report.pool_mib(),
+        model.report.ideal_mib()
+    );
+    let mut native_curve = Vec::new();
+    let timer = Timer::start();
+    for _epoch in 0..EPOCHS {
+        let queue = BatchQueue::spawn(make_producer(), bsz, 2);
+        while let Some(batch) = queue.next() {
+            model.bind_batch(&batch.input, &batch.label)?;
+            native_curve.push(model.exec.train_iteration());
+        }
+    }
+    let native_time = timer.elapsed_s();
+    println!(
+        "native path: {} steps in {native_time:.2}s ({:.1} steps/s)",
+        native_curve.len(),
+        native_curve.len() as f64 / native_time
+    );
+
+    // ---------------- compare ------------------------------------------
+    assert_eq!(xla_curve.len(), native_curve.len());
+    let mut max_dev = 0f32;
+    for (a, b) in xla_curve.iter().zip(native_curve.iter()) {
+        max_dev = max_dev.max((a - b).abs() / b.abs().max(1.0));
+    }
+    println!("loss curves (every 30th step):");
+    println!("{:>6} {:>12} {:>12}", "step", "xla", "native");
+    for (k, (a, b)) in xla_curve.iter().zip(native_curve.iter()).enumerate() {
+        if k % 30 == 0 || k == xla_curve.len() - 1 {
+            println!("{k:>6} {a:>12.5} {b:>12.5}");
+        }
+    }
+    println!("max relative loss deviation xla-vs-native: {max_dev:.2e}");
+    let first = native_curve[0];
+    let last = *native_curve.last().unwrap();
+    println!("convergence: {first:.4} -> {last:.4} ({:.1}% of start)", last / first * 100.0);
+    assert!(max_dev < 5e-3, "paths diverged: {max_dev}");
+    assert!(last < first * 0.2, "did not converge");
+    println!("END-TO-END OK: three layers compose, paths agree, model converges");
+    Ok(())
+}

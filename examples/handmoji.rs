@@ -1,0 +1,116 @@
+//! HandMoji (paper Fig 13): on-device personalization on a watch-class
+//! budget. A frozen backbone acts as feature extractor; the user's few
+//! hand-drawn symbols are pushed through it **once**, features are
+//! cached, and only a single fully-connected classifier trains — the
+//! whole flow finishes in well under the paper's 10-second budget.
+//!
+//! The model description is a ~20-line INI string, mirroring the paper's
+//! "entire training configuration is described within 30 lines".
+
+use nntrainer::compiler::CompileOpts;
+use nntrainer::dataset::producer::{CachedProducer, Sample};
+use nntrainer::dataset::{DataProducer, DigitsProducer};
+use nntrainer::metrics::Timer;
+use nntrainer::model::{ini, zoo, ModelBuilder, TrainConfig};
+
+/// The on-device training half: classifier over cached features.
+const HEAD_INI: &str = r#"
+# HandMoji classifier — trains on cached backbone features
+[Model]
+Type = NeuralNetwork
+Loss = cross_entropy
+Optimizer = sgd
+Learning_rate = 0.5
+Batch_Size = 5
+Epochs = 40
+
+[features]
+Type = input
+Input_Shape = 1:1:64
+
+[classifier]
+Type = fully_connected
+Unit = 2
+"#;
+
+fn main() -> nntrainer::Result<()> {
+    let total = Timer::start();
+
+    // ---- pre-trained backbone (vendor-shipped in the paper; trained
+    // here on generic glyphs, then frozen) ------------------------------
+    let mut backbone = ModelBuilder::new()
+        .add_nodes(zoo::handmoji_backbone(16))
+        .optimizer("sgd", &[("learning_rate", "0.2")])
+        .compile(&CompileOpts { batch: 10, ..Default::default() })?;
+    let make = || -> Box<dyn DataProducer> { Box::new(DigitsProducer::new(200, 16, 1, 5)) };
+    backbone.train(make, &TrainConfig { epochs: 2, ..Default::default() })?;
+    println!("backbone ready ({:.2} MiB peak)", backbone.report.pool_mib());
+
+    // ---- the user draws 5 samples for each of 2 symbols ----------------
+    // (synthetic stand-ins: two distinct digit glyph classes)
+    let mut user = DigitsProducer::new(1000, 16, 1, 987);
+    let mut samples = Vec::new();
+    for k in 0..10 {
+        // classes 3 and 7 as the two personal symbols
+        let class = if k < 5 { 3 } else { 7 };
+        let s = user.sample(class + 10 * k);
+        samples.push((s.input, if k < 5 { 0usize } else { 1 }));
+    }
+
+    // ---- feature extraction, cached after the first pass (Fig 13's
+    // "cache the results from the feature extractor in the first epoch")
+    let extract = Timer::start();
+    let mut cached = Vec::new();
+    for (img, label) in &samples {
+        let mut batch = Vec::new();
+        for _ in 0..10 {
+            batch.extend_from_slice(img);
+        }
+        backbone.exec.bind_input(0, &batch)?;
+        backbone.exec.forward_pass();
+        let feats = backbone.exec.read_output("feat/activation")?;
+        let mut onehot = vec![0f32; 2];
+        onehot[*label] = 1.0;
+        cached.push(Sample { input: feats[..64].to_vec(), label: onehot });
+    }
+    println!("features cached once in {:.0} ms", extract.elapsed_ms());
+
+    // ---- train the classifier head from the INI description ------------
+    let (builder, hyper) = ini::builder_from_ini(HEAD_INI)?;
+    let mut head = builder.compile(&CompileOpts { batch: hyper.batch, ..Default::default() })?;
+    println!(
+        "classifier plan: {:.1} KiB peak pool — watch-class budget",
+        head.report.pool_bytes as f64 / 1024.0
+    );
+    let train = Timer::start();
+    let cached2 = cached.clone();
+    let make_head =
+        move || -> Box<dyn DataProducer> { Box::new(CachedProducer::new(cached2.clone())) };
+    let summary = head.train(&make_head, &TrainConfig { epochs: hyper.epochs, ..Default::default() })?;
+    println!(
+        "personalized in {:.0} ms over {} epochs: loss {:.4} -> {:.4}",
+        train.elapsed_ms(),
+        summary.epochs,
+        summary.losses_per_epoch[0],
+        summary.final_loss
+    );
+
+    // ---- verify the emoji mapping -------------------------------------
+    let mut correct = 0;
+    for (feat_sample, want) in cached.iter().zip(samples.iter().map(|s| s.1)) {
+        let mut batch = Vec::new();
+        for _ in 0..5 {
+            batch.extend_from_slice(&feat_sample.input);
+        }
+        let logits = head.infer(&batch)?;
+        let pred = if logits[0] > logits[1] { 0 } else { 1 };
+        if pred == want {
+            correct += 1;
+        }
+    }
+    println!("emoji mapping: {correct}/10 of the user's samples classified");
+    let secs = total.elapsed_s();
+    println!("total wall time {secs:.2}s (paper budget: < 10 s)");
+    assert!(secs < 10.0);
+    Ok(())
+}

@@ -1,0 +1,108 @@
+"""AOT lowering: jax → HLO *text* artifacts for the Rust PJRT runtime.
+
+Run once by ``make artifacts``; Python never touches the training path
+afterwards. HLO text (not serialized HloModuleProto) is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids that the
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def catalog():
+    """name -> (fn, example_args). Every entry lowers to one artifact."""
+    B, I, H, O = M.MLP_BATCH, M.MLP_IN, M.MLP_HIDDEN, M.MLP_OUT
+    lin = M.ORACLE_LINEAR
+    cv = M.ORACLE_CONV
+    ls = M.ORACLE_LSTM
+    xe = M.ORACLE_XENT
+    return {
+        "mlp_train_step": (
+            lambda *a: M.mlp_train_step(*a),
+            (spec(I, H), spec(H), spec(H, O), spec(O), spec(B, I), spec(B, O)),
+        ),
+        "mlp_forward": (
+            lambda *a: (M.mlp_forward(*a),),
+            (spec(I, H), spec(H), spec(H, O), spec(O), spec(B, I)),
+        ),
+        "oracle_linear_fwd": (
+            lambda x, w, b: (M.oracle_linear_fwd(x, w, b),),
+            (spec(lin["m"], lin["k"]), spec(lin["k"], lin["n"]), spec(lin["n"])),
+        ),
+        "oracle_linear_sigmoid_fwd": (
+            lambda x, w, b: (M.oracle_linear_sigmoid_fwd(x, w, b),),
+            (spec(lin["m"], lin["k"]), spec(lin["k"], lin["n"]), spec(lin["n"])),
+        ),
+        "oracle_conv2d_fwd": (
+            lambda x, w: (M.oracle_conv2d_fwd(x, w),),
+            (
+                spec(cv["b"], cv["c"], cv["h"], cv["w"]),
+                spec(cv["oc"], cv["c"], cv["kk"], cv["kk"]),
+            ),
+        ),
+        "oracle_lstm_fwd": (
+            lambda x, wx, wh, b: (M.oracle_lstm_fwd(x, wx, wh, b),),
+            (
+                spec(ls["b"], ls["t"], ls["i"]),
+                spec(ls["i"], 4 * ls["h"]),
+                spec(ls["h"], 4 * ls["h"]),
+                spec(4 * ls["h"]),
+            ),
+        ),
+        "oracle_softmax_xent": (
+            lambda z, y: M.oracle_softmax_xent(z, y),
+            (spec(xe["r"], xe["c"]), spec(xe["r"], xe["c"])),
+        ),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {}
+    for name, (fn, example) in catalog().items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [list(s.shape) for s in example],
+            "chars": len(text),
+        }
+        print(f"  {name}: {len(text)} chars")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

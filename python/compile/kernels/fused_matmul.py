@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: tiled fused ``matmul + bias + activation``.
+
+This is the training hot-spot of the reproduced system (every linear /
+im2col-conv layer is a matmul). The kernel is written the TPU way:
+
+* the grid tiles M and N; each program instance owns one ``(BM, BN)``
+  output tile resident in VMEM,
+* the full K dimension is streamed through the MXU per tile (f32
+  accumulation; on real TPU the inputs would be bf16 into the 128x128
+  systolic array),
+* bias add + activation are fused into the epilogue so the tile never
+  round-trips to HBM between ops.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so TPU lowering is compile-only; correctness is validated
+against ``ref.py`` by pytest/hypothesis (see DESIGN.md
+§Hardware-Adaptation for the VMEM/MXU estimate).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes, MXU-oriented (128x128 systolic array). Shapes that
+# are not multiples fall back to one-tile blocks.
+BM = 128
+BN = 128
+
+
+def _act(x, kind):
+    if kind == "none":
+        return x
+    if kind == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "tanh":
+        return jnp.tanh(x)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, act):
+    # One (BM, BN) output tile: stream full K through the MXU, accumulate
+    # in f32, fuse bias + activation in the epilogue.
+    acc = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+    acc = acc + b_ref[...][None, :]
+    o_ref[...] = _act(acc, act).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def fused_matmul(x, w, b, act="none"):
+    """``act(x @ w + b)`` via a tiled Pallas kernel.
+
+    x: [M, K], w: [K, N], b: [N] -> [M, N]
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (n,)
+    bm = BM if m % BM == 0 else m
+    bn = BN if n % BN == 0 else n
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def vmem_bytes(m, k, n, dtype_bytes=4, bm=BM, bn=BN):
+    """Estimated VMEM footprint per grid step (perf model for DESIGN.md):
+    x tile + w tile + bias + out tile + f32 accumulator."""
+    bm = bm if m % bm == 0 else m
+    bn = bn if n % bn == 0 else n
+    return dtype_bytes * (bm * k + k * bn + bn + bm * bn) + 4 * bm * bn
+
+
+def mxu_utilization(m, k, n, bm=BM, bn=BN):
+    """Fraction of MXU-issue slots doing useful work for this shape
+    (edge-tile padding waste only; assumes weight-stationary scheduling)."""
+    bm = bm if m % bm == 0 else m
+    bn = bn if n % bn == 0 else n
+    tiles = (m // bm) * (n // bn)
+    useful = m * k * n
+    issued = tiles * bm * bn * k
+    return useful / issued if issued else 0.0

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the L1 Pallas kernels (the paper's
+"equivalence at 1e-4" correctness discipline, applied at build time)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_matmul_ref(x, w, b, act="none"):
+    y = x @ w + b[None, :]
+    if act == "none":
+        return y
+    if act == "sigmoid":
+        return jax.nn.sigmoid(y)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "tanh":
+        return jnp.tanh(y)
+    raise ValueError(act)
+
+
+def softmax_xent_ref(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.sum(labels * logp, axis=-1)
+    p = jnp.exp(logp)
+    lsum = jnp.sum(labels, axis=-1, keepdims=True)
+    dlogits = lsum * p - labels
+    return loss, dlogits
+
+
+def lstm_ref(x, wx, wh, b):
+    """Full-sequence LSTM oracle matching the Rust layer's layout.
+
+    x: [B, T, I]; wx: [I, 4H]; wh: [H, 4H]; b: [4H] with gate order
+    (i, f, g, o). Returns h sequence [B, T, H].
+    """
+    bsz, t, _ = x.shape
+    h4 = wx.shape[1]
+    hdim = h4 // 4
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt @ wx + h @ wh + b
+        i = jax.nn.sigmoid(gates[:, :hdim])
+        f = jax.nn.sigmoid(gates[:, hdim : 2 * hdim])
+        g = jnp.tanh(gates[:, 2 * hdim : 3 * hdim])
+        o = jax.nn.sigmoid(gates[:, 3 * hdim :])
+        c = f * c + i * g
+        h = o * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((bsz, hdim), x.dtype), jnp.zeros((bsz, hdim), x.dtype))
+    _, hs = jax.lax.scan(step, init, jnp.transpose(x, (1, 0, 2)))
+    return jnp.transpose(hs, (1, 0, 2))
+
+
+def conv2d_ref(x, w, stride=1, pad="SAME"):
+    """x: [B, C, H, W]; w: [OC, C, KH, KW] -> [B, OC, H', W']."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=pad,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )

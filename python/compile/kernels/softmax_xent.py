@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: fused row-wise softmax + cross-entropy.
+
+Produces both the per-row loss and the gradient w.r.t. the logits in one
+pass over VMEM-resident tiles (labels may be soft/unnormalized; the
+gradient uses the exact ``(sum(label) * p - label)`` form, matching the
+Rust engine's loss layer).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BR = 128  # row tile
+
+
+def _kernel(logits_ref, labels_ref, loss_ref, dlogits_ref):
+    z = logits_ref[...]
+    y = labels_ref[...]
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    ez = jnp.exp(z - zmax)
+    denom = jnp.sum(ez, axis=-1, keepdims=True)
+    logp = z - zmax - jnp.log(denom)
+    p = ez / denom
+    loss_ref[...] = -jnp.sum(y * logp, axis=-1)
+    lsum = jnp.sum(y, axis=-1, keepdims=True)
+    dlogits_ref[...] = lsum * p - y
+
+
+@jax.jit
+def softmax_xent(logits, labels):
+    """Per-row loss + dlogits. logits/labels: [R, C] -> ([R], [R, C])."""
+    r, c = logits.shape
+    br = BR if r % BR == 0 else r
+    grid = (r // br,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r,), logits.dtype),
+            jax.ShapeDtypeStruct((r, c), logits.dtype),
+        ],
+        interpret=True,
+    )(logits, labels)
+
+
+del functools

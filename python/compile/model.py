@@ -1,0 +1,108 @@
+"""L2: the end-to-end demo model's forward/backward in JAX, calling the
+L1 Pallas kernels.
+
+The MLP here mirrors ``rust/src/model/zoo.rs::mlp_e2e`` exactly
+(256 → 64 sigmoid → 10, softmax-cross-entropy): the Rust coordinator
+drives training through the AOT-compiled ``train_step`` while the same
+architecture runs on the native engine — the two must agree to 1e-4
+(paper §5.1's equivalence methodology, with this module as the oracle).
+
+The backward pass is written explicitly (the layer-op discipline of the
+paper) rather than via ``jax.grad``: forward calls the Pallas kernels,
+backward reuses their saved activations.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_matmul import fused_matmul
+from .kernels.softmax_xent import softmax_xent
+from .kernels import ref
+
+# ---- demo-model spec (keep in sync with zoo::mlp_e2e + examples) ----
+MLP_IN = 256
+MLP_HIDDEN = 64
+MLP_OUT = 10
+MLP_BATCH = 32
+MLP_LR = 0.5
+
+
+def mlp_init(seed=42):
+    k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+    a0 = (6.0 / (MLP_IN + MLP_HIDDEN)) ** 0.5
+    a1 = (6.0 / (MLP_HIDDEN + MLP_OUT)) ** 0.5
+    return (
+        jax.random.uniform(k0, (MLP_IN, MLP_HIDDEN), jnp.float32, -a0, a0),
+        jnp.zeros((MLP_HIDDEN,), jnp.float32),
+        jax.random.uniform(k1, (MLP_HIDDEN, MLP_OUT), jnp.float32, -a1, a1),
+        jnp.zeros((MLP_OUT,), jnp.float32),
+    )
+
+
+def mlp_forward(w0, b0, w1, b1, x):
+    """Logits for a batch. Pallas kernels on the linear hot path."""
+    h = fused_matmul(x, w0, b0, act="sigmoid")
+    return fused_matmul(h, w1, b1, act="none")
+
+
+def mlp_train_step(w0, b0, w1, b1, x, y):
+    """One SGD step; returns updated params + scalar loss.
+
+    Forward through the Pallas kernels; backward written out layer-op
+    style (dW = Xᵀ·ΔD etc.) with activations saved from forward.
+    """
+    bsz = x.shape[0]
+    h = fused_matmul(x, w0, b0, act="sigmoid")
+    logits = fused_matmul(h, w1, b1, act="none")
+    loss_rows, dlogits = softmax_xent(logits, y)
+    loss = jnp.mean(loss_rows)
+    dlogits = dlogits / bsz
+    # fc1 backward
+    dw1 = h.T @ dlogits
+    db1 = jnp.sum(dlogits, axis=0)
+    dh = dlogits @ w1.T
+    # sigmoid backward (uses the saved output, the paper's in-place case)
+    dpre = dh * h * (1.0 - h)
+    # fc0 backward
+    dw0 = x.T @ dpre
+    db0 = jnp.sum(dpre, axis=0)
+    return (
+        w0 - MLP_LR * dw0,
+        b0 - MLP_LR * db0,
+        w1 - MLP_LR * dw1,
+        b1 - MLP_LR * db1,
+        loss,
+    )
+
+
+def mlp_forward_ref(w0, b0, w1, b1, x):
+    """Pure-jnp oracle of the forward path."""
+    h = ref.fused_matmul_ref(x, w0, b0, act="sigmoid")
+    return ref.fused_matmul_ref(h, w1, b1, act="none")
+
+
+# ---- per-layer oracle catalog (shapes the Rust tests execute) ----
+ORACLE_LINEAR = dict(m=8, k=32, n=16)
+ORACLE_CONV = dict(b=2, c=3, h=8, w=8, oc=4, kk=3)
+ORACLE_LSTM = dict(b=2, t=5, i=4, h=6)
+ORACLE_XENT = dict(r=8, c=10)
+
+
+def oracle_linear_fwd(x, w, b):
+    return fused_matmul(x, w, b, act="none")
+
+
+def oracle_linear_sigmoid_fwd(x, w, b):
+    return fused_matmul(x, w, b, act="sigmoid")
+
+
+def oracle_conv2d_fwd(x, w):
+    return ref.conv2d_ref(x, w, stride=1, pad="SAME")
+
+
+def oracle_lstm_fwd(x, wx, wh, b):
+    return ref.lstm_ref(x, wx, wh, b)
+
+
+def oracle_softmax_xent(logits, labels):
+    return softmax_xent(logits, labels)

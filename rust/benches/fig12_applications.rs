@@ -1,0 +1,54 @@
+//! Fig 12: application training memory at batch 32 — LeNet-5, VGG16,
+//! ResNet18, ResNet18-transfer, Product Rating.
+//!
+//! Shape to reproduce: 96.5 % saving on LeNet-5 (x28 incl. baselines),
+//! ~65 % on VGG16/ResNet18, >75 % for transfer learning, ~50 % for
+//! Product Rating (embedding-table dominated).
+
+use nntrainer::bench_util::{conventional_profile, nntrainer_profile, plan, Table};
+use nntrainer::metrics::{BASELINE_NNTRAINER_MIB, BASELINE_TENSORFLOW_MIB, MIB};
+use nntrainer::model::zoo;
+
+fn main() {
+    println!("\n== Fig 12: application training memory, batch 32 (MiB) ==\n");
+    let cases: Vec<(&str, Vec<nntrainer::graph::NodeDesc>, &str)> = vec![
+        ("LeNet-5", zoo::lenet5(), "96.5% saving (x28)"),
+        ("VGG16", zoo::vgg16(), "~65% saving"),
+        ("ResNet18", zoo::resnet18(), "~65% saving"),
+        ("ResNet18 transfer", zoo::resnet18_transfer(), ">75% saving"),
+        ("Product Rating", zoo::product_rating(), "~50% saving"),
+    ];
+    let mut table = Table::new(&[
+        "application",
+        "nntrainer",
+        "+base",
+        "conventional",
+        "+base",
+        "saving",
+        "paper",
+    ]);
+    for (name, nodes, paper) in cases {
+        let nn = plan(nodes.clone(), &nntrainer_profile(32)).expect(name);
+        let conv = plan(nodes, &conventional_profile(32)).expect(name);
+        let nn_pool = nn.pool_bytes as f64 / MIB;
+        let conv_pool = conv.pool_bytes as f64 / MIB;
+        let nn_tot = nn_pool + BASELINE_NNTRAINER_MIB;
+        let conv_tot = conv_pool + BASELINE_TENSORFLOW_MIB;
+        let saving = 100.0 * (1.0 - nn_tot / conv_tot);
+        table.row(vec![
+            name.to_string(),
+            format!("{nn_pool:.1}"),
+            format!("{nn_tot:.1}"),
+            format!("{conv_pool:.1}"),
+            format!("{conv_tot:.1}"),
+            format!("{saving:.1}%"),
+            paper.to_string(),
+        ]);
+    }
+    table.print();
+    println!(
+        "\n(`+base` adds the frameworks' resident baselines from §5.1: NNTrainer 12.3 MiB,\n\
+         TensorFlow 337.8 MiB. ResNet18-transfer's ideal per the paper: 80.5 MiB incl.\n\
+         baseline; our planned pool + baseline lands in the same regime.)"
+    );
+}

@@ -1,0 +1,49 @@
+//! Fig 14: Tacotron2-decoder training — peak memory and per-sample
+//! latency vs batch size, planned vs conventional profile.
+//!
+//! Paper: NNTrainer saves 40–56 % of PyTorch's memory and improves
+//! latency ≥24 % at the same batch; at the same *memory*, a 2x batch
+//! gives >35 % latency improvement.
+
+use nntrainer::bench_util::{conventional_profile, nntrainer_profile, plan, train_random, Table};
+use nntrainer::metrics::MIB;
+use nntrainer::model::zoo;
+
+const T: usize = 24;
+const MEL: usize = 80;
+const UNITS: usize = 256;
+
+fn main() {
+    println!(
+        "\n== Fig 14: Tacotron2 decoder (T={T}, mel={MEL}, lstm={UNITS}) — memory & latency ==\n"
+    );
+    let mut table = Table::new(&[
+        "batch",
+        "planned MiB",
+        "conv MiB",
+        "saving",
+        "ms/sample",
+    ]);
+    for &batch in &[8usize, 16, 32] {
+        let nodes = zoo::tacotron_decoder(T, MEL, UNITS);
+        let nn = plan(nodes.clone(), &nntrainer_profile(batch)).unwrap();
+        let conv = plan(nodes.clone(), &conventional_profile(batch)).unwrap();
+        let saving = 100.0 * (1.0 - nn.pool_bytes as f64 / conv.pool_bytes as f64);
+        // latency: 2 iterations, report per-sample
+        let (_, secs, iters) = train_random(nodes, &nntrainer_profile(batch), batch * 2, 1, 1e-4).unwrap();
+        let ms_per_sample = secs * 1e3 / (iters * batch) as f64;
+        table.row(vec![
+            batch.to_string(),
+            format!("{:.1}", nn.pool_bytes as f64 / MIB),
+            format!("{:.1}", conv.pool_bytes as f64 / MIB),
+            format!("{saving:.1}%"),
+            format!("{ms_per_sample:.1}"),
+        ]);
+    }
+    table.print();
+    println!(
+        "\npaper: 40-56% memory saving vs PyTorch at the same batch; per-sample latency\n\
+         improves with batch (cache utilization), letting NNTrainer run batch 32 in the\n\
+         memory PyTorch needs for 16 (>35% latency win at equal memory)."
+    );
+}

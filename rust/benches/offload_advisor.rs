@@ -1,0 +1,57 @@
+//! Off-loading advisor (paper future work): for each application model,
+//! how far below the unconstrained peak can primary memory go by
+//! swapping idle-gap tensors to secondary memory, and what swap traffic
+//! does it cost per iteration?
+
+use nntrainer::bench_util::{fmt_mib, Table};
+use nntrainer::compiler::realizer::realize_all;
+use nntrainer::exec::{init_graph, InitOptions};
+use nntrainer::graph::Graph;
+use nntrainer::layers::builtin_factories;
+use nntrainer::model::zoo;
+use nntrainer::planner::offload::advise;
+
+fn main() {
+    println!("\n== Dynamic off-loading advisor (batch 32) ==\n");
+    let mut table = Table::new(&[
+        "model",
+        "peak",
+        "70% target",
+        "achieved",
+        "fits",
+        "swapped tensors",
+        "swap MiB/iter",
+    ]);
+    for (name, nodes) in [
+        ("LeNet-5", zoo::lenet5()),
+        ("VGG16", zoo::vgg16()),
+        ("ResNet18", zoo::resnet18()),
+        ("Tacotron2 dec", zoo::tacotron_decoder(24, 80, 256)),
+        ("Model A (Linear)", zoo::model_a_linear()),
+    ] {
+        let graph = Graph::wire(realize_all(nodes).unwrap()).unwrap();
+        let ig = init_graph(
+            &graph,
+            &builtin_factories(),
+            &InitOptions { batch: 32, ..Default::default() },
+        )
+        .unwrap();
+        let full = advise(&ig.table, usize::MAX).primary_peak_bytes;
+        let target = full * 70 / 100;
+        let plan = advise(&ig.table, target);
+        table.row(vec![
+            name.to_string(),
+            fmt_mib(full),
+            fmt_mib(target),
+            fmt_mib(plan.primary_peak_bytes),
+            (if plan.fits { "yes" } else { "no" }).into(),
+            plan.entries.len().to_string(),
+            fmt_mib(plan.swap_bytes_per_iter),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nEO-driven prediction (paper §6): evict each tensor after its last pre-gap use,\n\
+         prefetch one EO before the next — proactive background swaps, no demand paging."
+    );
+}

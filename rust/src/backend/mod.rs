@@ -1,0 +1,5 @@
+//! Compute backends ("Delegates" in the paper). The native CPU backend is
+//! the default; the PJRT runtime (`crate::runtime`) is the AOT-compiled
+//! XLA path used by the end-to-end example and the numerics oracle tests.
+
+pub mod native;

@@ -1,0 +1,571 @@
+//! Native CPU compute kernels — the default `Delegate` (paper §4).
+//!
+//! These are the raw numeric primitives every layer is built from:
+//! a register-blocked matmul, im2col/col2im for convolutions, and
+//! elementwise/reduction helpers. They are deliberately allocation-free:
+//! all outputs and scratch space come from the caller (i.e. from pool
+//! regions assigned by the Memory Planner), which keeps the training hot
+//! loop malloc-free.
+
+/// C[m,n] (+)= A[m,k] * B[k,n].
+///
+/// Register-blocked (4x8 micro-kernel over a k-loop) single-threaded
+/// matmul. On the 1-core container this reaches a few GFLOP/s, enough to
+/// keep benchmark latencies realistic without an external BLAS (none is
+/// available offline).
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, accumulate: bool) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if !accumulate {
+        c.fill(0.0);
+    }
+    // Tall-K regime (fc layers on flattened images: K ~ 1e5, M,N small):
+    // the tiled kernel would re-stream B per row-block. Switch to k-outer
+    // rank-1 updates — A and B are each streamed exactly once and C stays
+    // cache-resident. §Perf step 1: 2.7 -> ~6 GFLOP/s on 32x150528x128.
+    if k >= 2048 && m * n <= 64 * 1024 {
+        for p in 0..k {
+            let brow = &b[p * n..(p + 1) * n];
+            for i in 0..m {
+                let av = a[i * k + p];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += av * bv;
+                }
+            }
+        }
+        return;
+    }
+    const MR: usize = 4;
+    const NR: usize = 8;
+    let mut i = 0;
+    while i + MR <= m {
+        let mut j = 0;
+        while j + NR <= n {
+            // 4x8 accumulator block.
+            let mut acc = [[0f32; NR]; MR];
+            for p in 0..k {
+                let bp = &b[p * n + j..p * n + j + NR];
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let av = a[(i + r) * k + p];
+                    for (s, accv) in accr.iter_mut().enumerate() {
+                        *accv += av * bp[s];
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                let crow = &mut c[(i + r) * n + j..(i + r) * n + j + NR];
+                for (s, &v) in accr.iter().enumerate() {
+                    crow[s] += v;
+                }
+            }
+            j += NR;
+        }
+        // n remainder
+        while j < n {
+            for r in 0..MR {
+                let mut acc = 0f32;
+                for p in 0..k {
+                    acc += a[(i + r) * k + p] * b[p * n + j];
+                }
+                c[(i + r) * n + j] += acc;
+            }
+            j += 1;
+        }
+        i += MR;
+    }
+    // m remainder
+    while i < m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for p in 0..k {
+                acc += a[i * k + p] * b[p * n + j];
+            }
+            c[i * n + j] += acc;
+        }
+        i += 1;
+    }
+}
+
+/// C[m,n] (+)= A^T[k,m] * B[k,n]  (A stored [k,m]).
+pub fn matmul_at(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, accumulate: bool) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if !accumulate {
+        c.fill(0.0);
+    }
+    // Weight-gradient regime (ΔW[f,u] += Xᵀ·ΔD with tiny batch k): when
+    // B fits in cache, iterate output rows so the (often huge) C streams
+    // exactly once instead of once per batch row. §Perf step 2:
+    // 2.5 -> ~7 GFLOP/s on the fc0 gradient of Model A-Linear.
+    if k * n <= 64 * 1024 {
+        // §Perf step 5: branchless inner loop (the zero-skip guard costs
+        // more in mispredicts than it saves on dense gradients).
+        for i in 0..m {
+            let crow = &mut c[i * n..(i + 1) * n];
+            for p in 0..k {
+                let av = a[p * m + i];
+                let brow = &b[p * n..(p + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += av * bv;
+                }
+            }
+        }
+        return;
+    }
+    // General: iterate p outer so both A-row and B-row are contiguous
+    // streams; accumulate into C rows.
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C[m,n] (+)= A[m,k] * B^T[n,k]  (B stored [n,k]).
+pub fn matmul_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, accumulate: bool) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    if !accumulate {
+        c.fill(0.0);
+    }
+    // Derivative regime (ΔD' = ΔD·Wᵀ with huge n = input features): when
+    // A fits in cache, iterate B rows outer so W streams exactly once
+    // instead of once per output row. §Perf step 3: 1.9 -> ~5 GFLOP/s on
+    // the fc derivative of Model B-Linear.
+    if m * k <= 64 * 1024 {
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                // 4-way unrolled dot: independent accumulators break the
+                // FP-add dependency chain (§Perf step 4).
+                let mut acc = [0f32; 4];
+                let chunks = k / 4;
+                for t in 0..chunks {
+                    let o = t * 4;
+                    acc[0] += arow[o] * brow[o];
+                    acc[1] += arow[o + 1] * brow[o + 1];
+                    acc[2] += arow[o + 2] * brow[o + 2];
+                    acc[3] += arow[o + 3] * brow[o + 3];
+                }
+                let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+                for t in chunks * 4..k {
+                    s += arow[t] * brow[t];
+                }
+                c[i * n + j] += s;
+            }
+        }
+        return;
+    }
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            // dot of two contiguous rows — vectorizes well.
+            for (&av, &bv) in arow.iter().zip(brow.iter()) {
+                acc += av * bv;
+            }
+            crow[j] += acc;
+        }
+    }
+}
+
+/// Add a row-vector bias[n] to every row of C[m,n].
+pub fn add_bias(c: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    debug_assert_eq!(c.len(), m * n);
+    debug_assert_eq!(bias.len(), n);
+    for i in 0..m {
+        let row = &mut c[i * n..(i + 1) * n];
+        for (v, &b) in row.iter_mut().zip(bias.iter()) {
+            *v += b;
+        }
+    }
+}
+
+/// bias_grad[n] (+)= column sums of D[m,n].
+pub fn bias_grad(d: &[f32], g: &mut [f32], m: usize, n: usize, accumulate: bool) {
+    debug_assert_eq!(d.len(), m * n);
+    debug_assert_eq!(g.len(), n);
+    if !accumulate {
+        g.fill(0.0);
+    }
+    for i in 0..m {
+        let row = &d[i * n..(i + 1) * n];
+        for (gv, &dv) in g.iter_mut().zip(row.iter()) {
+            *gv += dv;
+        }
+    }
+}
+
+/// Geometry of a 2-D convolution (single spatial config; shared by
+/// forward / im2col / backward).
+#[derive(Clone, Copy, Debug)]
+pub struct Conv2dGeom {
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_c: usize,
+    pub k_h: usize,
+    pub k_w: usize,
+    pub stride: usize,
+    pub pad_h: usize,
+    pub pad_w: usize,
+}
+
+impl Conv2dGeom {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad_h - self.k_h) / self.stride + 1
+    }
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad_w - self.k_w) / self.stride + 1
+    }
+    /// Rows of the im2col matrix: in_c*k_h*k_w; cols: out_h*out_w.
+    pub fn col_rows(&self) -> usize {
+        self.in_c * self.k_h * self.k_w
+    }
+    pub fn col_cols(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+}
+
+/// im2col for one image: input [in_c, in_h, in_w] → col [col_rows, col_cols].
+///
+/// "Image to Column" (paper §5.1 explicitly calls this buffer out as the
+/// extra heap NNTrainer's Conv2D needs).
+pub fn im2col(input: &[f32], g: &Conv2dGeom, col: &mut [f32]) {
+    let (oh, ow) = (g.out_h(), g.out_w());
+    debug_assert_eq!(input.len(), g.in_c * g.in_h * g.in_w);
+    debug_assert_eq!(col.len(), g.col_rows() * g.col_cols());
+    let mut r = 0usize;
+    for c in 0..g.in_c {
+        let plane = &input[c * g.in_h * g.in_w..(c + 1) * g.in_h * g.in_w];
+        for kh in 0..g.k_h {
+            for kw in 0..g.k_w {
+                let dst = &mut col[r * oh * ow..(r + 1) * oh * ow];
+                let mut d = 0usize;
+                for y in 0..oh {
+                    let iy = (y * g.stride + kh) as isize - g.pad_h as isize;
+                    if iy < 0 || iy as usize >= g.in_h {
+                        dst[d..d + ow].fill(0.0);
+                        d += ow;
+                        continue;
+                    }
+                    let iy = iy as usize;
+                    for x in 0..ow {
+                        let ix = (x * g.stride + kw) as isize - g.pad_w as isize;
+                        dst[d] = if ix < 0 || ix as usize >= g.in_w {
+                            0.0
+                        } else {
+                            plane[iy * g.in_w + ix as usize]
+                        };
+                        d += 1;
+                    }
+                }
+                r += 1;
+            }
+        }
+    }
+}
+
+/// col2im (scatter-add): col [col_rows, col_cols] → input-grad
+/// [in_c, in_h, in_w]. Inverse of `im2col` for the backward pass.
+pub fn col2im(col: &[f32], g: &Conv2dGeom, out: &mut [f32], accumulate: bool) {
+    let (oh, ow) = (g.out_h(), g.out_w());
+    debug_assert_eq!(out.len(), g.in_c * g.in_h * g.in_w);
+    debug_assert_eq!(col.len(), g.col_rows() * g.col_cols());
+    if !accumulate {
+        out.fill(0.0);
+    }
+    let mut r = 0usize;
+    for c in 0..g.in_c {
+        for kh in 0..g.k_h {
+            for kw in 0..g.k_w {
+                let src = &col[r * oh * ow..(r + 1) * oh * ow];
+                let mut s = 0usize;
+                for y in 0..oh {
+                    let iy = (y * g.stride + kh) as isize - g.pad_h as isize;
+                    if iy < 0 || iy as usize >= g.in_h {
+                        s += ow;
+                        continue;
+                    }
+                    let iy = iy as usize;
+                    for x in 0..ow {
+                        let ix = (x * g.stride + kw) as isize - g.pad_w as isize;
+                        if ix >= 0 && (ix as usize) < g.in_w {
+                            out[c * g.in_h * g.in_w + iy * g.in_w + ix as usize] += src[s];
+                        }
+                        s += 1;
+                    }
+                }
+                r += 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- elementwise
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+pub fn map_sigmoid(x: &[f32], out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        *o = sigmoid(v);
+    }
+}
+
+pub fn map_tanh(x: &[f32], out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        *o = v.tanh();
+    }
+}
+
+pub fn map_relu(x: &[f32], out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        *o = v.max(0.0);
+    }
+}
+
+/// Row-wise softmax over [rows, cols].
+pub fn softmax_rows(x: &[f32], out: &mut [f32], rows: usize, cols: usize) {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(out.len(), rows * cols);
+    for r in 0..rows {
+        let xi = &x[r * cols..(r + 1) * cols];
+        let oi = &mut out[r * cols..(r + 1) * cols];
+        let mx = xi.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for (o, &v) in oi.iter_mut().zip(xi.iter()) {
+            let e = (v - mx).exp();
+            *o = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for o in oi.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+/// out = a + b (elementwise).
+pub fn add(a: &[f32], b: &[f32], out: &mut [f32]) {
+    for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+        *o = x + y;
+    }
+}
+
+/// out (+)= a * scale.
+pub fn axpy(scale: f32, a: &[f32], out: &mut [f32]) {
+    for (o, &x) in out.iter_mut().zip(a.iter()) {
+        *o += scale * x;
+    }
+}
+
+/// out = a * b (Hadamard).
+pub fn mul(a: &[f32], b: &[f32], out: &mut [f32]) {
+    for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+        *o = x * y;
+    }
+}
+
+pub fn sum_sq(a: &[f32]) -> f64 {
+    a.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn matmul_matches_naive_many_shapes() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (4, 8, 8), (5, 7, 9), (13, 3, 17), (32, 64, 10), (3, 150, 2)] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut c = vec![0f32; m * n];
+            matmul(&a, &b, &mut c, m, k, n, false);
+            let want = naive_matmul(&a, &b, m, k, n);
+            for (x, y) in c.iter().zip(want.iter()) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y} at ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_accumulate() {
+        let a = [1f32, 2.0];
+        let b = [3f32, 4.0];
+        let mut c = [10f32];
+        matmul(&a, &b, &mut c, 1, 2, 1, true);
+        assert_eq!(c[0], 10.0 + 11.0);
+    }
+
+    #[test]
+    fn matmul_at_matches() {
+        let mut rng = Rng::new(2);
+        let (m, k, n) = (6, 11, 5);
+        // A stored [k, m]
+        let at = rand_vec(&mut rng, k * m);
+        let b = rand_vec(&mut rng, k * n);
+        // Un-transpose A for the reference.
+        let mut a = vec![0f32; m * k];
+        for p in 0..k {
+            for i in 0..m {
+                a[i * k + p] = at[p * m + i];
+            }
+        }
+        let mut c = vec![0f32; m * n];
+        matmul_at(&at, &b, &mut c, m, k, n, false);
+        let want = naive_matmul(&a, &b, m, k, n);
+        for (x, y) in c.iter().zip(want.iter()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches() {
+        let mut rng = Rng::new(3);
+        let (m, k, n) = (7, 9, 4);
+        let a = rand_vec(&mut rng, m * k);
+        // B stored [n, k]
+        let bt = rand_vec(&mut rng, n * k);
+        let mut b = vec![0f32; k * n];
+        for j in 0..n {
+            for p in 0..k {
+                b[p * n + j] = bt[j * k + p];
+            }
+        }
+        let mut c = vec![0f32; m * n];
+        matmul_bt(&a, &bt, &mut c, m, k, n, false);
+        let want = naive_matmul(&a, &b, m, k, n);
+        for (x, y) in c.iter().zip(want.iter()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, stride 1, no pad: col == input.
+        let g = Conv2dGeom { in_c: 2, in_h: 3, in_w: 3, out_c: 1, k_h: 1, k_w: 1, stride: 1, pad_h: 0, pad_w: 0 };
+        let input: Vec<f32> = (0..18).map(|v| v as f32).collect();
+        let mut col = vec![0f32; g.col_rows() * g.col_cols()];
+        im2col(&input, &g, &mut col);
+        assert_eq!(col, input);
+    }
+
+    #[test]
+    fn im2col_3x3_same_padding() {
+        let g = Conv2dGeom { in_c: 1, in_h: 3, in_w: 3, out_c: 1, k_h: 3, k_w: 3, stride: 1, pad_h: 1, pad_w: 1 };
+        let input: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let mut col = vec![0f32; g.col_rows() * g.col_cols()];
+        im2col(&input, &g, &mut col);
+        // center tap (kh=1,kw=1) row must equal the input itself.
+        let center = &col[4 * 9..5 * 9];
+        assert_eq!(center, &input[..]);
+        // top-left tap at output (0,0) looks at input (-1,-1) = 0 pad.
+        assert_eq!(col[0], 0.0);
+    }
+
+    #[test]
+    fn conv_via_im2col_matches_direct() {
+        let mut rng = Rng::new(4);
+        let g = Conv2dGeom { in_c: 3, in_h: 5, in_w: 5, out_c: 4, k_h: 3, k_w: 3, stride: 1, pad_h: 1, pad_w: 1 };
+        let input = rand_vec(&mut rng, g.in_c * g.in_h * g.in_w);
+        let w = rand_vec(&mut rng, g.out_c * g.col_rows());
+        let mut col = vec![0f32; g.col_rows() * g.col_cols()];
+        im2col(&input, &g, &mut col);
+        let mut out = vec![0f32; g.out_c * g.col_cols()];
+        matmul(&w, &col, &mut out, g.out_c, g.col_rows(), g.col_cols(), false);
+
+        // direct convolution
+        let (oh, ow) = (g.out_h(), g.out_w());
+        for oc in 0..g.out_c {
+            for y in 0..oh {
+                for x in 0..ow {
+                    let mut acc = 0f32;
+                    for ic in 0..g.in_c {
+                        for kh in 0..g.k_h {
+                            for kw in 0..g.k_w {
+                                let iy = (y * g.stride + kh) as isize - g.pad_h as isize;
+                                let ix = (x * g.stride + kw) as isize - g.pad_w as isize;
+                                if iy >= 0 && ix >= 0 && (iy as usize) < g.in_h && (ix as usize) < g.in_w {
+                                    let iv = input[ic * 25 + iy as usize * 5 + ix as usize];
+                                    let wv = w[oc * g.col_rows() + ic * 9 + kh * 3 + kw];
+                                    acc += iv * wv;
+                                }
+                            }
+                        }
+                    }
+                    let got = out[oc * oh * ow + y * ow + x];
+                    assert!((got - acc).abs() < 1e-4, "{got} vs {acc}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col2im_roundtrip_shape() {
+        // col2im(im2col(x)) with 1x1 kernel is identity.
+        let g = Conv2dGeom { in_c: 2, in_h: 4, in_w: 4, out_c: 1, k_h: 1, k_w: 1, stride: 1, pad_h: 0, pad_w: 0 };
+        let input: Vec<f32> = (0..32).map(|v| v as f32).collect();
+        let mut col = vec![0f32; g.col_rows() * g.col_cols()];
+        im2col(&input, &g, &mut col);
+        let mut back = vec![0f32; input.len()];
+        col2im(&col, &g, &mut back, false);
+        assert_eq!(back, input);
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let x = [1f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        let mut o = [0f32; 6];
+        softmax_rows(&x, &mut o, 2, 3);
+        for r in 0..2 {
+            let s: f32 = o[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(o[2] > o[1] && o[1] > o[0]);
+    }
+
+    #[test]
+    fn bias_ops() {
+        let mut c = vec![0f32; 6];
+        add_bias(&mut c, &[1.0, 2.0, 3.0], 2, 3);
+        assert_eq!(c, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+        let mut g = vec![0f32; 3];
+        bias_grad(&c, &mut g, 2, 3, false);
+        assert_eq!(g, vec![2.0, 4.0, 6.0]);
+    }
+}

@@ -1,0 +1,133 @@
+//! Shared harness for the benchmark binaries (`rust/benches/*`, built
+//! with `harness = false` — criterion is unavailable offline).
+//!
+//! Every bench regenerates one table/figure of the paper and prints the
+//! paper-reported values alongside, so `cargo bench | tee` *is* the
+//! reproduction record (EXPERIMENTS.md).
+
+use crate::compiler::{plan_only, CompileOpts};
+use crate::dataset::{BatchQueue, DataProducer, RandomProducer};
+use crate::error::Result;
+use crate::graph::NodeDesc;
+use crate::metrics::PlanReport;
+use crate::model::{Model, ModelBuilder};
+use crate::planner::PlannerKind;
+
+/// Dataset size for latency benches; override with
+/// `NNTRAINER_BENCH_DATASET` (the paper used 512 on an RPi4 — the
+/// default here keeps a full `cargo bench` run in minutes on one core).
+pub fn bench_dataset() -> usize {
+    std::env::var("NNTRAINER_BENCH_DATASET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Compile options for the two allocation profiles the evaluation
+/// compares: NNTrainer (sorting planner, in-place on) and the
+/// conventional-framework emulation (see DESIGN.md §Substitutions).
+pub fn nntrainer_profile(batch: usize) -> CompileOpts {
+    CompileOpts { batch, planner: PlannerKind::Sorting, ..Default::default() }
+}
+
+pub fn conventional_profile(batch: usize) -> CompileOpts {
+    CompileOpts {
+        batch,
+        planner: PlannerKind::Naive,
+        conventional: true,
+        inplace: false,
+        ..Default::default()
+    }
+}
+
+/// Plan a model under a profile (no allocation).
+pub fn plan(nodes: Vec<NodeDesc>, opts: &CompileOpts) -> Result<PlanReport> {
+    plan_only(nodes, opts)
+}
+
+/// Compile + train `epochs` epochs on random data; returns (model,
+/// wall-seconds, iterations).
+pub fn train_random(
+    nodes: Vec<NodeDesc>,
+    opts: &CompileOpts,
+    dataset: usize,
+    epochs: usize,
+    lr: f32,
+) -> Result<(Model, f64, usize)> {
+    let mut model = ModelBuilder::new()
+        .add_nodes(nodes)
+        .optimizer("sgd", &[("learning_rate", &format!("{lr}"))])
+        .compile(opts)?;
+    let in_len: usize = model
+        .exec
+        .graph
+        .input_nodes
+        .iter()
+        .map(|&n| model.exec.graph.nodes[n].out_dims[0].feature_len())
+        .sum();
+    let lb_len: usize = model
+        .exec
+        .graph
+        .loss_nodes
+        .iter()
+        .map(|&n| model.exec.graph.nodes[n].in_dims[0].feature_len())
+        .sum();
+    let batch = opts.batch;
+    let start = std::time::Instant::now();
+    let mut iters = 0usize;
+    for _ in 0..epochs {
+        let make: Box<dyn DataProducer> = Box::new(RandomProducer::new(dataset, in_len, lb_len, 7));
+        let queue = BatchQueue::spawn(make, batch, 2);
+        while let Some(b) = queue.next() {
+            model.bind_batch(&b.input, &b.label)?;
+            model.exec.train_iteration();
+            iters += 1;
+        }
+    }
+    Ok((model, start.elapsed().as_secs_f64(), iters))
+}
+
+/// Markdown-ish table printer.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i.min(widths.len() - 1)]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + widths.len() * 2));
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+pub fn fmt_mib(bytes: usize) -> String {
+    format!("{:.1}", bytes as f64 / (1024.0 * 1024.0))
+}
+
+pub fn fmt_kib(bytes: usize) -> String {
+    format!("{:.0}", bytes as f64 / 1024.0)
+}

@@ -1,0 +1,104 @@
+//! Graph compiler: realizers (Table 1) + the compile pipeline that takes
+//! a description-level node list to a planned, executable model.
+
+pub mod realizer;
+pub mod unroll;
+
+use std::collections::HashMap;
+
+use crate::error::Result;
+use crate::exec::{init_graph, Executor, InitOptions};
+use crate::graph::{Graph, NodeDesc};
+use crate::layers::{builtin_factories, LayerFactory};
+use crate::metrics::PlanReport;
+use crate::optimizer::Optimizer;
+use crate::planner::{validate::validate_merges, validate::validate_plan, PlannerKind};
+
+/// Compile options — the knobs the evaluation sweeps.
+#[derive(Clone, Debug)]
+pub struct CompileOpts {
+    pub batch: usize,
+    pub training: bool,
+    pub planner: PlannerKind,
+    /// MV/RV in-place realization (ablation: `ablation_inplace`).
+    pub inplace: bool,
+    /// Conventional-framework allocation profile (Fig 9 baseline).
+    pub conventional: bool,
+    pub clip_norm: Option<f32>,
+    pub seed: u64,
+}
+
+impl Default for CompileOpts {
+    fn default() -> Self {
+        CompileOpts {
+            batch: 1,
+            training: true,
+            planner: PlannerKind::Sorting,
+            inplace: true,
+            conventional: false,
+            clip_norm: None,
+            seed: 42,
+        }
+    }
+}
+
+/// Run all default realizers, wire the graph, initialize (Algorithm 1),
+/// plan memory (Algorithm 2 or selected planner), validate, and build the
+/// executor.
+pub fn compile(
+    nodes: Vec<NodeDesc>,
+    optimizer: Box<dyn Optimizer>,
+    opts: &CompileOpts,
+) -> Result<(Executor, PlanReport)> {
+    compile_with(nodes, optimizer, opts, &builtin_factories())
+}
+
+/// Plan without allocating: run the full pipeline up to and including
+/// memory planning and validation, but skip pool allocation and weight
+/// init. Used by the memory benches (a conventional-profile VGG16 plan
+/// describes gigabytes it never needs to touch).
+pub fn plan_only(nodes: Vec<NodeDesc>, opts: &CompileOpts) -> Result<PlanReport> {
+    let nodes = realizer::realize_all(nodes)?;
+    let graph = Graph::wire(nodes)?;
+    let init_opts = InitOptions {
+        batch: opts.batch,
+        training: opts.training,
+        inplace: opts.inplace && !opts.conventional,
+        conventional: opts.conventional,
+        deferred_apply: opts.clip_norm.is_some(),
+        opt_slots: 0,
+    };
+    let mut ig = init_graph(&graph, &builtin_factories(), &init_opts)?;
+    let planner = opts.planner.instance();
+    let pool_len = planner.plan(&mut ig.table)?;
+    validate_plan(&ig.table, pool_len)?;
+    validate_merges(&ig.table)?;
+    Ok(PlanReport::from_table(&ig.table, pool_len, planner.name()))
+}
+
+/// `compile` with a custom layer registry (AppContext extensions).
+pub fn compile_with(
+    nodes: Vec<NodeDesc>,
+    optimizer: Box<dyn Optimizer>,
+    opts: &CompileOpts,
+    factories: &HashMap<&'static str, LayerFactory>,
+) -> Result<(Executor, PlanReport)> {
+    let nodes = realizer::realize_all(nodes)?;
+    let graph = Graph::wire(nodes)?;
+    let init_opts = InitOptions {
+        batch: opts.batch,
+        training: opts.training,
+        inplace: opts.inplace && !opts.conventional,
+        conventional: opts.conventional,
+        deferred_apply: opts.clip_norm.is_some(),
+        opt_slots: optimizer.state_slots(),
+    };
+    let mut ig = init_graph(&graph, factories, &init_opts)?;
+    let planner = opts.planner.instance();
+    let pool_len = planner.plan(&mut ig.table)?;
+    validate_plan(&ig.table, pool_len)?;
+    validate_merges(&ig.table)?;
+    let report = PlanReport::from_table(&ig.table, pool_len, planner.name());
+    let exec = Executor::new(ig, pool_len, optimizer, opts.clip_norm, opts.training, opts.seed)?;
+    Ok((exec, report))
+}

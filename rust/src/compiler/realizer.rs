@@ -1,0 +1,350 @@
+//! Realizers (paper Table 1): description-level graph lowerings that run
+//! before wiring. Each realizer rewrites the node list — inserting,
+//! removing or re-typing nodes — so the initializer only ever sees
+//! primitive layers.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::graph::NodeDesc;
+use crate::layers::Props;
+
+/// Run the default realizer chain in the canonical order.
+pub fn realize_all(nodes: Vec<NodeDesc>) -> Result<Vec<NodeDesc>> {
+    let nodes = input_realizer(nodes)?;
+    let nodes = batchnorm_realizer(nodes)?;
+    let nodes = activation_realizer(nodes)?;
+    let nodes = flatten_realizer(nodes)?;
+    let nodes = loss_realizer(nodes)?;
+    let nodes = multiout_realizer(nodes)?;
+    Ok(nodes)
+}
+
+/// Rewire every reference to `old` so it points at `new` (for nodes after
+/// index `from`).
+fn rewire(nodes: &mut [NodeDesc], from: usize, old: &str, new: &str) {
+    for n in nodes[from..].iter_mut() {
+        let refs = n.props.list("input_layers");
+        if refs.is_empty() {
+            continue;
+        }
+        let rewired: Vec<String> = refs
+            .into_iter()
+            .map(|r| {
+                let (name, suffix) = match r.find('(') {
+                    Some(p) => (r[..p].trim().to_string(), r[p..].to_string()),
+                    None => (r.trim().to_string(), String::new()),
+                };
+                if name == old {
+                    format!("{new}{suffix}")
+                } else {
+                    format!("{name}{suffix}")
+                }
+            })
+            .collect();
+        n.props.set("input_layers", rewired.join(","));
+    }
+}
+
+/// Input realizer: a non-input first layer carrying `input_shape` gets an
+/// explicit input node in front of it.
+pub fn input_realizer(mut nodes: Vec<NodeDesc>) -> Result<Vec<NodeDesc>> {
+    let mut out = Vec::with_capacity(nodes.len() + 1);
+    for (i, mut n) in nodes.drain(..).enumerate() {
+        if n.ltype != "input" && n.props.contains("input_shape") && n.input_refs().is_empty() {
+            let iname = format!("{}/input", n.name);
+            let mut p = Props::new();
+            p.set("input_shape", n.props.get("input_shape").unwrap());
+            out.push(NodeDesc::new(iname.clone(), "input", p));
+            n.props.set("input_layers", iname);
+            let _ = i;
+        }
+        out.push(n);
+    }
+    Ok(out)
+}
+
+/// Activation realizer: `activation = relu` on a compute layer splits
+/// into a dedicated activation node right after it.
+pub fn activation_realizer(nodes: Vec<NodeDesc>) -> Result<Vec<NodeDesc>> {
+    insert_after_realizer(nodes, "activation", |orig, act| {
+        let mut p = Props::new();
+        p.set("act", act);
+        p.set("input_layers", orig.to_string());
+        ("activation", p)
+    })
+}
+
+/// BatchNorm realizer: `batch_normalization = true` inserts a BN node
+/// after the layer (before any activation split, which runs later).
+pub fn batchnorm_realizer(nodes: Vec<NodeDesc>) -> Result<Vec<NodeDesc>> {
+    let mut out: Vec<NodeDesc> = Vec::with_capacity(nodes.len());
+    let mut pending_rewires: Vec<(usize, String, String)> = Vec::new();
+    for mut n in nodes {
+        if n.props.bool_or("batch_normalization", false)? {
+            n.props.set("batch_normalization", "false");
+            let bn_name = format!("{}/bn", n.name);
+            let orig = n.name.clone();
+            out.push(n);
+            let at = out.len();
+            let mut p = Props::new();
+            p.set("input_layers", orig.clone());
+            out.push(NodeDesc::new(bn_name.clone(), "batch_normalization", p));
+            pending_rewires.push((at + 1, orig, bn_name));
+        } else {
+            out.push(n);
+        }
+    }
+    for (from, old, new) in pending_rewires {
+        if from <= out.len() {
+            rewire(&mut out, from, &old, &new);
+        }
+    }
+    Ok(out)
+}
+
+/// Flatten realizer: `flatten = true` inserts a flatten node after.
+pub fn flatten_realizer(nodes: Vec<NodeDesc>) -> Result<Vec<NodeDesc>> {
+    insert_after_realizer(nodes, "flatten", |orig, v| {
+        let mut p = Props::new();
+        p.set("input_layers", orig.to_string());
+        let _ = v;
+        ("flatten", p)
+    })
+}
+
+fn insert_after_realizer(
+    nodes: Vec<NodeDesc>,
+    key: &str,
+    make: impl Fn(&str, &str) -> (&'static str, Props),
+) -> Result<Vec<NodeDesc>> {
+    let mut out: Vec<NodeDesc> = Vec::with_capacity(nodes.len());
+    let mut rewires: Vec<(usize, String, String)> = Vec::new();
+    for mut n in nodes {
+        let val = n.props.string(key);
+        let insert = match (key, &val) {
+            ("flatten", Some(v)) => v == "true" || v == "1",
+            (_, Some(v)) => !v.is_empty() && v != "none",
+            (_, None) => false,
+        };
+        if insert {
+            let v = val.unwrap();
+            n.props.set(key, "none");
+            let orig = n.name.clone();
+            let new_name = format!("{}/{}", orig, key);
+            out.push(n);
+            let at = out.len();
+            let (ltype, props) = make(&orig, &v);
+            out.push(NodeDesc::new(new_name.clone(), ltype, props));
+            rewires.push((at + 1, orig, new_name));
+        } else {
+            out.push(n);
+        }
+    }
+    for (from, old, new) in rewires {
+        if from <= out.len() {
+            rewire(&mut out, from, &old, &new);
+        }
+    }
+    Ok(out)
+}
+
+/// Loss realizer (paper: "If loss is cross entropy, remove the
+/// activation"): a `cross_entropy` loss preceded by a softmax activation
+/// absorbs it into the fused `cross_entropy_softmax` layer. A plain
+/// `cross_entropy` with no preceding softmax is promoted to the fused
+/// layer as well.
+pub fn loss_realizer(mut nodes: Vec<NodeDesc>) -> Result<Vec<NodeDesc>> {
+    // find cross_entropy nodes
+    let mut i = 0;
+    while i < nodes.len() {
+        if nodes[i].ltype == "cross_entropy" || nodes[i].ltype == "cross_entropy_softmax" {
+            nodes[i].ltype = "cross_entropy_softmax".into();
+            // producer of the loss
+            let refs = resolved_inputs(&nodes, i)?;
+            if let Some(pname) = refs.first() {
+                if let Some(p) = nodes.iter().position(|n| &n.name == pname) {
+                    let is_softmax = nodes[p].ltype == "activation"
+                        && nodes[p].props.string("act").as_deref() == Some("softmax");
+                    if is_softmax {
+                        // rewire loss to softmax's producer, drop softmax
+                        let grand = resolved_inputs(&nodes, p)?;
+                        let g = grand
+                            .first()
+                            .ok_or_else(|| Error::graph("softmax with no producer"))?
+                            .clone();
+                        nodes[i].props.set("input_layers", g);
+                        nodes.remove(p);
+                        continue; // re-check same index (shifted)
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    Ok(nodes)
+}
+
+fn resolved_inputs(nodes: &[NodeDesc], i: usize) -> Result<Vec<String>> {
+    let refs = nodes[i].input_refs();
+    if !refs.is_empty() {
+        return Ok(refs
+            .into_iter()
+            .map(|r| r.split('(').next().unwrap().trim().to_string())
+            .collect());
+    }
+    if i == 0 {
+        return Err(Error::graph(format!("`{}` has no inputs", nodes[i].name)));
+    }
+    Ok(vec![nodes[i - 1].name.clone()])
+}
+
+/// Multi-Out realizer: any output slot consumed by more than one layer
+/// gets an explicit `multiout` fan-out node.
+pub fn multiout_realizer(mut nodes: Vec<NodeDesc>) -> Result<Vec<NodeDesc>> {
+    loop {
+        // count consumers per (producer name, slot)
+        let mut consumers: HashMap<String, Vec<usize>> = HashMap::new();
+        for i in 0..nodes.len() {
+            for r in resolved_inputs_full(&nodes, i) {
+                consumers.entry(r).or_default().push(i);
+            }
+        }
+        let mut victim: Option<(String, Vec<usize>)> = None;
+        for (k, v) in &consumers {
+            let pname = k.split('(').next().unwrap();
+            let is_multiout = nodes
+                .iter()
+                .find(|n| n.name == pname)
+                .map(|n| n.ltype == "multiout")
+                .unwrap_or(false);
+            if v.len() > 1 && !is_multiout {
+                victim = Some((k.clone(), v.clone()));
+                break;
+            }
+        }
+        let Some((pref, users)) = victim else { break };
+        let pname = pref.split('(').next().unwrap().to_string();
+        let pidx = nodes
+            .iter()
+            .position(|n| n.name == pname)
+            .ok_or_else(|| Error::graph(format!("unknown producer `{pname}`")))?;
+        let mo_name = format!("{}/multiout", pname);
+        let mut p = Props::new();
+        p.set("outputs", users.len().to_string());
+        p.set("input_layers", pref.clone());
+        // insert right after producer; fix consumer refs with slots
+        nodes.insert(pidx + 1, NodeDesc::new(mo_name.clone(), "multiout", p));
+        let mut slot = 0usize;
+        for i in 0..nodes.len() {
+            if i == pidx + 1 {
+                continue; // the multiout node itself
+            }
+            let refs = nodes[i].input_refs();
+            if refs.is_empty() {
+                // implicit chaining: materialize it so rewiring is explicit
+                if i > 0 && nodes[i].ltype != "input" {
+                    let prev = nodes[i - 1].name.clone();
+                    nodes[i].props.set("input_layers", prev);
+                } else {
+                    continue;
+                }
+            }
+            let refs = nodes[i].input_refs();
+            let mut changed = false;
+            let new_refs: Vec<String> = refs
+                .into_iter()
+                .map(|r| {
+                    if r == pref || (r == pname && pref == pname) {
+                        changed = true;
+                        let s = format!("{mo_name}({slot})");
+                        slot += 1;
+                        s
+                    } else {
+                        r
+                    }
+                })
+                .collect();
+            if changed {
+                nodes[i].props.set("input_layers", new_refs.join(","));
+            }
+        }
+    }
+    Ok(nodes)
+}
+
+fn resolved_inputs_full(nodes: &[NodeDesc], i: usize) -> Vec<String> {
+    let refs = nodes[i].input_refs();
+    if !refs.is_empty() {
+        return refs;
+    }
+    if i == 0 || nodes[i].ltype == "input" {
+        return vec![];
+    }
+    vec![nodes[i - 1].name.clone()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(name: &str, ltype: &str, pairs: &[(&str, &str)]) -> NodeDesc {
+        NodeDesc::new(name, ltype, Props::from_pairs(pairs.iter().copied()))
+    }
+
+    #[test]
+    fn activation_split() {
+        let out = activation_realizer(vec![
+            node("in", "input", &[("input_shape", "1:1:4")]),
+            node("fc", "fully_connected", &[("unit", "3"), ("activation", "relu")]),
+            node("loss", "mse", &[("input_layers", "fc")]),
+        ])
+        .unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[2].ltype, "activation");
+        assert_eq!(out[2].props.get("act"), Some("relu"));
+        // loss rewired to the activation node
+        assert_eq!(out[3].props.list("input_layers"), vec!["fc/activation"]);
+    }
+
+    #[test]
+    fn input_materialization() {
+        let out = input_realizer(vec![node(
+            "fc",
+            "fully_connected",
+            &[("unit", "3"), ("input_shape", "1:1:8")],
+        )])
+        .unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].ltype, "input");
+        assert_eq!(out[1].props.list("input_layers"), vec!["fc/input"]);
+    }
+
+    #[test]
+    fn loss_absorbs_softmax() {
+        let out = loss_realizer(vec![
+            node("in", "input", &[("input_shape", "1:1:4")]),
+            node("fc", "fully_connected", &[("unit", "3")]),
+            node("sm", "activation", &[("act", "softmax"), ("input_layers", "fc")]),
+            node("loss", "cross_entropy", &[("input_layers", "sm")]),
+        ])
+        .unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[2].ltype, "cross_entropy_softmax");
+        assert_eq!(out[2].props.list("input_layers"), vec!["fc"]);
+    }
+
+    #[test]
+    fn multiout_fanout() {
+        let out = multiout_realizer(vec![
+            node("in", "input", &[("input_shape", "1:1:4")]),
+            node("a", "fully_connected", &[("unit", "3"), ("input_layers", "in")]),
+            node("b", "fully_connected", &[("unit", "3"), ("input_layers", "in")]),
+            node("add", "addition", &[("input_layers", "a,b")]),
+        ])
+        .unwrap();
+        assert_eq!(out[1].ltype, "multiout");
+        assert_eq!(out[2].props.list("input_layers"), vec!["in/multiout(0)"]);
+        assert_eq!(out[3].props.list("input_layers"), vec!["in/multiout(1)"]);
+    }
+}

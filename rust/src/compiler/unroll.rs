@@ -1,0 +1,126 @@
+//! Recurrent realizer (Table 1 "Recurrent: unroll the graph if there is
+//! a loop").
+//!
+//! Time iteration (the Tacotron2 decoder, paper §5.2) is implemented by
+//! unrolling: the step sub-graph is cloned once per timestep; clones
+//! share weights *and* gradients with the step-0 instance via the `E`
+//! (Extend) create mode (`shared_from` property), so unrolled weights add
+//! no memory and gradients accumulate across timesteps (deferred apply).
+
+use crate::error::{Error, Result};
+use crate::graph::NodeDesc;
+
+/// Description of a recurrence to unroll.
+#[derive(Clone, Debug)]
+pub struct UnrollSpec {
+    /// Number of timesteps.
+    pub t: usize,
+    /// Edges fed back across timesteps: (producer-in-step, input-name) —
+    /// a step-`k` reference to `input-name` becomes the step-`k−1` output
+    /// of `producer-in-step`; at step 0 it stays wired to the original
+    /// (initial-state) node outside the loop.
+    pub recurrent: Vec<(String, String)>,
+}
+
+/// Clone `step` T times with `@t<k>` name suffixes, rewiring in-step
+/// references, recurrent edges and collecting the final-step outputs.
+///
+/// Nodes in `step` must reference either other step nodes or external
+/// nodes (left untouched).
+pub fn unroll(step: &[NodeDesc], spec: &UnrollSpec) -> Result<Vec<NodeDesc>> {
+    if spec.t == 0 {
+        return Err(Error::graph("unroll with t=0"));
+    }
+    let step_names: Vec<&str> = step.iter().map(|n| n.name.as_str()).collect();
+    let mut out = Vec::with_capacity(step.len() * spec.t);
+    for k in 0..spec.t {
+        for n in step {
+            let mut c = n.clone();
+            c.name = at(&n.name, k);
+            if k > 0 {
+                // share weights + gradients with step 0 (E mode)
+                c.props.set("shared_from", at(&n.name, 0));
+            }
+            let refs = n.input_refs();
+            if !refs.is_empty() {
+                let rewired: Vec<String> = refs
+                    .iter()
+                    .map(|r| {
+                        let (name, suffix) = split_ref(r);
+                        // recurrent edge?
+                        if let Some((prod, _)) =
+                            spec.recurrent.iter().find(|(_, inp)| *inp == name)
+                        {
+                            if k == 0 {
+                                // initial state: keep original reference
+                                format!("{name}{suffix}")
+                            } else {
+                                format!("{}{suffix}", at(prod, k - 1))
+                            }
+                        } else if step_names.contains(&name.as_str()) {
+                            format!("{}{suffix}", at(&name, k))
+                        } else {
+                            // external (encoder memory etc.) — BUT an
+                            // external tensor consumed by every timestep
+                            // would need a multiout fan-out; the caller's
+                            // realizer chain handles that.
+                            format!("{name}{suffix}")
+                        }
+                    })
+                    .collect();
+                c.props.set("input_layers", rewired.join(","));
+            }
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+/// Name of node `base` at timestep `k`.
+pub fn at(base: &str, k: usize) -> String {
+    format!("{base}@t{k}")
+}
+
+fn split_ref(r: &str) -> (String, String) {
+    match r.find('(') {
+        Some(p) => (r[..p].trim().to_string(), r[p..].to_string()),
+        None => (r.trim().to_string(), String::new()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::Props;
+
+    #[test]
+    fn unrolls_and_shares() {
+        let step = vec![
+            NodeDesc::new(
+                "cell",
+                "fully_connected",
+                Props::from_pairs([("unit", "4"), ("input_layers", "state")]),
+            ),
+            NodeDesc::new(
+                "state",
+                "activation",
+                Props::from_pairs([("act", "tanh"), ("input_layers", "cell")]),
+            ),
+        ];
+        let spec = UnrollSpec {
+            t: 3,
+            recurrent: vec![("state".into(), "state".into())],
+        };
+        let out = unroll(&step, &spec).unwrap();
+        assert_eq!(out.len(), 6);
+        // step 0 keeps initial-state reference
+        assert_eq!(out[0].props.list("input_layers"), vec!["state"]);
+        assert!(!out[0].props.contains("shared_from"));
+        // step 1 cell consumes step 0 state, shares from step 0
+        assert_eq!(out[2].name, "cell@t1");
+        assert_eq!(out[2].props.list("input_layers"), vec!["state@t0"]);
+        assert_eq!(out[2].props.string("shared_from").unwrap(), "cell@t0");
+        // in-step (non-recurrent) edges rewired within the same step
+        assert_eq!(out[3].props.list("input_layers"), vec!["cell@t1"]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Data pipeline (paper §4 *setData*): `DataProducer` generates samples,
+//! the threaded `BatchQueue` accumulates them into batch-sized buffers
+//! with backpressure, and synthetic producers provide every workload the
+//! evaluation needs (see DESIGN.md §Substitutions for why synthetic).
+
+pub mod producer;
+pub mod queue;
+pub mod synthetic;
+
+pub use producer::{DataProducer, Sample};
+pub use queue::BatchQueue;
+pub use synthetic::{DigitsProducer, MovieLensProducer, RandomProducer, SeqProducer};

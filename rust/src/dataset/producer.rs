@@ -1,0 +1,54 @@
+//! `DataProducer`: the user-extendable sample source (paper §4).
+
+/// One training sample: input features + label, both flat f32.
+#[derive(Clone, Debug, Default)]
+pub struct Sample {
+    pub input: Vec<f32>,
+    pub label: Vec<f32>,
+}
+
+/// A source of samples. Implementations must be `Send` (the Batch Queue
+/// runs them on a producer thread).
+pub trait DataProducer: Send {
+    /// Per-sample input length (must match the model input's feature
+    /// size × 1 sample).
+    fn input_len(&self) -> usize;
+    /// Per-sample label length.
+    fn label_len(&self) -> usize;
+    /// Total samples per epoch.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Produce sample `idx` (0..len). Must be deterministic in `idx` for
+    /// reproducibility (the paper's pull-request equivalence gate).
+    fn sample(&mut self, idx: usize) -> Sample;
+}
+
+/// In-memory producer over pre-materialized samples (feature caching for
+/// transfer learning — HandMoji's "cache the results from the feature
+/// extractor in the first epoch").
+pub struct CachedProducer {
+    pub samples: Vec<Sample>,
+}
+
+impl CachedProducer {
+    pub fn new(samples: Vec<Sample>) -> Self {
+        CachedProducer { samples }
+    }
+}
+
+impl DataProducer for CachedProducer {
+    fn input_len(&self) -> usize {
+        self.samples.first().map(|s| s.input.len()).unwrap_or(0)
+    }
+    fn label_len(&self) -> usize {
+        self.samples.first().map(|s| s.label.len()).unwrap_or(0)
+    }
+    fn len(&self) -> usize {
+        self.samples.len()
+    }
+    fn sample(&mut self, idx: usize) -> Sample {
+        self.samples[idx % self.samples.len()].clone()
+    }
+}

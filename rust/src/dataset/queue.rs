@@ -1,0 +1,128 @@
+//! Batch Queue: a bounded producer/consumer queue of batch buffers
+//! (paper §4: "DataProducer generates data for training and accumulates
+//! the data in the Batch Queue up to the batch size").
+//!
+//! The producer thread assembles `[batch, feat]` input / label buffers;
+//! the bounded channel provides backpressure so at most `depth` batches
+//! are in flight — on-device memory discipline applies to the data
+//! pipeline too.
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::JoinHandle;
+
+use super::producer::DataProducer;
+
+/// A fully-assembled batch.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub input: Vec<f32>,
+    pub label: Vec<f32>,
+    /// Actual sample count (the tail batch may be short; it is dropped by
+    /// default to keep shapes static, matching NNTrainer).
+    pub n: usize,
+}
+
+/// Threaded batch assembler with bounded depth.
+pub struct BatchQueue {
+    rx: Receiver<Batch>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl BatchQueue {
+    /// Spawn the producer thread: one epoch of `producer`, batches of
+    /// `batch` samples, at most `depth` pre-assembled batches in flight.
+    pub fn spawn(mut producer: Box<dyn DataProducer>, batch: usize, depth: usize) -> BatchQueue {
+        let (tx, rx) = sync_channel::<Batch>(depth.max(1));
+        let handle = std::thread::spawn(move || {
+            let n = producer.len();
+            let in_len = producer.input_len();
+            let lb_len = producer.label_len();
+            let mut i = 0usize;
+            while i + batch <= n {
+                let mut b = Batch {
+                    input: vec![0f32; in_len * batch],
+                    label: vec![0f32; lb_len * batch],
+                    n: batch,
+                };
+                for k in 0..batch {
+                    let s = producer.sample(i + k);
+                    debug_assert_eq!(s.input.len(), in_len);
+                    debug_assert_eq!(s.label.len(), lb_len);
+                    b.input[k * in_len..(k + 1) * in_len].copy_from_slice(&s.input);
+                    b.label[k * lb_len..(k + 1) * lb_len].copy_from_slice(&s.label);
+                }
+                if tx.send(b).is_err() {
+                    return; // consumer dropped — stop producing
+                }
+                i += batch;
+            }
+        });
+        BatchQueue { rx, handle: Some(handle) }
+    }
+
+    /// Blocking pop; `None` when the epoch is exhausted.
+    pub fn next(&self) -> Option<Batch> {
+        self.rx.recv().ok()
+    }
+}
+
+impl Drop for BatchQueue {
+    fn drop(&mut self) {
+        // Unblock the producer by dropping the receiver side first is not
+        // possible here; joining is fine because the sender exits when
+        // send() fails after rx is dropped with self.
+        if let Some(h) = self.handle.take() {
+            // Drain remaining items so the producer can finish.
+            while self.rx.try_recv().is_ok() {}
+            drop(std::mem::replace(&mut self.rx, {
+                let (_tx, rx) = sync_channel::<Batch>(1);
+                rx
+            }));
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::producer::{CachedProducer, Sample};
+
+    fn producer(n: usize) -> Box<dyn DataProducer> {
+        Box::new(CachedProducer::new(
+            (0..n)
+                .map(|i| Sample { input: vec![i as f32; 4], label: vec![i as f32] })
+                .collect(),
+        ))
+    }
+
+    #[test]
+    fn batches_complete_epoch() {
+        let q = BatchQueue::spawn(producer(10), 3, 2);
+        let mut seen = 0;
+        while let Some(b) = q.next() {
+            assert_eq!(b.n, 3);
+            assert_eq!(b.input.len(), 12);
+            seen += 1;
+        }
+        // 10 samples, batch 3 → 3 full batches, tail dropped
+        assert_eq!(seen, 3);
+    }
+
+    #[test]
+    fn batch_content_ordered() {
+        let q = BatchQueue::spawn(producer(6), 2, 1);
+        let b0 = q.next().unwrap();
+        assert_eq!(b0.input[0], 0.0);
+        assert_eq!(b0.input[4], 1.0);
+        let b1 = q.next().unwrap();
+        assert_eq!(b1.label, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let q = BatchQueue::spawn(producer(1000), 1, 2);
+        let _ = q.next();
+        drop(q); // must not deadlock
+    }
+}

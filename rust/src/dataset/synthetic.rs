@@ -1,0 +1,254 @@
+//! Synthetic workload producers — one per evaluation scenario (DESIGN.md
+//! §Substitutions documents what each stands in for).
+
+use crate::rng::Rng;
+
+use super::producer::{DataProducer, Sample};
+
+/// Uniform-random features + labels — the paper's component benchmarks
+//  (Table 4 / Figs 9-11) train on synthetic data of the given shapes.
+pub struct RandomProducer {
+    pub n: usize,
+    pub input_len: usize,
+    pub label_len: usize,
+    seed: u64,
+}
+
+impl RandomProducer {
+    pub fn new(n: usize, input_len: usize, label_len: usize, seed: u64) -> Self {
+        RandomProducer { n, input_len, label_len, seed }
+    }
+}
+
+impl DataProducer for RandomProducer {
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+    fn label_len(&self) -> usize {
+        self.label_len
+    }
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn sample(&mut self, idx: usize) -> Sample {
+        let mut rng = Rng::new(self.seed ^ (idx as u64).wrapping_mul(0x1234_5677));
+        let mut s = Sample {
+            input: vec![0f32; self.input_len],
+            label: vec![0f32; self.label_len],
+        };
+        rng.fill_uniform(&mut s.input, -1.0, 1.0);
+        // one-hot-ish label for classification shapes
+        if self.label_len > 1 {
+            s.label[rng.below(self.label_len)] = 1.0;
+        } else {
+            s.label[0] = rng.uniform(-1.0, 1.0);
+        }
+        Sample { input: s.input, label: s.label }
+    }
+}
+
+/// Procedurally-drawn digit glyphs on a `side × side` canvas — a learnable
+/// 10-class vision task for the end-to-end convergence runs (stands in
+/// for MNIST; no datasets ship offline).
+pub struct DigitsProducer {
+    pub n: usize,
+    pub side: usize,
+    pub channels: usize,
+    seed: u64,
+}
+
+impl DigitsProducer {
+    pub fn new(n: usize, side: usize, channels: usize, seed: u64) -> Self {
+        DigitsProducer { n, side, channels, seed }
+    }
+
+    /// 5x7 bitmap font for digits 0-9 (classic hex patterns).
+    const FONT: [[u8; 7]; 10] = [
+        [0x0E, 0x11, 0x13, 0x15, 0x19, 0x11, 0x0E], // 0
+        [0x04, 0x0C, 0x04, 0x04, 0x04, 0x04, 0x0E], // 1
+        [0x0E, 0x11, 0x01, 0x02, 0x04, 0x08, 0x1F], // 2
+        [0x1F, 0x02, 0x04, 0x02, 0x01, 0x11, 0x0E], // 3
+        [0x02, 0x06, 0x0A, 0x12, 0x1F, 0x02, 0x02], // 4
+        [0x1F, 0x10, 0x1E, 0x01, 0x01, 0x11, 0x0E], // 5
+        [0x06, 0x08, 0x10, 0x1E, 0x11, 0x11, 0x0E], // 6
+        [0x1F, 0x01, 0x02, 0x04, 0x08, 0x08, 0x08], // 7
+        [0x0E, 0x11, 0x11, 0x0E, 0x11, 0x11, 0x0E], // 8
+        [0x0E, 0x11, 0x11, 0x0F, 0x01, 0x02, 0x0C], // 9
+    ];
+}
+
+impl DataProducer for DigitsProducer {
+    fn input_len(&self) -> usize {
+        self.channels * self.side * self.side
+    }
+    fn label_len(&self) -> usize {
+        10
+    }
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn sample(&mut self, idx: usize) -> Sample {
+        let mut rng = Rng::new(self.seed ^ (idx as u64).wrapping_mul(0x9E37_79B9));
+        let digit = idx % 10;
+        let side = self.side;
+        let mut img = vec![0f32; self.input_len()];
+        // random placement + intensity jitter
+        let scale = (side / 8).max(1);
+        let max_off = side.saturating_sub(5 * scale + 1);
+        let ox = rng.below(max_off.max(1));
+        let oy = rng.below(side.saturating_sub(7 * scale + 1).max(1));
+        let amp = rng.uniform(0.7, 1.0);
+        for (ry, row) in Self::FONT[digit].iter().enumerate() {
+            for rx in 0..5 {
+                if row & (1 << (4 - rx)) != 0 {
+                    for sy in 0..scale {
+                        for sx in 0..scale {
+                            let y = oy + ry * scale + sy;
+                            let x = ox + rx * scale + sx;
+                            if y < side && x < side {
+                                for c in 0..self.channels {
+                                    img[c * side * side + y * side + x] = amp;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // light noise
+        for v in img.iter_mut() {
+            *v += rng.uniform(-0.05, 0.05);
+        }
+        let mut label = vec![0f32; 10];
+        label[digit] = 1.0;
+        Sample { input: img, label }
+    }
+}
+
+/// MovieLens-shaped recommendation pairs: (user id, item id) → rating.
+/// Preserves the tensor shapes that dominate Fig 12's Product-Rating
+/// case (193610-row embedding table).
+pub struct MovieLensProducer {
+    pub n: usize,
+    pub n_users: usize,
+    pub n_items: usize,
+    seed: u64,
+}
+
+impl MovieLensProducer {
+    pub fn new(n: usize, n_users: usize, n_items: usize, seed: u64) -> Self {
+        MovieLensProducer { n, n_users, n_items, seed }
+    }
+}
+
+impl DataProducer for MovieLensProducer {
+    fn input_len(&self) -> usize {
+        2 // [user id, item id] as f32-encoded indices
+    }
+    fn label_len(&self) -> usize {
+        1
+    }
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn sample(&mut self, idx: usize) -> Sample {
+        let mut rng = Rng::new(self.seed ^ (idx as u64).wrapping_mul(0xABCD_EF01));
+        let u = rng.below(self.n_users);
+        let m = rng.below(self.n_items);
+        // latent-structure rating so the model has something to learn
+        let r = 0.5 + 4.5 * (((u % 7) as f32 / 7.0) * ((m % 5) as f32 / 5.0));
+        Sample {
+            input: vec![u as f32, m as f32],
+            label: vec![r / 5.0],
+        }
+    }
+}
+
+/// Sequence regression: noisy sinusoid windows → next value(s). Stands in
+/// for the voice/mel-frame sequences of the TTS personalization case.
+pub struct SeqProducer {
+    pub n: usize,
+    pub t: usize,
+    pub feat: usize,
+    pub label_len: usize,
+    seed: u64,
+}
+
+impl SeqProducer {
+    pub fn new(n: usize, t: usize, feat: usize, label_len: usize, seed: u64) -> Self {
+        SeqProducer { n, t, feat, label_len, seed }
+    }
+}
+
+impl DataProducer for SeqProducer {
+    fn input_len(&self) -> usize {
+        self.t * self.feat
+    }
+    fn label_len(&self) -> usize {
+        self.label_len
+    }
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn sample(&mut self, idx: usize) -> Sample {
+        let mut rng = Rng::new(self.seed ^ (idx as u64).wrapping_mul(0x5555_AAAB));
+        let phase = rng.uniform(0.0, std::f32::consts::TAU);
+        let freq = rng.uniform(0.05, 0.3);
+        let mut input = vec![0f32; self.input_len()];
+        for step in 0..self.t {
+            for f in 0..self.feat {
+                input[step * self.feat + f] =
+                    (phase + freq * (step as f32 + f as f32 * 0.1)).sin()
+                        + rng.uniform(-0.02, 0.02);
+            }
+        }
+        let mut label = vec![0f32; self.label_len];
+        for (k, v) in label.iter_mut().enumerate() {
+            *v = (phase + freq * (self.t as f32 + k as f32)).sin();
+        }
+        Sample { input, label }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_are_deterministic_and_labeled() {
+        let mut p = DigitsProducer::new(100, 16, 1, 7);
+        let a = p.sample(13);
+        let b = p.sample(13);
+        assert_eq!(a.input, b.input);
+        assert_eq!(a.label.iter().filter(|&&v| v == 1.0).count(), 1);
+        assert_eq!(a.label[3], 1.0); // 13 % 10
+    }
+
+    #[test]
+    fn digits_distinct_classes_differ() {
+        let mut p = DigitsProducer::new(100, 16, 1, 7);
+        let a = p.sample(0);
+        let b = p.sample(1);
+        assert_ne!(a.input, b.input);
+    }
+
+    #[test]
+    fn movielens_ranges() {
+        let mut p = MovieLensProducer::new(50, 100, 20, 3);
+        for i in 0..50 {
+            let s = p.sample(i);
+            assert!(s.input[0] < 100.0);
+            assert!(s.input[1] < 20.0);
+            assert!((0.0..=1.0).contains(&s.label[0]));
+        }
+    }
+
+    #[test]
+    fn seq_shapes() {
+        let mut p = SeqProducer::new(10, 20, 2, 1, 1);
+        let s = p.sample(0);
+        assert_eq!(s.input.len(), 40);
+        assert_eq!(s.label.len(), 1);
+        assert!(s.input.iter().all(|v| v.abs() <= 1.1));
+    }
+}

@@ -1,0 +1,61 @@
+//! Error type shared across the crate.
+
+use thiserror::Error;
+
+/// Crate-wide error enumeration.
+///
+/// Most construction-time failures (bad model description, shape mismatch,
+/// planner inconsistencies) are reported through this type; hot-path code
+/// (forward / backward) is shape-checked at initialize time and does not
+/// return `Result`.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Model description (INI or API) is malformed.
+    #[error("model description: {0}")]
+    ModelDesc(String),
+    /// A layer property had an unknown key or unparsable value.
+    #[error("invalid property `{key}` = `{value}`: {reason}")]
+    Property {
+        key: String,
+        value: String,
+        reason: String,
+    },
+    /// Tensor shapes are inconsistent at graph-initialize time.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    /// Graph wiring error (unknown layer name, cycle outside recurrent scope…).
+    #[error("graph: {0}")]
+    Graph(String),
+    /// Memory planner produced or detected an invalid plan.
+    #[error("planner: {0}")]
+    Planner(String),
+    /// Data pipeline failure.
+    #[error("dataset: {0}")]
+    Dataset(String),
+    /// Checkpoint serialization/deserialization failure.
+    #[error("checkpoint: {0}")]
+    Checkpoint(String),
+    /// PJRT runtime failure (artifact missing, compile/execute error).
+    #[error("runtime: {0}")]
+    Runtime(String),
+    /// I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn model<S: Into<String>>(s: S) -> Self {
+        Error::ModelDesc(s.into())
+    }
+    pub fn shape<S: Into<String>>(s: S) -> Self {
+        Error::Shape(s.into())
+    }
+    pub fn graph<S: Into<String>>(s: S) -> Self {
+        Error::Graph(s.into())
+    }
+    pub fn planner<S: Into<String>>(s: S) -> Self {
+        Error::Planner(s.into())
+    }
+}

@@ -1,0 +1,357 @@
+//! Execution: runs the EO-ordered step list over the Memory Pool.
+//!
+//! The schedule is exactly the execution orders of Algorithm 1 — forward
+//! steps 0..N, then alternating compute-gradient / compute-derivative
+//! steps N..3N, then (optionally) a deferred apply step at 3N. The hot
+//! loop is allocation-free: every buffer, including optimizer state, is a
+//! planner-assigned pool region.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::layers::RunCtx;
+use crate::optimizer::{clip_global_norm, Optimizer};
+use crate::planner::pool::MemoryPool;
+use crate::rng::Rng;
+use crate::tensor::{CreateMode, TensorId, TensorRole};
+
+use super::order::{eo_of, InitGraph};
+
+/// One schedulable step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepOp {
+    Forward(usize),
+    CalcGrad(usize),
+    CalcDeriv(usize),
+    /// Deferred optimizer application over all gradients.
+    Apply,
+}
+
+/// A compiled, planned, pool-backed model execution.
+pub struct Executor {
+    pub graph: InitGraph,
+    pub pool: MemoryPool,
+    steps: Vec<(u32, StepOp)>,
+    /// Gradient roots to zero right before the step at this EO (their
+    /// first write of the iteration — regions may have been reused since
+    /// last iteration, so zeroing must happen here, not after apply).
+    zero_before: HashMap<u32, Vec<TensorId>>,
+    pub optimizer: Box<dyn Optimizer>,
+    pub clip_norm: Option<f32>,
+    pub deferred_apply: bool,
+    pub iter: u64,
+    apply_count: u64,
+    /// Loss captured at the loss layers' forward steps. The loss output
+    /// tensor is only live at its forward EO — its pool region is
+    /// (correctly) reused during backward, so it must be read *at* that
+    /// step, not after the iteration.
+    last_loss: f32,
+}
+
+impl Executor {
+    /// Build the executor: derive the step schedule from the graph,
+    /// allocate the pool, run weight initializers.
+    pub fn new(
+        graph: InitGraph,
+        pool_len: usize,
+        optimizer: Box<dyn Optimizer>,
+        clip_norm: Option<f32>,
+        training: bool,
+        seed: u64,
+    ) -> Result<Executor> {
+        let n = graph.nodes.len();
+        let mut steps: Vec<(u32, StepOp)> = Vec::with_capacity(3 * n + 1);
+        for i in 0..n {
+            let eo = eo_of(i, n);
+            steps.push((eo.f, StepOp::Forward(i)));
+            if training {
+                steps.push((eo.cg, StepOp::CalcGrad(i)));
+                if !graph.nodes[i].fused_backward {
+                    steps.push((eo.cd, StepOp::CalcDeriv(i)));
+                }
+            }
+        }
+        let deferred = graph.deferred_apply || clip_norm.is_some();
+        if training && deferred {
+            steps.push((graph.eo_apply, StepOp::Apply));
+        }
+        steps.sort_by_key(|(eo, _)| *eo);
+
+        // first-write EO per gradient root
+        let mut zero_before: HashMap<u32, Vec<TensorId>> = HashMap::new();
+        for s in graph.table.iter() {
+            if s.role == TensorRole::Gradient && s.merged_into.is_none() && !s.eos.is_empty() {
+                zero_before.entry(s.min_eo().unwrap()).or_default().push(s.id);
+            }
+        }
+
+        let pool = MemoryPool::new(pool_len);
+        let mut exec = Executor {
+            graph,
+            pool,
+            steps,
+            zero_before,
+            optimizer,
+            clip_norm,
+            deferred_apply: deferred,
+            iter: 0,
+            apply_count: 0,
+            last_loss: 0.0,
+        };
+        exec.init_weights(seed);
+        Ok(exec)
+    }
+
+    /// Apply initializers to every root weight / opt-state / temp tensor.
+    pub fn init_weights(&mut self, seed: u64) {
+        let mut rng = Rng::new(seed);
+        for s in self.graph.table.iter() {
+            if s.merged_into.is_some() || s.eos.is_empty() {
+                continue;
+            }
+            if matches!(s.role, TensorRole::Weight | TensorRole::OptState) {
+                if let Some(r) = s.region {
+                    s.init.apply(self.pool.view_mut(r), &mut rng);
+                }
+            }
+        }
+    }
+
+    fn ctx<'a>(&'a self, node: usize) -> RunCtx<'a> {
+        let nd = &self.graph.nodes[node];
+        RunCtx {
+            io: &nd.io,
+            table: &self.graph.table,
+            pool: &self.pool,
+            in_dims: &nd.in_dims,
+            out_dims: &nd.out_dims,
+            training: true,
+            iter: self.iter,
+        }
+    }
+
+    fn ctx_infer<'a>(&'a self, node: usize) -> RunCtx<'a> {
+        let mut c = self.ctx(node);
+        c.training = false;
+        c
+    }
+
+    /// Copy a batch into the input placeholder of input node `idx`
+    /// (indices into `graph.input_nodes`).
+    pub fn bind_input(&self, input_idx: usize, data: &[f32]) -> Result<()> {
+        let node = *self
+            .graph
+            .input_nodes
+            .get(input_idx)
+            .ok_or_else(|| Error::graph(format!("no input node {input_idx}")))?;
+        let id = self.graph.nodes[node].io.outputs[0];
+        let root = self.graph.table.resolve(id);
+        let r = self.graph.table.get(root).region.unwrap();
+        if data.len() != self.graph.table.get(root).dim.len() {
+            return Err(Error::shape(format!(
+                "input size {} != expected {}",
+                data.len(),
+                self.graph.table.get(root).dim.len()
+            )));
+        }
+        self.pool.view_mut(r)[..data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Copy labels into the loss node's label placeholder.
+    pub fn bind_label(&self, loss_idx: usize, data: &[f32]) -> Result<()> {
+        let node = *self
+            .graph
+            .loss_nodes
+            .get(loss_idx)
+            .ok_or_else(|| Error::graph(format!("no loss node {loss_idx}")))?;
+        let id = self.graph.nodes[node]
+            .io
+            .label
+            .ok_or_else(|| Error::graph("loss node has no label"))?;
+        let r = self.graph.table.get(id).region.unwrap();
+        if data.len() != self.graph.table.get(id).dim.len() {
+            return Err(Error::shape(format!(
+                "label size {} != expected {}",
+                data.len(),
+                self.graph.table.get(id).dim.len()
+            )));
+        }
+        self.pool.view_mut(r)[..data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// One full training iteration over the bound batch; returns the loss.
+    pub fn train_iteration(&mut self) -> f32 {
+        self.iter += 1;
+        self.last_loss = 0.0;
+        for k in 0..self.steps.len() {
+            let (eo, op) = self.steps[k];
+            if let Some(grads) = self.zero_before.get(&eo) {
+                for &g in grads {
+                    let r = self.graph.table.get(g).region.unwrap();
+                    self.pool.view_mut(r).fill(0.0);
+                }
+            }
+            match op {
+                StepOp::Forward(i) => {
+                    let ctx = self.ctx(i);
+                    self.graph.nodes[i].layer.forward(&ctx);
+                    if self.graph.nodes[i].is_loss {
+                        // capture now: this region is reused in backward
+                        let id = self.graph.nodes[i].io.outputs[0];
+                        let r = self
+                            .graph
+                            .table
+                            .get(self.graph.table.resolve(id))
+                            .region
+                            .unwrap();
+                        self.last_loss += self.pool.view(r)[0];
+                    }
+                }
+                StepOp::CalcGrad(i) => {
+                    let ctx = self.ctx(i);
+                    self.graph.nodes[i].layer.calc_gradient(&ctx);
+                    // Per-layer apply happens only after the layer's whole
+                    // backward: fused layers finish in CG, others in CD —
+                    // the derivative must be computed with the *old* W.
+                    if !self.deferred_apply
+                        && self.graph.nodes[i].fused_backward
+                        && self.graph.nodes[i].has_grads
+                    {
+                        self.apply_node(i);
+                    }
+                }
+                StepOp::CalcDeriv(i) => {
+                    let ctx = self.ctx(i);
+                    self.graph.nodes[i].layer.calc_derivative(&ctx);
+                    if !self.deferred_apply && self.graph.nodes[i].has_grads {
+                        self.apply_node(i);
+                    }
+                }
+                StepOp::Apply => {
+                    self.apply_all();
+                }
+            }
+        }
+        self.last_loss
+    }
+
+    /// Forward-only pass (inference / feature extraction).
+    pub fn forward_pass(&mut self) {
+        self.iter += 1;
+        for k in 0..self.steps.len() {
+            if let (_, StepOp::Forward(i)) = self.steps[k] {
+                let ctx = self.ctx_infer(i);
+                self.graph.nodes[i].layer.forward(&ctx);
+            }
+        }
+    }
+
+    fn apply_node(&mut self, i: usize) {
+        self.apply_count += 1;
+        let count = self.apply_count;
+        let node = &self.graph.nodes[i];
+        for (w_idx, gid) in node.io.grads.iter().enumerate() {
+            let Some(gid) = gid else { continue };
+            let wid = node.io.weights[w_idx];
+            // E-shared weights are applied at their root only
+            if matches!(self.graph.table.get(wid).mode, CreateMode::Extend(_)) {
+                continue;
+            }
+            let wr = self.graph.table.get(self.graph.table.resolve(wid)).region.unwrap();
+            let gr = self.graph.table.get(self.graph.table.resolve(*gid)).region.unwrap();
+            let w = self.pool.view_mut(wr);
+            let g = self.pool.view(gr);
+            let mut states: Vec<&mut [f32]> = node.opt_states[w_idx]
+                .iter()
+                .map(|&sid| {
+                    let r = self.graph.table.get(sid).region.unwrap();
+                    self.pool.view_mut(r)
+                })
+                .collect();
+            self.optimizer.apply(w, g, &mut states, count);
+        }
+    }
+
+    fn apply_all(&mut self) {
+        if let Some(max_norm) = self.clip_norm {
+            let mut grads: Vec<&mut [f32]> = Vec::new();
+            for s in self.graph.table.iter() {
+                if s.role == TensorRole::Gradient && s.merged_into.is_none() && !s.eos.is_empty() {
+                    grads.push(self.pool.view_mut(s.region.unwrap()));
+                }
+            }
+            clip_global_norm(&mut grads, max_norm);
+        }
+        for i in 0..self.graph.nodes.len() {
+            if self.graph.nodes[i].has_grads {
+                self.apply_node(i);
+            }
+        }
+    }
+
+    /// Loss captured at the last iteration's loss-forward steps.
+    pub fn loss(&self) -> f32 {
+        self.last_loss
+    }
+
+    /// Copy out the activations of a named node's first output.
+    pub fn read_output(&self, name: &str) -> Result<Vec<f32>> {
+        let node = self
+            .graph
+            .nodes
+            .iter()
+            .find(|n| n.name == name)
+            .ok_or_else(|| Error::graph(format!("unknown node `{name}`")))?;
+        let id = node.io.outputs[0];
+        let r = self.graph.table.get(self.graph.table.resolve(id)).region.unwrap();
+        Ok(self.pool.view(r).to_vec())
+    }
+
+    /// Copy out a weight tensor by `layer:weight` name.
+    pub fn read_weight(&self, name: &str) -> Result<Vec<f32>> {
+        let id = self
+            .graph
+            .table
+            .by_name(name)
+            .ok_or_else(|| Error::graph(format!("unknown tensor `{name}`")))?;
+        let root = self.graph.table.resolve(id);
+        let r = self.graph.table.get(root).region.unwrap();
+        Ok(self.pool.view(r).to_vec())
+    }
+
+    /// Overwrite a weight tensor (checkpoint load / oracle comparison).
+    pub fn write_weight(&self, name: &str, data: &[f32]) -> Result<()> {
+        let id = self
+            .graph
+            .table
+            .by_name(name)
+            .ok_or_else(|| Error::graph(format!("unknown tensor `{name}`")))?;
+        let root = self.graph.table.resolve(id);
+        let spec = self.graph.table.get(root);
+        if data.len() != spec.dim.len() {
+            return Err(Error::shape(format!(
+                "weight `{name}` size {} != {}",
+                data.len(),
+                spec.dim.len()
+            )));
+        }
+        self.pool.view_mut(spec.region.unwrap()).copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Names of all root trainable weights (for checkpointing).
+    pub fn weight_names(&self) -> Vec<String> {
+        self.graph
+            .table
+            .iter()
+            .filter(|s| s.role == TensorRole::Weight && s.merged_into.is_none() && !s.eos.is_empty())
+            .map(|s| s.name.clone())
+            .collect()
+    }
+
+    pub fn steps(&self) -> &[(u32, StepOp)] {
+        &self.steps
+    }
+}

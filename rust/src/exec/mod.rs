@@ -1,0 +1,8 @@
+//! Execution-order machinery: Algorithm 1 (order assignment + view
+//! merging) and the EO-driven executor.
+
+pub mod executor;
+pub mod order;
+
+pub use executor::{Executor, StepOp};
+pub use order::{eo_of, ideal_peak_bytes, init_graph, EoTriple, InitGraph, InitNode, InitOptions};

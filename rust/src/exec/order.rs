@@ -1,0 +1,563 @@
+//! Graph initialization + Algorithm 1: execution-order assignment.
+//!
+//! This is the paper's core analysis (§4.1). Each layer `L_i` of an
+//! `N`-layer model gets three execution orders:
+//!
+//! ```text
+//! EO_F  = i                    (forward)
+//! EO_CG = 3N − 2(i+1)          (compute gradient)
+//! EO_CD = EO_CG + 1            (compute derivative)
+//! ```
+//!
+//! Every tensor request accumulates the EOs implied by its lifespan at
+//! each requesting layer; MV/RV/E create modes are then resolved by the
+//! merge rules of Algorithm 1 (lines 13–23), collapsing in-place views
+//! when the target tensor's integrity is preserved.
+
+use crate::error::{Error, Result};
+use crate::layers::{loss::is_loss_kind, FinalizeOut, Layer, LayerFactory, LayerIo};
+use crate::graph::Graph;
+use crate::tensor::{
+    CreateMode, Initializer, Lifespan, TensorDim, TensorId, TensorRole, TensorTable,
+};
+
+use std::collections::HashMap;
+
+/// Options controlling initialization (the Fig 9 baseline and the
+/// ablations toggle these).
+#[derive(Clone, Debug)]
+pub struct InitOptions {
+    pub batch: usize,
+    pub training: bool,
+    /// Enable MV/RV in-place merging (paper default: on).
+    pub inplace: bool,
+    /// Emulate conventional frameworks: every activation/derivative/
+    /// gradient/temp stays live for the whole iteration, no in-place.
+    pub conventional: bool,
+    /// Apply gradients once at iteration end (forced by gradient clipping
+    /// and by E-shared weights / unrolled recurrence).
+    pub deferred_apply: bool,
+    /// Optimizer state tensors per trainable weight (SGD-momentum: 1,
+    /// Adam: 2).
+    pub opt_slots: usize,
+}
+
+impl Default for InitOptions {
+    fn default() -> Self {
+        InitOptions {
+            batch: 1,
+            training: true,
+            inplace: true,
+            conventional: false,
+            deferred_apply: false,
+            opt_slots: 0,
+        }
+    }
+}
+
+/// An initialized node: instantiated layer + resolved tensor bindings.
+pub struct InitNode {
+    pub name: String,
+    pub layer: Box<dyn Layer>,
+    pub io: LayerIo,
+    pub in_dims: Vec<TensorDim>,
+    pub out_dims: Vec<TensorDim>,
+    pub fused_backward: bool,
+    pub trainable: bool,
+    pub is_loss: bool,
+    pub is_input: bool,
+    /// This node has trainable weights with gradients.
+    pub has_grads: bool,
+    /// This node writes at least one input derivative.
+    pub writes_derivs: bool,
+    /// Optimizer state tensors, `[weight][slot]`.
+    pub opt_states: Vec<Vec<TensorId>>,
+}
+
+/// Fully initialized graph, ready for planning and execution.
+pub struct InitGraph {
+    pub nodes: Vec<InitNode>,
+    pub table: TensorTable,
+    /// EO of the deferred apply step == 3N (training) or N (inference).
+    pub eo_apply: u32,
+    pub deferred_apply: bool,
+    pub loss_nodes: Vec<usize>,
+    pub input_nodes: Vec<usize>,
+}
+
+/// EO triple of one layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EoTriple {
+    pub f: u32,
+    pub cg: u32,
+    pub cd: u32,
+}
+
+pub fn eo_of(i: usize, n: usize) -> EoTriple {
+    EoTriple {
+        f: i as u32,
+        cg: (3 * n - 2 * (i + 1)) as u32,
+        cd: (3 * n - 2 * (i + 1) + 1) as u32,
+    }
+}
+
+/// Initialize a wired graph: instantiate layers, finalize shapes, create
+/// every tensor spec with lifespans + create modes, run Algorithm 1.
+pub fn init_graph(
+    graph: &Graph,
+    factories: &HashMap<&'static str, LayerFactory>,
+    opts: &InitOptions,
+) -> Result<InitGraph> {
+    let n = graph.nodes.len();
+    if n == 0 {
+        return Err(Error::graph("empty model"));
+    }
+    let mut table = TensorTable::new();
+
+    // ---- pass 1: instantiate + finalize in topological order ------------
+    let mut layers: Vec<Box<dyn Layer>> = Vec::with_capacity(n);
+    let mut fins: Vec<FinalizeOut> = Vec::with_capacity(n);
+    let mut out_dims_all: Vec<Vec<TensorDim>> = Vec::with_capacity(n);
+    let mut in_dims_all: Vec<Vec<TensorDim>> = Vec::with_capacity(n);
+    let mut trainable: Vec<bool> = Vec::with_capacity(n);
+    for (i, nd) in graph.nodes.iter().enumerate() {
+        let factory = factories
+            .get(nd.ltype.as_str())
+            .ok_or_else(|| Error::model(format!("unknown layer type `{}`", nd.ltype)))?;
+        let mut layer = factory(&nd.props)?;
+        let in_dims: Vec<TensorDim> = graph.inputs[i]
+            .iter()
+            .map(|ep| out_dims_all[ep.node][ep.slot])
+            .collect();
+        let mut fin = layer.finalize(&in_dims)?;
+        // apply batch
+        for d in fin.out_dims.iter_mut() {
+            if nd.ltype == "input" {
+                *d = d.with_batch(opts.batch);
+            } else if !is_loss_kind(&nd.ltype) {
+                // keep the batch the layer derived from its input
+                debug_assert!(d.b == opts.batch || in_dims.is_empty() || d.b == in_dims[0].b);
+            }
+        }
+        trainable.push(nd.props.bool_or("trainable", true)?);
+        in_dims_all.push(in_dims);
+        out_dims_all.push(fin.out_dims.clone());
+        fins.push(fin);
+        layers.push(layer);
+    }
+
+    // ---- pass 2: derivative-need analysis (frozen-backbone pruning) -----
+    // wants_deriv[i]: node i's output derivative will exist & be consumed.
+    let mut wants_deriv = vec![false; n];
+    let mut has_grads = vec![false; n];
+    for i in 0..n {
+        has_grads[i] = opts.training && trainable[i] && !fins[i].weights.is_empty();
+        let upstream = graph.inputs[i]
+            .iter()
+            .any(|ep| wants_deriv[ep.node] || has_grads[ep.node]);
+        // a node's output deriv is wanted if it, or anything before it,
+        // trains weights — and never for input or loss nodes.
+        wants_deriv[i] = opts.training
+            && !is_loss_kind(&graph.nodes[i].ltype)
+            && graph.nodes[i].ltype != "input"
+            && (has_grads[i] || upstream);
+    }
+
+    let eo_apply: u32 = if opts.training { (3 * n) as u32 } else { n as u32 };
+    let mut deferred = opts.deferred_apply;
+    // E-shared weights force deferred apply (gradient accumulation).
+    for nd in &graph.nodes {
+        if nd.props.contains("shared_from") {
+            deferred = true;
+        }
+    }
+
+    // ---- pass 3: tensor creation + EO assignment (Algorithm 1) ----------
+    let consumers = graph.consumers();
+    let mut nodes: Vec<InitNode> = Vec::with_capacity(n);
+    // weight-name → id for shared_from lookups
+    let mut weight_ids: HashMap<String, TensorId> = HashMap::new();
+    let mut grad_ids: HashMap<String, TensorId> = HashMap::new();
+
+    for i in 0..n {
+        let nd = &graph.nodes[i];
+        let fin = &fins[i];
+        let eo = eo_of(i, n);
+        let is_input = nd.ltype == "input";
+        let is_loss = is_loss_kind(&nd.ltype);
+        let fused = fin.fused_backward;
+        let mut io = LayerIo::default();
+
+        // -- inputs: resolve producer outputs, add consumer-side EOs.
+        // `calc_derivative` runs (and reads *all* inputs) whenever any
+        // producer edge carries a derivative — so a CD need on one input
+        // keeps every input alive through the CD step (e.g. attention's
+        // memory input, whose own edge has no derivative when it comes
+        // straight from an input node).
+        let will_run_cd =
+            opts.training && graph.inputs[i].iter().any(|ep| wants_deriv[ep.node]);
+        for ep in &graph.inputs[i] {
+            let prod = &nodes[ep.node];
+            let act = prod.io.outputs[ep.slot];
+            table.add_eo(act, eo.f, Lifespan::FORWARD);
+            if opts.training {
+                if fin.need_input_cg && has_grads[i] {
+                    table.add_eo(act, eo.cg, Lifespan::CALC_GRAD);
+                }
+                if fin.need_input_cd && (will_run_cd || has_grads[i]) {
+                    table.add_eo(act, if fused { eo.cg } else { eo.cd }, Lifespan::CALC_DERIV);
+                }
+            }
+            io.inputs.push(act);
+        }
+
+        // -- outputs + their derivative buffers
+        let single_in_act = io.inputs.first().copied();
+        for (k, od) in out_dims_all[i].iter().enumerate() {
+            let mode = if is_input {
+                CreateMode::Placeholder
+            } else {
+                match (fin.inplace, k, single_in_act, opts.inplace && !opts.conventional) {
+                    (crate::layers::Inplace::Modify, 0, Some(t), true)
+                        if !table.get(t).is_placeholder() =>
+                    {
+                        CreateMode::ModifyView(t)
+                    }
+                    (crate::layers::Inplace::ReadOnly, 0, Some(t), true) => {
+                        CreateMode::ReadOnlyView(t)
+                    }
+                    _ => CreateMode::Create,
+                }
+            };
+            let role = if is_input { TensorRole::Input } else { TensorRole::Activation };
+            let act = table.request(
+                format!("{}:out{}", nd.name, k),
+                *od,
+                role,
+                mode,
+                Initializer::None,
+            )?;
+            table.add_eo(act, eo.f, Lifespan::FORWARD);
+            if is_input {
+                // bound by the Batch Queue at iteration start
+                table.add_eo(act, 0, Lifespan::FORWARD);
+            }
+            if opts.training && wants_deriv[i] {
+                if fin.need_output_cg {
+                    table.add_eo(act, eo.cg, Lifespan::CALC_GRAD);
+                }
+                if fin.need_output_cd {
+                    table.add_eo(act, if fused { eo.cg } else { eo.cd }, Lifespan::CALC_DERIV);
+                }
+            }
+            io.outputs.push(act);
+
+            // derivative of this output
+            if wants_deriv[i] {
+                let d = table.request(
+                    format!("{}:dout{}", nd.name, k),
+                    *od,
+                    TensorRole::Derivative,
+                    CreateMode::Create,
+                    Initializer::None,
+                )?;
+                // read by this node during its backward
+                table.add_eo(d, eo.cg, Lifespan::CALC_GRAD);
+                if !fused {
+                    table.add_eo(d, eo.cd, Lifespan::CALC_DERIV);
+                }
+                io.out_derivs.push(Some(d));
+            } else {
+                io.out_derivs.push(None);
+            }
+        }
+
+        // sanity: every non-multiout output must have <= 1 consumer
+        if nd.ltype != "multiout" {
+            for (slot_consumers, _) in [(consumers[i].iter().filter(|c| c.2 == 0).count(), 0)] {
+                if out_dims_all[i].len() == 1 && slot_consumers > 1 {
+                    return Err(Error::graph(format!(
+                        "output of `{}` consumed {} times; the MultiOut realizer must fan it out",
+                        nd.name, slot_consumers
+                    )));
+                }
+            }
+        }
+
+        // -- input derivatives (this node WRITES them at CD / fused CG)
+        for ep in &graph.inputs[i] {
+            let pd = nodes[ep.node].io.out_derivs.get(ep.slot).copied().flatten();
+            if let Some(d) = pd {
+                table.add_eo(d, if fused { eo.cg } else { eo.cd }, Lifespan::CALC_DERIV);
+            }
+            io.in_derivs.push(pd);
+        }
+        // in-place derivative sharing (Fig 5): the producer's dout becomes
+        // a view of this node's dout.
+        if opts.inplace && !opts.conventional && opts.training {
+            let my_dout = io.out_derivs.first().copied().flatten();
+            let prod_dout = io.in_derivs.first().copied().flatten();
+            if let (Some(my), Some(prod)) = (my_dout, prod_dout) {
+                let share = match fin.inplace {
+                    crate::layers::Inplace::Modify => Some(CreateMode::ModifyView(my)),
+                    crate::layers::Inplace::ReadOnly => Some(CreateMode::ReadOnlyView(my)),
+                    crate::layers::Inplace::None => None,
+                };
+                if let Some(m) = share {
+                    let spec = table.get_mut(prod);
+                    if matches!(spec.mode, CreateMode::Create) {
+                        spec.mode = m;
+                    }
+                }
+            }
+        }
+
+        // -- weights, gradients, optimizer state
+        let shared_from = nd.props.string("shared_from");
+        let mut opt_states: Vec<Vec<TensorId>> = Vec::new();
+        for w in &fin.weights {
+            let dim = w.dim; // weights are batch-independent
+            let (mode, gmode) = match &shared_from {
+                Some(src) => {
+                    let wkey = format!("{src}:{}", w.name);
+                    let wid = *weight_ids.get(&wkey).ok_or_else(|| {
+                        Error::graph(format!("shared_from target weight `{wkey}` not found"))
+                    })?;
+                    let gid = grad_ids.get(&wkey).copied();
+                    (CreateMode::Extend(wid), gid.map(CreateMode::Extend))
+                }
+                None => (CreateMode::Create, None),
+            };
+            let wid = table.request(
+                format!("{}:{}", nd.name, w.name),
+                dim,
+                TensorRole::Weight,
+                mode,
+                w.init,
+            )?;
+            table.add_eo(wid, 0, Lifespan::MAX);
+            table.add_eo(wid, eo_apply, Lifespan::MAX);
+            table.get_mut(wid).trainable = trainable[i];
+            io.weights.push(wid);
+
+            if has_grads[i] {
+                let gmode2 = match gmode {
+                    Some(m) => m,
+                    None => CreateMode::Create,
+                };
+                let gid = table.request(
+                    format!("{}:{}:grad", nd.name, w.name),
+                    dim,
+                    TensorRole::Gradient,
+                    gmode2,
+                    Initializer::Zeros,
+                )?;
+                table.add_eo(gid, eo.cg, Lifespan::CALC_GRAD);
+                if deferred {
+                    table.add_eo(gid, eo_apply, Lifespan::MAX);
+                } else if !fused {
+                    // per-layer apply runs right after the layer's CD
+                    // (the derivative must see the pre-update weight)
+                    table.add_eo(gid, eo.cd, Lifespan::CALC_DERIV);
+                }
+                io.grads.push(Some(gid));
+                if shared_from.is_none() {
+                    weight_ids.insert(format!("{}:{}", nd.name, w.name), wid);
+                    grad_ids.insert(format!("{}:{}", nd.name, w.name), gid);
+                    // optimizer state (only for root weights)
+                    let mut slots = Vec::new();
+                    for s in 0..opts.opt_slots {
+                        let sid = table.request(
+                            format!("{}:{}:opt{}", nd.name, w.name, s),
+                            dim,
+                            TensorRole::OptState,
+                            CreateMode::Create,
+                            Initializer::Zeros,
+                        )?;
+                        table.add_eo(sid, 0, Lifespan::MAX);
+                        table.add_eo(sid, eo_apply, Lifespan::MAX);
+                        slots.push(sid);
+                    }
+                    opt_states.push(slots);
+                } else {
+                    opt_states.push(vec![]);
+                }
+            } else {
+                io.grads.push(None);
+                opt_states.push(vec![]);
+                if shared_from.is_none() {
+                    weight_ids.insert(format!("{}:{}", nd.name, w.name), wid);
+                }
+            }
+        }
+
+        // -- temps
+        for t in &fin.temps {
+            // batch-dependent temps were declared with the input's batch
+            let tid = table.request(
+                format!("{}:{}", nd.name, t.name),
+                t.dim,
+                TensorRole::Temp,
+                CreateMode::Create,
+                Initializer::Zeros,
+            )?;
+            if t.span.is_max() {
+                table.add_eo(tid, 0, Lifespan::MAX);
+                table.add_eo(tid, eo_apply, Lifespan::MAX);
+            } else {
+                if t.span.forward() {
+                    table.add_eo(tid, eo.f, Lifespan::FORWARD);
+                }
+                if opts.training {
+                    if t.span.calc_grad() {
+                        table.add_eo(tid, eo.cg, Lifespan::CALC_GRAD);
+                    }
+                    if t.span.calc_deriv() {
+                        table.add_eo(tid, if fused { eo.cg } else { eo.cd }, Lifespan::CALC_DERIV);
+                    }
+                }
+            }
+            io.temps.push(tid);
+        }
+
+        // -- loss label placeholder
+        if is_loss {
+            let dim = in_dims_all[i][0];
+            let lid = table.request(
+                format!("{}:label", nd.name),
+                dim,
+                TensorRole::Input,
+                CreateMode::Placeholder,
+                Initializer::None,
+            )?;
+            table.add_eo(lid, 0, Lifespan::FORWARD);
+            table.add_eo(lid, eo.f, Lifespan::FORWARD);
+            if opts.training {
+                table.add_eo(lid, eo.cd, Lifespan::CALC_DERIV);
+            }
+            io.label = Some(lid);
+        }
+
+        let writes_derivs = io.in_derivs.iter().any(|d| d.is_some());
+        nodes.push(InitNode {
+            name: nd.name.clone(),
+            layer: std::mem::replace(
+                &mut layers[i],
+                crate::layers::input::InputLayer::create(&crate::layers::Props::from_pairs([(
+                    "input_shape",
+                    "1:1:1",
+                )]))?,
+            ),
+            io,
+            in_dims: in_dims_all[i].clone(),
+            out_dims: out_dims_all[i].clone(),
+            fused_backward: fused,
+            trainable: trainable[i],
+            is_loss,
+            is_input,
+            has_grads: has_grads[i],
+            writes_derivs,
+            opt_states,
+        });
+    }
+
+    // ---- conventional-framework profile (Fig 9 baseline) ----------------
+    if opts.conventional {
+        for s in table.iter_mut() {
+            if !s.eos.is_empty()
+                && matches!(
+                    s.role,
+                    TensorRole::Activation | TensorRole::Derivative | TensorRole::Gradient | TensorRole::Temp
+                )
+            {
+                s.eos.push(0);
+                s.eos.push(eo_apply);
+            }
+        }
+    }
+
+    // ---- Algorithm 1 lines 13–23: MV/RV/E merge --------------------------
+    table.finish_orders();
+    merge_views(&mut table)?;
+    table.finish_orders();
+
+    let loss_nodes = nodes.iter().enumerate().filter(|(_, x)| x.is_loss).map(|(i, _)| i).collect();
+    let input_nodes = nodes.iter().enumerate().filter(|(_, x)| x.is_input).map(|(i, _)| i).collect();
+    Ok(InitGraph {
+        nodes,
+        table,
+        eo_apply,
+        deferred_apply: deferred,
+        loss_nodes,
+        input_nodes,
+    })
+}
+
+/// Algorithm 1, lines 13–23: resolve create modes in ascending-min-EO
+/// order. `MV` merges only when the target's last use precedes (or
+/// coincides with) the view's first use; `RV`/`E` always merge.
+fn merge_views(table: &mut TensorTable) -> Result<()> {
+    let mut ids: Vec<TensorId> = (0..table.len()).collect();
+    ids.sort_by_key(|&id| table.get(id).min_eo().unwrap_or(u32::MAX));
+    for id in ids {
+        if table.get(id).eos.is_empty() {
+            continue;
+        }
+        let mode = table.get(id).mode.clone();
+        let (target, strict) = match mode {
+            CreateMode::ModifyView(t) => (t, true),
+            CreateMode::ReadOnlyView(t) | CreateMode::Extend(t) => (t, false),
+            _ => continue,
+        };
+        let root = table.resolve(target);
+        if root == id {
+            return Err(Error::graph(format!(
+                "tensor `{}` views itself",
+                table.get(id).name
+            )));
+        }
+        let root_max = table.get(root).max_eo().unwrap_or(0);
+        let my_min = table.get(id).min_eo().unwrap_or(u32::MAX);
+        let mergeable = !strict || root_max <= my_min;
+        if mergeable {
+            let eos = table.get(id).eos.clone();
+            let span = table.get(id).lifespan;
+            {
+                let r = table.get_mut(root);
+                r.eos.extend(eos);
+                r.eos.sort_unstable();
+                r.eos.dedup();
+                r.lifespan = r.lifespan.union(span);
+            }
+            table.get_mut(id).merged_into = Some(root);
+        } else {
+            // integrity not guaranteed — demote to a fresh tensor
+            table.get_mut(id).mode = CreateMode::Create;
+        }
+    }
+    Ok(())
+}
+
+/// The analytic minimum peak (paper §3 "ideal memory"): the max over all
+/// execution orders of the bytes of simultaneously-live root tensors.
+/// This is the lower bound any planner can hope for, used as the "Ideal"
+/// series of Table 4 / Fig 9.
+pub fn ideal_peak_bytes(table: &TensorTable) -> usize {
+    let mut events: Vec<(u32, i64)> = Vec::new();
+    for s in table.iter() {
+        if s.merged_into.is_some() || s.eos.is_empty() {
+            continue;
+        }
+        let b = s.dim.bytes() as i64;
+        events.push((s.min_eo().unwrap(), b));
+        events.push((s.max_eo().unwrap() + 1, -b));
+    }
+    events.sort();
+    let mut cur = 0i64;
+    let mut peak = 0i64;
+    for (_, d) in events {
+        cur += d;
+        peak = peak.max(cur);
+    }
+    peak as usize
+}

@@ -1,0 +1,209 @@
+//! Model graph: description-level nodes and wiring.
+//!
+//! After *Load*, a model is a list of `[<Layer type>, <Properties>]`
+//! tuples (paper §4). `Graph` resolves `input_layers` references into
+//! edges, topologically sorts, and exposes producer/consumer relations to
+//! the compiler.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::layers::Props;
+
+/// One layer description (pre-instantiation).
+#[derive(Clone, Debug)]
+pub struct NodeDesc {
+    pub name: String,
+    pub ltype: String,
+    pub props: Props,
+}
+
+impl NodeDesc {
+    pub fn new(name: impl Into<String>, ltype: impl Into<String>, props: Props) -> Self {
+        NodeDesc { name: name.into(), ltype: ltype.into(), props }
+    }
+
+    /// Input references: `input_layers` property, with NNTrainer's INI
+    /// convention that an omitted value chains from the previous layer.
+    pub fn input_refs(&self) -> Vec<String> {
+        self.props.list("input_layers")
+    }
+}
+
+/// An edge endpoint: node index + output slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OutRef {
+    pub node: usize,
+    pub slot: usize,
+}
+
+/// Wired graph over a node list.
+#[derive(Debug)]
+pub struct Graph {
+    pub nodes: Vec<NodeDesc>,
+    /// For each node, the producer endpoints of its inputs.
+    pub inputs: Vec<Vec<OutRef>>,
+    /// Topological order (indices into `nodes`).
+    pub order: Vec<usize>,
+}
+
+impl Graph {
+    /// Wire a node list. `input_layers = name` or `name(slot)` for
+    /// multi-output producers; an omitted `input_layers` on a non-input
+    /// layer chains from the previous node in the list.
+    pub fn wire(nodes: Vec<NodeDesc>) -> Result<Graph> {
+        let mut by_name: HashMap<&str, usize> = HashMap::new();
+        for (i, n) in nodes.iter().enumerate() {
+            if by_name.insert(n.name.as_str(), i).is_some() {
+                return Err(Error::graph(format!("duplicate layer name `{}`", n.name)));
+            }
+        }
+        // Track how many times each producer has been referenced so that
+        // bare references to a multi-output node take successive slots.
+        let mut next_slot: HashMap<usize, usize> = HashMap::new();
+        let mut inputs: Vec<Vec<OutRef>> = Vec::with_capacity(nodes.len());
+        for (i, n) in nodes.iter().enumerate() {
+            let mut refs = n.input_refs();
+            if refs.is_empty() && n.ltype != "input" {
+                if i == 0 {
+                    return Err(Error::graph(format!(
+                        "layer `{}` has no input_layers and no predecessor",
+                        n.name
+                    )));
+                }
+                refs = vec![nodes[i - 1].name.clone()];
+            }
+            let mut eps = Vec::with_capacity(refs.len());
+            for r in refs {
+                let (name, slot) = parse_ref(&r)?;
+                let &p = by_name
+                    .get(name.as_str())
+                    .ok_or_else(|| Error::graph(format!("unknown input `{name}` of `{}`", n.name)))?;
+                if p >= i {
+                    return Err(Error::graph(format!(
+                        "layer `{}` consumes `{name}` which is not defined before it",
+                        n.name
+                    )));
+                }
+                let slot = match slot {
+                    Some(s) => s,
+                    None => {
+                        // auto-advance slot for multiout producers
+                        let e = next_slot.entry(p).or_insert(0);
+                        let s = *e;
+                        if nodes[p].ltype == "multiout" {
+                            *e += 1;
+                        }
+                        s
+                    }
+                };
+                eps.push(OutRef { node: p, slot });
+            }
+            inputs.push(eps);
+        }
+        // Node list is required to be topologically ordered already
+        // (checked above: producers precede consumers).
+        let order = (0..nodes.len()).collect();
+        Ok(Graph { nodes, inputs, order })
+    }
+
+    /// consumers[p] = list of (consumer node, consumer input index, slot).
+    pub fn consumers(&self) -> Vec<Vec<(usize, usize, usize)>> {
+        let mut c: Vec<Vec<(usize, usize, usize)>> = vec![vec![]; self.nodes.len()];
+        for (i, eps) in self.inputs.iter().enumerate() {
+            for (k, ep) in eps.iter().enumerate() {
+                c[ep.node].push((i, k, ep.slot));
+            }
+        }
+        c
+    }
+}
+
+fn parse_ref(r: &str) -> Result<(String, Option<usize>)> {
+    if let Some(open) = r.find('(') {
+        let close = r
+            .rfind(')')
+            .ok_or_else(|| Error::graph(format!("bad input ref `{r}`")))?;
+        let slot: usize = r[open + 1..close]
+            .trim()
+            .parse()
+            .map_err(|e| Error::graph(format!("bad slot in `{r}`: {e}")))?;
+        Ok((r[..open].trim().to_string(), Some(slot)))
+    } else {
+        Ok((r.trim().to_string(), None))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(name: &str, ltype: &str, pairs: &[(&str, &str)]) -> NodeDesc {
+        NodeDesc::new(name, ltype, Props::from_pairs(pairs.iter().copied()))
+    }
+
+    #[test]
+    fn implicit_chaining() {
+        let g = Graph::wire(vec![
+            node("in", "input", &[("input_shape", "1:1:4")]),
+            node("fc0", "fully_connected", &[("unit", "3")]),
+            node("loss", "mse", &[]),
+        ])
+        .unwrap();
+        assert_eq!(g.inputs[1], vec![OutRef { node: 0, slot: 0 }]);
+        assert_eq!(g.inputs[2], vec![OutRef { node: 1, slot: 0 }]);
+    }
+
+    #[test]
+    fn explicit_refs_and_slots() {
+        let g = Graph::wire(vec![
+            node("in", "input", &[("input_shape", "1:1:4")]),
+            node("mo", "multiout", &[("outputs", "2")]),
+            node("a", "fully_connected", &[("unit", "3"), ("input_layers", "mo(0)")]),
+            node("b", "fully_connected", &[("unit", "3"), ("input_layers", "mo(1)")]),
+            node("add", "addition", &[("input_layers", "a,b")]),
+        ])
+        .unwrap();
+        assert_eq!(g.inputs[2], vec![OutRef { node: 1, slot: 0 }]);
+        assert_eq!(g.inputs[3], vec![OutRef { node: 1, slot: 1 }]);
+        assert_eq!(g.inputs[4].len(), 2);
+        let cons = g.consumers();
+        assert_eq!(cons[1].len(), 2);
+    }
+
+    #[test]
+    fn bare_multiout_refs_auto_advance() {
+        let g = Graph::wire(vec![
+            node("in", "input", &[("input_shape", "1:1:4")]),
+            node("mo", "multiout", &[("outputs", "2")]),
+            node("a", "activation", &[("act", "relu"), ("input_layers", "mo")]),
+            node("b", "activation", &[("act", "relu"), ("input_layers", "mo")]),
+        ])
+        .unwrap();
+        assert_eq!(g.inputs[2][0].slot, 0);
+        assert_eq!(g.inputs[3][0].slot, 1);
+    }
+
+    #[test]
+    fn rejects_unknown_and_forward_refs() {
+        assert!(Graph::wire(vec![
+            node("in", "input", &[("input_shape", "1:1:4")]),
+            node("fc", "fully_connected", &[("unit", "3"), ("input_layers", "nope")]),
+        ])
+        .is_err());
+        assert!(Graph::wire(vec![
+            node("a", "fully_connected", &[("unit", "3"), ("input_layers", "b")]),
+            node("b", "input", &[("input_shape", "1:1:4")]),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        assert!(Graph::wire(vec![
+            node("x", "input", &[("input_shape", "1:1:4")]),
+            node("x", "fully_connected", &[("unit", "3")]),
+        ])
+        .is_err());
+    }
+}

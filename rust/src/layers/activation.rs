@@ -1,0 +1,145 @@
+//! Activation layer — sigmoid / tanh / relu / softmax.
+//!
+//! The flagship in-place (`MV`) layer of the paper (§3, Fig 1c, Fig 5):
+//! its output may share memory with its input because the *output* alone
+//! is needed for the backward pass (`ΔD' = X'(1 − X')` for sigmoid), and
+//! its input/output derivative buffers are likewise shared.
+
+use crate::backend::native as nb;
+use crate::error::{Error, Result};
+use crate::tensor::TensorDim;
+
+use super::{FinalizeOut, Inplace, Layer, Props, RunCtx};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActKind {
+    Sigmoid,
+    Tanh,
+    Relu,
+    Softmax,
+}
+
+impl ActKind {
+    pub fn parse(s: &str) -> Result<ActKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "sigmoid" => Ok(ActKind::Sigmoid),
+            "tanh" => Ok(ActKind::Tanh),
+            "relu" => Ok(ActKind::Relu),
+            "softmax" => Ok(ActKind::Softmax),
+            other => Err(Error::model(format!("unknown activation `{other}`"))),
+        }
+    }
+}
+
+pub struct ActivationLayer {
+    pub kind_: ActKind,
+    feat: usize,
+}
+
+impl ActivationLayer {
+    pub fn create(props: &Props) -> Result<Box<dyn Layer>> {
+        let kind = ActKind::parse(
+            &props
+                .string("act")
+                .ok_or_else(|| Error::model("activation layer requires act="))?,
+        )?;
+        Ok(Box::new(ActivationLayer { kind_: kind, feat: 0 }))
+    }
+
+    pub fn new(kind: ActKind) -> Self {
+        ActivationLayer { kind_: kind, feat: 0 }
+    }
+}
+
+impl Layer for ActivationLayer {
+    fn kind(&self) -> &'static str {
+        "activation"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        let d = *in_dims
+            .first()
+            .ok_or_else(|| Error::graph("activation needs one input"))?;
+        self.feat = d.feature_len();
+        Ok(FinalizeOut {
+            out_dims: vec![d],
+            inplace: Inplace::Modify,
+            need_output_cd: true,
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let x = ctx.input(0);
+        let out = ctx.output(0);
+        // When merged in place, input and output are the same region:
+        // operate on `out` only. Otherwise copy first.
+        if x.as_ptr() != out.as_ptr() {
+            out.copy_from_slice(x);
+        }
+        match self.kind_ {
+            ActKind::Sigmoid => {
+                for v in out.iter_mut() {
+                    *v = nb::sigmoid(*v);
+                }
+            }
+            ActKind::Tanh => {
+                for v in out.iter_mut() {
+                    *v = v.tanh();
+                }
+            }
+            ActKind::Relu => {
+                for v in out.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            ActKind::Softmax => {
+                let rows = out.len() / self.feat;
+                // softmax_rows handles src == dst (row-local).
+                let src = unsafe { std::slice::from_raw_parts(out.as_ptr(), out.len()) };
+                nb::softmax_rows(src, out, rows, self.feat);
+            }
+        }
+    }
+
+    fn calc_derivative(&self, ctx: &RunCtx) {
+        if !ctx.has_in_deriv(0) {
+            return;
+        }
+        let y = ctx.output(0);
+        let dout = ctx.out_deriv(0);
+        let din = ctx.in_deriv(0);
+        match self.kind_ {
+            ActKind::Sigmoid => {
+                for i in 0..din.len() {
+                    din[i] = dout[i] * y[i] * (1.0 - y[i]);
+                }
+            }
+            ActKind::Tanh => {
+                for i in 0..din.len() {
+                    din[i] = dout[i] * (1.0 - y[i] * y[i]);
+                }
+            }
+            ActKind::Relu => {
+                for i in 0..din.len() {
+                    din[i] = if y[i] > 0.0 { dout[i] } else { 0.0 };
+                }
+            }
+            ActKind::Softmax => {
+                // din = y ∘ (dout − ⟨dout, y⟩) per row; element-sequential,
+                // safe when din aliases dout.
+                let rows = din.len() / self.feat;
+                for r in 0..rows {
+                    let o = r * self.feat;
+                    let mut dot = 0f32;
+                    for j in 0..self.feat {
+                        dot += dout[o + j] * y[o + j];
+                    }
+                    for j in 0..self.feat {
+                        din[o + j] = y[o + j] * (dout[o + j] - dot);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Addition layer: elementwise sum of N inputs (residual connections).
+//! One of the paper's explicitly-called-out low OP/byte layers (§1
+//! "Computation") — memory traffic dominated, so it must not allocate.
+
+use crate::error::{Error, Result};
+use crate::tensor::TensorDim;
+
+use super::{FinalizeOut, Layer, Props, RunCtx};
+
+pub struct Addition {
+    n_in: usize,
+}
+
+impl Addition {
+    pub fn create(_props: &Props) -> Result<Box<dyn Layer>> {
+        Ok(Box::new(Addition { n_in: 0 }))
+    }
+}
+
+impl Layer for Addition {
+    fn kind(&self) -> &'static str {
+        "addition"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        if in_dims.len() < 2 {
+            return Err(Error::graph("addition needs >= 2 inputs"));
+        }
+        let d = in_dims[0];
+        for other in &in_dims[1..] {
+            if *other != d {
+                return Err(Error::shape(format!("addition dims {} vs {}", d, other)));
+            }
+        }
+        self.n_in = in_dims.len();
+        Ok(FinalizeOut {
+            out_dims: vec![d],
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let out = ctx.output(0);
+        out.copy_from_slice(ctx.input(0));
+        for k in 1..self.n_in {
+            let x = ctx.input(k);
+            for (o, &v) in out.iter_mut().zip(x.iter()) {
+                *o += v;
+            }
+        }
+    }
+
+    fn calc_derivative(&self, ctx: &RunCtx) {
+        let dout = ctx.out_deriv(0);
+        for k in 0..self.n_in {
+            if ctx.has_in_deriv(k) {
+                ctx.in_deriv(k).copy_from_slice(dout);
+            }
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Scaled dot-product attention over a memory sequence — the simplified
+//! stand-in for Tacotron2's location-sensitive attention (see DESIGN.md
+//! §Substitutions). Inputs: `[query b:1:1:H, memory b:1:T:H]`; output:
+//! context `b:1:1:H`. The post-softmax weights are an iteration temp.
+
+use crate::error::{Error, Result};
+use crate::tensor::{Lifespan, TensorDim};
+
+use super::{FinalizeOut, Layer, Props, RunCtx, TempReq};
+
+pub struct Attention {
+    t: usize,
+    h: usize,
+}
+
+impl Attention {
+    pub fn create(_props: &Props) -> Result<Box<dyn Layer>> {
+        Ok(Box::new(Attention { t: 0, h: 0 }))
+    }
+}
+
+impl Layer for Attention {
+    fn kind(&self) -> &'static str {
+        "attention"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        if in_dims.len() != 2 {
+            return Err(Error::graph("attention needs [query, memory]"));
+        }
+        let q = in_dims[0];
+        let m = in_dims[1];
+        if q.feature_len() != m.w || q.b != m.b {
+            return Err(Error::shape(format!("attention dims: query {q} memory {m}")));
+        }
+        self.t = m.h;
+        self.h = m.w;
+        Ok(FinalizeOut {
+            out_dims: vec![TensorDim::vec(q.b, self.h)],
+            temps: vec![TempReq {
+                name: "attw",
+                dim: TensorDim::vec(q.b, self.t),
+                span: Lifespan::ITERATION,
+            }],
+            need_input_cd: true,
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let (b, t, h) = (ctx.batch(), self.t, self.h);
+        let q = ctx.input(0);
+        let mem = ctx.input(1);
+        let out = ctx.output(0);
+        let w = ctx.temp(0);
+        let scale = 1.0 / (h as f32).sqrt();
+        for s in 0..b {
+            let qs = &q[s * h..(s + 1) * h];
+            // scores
+            let ws = &mut w[s * t..(s + 1) * t];
+            let mut mx = f32::NEG_INFINITY;
+            for step in 0..t {
+                let ms = &mem[s * t * h + step * h..s * t * h + (step + 1) * h];
+                let mut dot = 0f32;
+                for j in 0..h {
+                    dot += qs[j] * ms[j];
+                }
+                ws[step] = dot * scale;
+                mx = mx.max(ws[step]);
+            }
+            // softmax
+            let mut sum = 0f32;
+            for v in ws.iter_mut() {
+                *v = (*v - mx).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            for v in ws.iter_mut() {
+                *v *= inv;
+            }
+            // context
+            let os = &mut out[s * h..(s + 1) * h];
+            os.fill(0.0);
+            for step in 0..t {
+                let ms = &mem[s * t * h + step * h..s * t * h + (step + 1) * h];
+                let wv = ws[step];
+                for j in 0..h {
+                    os[j] += wv * ms[j];
+                }
+            }
+        }
+    }
+
+    fn calc_derivative(&self, ctx: &RunCtx) {
+        let (b, t, h) = (ctx.batch(), self.t, self.h);
+        let q = ctx.input(0);
+        let mem = ctx.input(1);
+        let w = ctx.temp(0);
+        let dout = ctx.out_deriv(0);
+        let scale = 1.0 / (h as f32).sqrt();
+        for s in 0..b {
+            let qs = &q[s * h..(s + 1) * h];
+            let ws = &w[s * t..(s + 1) * t];
+            let dos = &dout[s * h..(s + 1) * h];
+            // dw[t] = <dout, mem_t>, then softmax jacobian
+            let mut dw = vec![0f32; t]; // small (T) — on stack-ish; fine
+            let mut dot_sum = 0f32;
+            for step in 0..t {
+                let ms = &mem[s * t * h + step * h..s * t * h + (step + 1) * h];
+                let mut acc = 0f32;
+                for j in 0..h {
+                    acc += dos[j] * ms[j];
+                }
+                dw[step] = acc;
+                dot_sum += acc * ws[step];
+            }
+            // d_scores
+            for step in 0..t {
+                dw[step] = ws[step] * (dw[step] - dot_sum);
+            }
+            if ctx.has_in_deriv(0) {
+                let dq = &mut ctx.in_deriv(0)[s * h..(s + 1) * h];
+                dq.fill(0.0);
+                for step in 0..t {
+                    let ms = &mem[s * t * h + step * h..s * t * h + (step + 1) * h];
+                    for j in 0..h {
+                        dq[j] += dw[step] * ms[j] * scale;
+                    }
+                }
+            }
+            if ctx.has_in_deriv(1) {
+                let dm = ctx.in_deriv(1);
+                let base = s * t * h;
+                for step in 0..t {
+                    for j in 0..h {
+                        dm[base + step * h + j] =
+                            ws[step] * dos[j] + dw[step] * qs[j] * scale;
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Batch normalization — in-place (`MV`) capable per the paper (§3: "This
+//! is applied to batch normalization as well").
+//!
+//! Normalizes per channel for 4-D inputs (`b:c:h:w`, over b,h,w) or per
+//! feature for flat inputs. Keeps `x̂` (normalized input) in an
+//! iteration-lifespan temp so backward never needs the original input —
+//! this is what makes the MV merge legal.
+
+use crate::error::{Error, Result};
+use crate::tensor::{Initializer, Lifespan, TensorDim};
+
+use super::{FinalizeOut, Inplace, Layer, Props, RunCtx, TempReq, WeightReq};
+
+pub struct BatchNorm {
+    eps: f32,
+    momentum: f32,
+    ch: usize,      // channels (or features when flat)
+    n_per: usize,   // reduction size per channel (b*h*w or b)
+    spatial: usize, // h*w for 4-D, 1 for flat
+}
+
+impl BatchNorm {
+    pub fn create(props: &Props) -> Result<Box<dyn Layer>> {
+        Ok(Box::new(BatchNorm {
+            eps: props.f32_or("epsilon", 1e-5)?,
+            momentum: props.f32_or("momentum", 0.9)?,
+            ch: 0,
+            n_per: 0,
+            spatial: 0,
+        }))
+    }
+
+    #[inline]
+    fn idx(&self, c: usize, r: usize) -> usize {
+        // r enumerates the reduction set of channel c:
+        // for 4-D, r = s * spatial + p, laid out [b][c][h*w]
+        let b = r / self.spatial;
+        let p = r % self.spatial;
+        (b * self.ch + c) * self.spatial + p
+    }
+}
+
+impl Layer for BatchNorm {
+    fn kind(&self) -> &'static str {
+        "batch_normalization"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        let d = *in_dims.first().ok_or_else(|| Error::graph("batchnorm needs one input"))?;
+        let flat = d.c == 1 && d.h == 1;
+        if flat {
+            self.ch = d.w;
+            self.spatial = 1;
+            self.n_per = d.b;
+        } else {
+            self.ch = d.c;
+            self.spatial = d.h * d.w;
+            self.n_per = d.b * self.spatial;
+        }
+        let cdim = TensorDim::vec(1, self.ch);
+        Ok(FinalizeOut {
+            out_dims: vec![d],
+            inplace: Inplace::Modify,
+            weights: vec![
+                WeightReq { name: "gamma", dim: cdim, init: Initializer::Ones, need_cd: true },
+                WeightReq { name: "beta", dim: cdim, init: Initializer::Zeros, need_cd: false },
+            ],
+            temps: vec![
+                // normalized input, needed by both CG and CD.
+                TempReq { name: "xhat", dim: d, span: Lifespan::ITERATION },
+                // 1/std per channel.
+                TempReq { name: "inv_std", dim: cdim, span: Lifespan::ITERATION },
+                // running stats — persist across iterations (inference).
+                TempReq { name: "run_mean", dim: cdim, span: Lifespan::MAX },
+                TempReq { name: "run_var", dim: cdim, span: Lifespan::MAX },
+            ],
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let x = ctx.input(0);
+        let out = ctx.output(0);
+        let gamma = ctx.weight(0);
+        let beta = ctx.weight(1);
+        let xhat = ctx.temp(0);
+        let inv_std = ctx.temp(1);
+        let n = self.n_per as f32;
+        if ctx.training {
+            let run_mean = ctx.temp(2);
+            let run_var = ctx.temp(3);
+            for c in 0..self.ch {
+                let mut mean = 0f32;
+                for r in 0..self.n_per {
+                    mean += x[self.idx(c, r)];
+                }
+                mean /= n;
+                let mut var = 0f32;
+                for r in 0..self.n_per {
+                    let dlt = x[self.idx(c, r)] - mean;
+                    var += dlt * dlt;
+                }
+                var /= n;
+                let istd = 1.0 / (var + self.eps).sqrt();
+                inv_std[c] = istd;
+                run_mean[c] = self.momentum * run_mean[c] + (1.0 - self.momentum) * mean;
+                run_var[c] = self.momentum * run_var[c] + (1.0 - self.momentum) * var;
+                for r in 0..self.n_per {
+                    let i = self.idx(c, r);
+                    let xh = (x[i] - mean) * istd;
+                    xhat[i] = xh;
+                    out[i] = gamma[c] * xh + beta[c];
+                }
+            }
+        } else {
+            let run_mean = ctx.temp(2);
+            let run_var = ctx.temp(3);
+            for c in 0..self.ch {
+                let istd = 1.0 / (run_var[c] + self.eps).sqrt();
+                for r in 0..self.n_per {
+                    let i = self.idx(c, r);
+                    out[i] = gamma[c] * (x[i] - run_mean[c]) * istd + beta[c];
+                }
+            }
+        }
+    }
+
+    fn calc_gradient(&self, ctx: &RunCtx) {
+        let dout = ctx.out_deriv(0);
+        let xhat = ctx.temp(0);
+        if let Some(gg) = ctx.grad(0) {
+            for c in 0..self.ch {
+                let mut acc = 0f32;
+                for r in 0..self.n_per {
+                    let i = self.idx(c, r);
+                    acc += dout[i] * xhat[i];
+                }
+                gg[c] += acc;
+            }
+        }
+        if let Some(gb) = ctx.grad(1) {
+            for c in 0..self.ch {
+                let mut acc = 0f32;
+                for r in 0..self.n_per {
+                    acc += dout[self.idx(c, r)];
+                }
+                gb[c] += acc;
+            }
+        }
+    }
+
+    fn calc_derivative(&self, ctx: &RunCtx) {
+        if !ctx.has_in_deriv(0) {
+            return;
+        }
+        let dout = ctx.out_deriv(0);
+        let din = ctx.in_deriv(0);
+        let gamma = ctx.weight(0);
+        let xhat = ctx.temp(0);
+        let inv_std = ctx.temp(1);
+        let n = self.n_per as f32;
+        // din = gamma*istd/n * (n*dout − Σdout − x̂·Σ(dout·x̂))
+        for c in 0..self.ch {
+            let mut sum_d = 0f32;
+            let mut sum_dx = 0f32;
+            for r in 0..self.n_per {
+                let i = self.idx(c, r);
+                sum_d += dout[i];
+                sum_dx += dout[i] * xhat[i];
+            }
+            let k = gamma[c] * inv_std[c] / n;
+            for r in 0..self.n_per {
+                let i = self.idx(c, r);
+                din[i] = k * (n * dout[i] - sum_d - xhat[i] * sum_dx);
+            }
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! Concatenate layer: joins N inputs along the channel axis (or the
+//! feature axis for flat tensors). Table 1's Concat realizer materializes
+//! this node whenever a layer lists multiple `input_layers` but does not
+//! reduce them itself.
+
+use crate::error::{Error, Result};
+use crate::tensor::TensorDim;
+
+use super::{FinalizeOut, Layer, Props, RunCtx};
+
+pub struct Concat {
+    in_dims: Vec<TensorDim>,
+}
+
+impl Concat {
+    pub fn create(_props: &Props) -> Result<Box<dyn Layer>> {
+        Ok(Box::new(Concat { in_dims: vec![] }))
+    }
+}
+
+impl Layer for Concat {
+    fn kind(&self) -> &'static str {
+        "concat"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        if in_dims.len() < 2 {
+            return Err(Error::graph("concat needs >= 2 inputs"));
+        }
+        let d0 = in_dims[0];
+        // Concatenate along the flattened per-sample feature axis; all
+        // inputs must share the batch.
+        for d in in_dims {
+            if d.b != d0.b {
+                return Err(Error::shape("concat inputs must share batch"));
+            }
+        }
+        self.in_dims = in_dims.to_vec();
+        let total: usize = in_dims.iter().map(|d| d.feature_len()).sum();
+        Ok(FinalizeOut {
+            out_dims: vec![TensorDim::vec(d0.b, total)],
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let out = ctx.output(0);
+        let b = ctx.batch();
+        let total: usize = self.in_dims.iter().map(|d| d.feature_len()).sum();
+        let mut off = 0usize;
+        for (k, d) in self.in_dims.iter().enumerate() {
+            let f = d.feature_len();
+            let x = ctx.input(k);
+            for s in 0..b {
+                out[s * total + off..s * total + off + f].copy_from_slice(&x[s * f..(s + 1) * f]);
+            }
+            off += f;
+        }
+    }
+
+    fn calc_derivative(&self, ctx: &RunCtx) {
+        let dout = ctx.out_deriv(0);
+        let b = ctx.batch();
+        let total: usize = self.in_dims.iter().map(|d| d.feature_len()).sum();
+        let mut off = 0usize;
+        for (k, d) in self.in_dims.iter().enumerate() {
+            let f = d.feature_len();
+            if ctx.has_in_deriv(k) {
+                let din = ctx.in_deriv(k);
+                for s in 0..b {
+                    din[s * f..(s + 1) * f]
+                        .copy_from_slice(&dout[s * total + off..s * total + off + f]);
+                }
+            }
+            off += f;
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! 1-D convolution over sequences (Tacotron2's Postnet). Input layout
+//! `b:c:1:t` (channels × time); implemented as a degenerate 2-D conv.
+
+use crate::backend::native as nb;
+use crate::backend::native::Conv2dGeom;
+use crate::error::{Error, Result};
+use crate::tensor::{Initializer, Lifespan, TensorDim};
+
+use super::{FinalizeOut, Layer, Props, RunCtx, TempReq, WeightReq};
+
+pub struct Conv1d {
+    filters: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    bias: bool,
+    geom: Option<Conv2dGeom>,
+}
+
+impl Conv1d {
+    pub fn create(props: &Props) -> Result<Box<dyn Layer>> {
+        let k = props.usize_or("kernel_size", 5)?;
+        let pad = match props.get("padding") {
+            Some("same") => k / 2,
+            Some("valid") | None => 0,
+            Some(v) => v
+                .trim()
+                .parse::<usize>()
+                .map_err(|e| Error::model(format!("bad padding `{v}`: {e}")))?,
+        };
+        Ok(Box::new(Conv1d {
+            filters: props.usize_req("filters")?,
+            k,
+            stride: props.usize_or("stride", 1)?,
+            pad,
+            bias: props.bool_or("bias", true)?,
+            geom: None,
+        }))
+    }
+}
+
+impl Layer for Conv1d {
+    fn kind(&self) -> &'static str {
+        "conv1d"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        let d = *in_dims.first().ok_or_else(|| Error::graph("conv1d needs one input"))?;
+        // treat as 2-D conv with height 1, kernel 1 x k over `b:c:1:t`.
+        let geom = Conv2dGeom {
+            in_c: d.c,
+            in_h: 1,
+            in_w: d.w,
+            out_c: self.filters,
+            k_h: 1,
+            k_w: self.k,
+            stride: self.stride,
+            pad_h: 0,
+            pad_w: self.pad,
+        };
+        if d.w + 2 * self.pad < self.k {
+            return Err(Error::shape(format!("conv1d kernel {} > padded input {}", self.k, d)));
+        }
+        let ow = geom.out_w();
+        let col_len = geom.col_rows() * geom.col_cols();
+        let fan_in = geom.col_rows();
+        self.geom = Some(geom);
+        let mut weights = vec![WeightReq {
+            name: "kernel",
+            dim: TensorDim::new(1, 1, self.filters, fan_in),
+            init: Initializer::XavierUniform { fan_in, fan_out: self.filters * self.k },
+            need_cd: true,
+        }];
+        if self.bias {
+            weights.push(WeightReq {
+                name: "bias",
+                dim: TensorDim::vec(1, self.filters),
+                init: Initializer::Zeros,
+                need_cd: false,
+            });
+        }
+        Ok(FinalizeOut {
+            out_dims: vec![TensorDim::new(d.b, self.filters, 1, ow)],
+            weights,
+            temps: vec![
+                TempReq { name: "col", dim: TensorDim::vec(1, col_len), span: Lifespan::ITERATION },
+                TempReq { name: "colgrad", dim: TensorDim::vec(1, col_len), span: Lifespan::CALC_DERIV },
+            ],
+            need_input_cg: true,
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let g = self.geom.as_ref().unwrap();
+        let b = ctx.batch();
+        let x = ctx.input(0);
+        let w = ctx.weight(0);
+        let out = ctx.output(0);
+        let col = ctx.temp(0);
+        let in_sz = g.in_c * g.in_w;
+        let out_sz = g.out_c * g.col_cols();
+        for s in 0..b {
+            nb::im2col(&x[s * in_sz..(s + 1) * in_sz], g, col);
+            nb::matmul(
+                w,
+                col,
+                &mut out[s * out_sz..(s + 1) * out_sz],
+                g.out_c,
+                g.col_rows(),
+                g.col_cols(),
+                false,
+            );
+        }
+        if self.bias {
+            let bias = ctx.weight(1);
+            let t = g.col_cols();
+            for s in 0..b {
+                for c in 0..g.out_c {
+                    for v in out[s * out_sz + c * t..s * out_sz + (c + 1) * t].iter_mut() {
+                        *v += bias[c];
+                    }
+                }
+            }
+        }
+    }
+
+    fn calc_gradient(&self, ctx: &RunCtx) {
+        let g = self.geom.as_ref().unwrap();
+        let b = ctx.batch();
+        let x = ctx.input(0);
+        let dout = ctx.out_deriv(0);
+        let col = ctx.temp(0);
+        let in_sz = g.in_c * g.in_w;
+        let out_sz = g.out_c * g.col_cols();
+        if let Some(gw) = ctx.grad(0) {
+            for s in 0..b {
+                nb::im2col(&x[s * in_sz..(s + 1) * in_sz], g, col);
+                nb::matmul_bt(
+                    &dout[s * out_sz..(s + 1) * out_sz],
+                    col,
+                    gw,
+                    g.out_c,
+                    g.col_cols(),
+                    g.col_rows(),
+                    true,
+                );
+            }
+        }
+        if self.bias {
+            if let Some(gb) = ctx.grad(1) {
+                let t = g.col_cols();
+                for s in 0..b {
+                    for c in 0..g.out_c {
+                        gb[c] += dout[s * out_sz + c * t..s * out_sz + (c + 1) * t]
+                            .iter()
+                            .sum::<f32>();
+                    }
+                }
+            }
+        }
+    }
+
+    fn calc_derivative(&self, ctx: &RunCtx) {
+        if !ctx.has_in_deriv(0) {
+            return;
+        }
+        let g = self.geom.as_ref().unwrap();
+        let b = ctx.batch();
+        let w = ctx.weight(0);
+        let dout = ctx.out_deriv(0);
+        let din = ctx.in_deriv(0);
+        let colgrad = ctx.temp(1);
+        let in_sz = g.in_c * g.in_w;
+        let out_sz = g.out_c * g.col_cols();
+        for s in 0..b {
+            nb::matmul_at(
+                w,
+                &dout[s * out_sz..(s + 1) * out_sz],
+                colgrad,
+                g.col_rows(),
+                g.out_c,
+                g.col_cols(),
+                false,
+            );
+            nb::col2im(colgrad, g, &mut din[s * in_sz..(s + 1) * in_sz], false);
+        }
+    }
+}

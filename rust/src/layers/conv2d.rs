@@ -1,0 +1,249 @@
+//! 2-D convolution via im2col + matmul.
+//!
+//! The im2col buffer is the "additional heap" the paper attributes to
+//! NNTrainer's Conv2D (§5.1). We hold *one* per-image column buffer with
+//! iteration lifespan and re-im2col in the backward pass instead of
+//! caching per-image columns — memory over recompute, the paper's bias.
+
+use crate::backend::native as nb;
+use crate::backend::native::Conv2dGeom;
+use crate::error::{Error, Result};
+use crate::tensor::{Initializer, Lifespan, TensorDim};
+
+use super::{FinalizeOut, Layer, Props, RunCtx, TempReq, WeightReq};
+
+pub struct Conv2d {
+    filters: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    bias: bool,
+    geom: Option<Conv2dGeom>,
+}
+
+impl Conv2d {
+    pub fn create(props: &Props) -> Result<Box<dyn Layer>> {
+        let k = props.usize_or("kernel_size", 3)?;
+        // `padding = same | valid | <n>`
+        let pad = match props.get("padding") {
+            Some("same") => k / 2,
+            Some("valid") | None => 0,
+            Some(v) => v
+                .trim()
+                .parse::<usize>()
+                .map_err(|e| Error::model(format!("bad padding `{v}`: {e}")))?,
+        };
+        Ok(Box::new(Conv2d {
+            filters: props.usize_req("filters")?,
+            k,
+            stride: props.usize_or("stride", 1)?,
+            pad,
+            bias: props.bool_or("bias", true)?,
+            geom: None,
+        }))
+    }
+
+    fn g(&self) -> &Conv2dGeom {
+        self.geom.as_ref().expect("conv2d not finalized")
+    }
+}
+
+impl Layer for Conv2d {
+    fn kind(&self) -> &'static str {
+        "conv2d"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        let d = *in_dims.first().ok_or_else(|| Error::graph("conv2d needs one input"))?;
+        if d.h + 2 * self.pad < self.k || d.w + 2 * self.pad < self.k {
+            return Err(Error::shape(format!(
+                "conv2d kernel {} > padded input {}",
+                self.k, d
+            )));
+        }
+        let geom = Conv2dGeom {
+            in_c: d.c,
+            in_h: d.h,
+            in_w: d.w,
+            out_c: self.filters,
+            k_h: self.k,
+            k_w: self.k,
+            stride: self.stride,
+            pad_h: self.pad,
+            pad_w: self.pad,
+        };
+        let (oh, ow) = (geom.out_h(), geom.out_w());
+        let col_len = geom.col_rows() * geom.col_cols();
+        let fan_in = geom.col_rows();
+        let fan_out = self.filters * self.k * self.k;
+        self.geom = Some(geom);
+
+        let mut weights = vec![WeightReq {
+            name: "kernel",
+            dim: TensorDim::new(1, 1, self.filters, fan_in),
+            init: Initializer::XavierUniform { fan_in, fan_out },
+            need_cd: true,
+        }];
+        if self.bias {
+            weights.push(WeightReq {
+                name: "bias",
+                dim: TensorDim::vec(1, self.filters),
+                init: Initializer::Zeros,
+                need_cd: false,
+            });
+        }
+        Ok(FinalizeOut {
+            out_dims: vec![TensorDim::new(d.b, self.filters, oh, ow)],
+            weights,
+            temps: vec![
+                // one-image im2col buffer, reused across the batch and
+                // re-materialized in backward (recompute-over-store).
+                TempReq {
+                    name: "col",
+                    dim: TensorDim::vec(1, col_len),
+                    span: Lifespan::ITERATION,
+                },
+                // backward column-gradient scratch (CD only).
+                TempReq {
+                    name: "colgrad",
+                    dim: TensorDim::vec(1, col_len),
+                    span: Lifespan::CALC_DERIV,
+                },
+            ],
+            need_input_cg: true,
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let g = self.g();
+        let b = ctx.batch();
+        let x = ctx.input(0);
+        let w = ctx.weight(0);
+        let out = ctx.output(0);
+        let col = ctx.temp(0);
+        let in_sz = g.in_c * g.in_h * g.in_w;
+        let out_sz = g.out_c * g.col_cols();
+        for s in 0..b {
+            nb::im2col(&x[s * in_sz..(s + 1) * in_sz], g, col);
+            nb::matmul(
+                w,
+                col,
+                &mut out[s * out_sz..(s + 1) * out_sz],
+                g.out_c,
+                g.col_rows(),
+                g.col_cols(),
+                false,
+            );
+        }
+        if self.bias {
+            let bias = ctx.weight(1);
+            let hw = g.col_cols();
+            for s in 0..b {
+                for c in 0..g.out_c {
+                    let row = &mut out[s * out_sz + c * hw..s * out_sz + (c + 1) * hw];
+                    for v in row.iter_mut() {
+                        *v += bias[c];
+                    }
+                }
+            }
+        }
+    }
+
+    fn calc_gradient(&self, ctx: &RunCtx) {
+        let g = self.g();
+        let b = ctx.batch();
+        let x = ctx.input(0);
+        let dout = ctx.out_deriv(0);
+        let col = ctx.temp(0);
+        let in_sz = g.in_c * g.in_h * g.in_w;
+        let out_sz = g.out_c * g.col_cols();
+        if let Some(gw) = ctx.grad(0) {
+            for s in 0..b {
+                nb::im2col(&x[s * in_sz..(s + 1) * in_sz], g, col);
+                // ΔW[oc, R] += ΔD[oc, C] · colᵀ[C, R]
+                nb::matmul_bt(
+                    &dout[s * out_sz..(s + 1) * out_sz],
+                    col,
+                    gw,
+                    g.out_c,
+                    g.col_cols(),
+                    g.col_rows(),
+                    true,
+                );
+            }
+        }
+        if self.bias {
+            if let Some(gb) = ctx.grad(1) {
+                let hw = g.col_cols();
+                for s in 0..b {
+                    for c in 0..g.out_c {
+                        let row = &dout[s * out_sz + c * hw..s * out_sz + (c + 1) * hw];
+                        gb[c] += row.iter().sum::<f32>();
+                    }
+                }
+            }
+        }
+    }
+
+    fn calc_derivative(&self, ctx: &RunCtx) {
+        if !ctx.has_in_deriv(0) {
+            return;
+        }
+        let g = self.g();
+        let b = ctx.batch();
+        let w = ctx.weight(0);
+        let dout = ctx.out_deriv(0);
+        let din = ctx.in_deriv(0);
+        let colgrad = ctx.temp(1);
+        let in_sz = g.in_c * g.in_h * g.in_w;
+        let out_sz = g.out_c * g.col_cols();
+        for s in 0..b {
+            // colgrad[R, C] = Wᵀ[R, oc] · ΔD[oc, C]
+            nb::matmul_at(
+                w,
+                &dout[s * out_sz..(s + 1) * out_sz],
+                colgrad,
+                g.col_rows(),
+                g.out_c,
+                g.col_cols(),
+                false,
+            );
+            nb::col2im(colgrad, g, &mut din[s * in_sz..(s + 1) * in_sz], false);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::Props;
+
+    #[test]
+    fn finalize_same_padding() {
+        let p = Props::from_pairs([("filters", "64"), ("kernel_size", "3"), ("padding", "same")]);
+        let mut l = Conv2d::create(&p).unwrap();
+        let f = l.finalize(&[TensorDim::new(32, 3, 32, 32)]).unwrap();
+        // paper §3's worked example: 32x32x3 -> 64 filters 3x3 same
+        assert_eq!(f.out_dims[0], TensorDim::new(32, 64, 32, 32));
+        // output buffer 8.3 MiB as in the paper
+        let mib = f.out_dims[0].bytes() as f64 / (1024.0 * 1024.0);
+        assert!((mib - 8.0).abs() < 0.5, "{mib}");
+    }
+
+    #[test]
+    fn stride_two() {
+        let p = Props::from_pairs([("filters", "3"), ("kernel_size", "3"), ("padding", "1"), ("stride", "2")]);
+        let mut l = Conv2d::create(&p).unwrap();
+        let f = l.finalize(&[TensorDim::new(64, 3, 224, 224)]).unwrap();
+        // Table 4 Conv2D row: 64:3:224:224 -> 64:3:112:112
+        assert_eq!(f.out_dims[0], TensorDim::new(64, 3, 112, 112));
+    }
+
+    #[test]
+    fn kernel_too_big() {
+        let p = Props::from_pairs([("filters", "4"), ("kernel_size", "5")]);
+        let mut l = Conv2d::create(&p).unwrap();
+        assert!(l.finalize(&[TensorDim::new(1, 1, 3, 3)]).is_err());
+    }
+}

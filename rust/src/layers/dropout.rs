@@ -1,0 +1,80 @@
+//! Dropout — in-place (`MV`) capable; the mask is an iteration-lifespan
+//! temp so backward can replay it without storing the input.
+
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+use crate::tensor::{Lifespan, TensorDim};
+
+use super::{FinalizeOut, Inplace, Layer, Props, RunCtx, TempReq};
+
+pub struct Dropout {
+    rate: f32,
+    seed: u64,
+}
+
+impl Dropout {
+    pub fn create(props: &Props) -> Result<Box<dyn Layer>> {
+        Ok(Box::new(Dropout {
+            rate: props.f32_or("rate", 0.5)?,
+            seed: props.usize_or("seed", 0x5EED)? as u64,
+        }))
+    }
+}
+
+impl Layer for Dropout {
+    fn kind(&self) -> &'static str {
+        "dropout"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        let d = *in_dims.first().ok_or_else(|| Error::graph("dropout needs one input"))?;
+        Ok(FinalizeOut {
+            out_dims: vec![d],
+            inplace: Inplace::Modify,
+            temps: vec![TempReq { name: "mask", dim: d, span: Lifespan::ITERATION }],
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let x = ctx.input(0);
+        let out = ctx.output(0);
+        if x.as_ptr() != out.as_ptr() {
+            out.copy_from_slice(x);
+        }
+        if !ctx.training || self.rate == 0.0 {
+            return;
+        }
+        let mask = ctx.temp(0);
+        let mut rng = Rng::new(self.seed ^ ctx.iter.wrapping_mul(0x9E37));
+        let keep = 1.0 - self.rate;
+        let scale = 1.0 / keep;
+        for (m, o) in mask.iter_mut().zip(out.iter_mut()) {
+            if rng.next_f32() < keep {
+                *m = scale;
+                *o *= scale;
+            } else {
+                *m = 0.0;
+                *o = 0.0;
+            }
+        }
+    }
+
+    fn calc_derivative(&self, ctx: &RunCtx) {
+        if !ctx.has_in_deriv(0) {
+            return;
+        }
+        let dout = ctx.out_deriv(0);
+        let din = ctx.in_deriv(0);
+        if !ctx.training || self.rate == 0.0 {
+            if dout.as_ptr() != din.as_ptr() {
+                din.copy_from_slice(dout);
+            }
+            return;
+        }
+        let mask = ctx.temp(0);
+        for i in 0..din.len() {
+            din[i] = dout[i] * mask[i];
+        }
+    }
+}

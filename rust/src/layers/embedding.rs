@@ -1,0 +1,79 @@
+//! Embedding layer (Product-Rating / recommendation case, Fig 12).
+//!
+//! Input: `b:1:1:L` of f32-encoded indices; output `b:1:L:E`. Backward is
+//! a sparse scatter-add into the gradient rows; no input derivative
+//! exists (indices are not differentiable).
+
+use crate::error::{Error, Result};
+use crate::tensor::{Initializer, TensorDim};
+
+use super::{FinalizeOut, Layer, Props, RunCtx, WeightReq};
+
+pub struct Embedding {
+    vocab: usize,
+    dim: usize,
+    seq: usize,
+}
+
+impl Embedding {
+    pub fn create(props: &Props) -> Result<Box<dyn Layer>> {
+        Ok(Box::new(Embedding {
+            vocab: props.usize_req("in_dim")?,
+            dim: props.usize_req("out_dim")?,
+            seq: 0,
+        }))
+    }
+}
+
+impl Layer for Embedding {
+    fn kind(&self) -> &'static str {
+        "embedding"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        let d = *in_dims.first().ok_or_else(|| Error::graph("embedding needs one input"))?;
+        self.seq = d.feature_len();
+        Ok(FinalizeOut {
+            out_dims: vec![TensorDim::new(d.b, 1, self.seq, self.dim)],
+            weights: vec![WeightReq {
+                name: "table",
+                dim: TensorDim::new(1, 1, self.vocab, self.dim),
+                init: Initializer::Uniform(0.05),
+                need_cd: false,
+            }],
+            // indices are re-read at CG for the scatter.
+            need_input_cg: true,
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let idx = ctx.input(0);
+        let table = ctx.weight(0);
+        let out = ctx.output(0);
+        for (t, &ix) in idx.iter().enumerate() {
+            let row = (ix as usize).min(self.vocab - 1);
+            out[t * self.dim..(t + 1) * self.dim]
+                .copy_from_slice(&table[row * self.dim..(row + 1) * self.dim]);
+        }
+    }
+
+    fn calc_gradient(&self, ctx: &RunCtx) {
+        let idx = ctx.input(0);
+        let dout = ctx.out_deriv(0);
+        if let Some(gt) = ctx.grad(0) {
+            for (t, &ix) in idx.iter().enumerate() {
+                let row = (ix as usize).min(self.vocab - 1);
+                let g = &mut gt[row * self.dim..(row + 1) * self.dim];
+                let d = &dout[t * self.dim..(t + 1) * self.dim];
+                for (gv, &dv) in g.iter_mut().zip(d.iter()) {
+                    *gv += dv;
+                }
+            }
+        }
+    }
+
+    fn calc_derivative(&self, _ctx: &RunCtx) {
+        // indices are not differentiable; nothing to propagate.
+    }
+}

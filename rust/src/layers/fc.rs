@@ -1,0 +1,134 @@
+//! Fully-connected (linear) layer: `out = X · W + b`.
+//!
+//! Tensor needs follow paper Fig 4 exactly: input is read at Forward and
+//! at Compute-Gradient (`ΔW = Xᵀ·ΔD`); the weight is read at Forward and
+//! Compute-Derivative (`ΔD' = ΔD·Wᵀ`).
+
+use crate::backend::native as nb;
+use crate::error::{Error, Result};
+use crate::tensor::{Initializer, TensorDim};
+
+use super::{FinalizeOut, Layer, Props, RunCtx, WeightReq};
+
+pub struct FullyConnected {
+    unit: usize,
+    bias: bool,
+    /// Apply per timestep over `b:1:T:F` (rows = b*T) instead of
+    /// flattening the whole sample — Tacotron2's Prenet/heads.
+    time_distributed: bool,
+    feat: usize, // filled at finalize
+    rows_per_sample: usize,
+}
+
+impl FullyConnected {
+    pub fn create(props: &Props) -> Result<Box<dyn Layer>> {
+        Ok(Box::new(FullyConnected {
+            unit: props.usize_req("unit")?,
+            bias: props.bool_or("bias", true)?,
+            time_distributed: props.bool_or("time_distributed", false)?,
+            feat: 0,
+            rows_per_sample: 1,
+        }))
+    }
+}
+
+impl Layer for FullyConnected {
+    fn kind(&self) -> &'static str {
+        "fully_connected"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        let d = *in_dims
+            .first()
+            .ok_or_else(|| Error::graph("fully_connected needs one input"))?;
+        if self.time_distributed {
+            self.feat = d.w;
+            self.rows_per_sample = d.c * d.h;
+        } else {
+            self.feat = d.feature_len();
+            self.rows_per_sample = 1;
+        }
+        let mut weights = vec![WeightReq {
+            name: "weight",
+            dim: TensorDim::new(1, 1, self.feat, self.unit),
+            init: Initializer::XavierUniform { fan_in: self.feat, fan_out: self.unit },
+            need_cd: true,
+        }];
+        if self.bias {
+            weights.push(WeightReq {
+                name: "bias",
+                dim: TensorDim::vec(1, self.unit),
+                init: Initializer::Zeros,
+                need_cd: false,
+            });
+        }
+        let out_dim = if self.time_distributed {
+            TensorDim::new(d.b, d.c, d.h, self.unit)
+        } else {
+            TensorDim::vec(d.b, self.unit)
+        };
+        Ok(FinalizeOut {
+            out_dims: vec![out_dim],
+            weights,
+            need_input_cg: true,
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let b = ctx.batch() * self.rows_per_sample;
+        let x = ctx.input(0);
+        let w = ctx.weight(0);
+        let out = ctx.output(0);
+        nb::matmul(x, w, out, b, self.feat, self.unit, false);
+        if self.bias {
+            nb::add_bias(out, ctx.weight(1), b, self.unit);
+        }
+    }
+
+    fn calc_gradient(&self, ctx: &RunCtx) {
+        let b = ctx.batch() * self.rows_per_sample;
+        let d = ctx.out_deriv(0);
+        if let Some(gw) = ctx.grad(0) {
+            // ΔW[f,u] += Xᵀ[f,B] · ΔD[B,u]  (X stored [B,f])
+            nb::matmul_at(ctx.input(0), d, gw, self.feat, b, self.unit, true);
+        }
+        if self.bias {
+            if let Some(gb) = ctx.grad(1) {
+                nb::bias_grad(d, gb, b, self.unit, true);
+            }
+        }
+    }
+
+    fn calc_derivative(&self, ctx: &RunCtx) {
+        if !ctx.has_in_deriv(0) {
+            return;
+        }
+        let b = ctx.batch() * self.rows_per_sample;
+        // ΔD'[B,f] = ΔD[B,u] · Wᵀ  (W stored [f,u] == Bᵀ layout for matmul_bt)
+        nb::matmul_bt(ctx.out_deriv(0), ctx.weight(0), ctx.in_deriv(0), b, self.unit, self.feat, false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::Props;
+
+    #[test]
+    fn finalize_shapes() {
+        let p = Props::from_pairs([("unit", "10")]);
+        let mut l = FullyConnected::create(&p).unwrap();
+        let f = l.finalize(&[TensorDim::new(4, 3, 8, 8)]).unwrap();
+        assert_eq!(f.out_dims, vec![TensorDim::vec(4, 10)]);
+        assert_eq!(f.weights.len(), 2);
+        assert_eq!(f.weights[0].dim.len(), 3 * 8 * 8 * 10);
+        assert!(f.need_input_cg);
+        assert!(f.weights[0].need_cd);
+    }
+
+    #[test]
+    fn requires_unit() {
+        assert!(FullyConnected::create(&Props::new()).is_err());
+    }
+}

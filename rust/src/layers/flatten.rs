@@ -1,0 +1,69 @@
+//! Flatten / Reshape — pure-specification changes.
+//!
+//! The paper's Read-Only-View (`RV`) case (Fig 6): data is bit-identical,
+//! so the view is merged with its target even when execution orders
+//! interleave — integrity is guaranteed by the developer contract.
+
+use crate::error::{Error, Result};
+use crate::tensor::TensorDim;
+
+use super::{FinalizeOut, Inplace, Layer, Props, RunCtx};
+
+pub struct Flatten {
+    /// Optional explicit target per-sample shape (reshape); default is
+    /// `b:1:1:(c*h*w)`.
+    target: Option<TensorDim>,
+}
+
+impl Flatten {
+    pub fn create(props: &Props) -> Result<Box<dyn Layer>> {
+        Ok(Box::new(Flatten { target: props.dim("target_shape")? }))
+    }
+}
+
+impl Layer for Flatten {
+    fn kind(&self) -> &'static str {
+        "flatten"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        let d = *in_dims.first().ok_or_else(|| Error::graph("flatten needs one input"))?;
+        let out = match self.target {
+            Some(t) => {
+                let t = t.with_batch(d.b);
+                if t.len() != d.len() {
+                    return Err(Error::shape(format!(
+                        "reshape {} -> {} changes element count",
+                        d, t
+                    )));
+                }
+                t
+            }
+            None => d.flattened(),
+        };
+        Ok(FinalizeOut {
+            out_dims: vec![out],
+            inplace: Inplace::ReadOnly,
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let x = ctx.input(0);
+        let out = ctx.output(0);
+        if x.as_ptr() != out.as_ptr() {
+            out.copy_from_slice(x);
+        }
+    }
+
+    fn calc_derivative(&self, ctx: &RunCtx) {
+        if !ctx.has_in_deriv(0) {
+            return;
+        }
+        let dout = ctx.out_deriv(0);
+        let din = ctx.in_deriv(0);
+        if dout.as_ptr() != din.as_ptr() {
+            din.copy_from_slice(dout);
+        }
+    }
+}

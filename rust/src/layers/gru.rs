@@ -1,0 +1,268 @@
+//! GRU layer over a full sequence, fused backward — extends the paper's
+//! recurrent coverage (§1 "entire training features … recurrent
+//! network") beyond LSTM.
+//!
+//! Gate order (r, z, n); the reset gate applies to the *hidden*
+//! contribution of the candidate (`n = tanh(gx_n + r ∘ gh_n)`), matching
+//! the common "v3" formulation. All step caches are iteration-lifespan
+//! pool temps, exactly like the LSTM layer.
+
+use crate::backend::native as nb;
+use crate::error::{Error, Result};
+use crate::tensor::{Initializer, Lifespan, TensorDim};
+
+use super::{FinalizeOut, Layer, Props, RunCtx, TempReq, WeightReq};
+
+pub struct Gru {
+    unit: usize,
+    return_sequences: bool,
+    t: usize,
+    input_feat: usize,
+}
+
+impl Gru {
+    pub fn create(props: &Props) -> Result<Box<dyn Layer>> {
+        Ok(Box::new(Gru {
+            unit: props.usize_req("unit")?,
+            return_sequences: props.bool_or("return_sequences", false)?,
+            t: 0,
+            input_feat: 0,
+        }))
+    }
+}
+
+// temp indices
+const T_GATES: usize = 0; // [B,T,3H] post-activation (r,z,n)
+const T_GHN: usize = 1; // [B,T,H] pre-reset hidden candidate gh_n
+const T_HS: usize = 2; // [B,T,H]
+const T_XT: usize = 3; // [B,I]
+const T_GXBUF: usize = 4; // [B,3H]
+const T_GHBUF: usize = 5; // [B,3H]
+const T_HBUF: usize = 6; // [B,H]
+const T_DH: usize = 7; // [B,H]
+const T_DGX: usize = 8; // [B,3H]
+const T_DGH: usize = 9; // [B,3H]
+const T_DXBUF: usize = 10; // [B,I]
+
+impl Layer for Gru {
+    fn kind(&self) -> &'static str {
+        "gru"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        let d = *in_dims.first().ok_or_else(|| Error::graph("gru needs one input"))?;
+        if d.c != 1 {
+            return Err(Error::shape(format!("gru expects b:1:T:I, got {d}")));
+        }
+        let (t, feat) = (d.h, d.w);
+        self.t = t;
+        self.input_feat = feat;
+        let h = self.unit;
+        let b = d.b;
+        let out = if self.return_sequences {
+            TensorDim::new(b, 1, t, h)
+        } else {
+            TensorDim::vec(b, h)
+        };
+        let iter = Lifespan::ITERATION;
+        let back = Lifespan::BACKWARD;
+        Ok(FinalizeOut {
+            out_dims: vec![out],
+            weights: vec![
+                WeightReq {
+                    name: "weight_xh",
+                    dim: TensorDim::new(1, 1, feat, 3 * h),
+                    init: Initializer::XavierUniform { fan_in: feat, fan_out: 3 * h },
+                    need_cd: true,
+                },
+                WeightReq {
+                    name: "weight_hh",
+                    dim: TensorDim::new(1, 1, h, 3 * h),
+                    init: Initializer::XavierUniform { fan_in: h, fan_out: 3 * h },
+                    need_cd: true,
+                },
+                WeightReq {
+                    name: "bias_x",
+                    dim: TensorDim::vec(1, 3 * h),
+                    init: Initializer::Zeros,
+                    need_cd: false,
+                },
+                WeightReq {
+                    name: "bias_h",
+                    dim: TensorDim::vec(1, 3 * h),
+                    init: Initializer::Zeros,
+                    need_cd: false,
+                },
+            ],
+            temps: vec![
+                TempReq { name: "gates", dim: TensorDim::new(b, 1, t, 3 * h), span: iter },
+                TempReq { name: "ghn", dim: TensorDim::new(b, 1, t, h), span: iter },
+                TempReq { name: "hs", dim: TensorDim::new(b, 1, t, h), span: iter },
+                TempReq { name: "xt", dim: TensorDim::vec(b, feat), span: iter },
+                TempReq { name: "gxbuf", dim: TensorDim::vec(b, 3 * h), span: iter },
+                TempReq { name: "ghbuf", dim: TensorDim::vec(b, 3 * h), span: iter },
+                TempReq { name: "hbuf", dim: TensorDim::vec(b, h), span: iter },
+                TempReq { name: "dh", dim: TensorDim::vec(b, h), span: back },
+                TempReq { name: "dgx", dim: TensorDim::vec(b, 3 * h), span: back },
+                TempReq { name: "dgh", dim: TensorDim::vec(b, 3 * h), span: back },
+                TempReq { name: "dxbuf", dim: TensorDim::vec(b, feat), span: back },
+            ],
+            need_input_cg: true,
+            fused_backward: true,
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let (b, t, f, h) = (ctx.batch(), self.t, self.input_feat, self.unit);
+        let x = ctx.input(0);
+        let wx = ctx.weight(0);
+        let wh = ctx.weight(1);
+        let bx = ctx.weight(2);
+        let bh = ctx.weight(3);
+        let gates = ctx.temp(T_GATES);
+        let ghn_c = ctx.temp(T_GHN);
+        let hs = ctx.temp(T_HS);
+        let xt = ctx.temp(T_XT);
+        let gx = ctx.temp(T_GXBUF);
+        let gh = ctx.temp(T_GHBUF);
+        let hbuf = ctx.temp(T_HBUF);
+        for step in 0..t {
+            for s in 0..b {
+                xt[s * f..(s + 1) * f]
+                    .copy_from_slice(&x[s * t * f + step * f..s * t * f + (step + 1) * f]);
+                if step == 0 {
+                    hbuf[s * h..(s + 1) * h].fill(0.0);
+                } else {
+                    hbuf[s * h..(s + 1) * h].copy_from_slice(
+                        &hs[s * t * h + (step - 1) * h..s * t * h + step * h],
+                    );
+                }
+            }
+            nb::matmul(xt, wx, gx, b, f, 3 * h, false);
+            nb::add_bias(gx, bx, b, 3 * h);
+            nb::matmul(hbuf, wh, gh, b, h, 3 * h, false);
+            nb::add_bias(gh, bh, b, 3 * h);
+            for s in 0..b {
+                let gxs = &gx[s * 3 * h..(s + 1) * 3 * h];
+                let ghs = &gh[s * 3 * h..(s + 1) * 3 * h];
+                let gcache =
+                    &mut gates[s * t * 3 * h + step * 3 * h..s * t * 3 * h + (step + 1) * 3 * h];
+                for j in 0..h {
+                    let r = nb::sigmoid(gxs[j] + ghs[j]);
+                    let z = nb::sigmoid(gxs[h + j] + ghs[h + j]);
+                    let ghn = ghs[2 * h + j];
+                    let n = (gxs[2 * h + j] + r * ghn).tanh();
+                    gcache[j] = r;
+                    gcache[h + j] = z;
+                    gcache[2 * h + j] = n;
+                    ghn_c[s * t * h + step * h + j] = ghn;
+                    let h_prev = hbuf[s * h + j];
+                    hs[s * t * h + step * h + j] = (1.0 - z) * n + z * h_prev;
+                }
+            }
+        }
+        let out = ctx.output(0);
+        if self.return_sequences {
+            out.copy_from_slice(hs);
+        } else {
+            for s in 0..b {
+                out[s * h..(s + 1) * h]
+                    .copy_from_slice(&hs[s * t * h + (t - 1) * h..s * t * h + t * h]);
+            }
+        }
+    }
+
+    fn calc_gradient(&self, ctx: &RunCtx) {
+        let (b, t, f, h) = (ctx.batch(), self.t, self.input_feat, self.unit);
+        let x = ctx.input(0);
+        let wx = ctx.weight(0);
+        let wh = ctx.weight(1);
+        let gates = ctx.temp(T_GATES);
+        let ghn_c = ctx.temp(T_GHN);
+        let hs = ctx.temp(T_HS);
+        let xt = ctx.temp(T_XT);
+        let hbuf = ctx.temp(T_HBUF);
+        let dh = ctx.temp(T_DH);
+        let dgx = ctx.temp(T_DGX);
+        let dgh = ctx.temp(T_DGH);
+        let dxbuf = ctx.temp(T_DXBUF);
+        let dout = ctx.out_deriv(0);
+        dh.fill(0.0);
+        for step in (0..t).rev() {
+            for s in 0..b {
+                let dh_s = &mut dh[s * h..(s + 1) * h];
+                if self.return_sequences {
+                    for j in 0..h {
+                        dh_s[j] += dout[s * t * h + step * h + j];
+                    }
+                } else if step == t - 1 {
+                    for j in 0..h {
+                        dh_s[j] += dout[s * h + j];
+                    }
+                }
+            }
+            for s in 0..b {
+                let g = &gates[s * t * 3 * h + step * 3 * h..s * t * 3 * h + (step + 1) * 3 * h];
+                let dgxs = &mut dgx[s * 3 * h..(s + 1) * 3 * h];
+                let dghs = &mut dgh[s * 3 * h..(s + 1) * 3 * h];
+                for j in 0..h {
+                    let (r, z, n) = (g[j], g[h + j], g[2 * h + j]);
+                    let ghn = ghn_c[s * t * h + step * h + j];
+                    let h_prev =
+                        if step == 0 { 0.0 } else { hs[s * t * h + (step - 1) * h + j] };
+                    let dht = dh[s * h + j];
+                    let dz = dht * (h_prev - n) * z * (1.0 - z);
+                    let dn = dht * (1.0 - z) * (1.0 - n * n);
+                    let dr = dn * ghn * r * (1.0 - r);
+                    dgxs[j] = dr;
+                    dgxs[h + j] = dz;
+                    dgxs[2 * h + j] = dn;
+                    dghs[j] = dr;
+                    dghs[h + j] = dz;
+                    dghs[2 * h + j] = dn * r;
+                    // partial dh_prev: the z∘h_prev path (matmul part added below)
+                    dh[s * h + j] = dht * z;
+                }
+            }
+            for s in 0..b {
+                xt[s * f..(s + 1) * f]
+                    .copy_from_slice(&x[s * t * f + step * f..s * t * f + (step + 1) * f]);
+                if step == 0 {
+                    hbuf[s * h..(s + 1) * h].fill(0.0);
+                } else {
+                    hbuf[s * h..(s + 1) * h].copy_from_slice(
+                        &hs[s * t * h + (step - 1) * h..s * t * h + step * h],
+                    );
+                }
+            }
+            if let Some(gwx) = ctx.grad(0) {
+                nb::matmul_at(xt, dgx, gwx, f, b, 3 * h, true);
+            }
+            if let Some(gwh) = ctx.grad(1) {
+                nb::matmul_at(hbuf, dgh, gwh, h, b, 3 * h, true);
+            }
+            if let Some(gbx) = ctx.grad(2) {
+                nb::bias_grad(dgx, gbx, b, 3 * h, true);
+            }
+            if let Some(gbh) = ctx.grad(3) {
+                nb::bias_grad(dgh, gbh, b, 3 * h, true);
+            }
+            if ctx.has_in_deriv(0) {
+                nb::matmul_bt(dgx, wx, dxbuf, b, 3 * h, f, false);
+                let din = ctx.in_deriv(0);
+                for s in 0..b {
+                    din[s * t * f + step * f..s * t * f + (step + 1) * f]
+                        .copy_from_slice(&dxbuf[s * f..(s + 1) * f]);
+                }
+            }
+            // dh_prev += dgh @ Wh^T  (on top of the z∘h_prev partial
+            // already stored in dh above)
+            nb::matmul_bt(dgh, wh, dh, b, 3 * h, h, true);
+        }
+    }
+
+    fn calc_derivative(&self, _ctx: &RunCtx) {
+        // fused into calc_gradient
+    }
+}

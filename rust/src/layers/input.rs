@@ -1,0 +1,45 @@
+//! Input layer — the graph's data source. Its output tensor is a
+//! `Placeholder` (Table 3 `P`): the Batch Queue binds user data into it
+//! each iteration; no derivative buffer exists behind it (paper Fig 4 has
+//! no `D_0`).
+
+use crate::error::{Error, Result};
+use crate::tensor::TensorDim;
+
+use super::{FinalizeOut, Layer, Props, RunCtx};
+
+pub struct InputLayer {
+    shape: TensorDim, // per-sample (b ignored)
+}
+
+impl InputLayer {
+    pub fn create(props: &Props) -> Result<Box<dyn Layer>> {
+        let shape = props
+            .dim("input_shape")?
+            .ok_or_else(|| Error::model("input layer requires input_shape"))?;
+        Ok(Box::new(InputLayer { shape }))
+    }
+}
+
+impl Layer for InputLayer {
+    fn kind(&self) -> &'static str {
+        "input"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        if !in_dims.is_empty() {
+            return Err(Error::graph("input layer cannot have inputs"));
+        }
+        Ok(FinalizeOut {
+            // Batch is applied by the graph initializer.
+            out_dims: vec![self.shape],
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, _ctx: &RunCtx) {
+        // Data already bound into the placeholder by the Batch Queue.
+    }
+
+    fn calc_derivative(&self, _ctx: &RunCtx) {}
+}

@@ -1,0 +1,141 @@
+//! Loss layers: Mean Squared Error and fused Softmax-Cross-Entropy.
+//!
+//! A loss layer terminates the graph: its single output is the scalar
+//! loss, it owns a `label` placeholder, and its compute-derivative phase
+//! *starts* back-propagation. The Loss realizer (Table 1) removes a
+//! preceding softmax activation and swaps in the fused layer — both for
+//! numerical stability and to save one intermediate activation.
+
+use crate::backend::native as nb;
+use crate::error::{Error, Result};
+use crate::tensor::{Lifespan, TensorDim};
+
+use super::{FinalizeOut, Layer, Props, RunCtx, TempReq};
+
+/// Marker trait helper: the graph initializer identifies loss layers via
+/// `Layer::kind()` strings listed here.
+pub fn is_loss_kind(kind: &str) -> bool {
+    matches!(kind, "mse" | "cross_entropy_softmax")
+}
+
+pub struct MseLoss {
+    n: usize, // total elements (batch * feat), for the mean
+}
+
+impl MseLoss {
+    pub fn create(_props: &Props) -> Result<Box<dyn Layer>> {
+        Ok(Box::new(MseLoss { n: 0 }))
+    }
+}
+
+impl Layer for MseLoss {
+    fn kind(&self) -> &'static str {
+        "mse"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        let d = *in_dims.first().ok_or_else(|| Error::graph("mse needs one input"))?;
+        self.n = d.len();
+        Ok(FinalizeOut {
+            out_dims: vec![TensorDim::scalar(1)],
+            need_input_cd: true,
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let pred = ctx.input(0);
+        let label = ctx.label();
+        let mut acc = 0f64;
+        for (&p, &l) in pred.iter().zip(label.iter()) {
+            let e = (p - l) as f64;
+            acc += e * e;
+        }
+        ctx.output(0)[0] = (acc / self.n as f64) as f32;
+    }
+
+    fn calc_derivative(&self, ctx: &RunCtx) {
+        if !ctx.has_in_deriv(0) {
+            return;
+        }
+        let pred = ctx.input(0);
+        let label = ctx.label();
+        let din = ctx.in_deriv(0);
+        let scale = 2.0 / self.n as f32;
+        for i in 0..din.len() {
+            din[i] = scale * (pred[i] - label[i]);
+        }
+    }
+}
+
+/// Softmax + cross-entropy fused: `loss = −Σ label·log softmax(x) / B`.
+/// The derivative handles unnormalized (soft) labels exactly:
+/// `ΔD' = ((Σ_j label_j)·softmax(x) − label) / B` — which reduces to the
+/// textbook `(softmax − label)/B` when labels are one-hot.
+pub struct CrossEntropySoftmax {
+    feat: usize,
+    batch: usize,
+}
+
+impl CrossEntropySoftmax {
+    pub fn create(_props: &Props) -> Result<Box<dyn Layer>> {
+        Ok(Box::new(CrossEntropySoftmax { feat: 0, batch: 0 }))
+    }
+}
+
+impl Layer for CrossEntropySoftmax {
+    fn kind(&self) -> &'static str {
+        "cross_entropy_softmax"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        let d = *in_dims
+            .first()
+            .ok_or_else(|| Error::graph("cross_entropy_softmax needs one input"))?;
+        self.feat = d.feature_len();
+        self.batch = d.b;
+        Ok(FinalizeOut {
+            out_dims: vec![TensorDim::scalar(1)],
+            // softmax probabilities, computed at forward and re-used at CD.
+            temps: vec![TempReq {
+                name: "probs",
+                dim: d,
+                span: Lifespan::FORWARD.union(Lifespan::CALC_DERIV),
+            }],
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let x = ctx.input(0);
+        let label = ctx.label();
+        let probs = ctx.temp(0);
+        let rows = x.len() / self.feat;
+        nb::softmax_rows(x, probs, rows, self.feat);
+        let mut acc = 0f64;
+        for (&p, &l) in probs.iter().zip(label.iter()) {
+            if l != 0.0 {
+                acc -= (l as f64) * (p.max(1e-12) as f64).ln();
+            }
+        }
+        ctx.output(0)[0] = (acc / rows as f64) as f32;
+    }
+
+    fn calc_derivative(&self, ctx: &RunCtx) {
+        if !ctx.has_in_deriv(0) {
+            return;
+        }
+        let probs = ctx.temp(0);
+        let label = ctx.label();
+        let din = ctx.in_deriv(0);
+        let rows = din.len() / self.feat;
+        let scale = 1.0 / rows as f32;
+        for r in 0..rows {
+            let o = r * self.feat;
+            let lsum: f32 = label[o..o + self.feat].iter().sum();
+            for j in 0..self.feat {
+                din[o + j] = scale * (lsum * probs[o + j] - label[o + j]);
+            }
+        }
+    }
+}

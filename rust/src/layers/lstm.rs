@@ -1,0 +1,263 @@
+//! LSTM layer over a full sequence, with fused backward (BPTT).
+//!
+//! Layout: input `b:1:T:I`, output `b:1:T:H` (`return_sequences`) or
+//! `b:1:1:H` (last step only). Gate caches (`i,f,g,o` post-activation),
+//! cell and hidden sequences are iteration-lifespan temps: they are the
+//! ">90% of training memory is intermediate activation" the paper
+//! optimizes, and they die at the end of the layer's backward, letting
+//! the planner reuse their space.
+//!
+//! Both backward phases share the single reverse-time recursion, so the
+//! layer declares `fused_backward` and performs gradient + derivative in
+//! one sweep (the paper's Backward/`B` lifespan).
+
+use crate::backend::native as nb;
+use crate::error::{Error, Result};
+use crate::tensor::{Initializer, Lifespan, TensorDim};
+
+use super::{FinalizeOut, Layer, Props, RunCtx, TempReq, WeightReq};
+
+pub struct Lstm {
+    unit: usize,
+    return_sequences: bool,
+    t: usize,
+    input_feat: usize,
+}
+
+impl Lstm {
+    pub fn create(props: &Props) -> Result<Box<dyn Layer>> {
+        Ok(Box::new(Lstm {
+            unit: props.usize_req("unit")?,
+            return_sequences: props.bool_or("return_sequences", false)?,
+            t: 0,
+            input_feat: 0,
+        }))
+    }
+}
+
+// temp indices
+const T_GATES: usize = 0; // [B,T,4H] post-activation gates (i,f,g,o)
+const T_CS: usize = 1; // [B,T,H] cell states
+const T_HS: usize = 2; // [B,T,H] hidden states
+const T_XT: usize = 3; // [B,I] gathered x_t
+const T_GBUF: usize = 4; // [B,4H] contiguous gate workspace
+const T_HBUF: usize = 5; // [B,H] gathered h_{t-1}
+const T_DH: usize = 6; // [B,H]
+const T_DC: usize = 7; // [B,H]
+const T_DGATES: usize = 8; // [B,4H]
+const T_DXBUF: usize = 9; // [B,I]
+
+impl Layer for Lstm {
+    fn kind(&self) -> &'static str {
+        "lstm"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        let d = *in_dims.first().ok_or_else(|| Error::graph("lstm needs one input"))?;
+        // sequence along h: `b:1:T:I`
+        if d.c != 1 {
+            return Err(Error::shape(format!("lstm expects b:1:T:I, got {d}")));
+        }
+        let (t, feat) = (d.h, d.w);
+        self.t = t;
+        self.input_feat = feat;
+        let h = self.unit;
+        let b = d.b;
+        let out = if self.return_sequences {
+            TensorDim::new(b, 1, t, h)
+        } else {
+            TensorDim::vec(b, h)
+        };
+        let iter = Lifespan::ITERATION;
+        let back = Lifespan::BACKWARD;
+        Ok(FinalizeOut {
+            out_dims: vec![out],
+            weights: vec![
+                WeightReq {
+                    name: "weight_xh",
+                    dim: TensorDim::new(1, 1, feat, 4 * h),
+                    init: Initializer::XavierUniform { fan_in: feat, fan_out: 4 * h },
+                    need_cd: true,
+                },
+                WeightReq {
+                    name: "weight_hh",
+                    dim: TensorDim::new(1, 1, h, 4 * h),
+                    init: Initializer::XavierUniform { fan_in: h, fan_out: 4 * h },
+                    need_cd: true,
+                },
+                WeightReq {
+                    name: "bias",
+                    dim: TensorDim::vec(1, 4 * h),
+                    init: Initializer::Zeros,
+                    need_cd: false,
+                },
+            ],
+            temps: vec![
+                TempReq { name: "gates", dim: TensorDim::new(b, 1, t, 4 * h), span: iter },
+                TempReq { name: "cs", dim: TensorDim::new(b, 1, t, h), span: iter },
+                TempReq { name: "hs", dim: TensorDim::new(b, 1, t, h), span: iter },
+                TempReq { name: "xt", dim: TensorDim::vec(b, feat), span: iter },
+                TempReq { name: "gbuf", dim: TensorDim::vec(b, 4 * h), span: iter },
+                TempReq { name: "hbuf", dim: TensorDim::vec(b, h), span: iter },
+                TempReq { name: "dh", dim: TensorDim::vec(b, h), span: back },
+                TempReq { name: "dc", dim: TensorDim::vec(b, h), span: back },
+                TempReq { name: "dgates", dim: TensorDim::vec(b, 4 * h), span: back },
+                TempReq { name: "dxbuf", dim: TensorDim::vec(b, feat), span: back },
+            ],
+            need_input_cg: true,
+            fused_backward: true,
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let (b, t, f, h) = (ctx.batch(), self.t, self.input_feat, self.unit);
+        let x = ctx.input(0);
+        let wx = ctx.weight(0);
+        let wh = ctx.weight(1);
+        let bias = ctx.weight(2);
+        let gates = ctx.temp(T_GATES);
+        let cs = ctx.temp(T_CS);
+        let hs = ctx.temp(T_HS);
+        let xt = ctx.temp(T_XT);
+        let gbuf = ctx.temp(T_GBUF);
+        let hbuf = ctx.temp(T_HBUF);
+        for step in 0..t {
+            // gather x_t and h_{t-1} into contiguous [B, ...] matrices
+            for s in 0..b {
+                xt[s * f..(s + 1) * f]
+                    .copy_from_slice(&x[s * t * f + step * f..s * t * f + (step + 1) * f]);
+                if step == 0 {
+                    hbuf[s * h..(s + 1) * h].fill(0.0);
+                } else {
+                    hbuf[s * h..(s + 1) * h].copy_from_slice(
+                        &hs[s * t * h + (step - 1) * h..s * t * h + step * h],
+                    );
+                }
+            }
+            nb::matmul(xt, wx, gbuf, b, f, 4 * h, false);
+            nb::matmul(hbuf, wh, gbuf, b, h, 4 * h, true);
+            nb::add_bias(gbuf, bias, b, 4 * h);
+            for s in 0..b {
+                let g = &mut gbuf[s * 4 * h..(s + 1) * 4 * h];
+                for j in 0..h {
+                    g[j] = nb::sigmoid(g[j]); // i
+                    g[h + j] = nb::sigmoid(g[h + j]); // f
+                    g[2 * h + j] = g[2 * h + j].tanh(); // g
+                    g[3 * h + j] = nb::sigmoid(g[3 * h + j]); // o
+                }
+                for j in 0..h {
+                    let c_prev =
+                        if step == 0 { 0.0 } else { cs[s * t * h + (step - 1) * h + j] };
+                    let c = g[h + j] * c_prev + g[j] * g[2 * h + j];
+                    cs[s * t * h + step * h + j] = c;
+                    hs[s * t * h + step * h + j] = g[3 * h + j] * c.tanh();
+                }
+                gates[s * t * 4 * h + step * 4 * h..s * t * 4 * h + (step + 1) * 4 * h]
+                    .copy_from_slice(g);
+            }
+        }
+        // emit output
+        let out = ctx.output(0);
+        if self.return_sequences {
+            out.copy_from_slice(hs);
+        } else {
+            for s in 0..b {
+                out[s * h..(s + 1) * h]
+                    .copy_from_slice(&hs[s * t * h + (t - 1) * h..s * t * h + t * h]);
+            }
+        }
+    }
+
+    /// Fused backward: gradients *and* input derivative in one BPTT sweep.
+    fn calc_gradient(&self, ctx: &RunCtx) {
+        let (b, t, f, h) = (ctx.batch(), self.t, self.input_feat, self.unit);
+        let x = ctx.input(0);
+        let wx = ctx.weight(0);
+        let wh = ctx.weight(1);
+        let gates = ctx.temp(T_GATES);
+        let cs = ctx.temp(T_CS);
+        let hs = ctx.temp(T_HS);
+        let xt = ctx.temp(T_XT);
+        let hbuf = ctx.temp(T_HBUF);
+        let dh = ctx.temp(T_DH);
+        let dc = ctx.temp(T_DC);
+        let dgates = ctx.temp(T_DGATES);
+        let dxbuf = ctx.temp(T_DXBUF);
+        let dout = ctx.out_deriv(0);
+        dh.fill(0.0);
+        dc.fill(0.0);
+        for step in (0..t).rev() {
+            // dh_total = dh (recurrent) + dout contribution at this step
+            for s in 0..b {
+                let dh_s = &mut dh[s * h..(s + 1) * h];
+                if self.return_sequences {
+                    for j in 0..h {
+                        dh_s[j] += dout[s * t * h + step * h + j];
+                    }
+                } else if step == t - 1 {
+                    for j in 0..h {
+                        dh_s[j] += dout[s * h + j];
+                    }
+                }
+            }
+            // per-element gate gradients
+            for s in 0..b {
+                let g = &gates[s * t * 4 * h + step * 4 * h..s * t * 4 * h + (step + 1) * 4 * h];
+                let dgs = &mut dgates[s * 4 * h..(s + 1) * 4 * h];
+                for j in 0..h {
+                    let c = cs[s * t * h + step * h + j];
+                    let tc = c.tanh();
+                    let (gi, gf, gg, go) = (g[j], g[h + j], g[2 * h + j], g[3 * h + j]);
+                    let dht = dh[s * h + j];
+                    let dct = dht * go * (1.0 - tc * tc) + dc[s * h + j];
+                    let c_prev =
+                        if step == 0 { 0.0 } else { cs[s * t * h + (step - 1) * h + j] };
+                    // pre-activation gradients
+                    dgs[j] = dct * gg * gi * (1.0 - gi); // i
+                    dgs[h + j] = dct * c_prev * gf * (1.0 - gf); // f
+                    dgs[2 * h + j] = dct * gi * (1.0 - gg * gg); // g
+                    dgs[3 * h + j] = dht * tc * go * (1.0 - go); // o
+                    dc[s * h + j] = dct * gf;
+                }
+            }
+            // gather x_t and h_{t-1}
+            for s in 0..b {
+                xt[s * f..(s + 1) * f]
+                    .copy_from_slice(&x[s * t * f + step * f..s * t * f + (step + 1) * f]);
+                if step == 0 {
+                    hbuf[s * h..(s + 1) * h].fill(0.0);
+                } else {
+                    hbuf[s * h..(s + 1) * h].copy_from_slice(
+                        &hs[s * t * h + (step - 1) * h..s * t * h + step * h],
+                    );
+                }
+            }
+            // weight gradients
+            if let Some(gwx) = ctx.grad(0) {
+                nb::matmul_at(xt, dgates, gwx, f, b, 4 * h, true);
+            }
+            if let Some(gwh) = ctx.grad(1) {
+                nb::matmul_at(hbuf, dgates, gwh, h, b, 4 * h, true);
+            }
+            if let Some(gb) = ctx.grad(2) {
+                nb::bias_grad(dgates, gb, b, 4 * h, true);
+            }
+            // input derivative
+            if ctx.has_in_deriv(0) {
+                nb::matmul_bt(dgates, wx, dxbuf, b, 4 * h, f, false);
+                let din = ctx.in_deriv(0);
+                for s in 0..b {
+                    din[s * t * f + step * f..s * t * f + (step + 1) * f]
+                        .copy_from_slice(&dxbuf[s * f..(s + 1) * f]);
+                }
+            }
+            // dh for previous step
+            nb::matmul_bt(dgates, wh, dh, b, 4 * h, h, false);
+        }
+    }
+
+    fn calc_derivative(&self, _ctx: &RunCtx) {
+        // fused into calc_gradient (see finalize: fused_backward).
+    }
+}

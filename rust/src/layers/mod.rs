@@ -1,0 +1,251 @@
+//! Layer-operation-basis compute engine (paper §3, Fig 2b).
+//!
+//! Every layer implements three execution phases — `forward`,
+//! `calc_gradient`, `calc_derivative` — and *declares* its tensor needs
+//! at finalize time (which phase needs inputs/outputs/weights, whether it
+//! can run in place, which scratch tensors it wants and for which
+//! lifespan). The graph initializer turns those declarations into
+//! `TensorSpec`s; Algorithm 1 turns them into execution orders; the
+//! Memory Planner turns those into pool offsets. Layers never allocate.
+
+pub mod activation;
+pub mod addition;
+pub mod attention;
+pub mod batchnorm;
+pub mod concat;
+pub mod conv1d;
+pub mod conv2d;
+pub mod dropout;
+pub mod embedding;
+pub mod fc;
+pub mod flatten;
+pub mod gru;
+pub mod input;
+pub mod loss;
+pub mod lstm;
+pub mod multiout;
+pub mod pooling;
+pub mod props;
+
+use std::collections::HashMap;
+
+use crate::error::Result;
+use crate::planner::pool::MemoryPool;
+use crate::tensor::{Initializer, Lifespan, TensorDim, TensorId, TensorTable};
+
+pub use props::Props;
+
+/// Whether a layer's output may share memory with its input (Table 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Inplace {
+    /// Output is a fresh tensor (`C`).
+    None,
+    /// Output is a data-modifying view of the input (`MV`) — activations,
+    /// batch-norm, dropout. Derivative buffers are shared the same way.
+    Modify,
+    /// Output is a read-only view (`RV`) — flatten/reshape. Always
+    /// mergeable regardless of execution orders (integrity is guaranteed).
+    ReadOnly,
+}
+
+/// A trainable-parameter request.
+#[derive(Clone, Debug)]
+pub struct WeightReq {
+    pub name: &'static str,
+    pub dim: TensorDim,
+    pub init: Initializer,
+    /// Weight value is read during calc_derivative (true for almost every
+    /// parametric layer: `ΔD' = ΔD · Wᵀ`).
+    pub need_cd: bool,
+}
+
+/// A scratch-tensor request with an explicit lifespan.
+#[derive(Clone, Debug)]
+pub struct TempReq {
+    pub name: &'static str,
+    pub dim: TensorDim,
+    pub span: Lifespan,
+}
+
+/// Everything a layer declares at finalize time.
+#[derive(Clone, Debug)]
+pub struct FinalizeOut {
+    pub out_dims: Vec<TensorDim>,
+    pub weights: Vec<WeightReq>,
+    pub temps: Vec<TempReq>,
+    pub inplace: Inplace,
+    /// Input activation is read during compute-gradient (`ΔW = Xᵀ·ΔD`).
+    pub need_input_cg: bool,
+    /// Input activation is read during compute-derivative.
+    pub need_input_cd: bool,
+    /// Output activation is read during compute-derivative (sigmoid/tanh/
+    /// softmax use their own outputs).
+    pub need_output_cd: bool,
+    /// Output activation is read during compute-gradient.
+    pub need_output_cg: bool,
+    /// Layer computes gradients and derivatives in one sweep
+    /// (`calc_gradient` does both; `calc_derivative` is skipped). Used by
+    /// recurrent layers where both phases share the BPTT recursion.
+    pub fused_backward: bool,
+}
+
+impl Default for FinalizeOut {
+    fn default() -> Self {
+        FinalizeOut {
+            out_dims: vec![],
+            weights: vec![],
+            temps: vec![],
+            inplace: Inplace::None,
+            need_input_cg: false,
+            need_input_cd: false,
+            need_output_cd: false,
+            need_output_cg: false,
+            fused_backward: false,
+        }
+    }
+}
+
+/// Tensor bindings of one graph node, filled in by the graph initializer.
+#[derive(Clone, Debug, Default)]
+pub struct LayerIo {
+    /// Activation tensors read at forward (producers' outputs).
+    pub inputs: Vec<TensorId>,
+    /// Activation tensors written at forward.
+    pub outputs: Vec<TensorId>,
+    /// Derivative buffers this layer *writes* (d/d input). `None` when the
+    /// producing edge has no derivative (network inputs).
+    pub in_derivs: Vec<Option<TensorId>>,
+    /// Derivative buffers this layer *reads* (d/d output), written by the
+    /// consumer. `None` for terminal (loss) outputs.
+    pub out_derivs: Vec<Option<TensorId>>,
+    pub weights: Vec<TensorId>,
+    /// Parallel to `weights`; `None` for frozen weights.
+    pub grads: Vec<Option<TensorId>>,
+    pub temps: Vec<TensorId>,
+    /// Label placeholder (loss layers only).
+    pub label: Option<TensorId>,
+}
+
+/// Per-step execution context handed to layers.
+///
+/// All accessors resolve a `TensorId` through the merge chain to its pool
+/// region. Mutable and immutable views may alias only for tensors the
+/// planner merged (in-place layers are written for that).
+pub struct RunCtx<'a> {
+    pub io: &'a LayerIo,
+    pub table: &'a TensorTable,
+    pub pool: &'a MemoryPool,
+    pub in_dims: &'a [TensorDim],
+    pub out_dims: &'a [TensorDim],
+    pub training: bool,
+    /// Iteration counter (dropout masks, schedules).
+    pub iter: u64,
+}
+
+impl<'a> RunCtx<'a> {
+    fn slice(&self, id: TensorId) -> &'a [f32] {
+        let root = self.table.resolve(id);
+        let r = self.table.get(root).region.unwrap_or_else(|| {
+            panic!("tensor `{}` has no region", self.table.get(root).name)
+        });
+        self.pool.view(r)
+    }
+
+    fn slice_mut(&self, id: TensorId) -> &'a mut [f32] {
+        let root = self.table.resolve(id);
+        let r = self.table.get(root).region.unwrap_or_else(|| {
+            panic!("tensor `{}` has no region", self.table.get(root).name)
+        });
+        self.pool.view_mut(r)
+    }
+
+    pub fn input(&self, i: usize) -> &'a [f32] {
+        self.slice(self.io.inputs[i])
+    }
+    pub fn output(&self, i: usize) -> &'a mut [f32] {
+        self.slice_mut(self.io.outputs[i])
+    }
+    /// Derivative w.r.t. input `i` (this layer writes it). Panics if the
+    /// edge has none — guarded by `has_in_deriv`.
+    pub fn in_deriv(&self, i: usize) -> &'a mut [f32] {
+        self.slice_mut(self.io.in_derivs[i].expect("no input derivative"))
+    }
+    pub fn has_in_deriv(&self, i: usize) -> bool {
+        self.io.in_derivs[i].is_some()
+    }
+    /// Derivative w.r.t. output `i` (written by the consumer).
+    pub fn out_deriv(&self, i: usize) -> &'a [f32] {
+        self.slice(self.io.out_derivs[i].expect("no output derivative"))
+    }
+    pub fn has_out_deriv(&self, i: usize) -> bool {
+        self.io.out_derivs[i].is_some()
+    }
+    pub fn weight(&self, i: usize) -> &'a [f32] {
+        self.slice(self.io.weights[i])
+    }
+    pub fn weight_mut(&self, i: usize) -> &'a mut [f32] {
+        self.slice_mut(self.io.weights[i])
+    }
+    /// Gradient buffer for weight `i`; `None` when the weight is frozen
+    /// (transfer learning) — layers must skip the computation then.
+    pub fn grad(&self, i: usize) -> Option<&'a mut [f32]> {
+        self.io.grads[i].map(|id| self.slice_mut(id))
+    }
+    pub fn temp(&self, i: usize) -> &'a mut [f32] {
+        self.slice_mut(self.io.temps[i])
+    }
+    pub fn label(&self) -> &'a [f32] {
+        self.slice(self.io.label.expect("layer has no label"))
+    }
+
+    pub fn batch(&self) -> usize {
+        self.in_dims.first().or(self.out_dims.first()).map(|d| d.b).unwrap_or(1)
+    }
+}
+
+/// A neural-network layer, operating on pool tensors only.
+pub trait Layer: Send {
+    fn kind(&self) -> &'static str;
+
+    /// Shape inference + tensor declaration. Called once at initialize.
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut>;
+
+    /// Forward phase (EO = i).
+    fn forward(&self, ctx: &RunCtx);
+
+    /// Compute-gradient phase (EO = 3N − 2(i+1)). Default: no weights.
+    fn calc_gradient(&self, _ctx: &RunCtx) {}
+
+    /// Compute-derivative phase (EO = CG + 1). Propagates `ΔD` to the
+    /// producer. Layers with `fused_backward` do this inside
+    /// `calc_gradient` instead.
+    fn calc_derivative(&self, ctx: &RunCtx);
+}
+
+/// Layer constructor registry — the paper's `AppContext` lets applications
+/// register custom layer types; `model::appctx` builds on this.
+pub type LayerFactory = fn(&Props) -> Result<Box<dyn Layer>>;
+
+/// Built-in layer types, keyed by their INI `Type=` string.
+pub fn builtin_factories() -> HashMap<&'static str, LayerFactory> {
+    let mut m: HashMap<&'static str, LayerFactory> = HashMap::new();
+    m.insert("input", input::InputLayer::create as LayerFactory);
+    m.insert("fully_connected", fc::FullyConnected::create as LayerFactory);
+    m.insert("conv2d", conv2d::Conv2d::create as LayerFactory);
+    m.insert("conv1d", conv1d::Conv1d::create as LayerFactory);
+    m.insert("lstm", lstm::Lstm::create as LayerFactory);
+    m.insert("gru", gru::Gru::create as LayerFactory);
+    m.insert("activation", activation::ActivationLayer::create as LayerFactory);
+    m.insert("batch_normalization", batchnorm::BatchNorm::create as LayerFactory);
+    m.insert("flatten", flatten::Flatten::create as LayerFactory);
+    m.insert("concat", concat::Concat::create as LayerFactory);
+    m.insert("addition", addition::Addition::create as LayerFactory);
+    m.insert("multiout", multiout::MultiOut::create as LayerFactory);
+    m.insert("embedding", embedding::Embedding::create as LayerFactory);
+    m.insert("pooling2d", pooling::Pooling2d::create as LayerFactory);
+    m.insert("dropout", dropout::Dropout::create as LayerFactory);
+    m.insert("attention", attention::Attention::create as LayerFactory);
+    m.insert("mse", loss::MseLoss::create as LayerFactory);
+    m.insert("cross_entropy_softmax", loss::CrossEntropySoftmax::create as LayerFactory);
+    m
+}

@@ -1,0 +1,63 @@
+//! Multi-Out layer (Table 1): fans one tensor out to K consumers.
+//!
+//! Forward is a copy per branch (outputs could be RV views, but branches
+//! may be consumed at interleaved EOs, so the conservative choice is
+//! fresh tensors); backward *sums* the branch derivatives — the reason
+//! the realizer must materialize this node instead of letting two layers
+//! read one output directly.
+
+use crate::error::{Error, Result};
+use crate::tensor::TensorDim;
+
+use super::{FinalizeOut, Layer, Props, RunCtx};
+
+pub struct MultiOut {
+    n_out: usize,
+}
+
+impl MultiOut {
+    pub fn create(props: &Props) -> Result<Box<dyn Layer>> {
+        Ok(Box::new(MultiOut { n_out: props.usize_or("outputs", 2)? }))
+    }
+
+    pub fn with_outputs(n: usize) -> Self {
+        MultiOut { n_out: n }
+    }
+}
+
+impl Layer for MultiOut {
+    fn kind(&self) -> &'static str {
+        "multiout"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        let d = *in_dims.first().ok_or_else(|| Error::graph("multiout needs one input"))?;
+        Ok(FinalizeOut {
+            out_dims: vec![d; self.n_out],
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let x = ctx.input(0);
+        for k in 0..self.n_out {
+            ctx.output(k).copy_from_slice(x);
+        }
+    }
+
+    fn calc_derivative(&self, ctx: &RunCtx) {
+        if !ctx.has_in_deriv(0) {
+            return;
+        }
+        let din = ctx.in_deriv(0);
+        din.fill(0.0);
+        for k in 0..self.n_out {
+            if ctx.has_out_deriv(k) {
+                let d = ctx.out_deriv(k);
+                for (o, &v) in din.iter_mut().zip(d.iter()) {
+                    *o += v;
+                }
+            }
+        }
+    }
+}

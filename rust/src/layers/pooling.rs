@@ -1,0 +1,181 @@
+//! 2-D pooling (max / average). Max pooling stores flat argmax indices in
+//! an iteration-lifespan temp so backward can scatter without the input.
+
+use crate::error::{Error, Result};
+use crate::tensor::{Lifespan, TensorDim};
+
+use super::{FinalizeOut, Layer, Props, RunCtx, TempReq};
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PoolKind {
+    Max,
+    Average,
+    /// Global average pooling (`h:w -> 1:1`).
+    GlobalAverage,
+}
+
+pub struct Pooling2d {
+    kind_: PoolKind,
+    k: usize,
+    stride: usize,
+    in_dim: TensorDim,
+    out_hw: (usize, usize),
+}
+
+impl Pooling2d {
+    pub fn create(props: &Props) -> Result<Box<dyn Layer>> {
+        let kind_ = match props.get("pooling").unwrap_or("max") {
+            "max" => PoolKind::Max,
+            "average" | "avg" => PoolKind::Average,
+            "global_average" => PoolKind::GlobalAverage,
+            other => return Err(Error::model(format!("unknown pooling `{other}`"))),
+        };
+        let k = props.usize_or("pool_size", 2)?;
+        Ok(Box::new(Pooling2d {
+            kind_,
+            k,
+            stride: props.usize_or("stride", k)?,
+            in_dim: TensorDim::scalar(1),
+            out_hw: (0, 0),
+        }))
+    }
+}
+
+impl Layer for Pooling2d {
+    fn kind(&self) -> &'static str {
+        "pooling2d"
+    }
+
+    fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+        let d = *in_dims.first().ok_or_else(|| Error::graph("pooling2d needs one input"))?;
+        self.in_dim = d;
+        let (oh, ow) = match self.kind_ {
+            PoolKind::GlobalAverage => (1, 1),
+            _ => {
+                if d.h < self.k || d.w < self.k {
+                    return Err(Error::shape(format!("pool {} > input {}", self.k, d)));
+                }
+                ((d.h - self.k) / self.stride + 1, (d.w - self.k) / self.stride + 1)
+            }
+        };
+        self.out_hw = (oh, ow);
+        let out = TensorDim::new(d.b, d.c, oh, ow);
+        let temps = if self.kind_ == PoolKind::Max {
+            vec![TempReq { name: "argmax", dim: out, span: Lifespan::ITERATION }]
+        } else {
+            vec![]
+        };
+        Ok(FinalizeOut {
+            out_dims: vec![out],
+            temps,
+            ..Default::default()
+        })
+    }
+
+    fn forward(&self, ctx: &RunCtx) {
+        let d = self.in_dim;
+        let (oh, ow) = self.out_hw;
+        let x = ctx.input(0);
+        let out = ctx.output(0);
+        let planes = d.b * d.c;
+        match self.kind_ {
+            PoolKind::GlobalAverage => {
+                let hw = d.h * d.w;
+                for p in 0..planes {
+                    out[p] = x[p * hw..(p + 1) * hw].iter().sum::<f32>() / hw as f32;
+                }
+            }
+            PoolKind::Average => {
+                let inv = 1.0 / (self.k * self.k) as f32;
+                for p in 0..planes {
+                    let plane = &x[p * d.h * d.w..(p + 1) * d.h * d.w];
+                    for y in 0..oh {
+                        for xx in 0..ow {
+                            let mut acc = 0f32;
+                            for ky in 0..self.k {
+                                for kx in 0..self.k {
+                                    acc += plane[(y * self.stride + ky) * d.w + xx * self.stride + kx];
+                                }
+                            }
+                            out[p * oh * ow + y * ow + xx] = acc * inv;
+                        }
+                    }
+                }
+            }
+            PoolKind::Max => {
+                let arg = ctx.temp(0);
+                for p in 0..planes {
+                    let plane = &x[p * d.h * d.w..(p + 1) * d.h * d.w];
+                    for y in 0..oh {
+                        for xx in 0..ow {
+                            let mut best = f32::NEG_INFINITY;
+                            let mut bidx = 0usize;
+                            for ky in 0..self.k {
+                                for kx in 0..self.k {
+                                    let idx = (y * self.stride + ky) * d.w + xx * self.stride + kx;
+                                    if plane[idx] > best {
+                                        best = plane[idx];
+                                        bidx = idx;
+                                    }
+                                }
+                            }
+                            out[p * oh * ow + y * ow + xx] = best;
+                            arg[p * oh * ow + y * ow + xx] = bidx as f32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn calc_derivative(&self, ctx: &RunCtx) {
+        if !ctx.has_in_deriv(0) {
+            return;
+        }
+        let d = self.in_dim;
+        let (oh, ow) = self.out_hw;
+        let dout = ctx.out_deriv(0);
+        let din = ctx.in_deriv(0);
+        din.fill(0.0);
+        let planes = d.b * d.c;
+        match self.kind_ {
+            PoolKind::GlobalAverage => {
+                let hw = d.h * d.w;
+                let inv = 1.0 / hw as f32;
+                for p in 0..planes {
+                    let g = dout[p] * inv;
+                    for v in din[p * hw..(p + 1) * hw].iter_mut() {
+                        *v += g;
+                    }
+                }
+            }
+            PoolKind::Average => {
+                let inv = 1.0 / (self.k * self.k) as f32;
+                for p in 0..planes {
+                    for y in 0..oh {
+                        for xx in 0..ow {
+                            let g = dout[p * oh * ow + y * ow + xx] * inv;
+                            for ky in 0..self.k {
+                                for kx in 0..self.k {
+                                    din[p * d.h * d.w
+                                        + (y * self.stride + ky) * d.w
+                                        + xx * self.stride
+                                        + kx] += g;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            PoolKind::Max => {
+                let arg = ctx.temp(0);
+                for p in 0..planes {
+                    for o in 0..oh * ow {
+                        let idx = arg[p * oh * ow + o] as usize;
+                        din[p * d.h * d.w + idx] += dout[p * oh * ow + o];
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Layer property bag: `key = value` pairs from the INI model description
+//! or the builder API (paper §4: layers are stored as tuples of
+//! `[<Layer type>, <Properties (key, value)>]` after *Load*).
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::tensor::TensorDim;
+
+/// Case-insensitive `key → value` property map.
+#[derive(Clone, Debug, Default)]
+pub struct Props {
+    map: HashMap<String, String>,
+}
+
+impl Props {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_pairs<I, K, V>(pairs: I) -> Self
+    where
+        I: IntoIterator<Item = (K, V)>,
+        K: Into<String>,
+        V: Into<String>,
+    {
+        let mut p = Props::new();
+        for (k, v) in pairs {
+            p.set(k, v);
+        }
+        p
+    }
+
+    pub fn set(&mut self, key: impl Into<String>, value: impl Into<String>) {
+        self.map.insert(key.into().to_ascii_lowercase(), value.into());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(&key.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(&key.to_ascii_lowercase())
+    }
+
+    fn parse_err(key: &str, value: &str, reason: impl ToString) -> Error {
+        Error::Property {
+            key: key.to_string(),
+            value: value.to_string(),
+            reason: reason.to_string(),
+        }
+    }
+
+    pub fn usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .trim()
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|e| Self::parse_err(key, v, e)),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.usize(key)?.unwrap_or(default))
+    }
+
+    pub fn usize_req(&self, key: &str) -> Result<usize> {
+        self.usize(key)?
+            .ok_or_else(|| Self::parse_err(key, "", "required property missing"))
+    }
+
+    pub fn f32(&self, key: &str) -> Result<Option<f32>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .trim()
+                .parse::<f32>()
+                .map(Some)
+                .map_err(|e| Self::parse_err(key, v, e)),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        Ok(self.f32(key)?.unwrap_or(default))
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.trim().to_ascii_lowercase().as_str() {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                other => Err(Self::parse_err(key, other, "expected bool")),
+            },
+        }
+    }
+
+    pub fn string(&self, key: &str) -> Option<String> {
+        self.get(key).map(|s| s.trim().to_string())
+    }
+
+    pub fn dim(&self, key: &str) -> Result<Option<TensorDim>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => TensorDim::parse(v).map(Some),
+        }
+    }
+
+    /// Comma-separated list value (`input_layers = a, b`).
+    pub fn list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|v| {
+                v.split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_insensitive() {
+        let mut p = Props::new();
+        p.set("Unit", "10");
+        assert_eq!(p.usize("unit").unwrap(), Some(10));
+        assert_eq!(p.usize_req("UNIT").unwrap(), 10);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let p = Props::from_pairs([("stride", "2"), ("bad", "x")]);
+        assert_eq!(p.usize_or("stride", 1).unwrap(), 2);
+        assert_eq!(p.usize_or("missing", 7).unwrap(), 7);
+        assert!(p.usize("bad").is_err());
+        assert!(p.usize_req("missing").is_err());
+    }
+
+    #[test]
+    fn lists_and_bools() {
+        let p = Props::from_pairs([("input_layers", "a, b ,c"), ("flag", "true")]);
+        assert_eq!(p.list("input_layers"), vec!["a", "b", "c"]);
+        assert!(p.bool_or("flag", false).unwrap());
+        assert!(!p.bool_or("missing", false).unwrap());
+    }
+
+    #[test]
+    fn dims() {
+        let p = Props::from_pairs([("input_shape", "3:32:32")]);
+        assert_eq!(
+            p.dim("input_shape").unwrap().unwrap(),
+            TensorDim::new(1, 3, 32, 32)
+        );
+    }
+}

@@ -1,0 +1,34 @@
+//! # nntrainer-rs
+//!
+//! A Rust + JAX + Pallas reproduction of **NNTrainer** (Moon et al.,
+//! Samsung Research): a light-weight on-device training framework whose
+//! core contribution is execution-order-based memory planning — tensor
+//! lifespans + create modes (Tables 2–3), EO assignment with in-place
+//! view merging (Algorithm 1), and a pool planner (Algorithm 2) that
+//! makes peak training memory known *before* execution.
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3** — this crate: the coordinator/framework (graph compiler,
+//!   realizers, planners, executor, data pipeline, model API).
+//! * **L2/L1** — `python/compile`: JAX train-step + Pallas kernels,
+//!   AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **runtime** — loads those artifacts via PJRT (`xla` crate); Python
+//!   never runs on the training path.
+
+pub mod backend;
+pub mod bench_util;
+pub mod dataset;
+pub mod compiler;
+pub mod error;
+pub mod exec;
+pub mod graph;
+pub mod layers;
+pub mod metrics;
+pub mod model;
+pub mod optimizer;
+pub mod planner;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+
+pub use error::{Error, Result};

@@ -1,0 +1,208 @@
+//! `nntrainer` CLI — the leader entrypoint.
+//!
+//! ```text
+//! nntrainer plan  <model.ini> [--batch N] [--planner sorting|naive|bestfit] [--conventional] [--table]
+//! nntrainer train <model.ini> [--batch N] [--epochs N] [--save ckpt.bin] [--data digits|random]
+//! nntrainer zoo                              # list built-in evaluation models
+//! nntrainer artifacts [--dir artifacts]      # check + smoke the PJRT artifact catalog
+//! ```
+
+use std::process::ExitCode;
+
+use nntrainer::compiler::CompileOpts;
+use nntrainer::dataset::{DataProducer, DigitsProducer, RandomProducer};
+use nntrainer::metrics::MIB;
+use nntrainer::model::{ini, TrainConfig};
+use nntrainer::planner::PlannerKind;
+use nntrainer::runtime::catalog::ArtifactCatalog;
+use nntrainer::runtime::XlaRuntime;
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage:\n  nntrainer plan  <model.ini> [--batch N] [--planner P] [--conventional] [--table]\n  \
+         nntrainer train <model.ini> [--batch N] [--epochs N] [--save F] [--data digits|random]\n  \
+         nntrainer zoo\n  nntrainer artifacts [--dir D]"
+    );
+    ExitCode::from(2)
+}
+
+struct Args {
+    rest: Vec<String>,
+}
+
+impl Args {
+    fn flag(&self, name: &str) -> bool {
+        self.rest.iter().any(|a| a == name)
+    }
+    fn opt(&self, name: &str) -> Option<String> {
+        self.rest
+            .iter()
+            .position(|a| a == name)
+            .and_then(|p| self.rest.get(p + 1).cloned())
+    }
+}
+
+fn main() -> ExitCode {
+    let mut argv = std::env::args().skip(1);
+    let Some(cmd) = argv.next() else { return usage() };
+    let rest: Vec<String> = argv.collect();
+    let args = Args { rest };
+    let r = match cmd.as_str() {
+        "plan" => cmd_plan(&args),
+        "train" => cmd_train(&args),
+        "zoo" => cmd_zoo(),
+        "artifacts" => cmd_artifacts(&args),
+        _ => return usage(),
+    };
+    match r {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn compile_opts(args: &Args, default_batch: usize) -> nntrainer::Result<CompileOpts> {
+    let planner = match args.opt("--planner") {
+        Some(p) => PlannerKind::parse(&p)
+            .ok_or_else(|| nntrainer::Error::model(format!("unknown planner `{p}`")))?,
+        None => PlannerKind::Sorting,
+    };
+    let conventional = args.flag("--conventional");
+    Ok(CompileOpts {
+        batch: args
+            .opt("--batch")
+            .map(|b| b.parse().unwrap_or(default_batch))
+            .unwrap_or(default_batch),
+        planner,
+        conventional,
+        inplace: !conventional,
+        ..Default::default()
+    })
+}
+
+fn cmd_plan(args: &Args) -> nntrainer::Result<()> {
+    let path = args
+        .rest
+        .first()
+        .ok_or_else(|| nntrainer::Error::model("plan: missing model.ini"))?;
+    let (builder, hyper) = ini::builder_from_file(path)?;
+    let opts = compile_opts(args, hyper.batch)?;
+    let model = builder.compile(&opts)?;
+    let rep = &model.report;
+    println!("model:        {path}");
+    println!("planner:      {} (conventional profile: {})", rep.planner, opts.conventional);
+    println!("batch:        {}", opts.batch);
+    println!("peak pool:    {:.3} MiB  <- known before execution", rep.pool_mib());
+    println!("ideal bound:  {:.3} MiB  (planner overhead x{:.3})", rep.ideal_mib(), rep.overhead());
+    println!("no-reuse sum: {:.3} MiB", rep.total_bytes as f64 / MIB);
+    println!("tensors:      {} allocated, {} merged (MV/RV/E)", rep.n_tensors, rep.n_merged);
+    let mut roles: Vec<_> = rep.by_role.iter().collect();
+    roles.sort();
+    for (role, bytes) in roles {
+        println!("  {role:<8} {:>10.3} MiB", *bytes as f64 / MIB);
+    }
+    if args.flag("--table") {
+        println!("{}", model.exec.graph.table);
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> nntrainer::Result<()> {
+    let path = args
+        .rest
+        .first()
+        .ok_or_else(|| nntrainer::Error::model("train: missing model.ini"))?;
+    let (builder, hyper) = ini::builder_from_file(path)?;
+    let opts = compile_opts(args, hyper.batch)?;
+    let epochs = args
+        .opt("--epochs")
+        .map(|e| e.parse().unwrap_or(hyper.epochs))
+        .unwrap_or(hyper.epochs);
+    let mut model = builder.compile(&opts)?;
+    println!("peak pool {:.3} MiB; training {epochs} epochs @ batch {}", model.report.pool_mib(), opts.batch);
+
+    // input/label sizes from the compiled graph
+    let in_len: usize = model
+        .exec
+        .graph
+        .input_nodes
+        .iter()
+        .map(|&n| model.exec.graph.nodes[n].out_dims[0].feature_len())
+        .sum();
+    let lb_len: usize = model
+        .exec
+        .graph
+        .loss_nodes
+        .iter()
+        .map(|&n| model.exec.graph.nodes[n].in_dims[0].feature_len())
+        .sum();
+    let data = args.opt("--data").unwrap_or_else(|| "random".into());
+    let n = 512usize;
+    let make = move || -> Box<dyn DataProducer> {
+        match data.as_str() {
+            "digits" => {
+                let side = (in_len as f64).sqrt() as usize;
+                Box::new(DigitsProducer::new(n, side, 1, 42))
+            }
+            _ => Box::new(RandomProducer::new(n, in_len, lb_len, 42)),
+        }
+    };
+    let summary = model.train(make, &TrainConfig { epochs, verbose: true, ..Default::default() })?;
+    println!(
+        "done: {} iterations, {:.2}s, final loss {:.5}",
+        summary.iterations, summary.wall_s, summary.final_loss
+    );
+    if let Some(save) = args.opt("--save") {
+        model.save(&save)?;
+        println!("checkpoint written to {save}");
+    }
+    Ok(())
+}
+
+fn cmd_zoo() -> nntrainer::Result<()> {
+    use nntrainer::model::zoo;
+    println!("built-in evaluation models (rust/src/model/zoo.rs):");
+    for (name, nodes, _) in zoo::table4_cases() {
+        println!("  table4: {:<22} ({} layers)", name, nodes.len());
+    }
+    for (name, n) in [
+        ("lenet5", zoo::lenet5().len()),
+        ("vgg16", zoo::vgg16().len()),
+        ("resnet18", zoo::resnet18().len()),
+        ("resnet18_transfer", zoo::resnet18_transfer().len()),
+        ("product_rating", zoo::product_rating().len()),
+        ("tacotron_decoder(T=24)", zoo::tacotron_decoder(24, 80, 256).len()),
+        ("postnet(T=24)", zoo::postnet(24, 80).len()),
+        ("mlp_e2e", zoo::mlp_e2e().len()),
+    ] {
+        println!("  app:    {name:<22} ({n} layers)");
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> nntrainer::Result<()> {
+    let dir = args.opt("--dir").unwrap_or_else(|| {
+        ArtifactCatalog::default_dir().to_string_lossy().into_owned()
+    });
+    ArtifactCatalog::open(&dir)?;
+    let mut rt = XlaRuntime::new(&dir)?;
+    println!("platform: {}", rt.platform());
+    // smoke: run the linear oracle
+    let (m, k, n) = nntrainer::runtime::catalog::ORACLE_LINEAR;
+    let x = vec![0.5f32; m * k];
+    let w = vec![0.1f32; k * n];
+    let b = vec![0.0f32; n];
+    let out = rt.run_f32(
+        "oracle_linear_fwd",
+        &[(&x[..], &[m, k][..]), (&w[..], &[k, n][..]), (&b[..], &[n][..])],
+    )?;
+    let got = out[0][0];
+    let want = 0.5 * 0.1 * k as f32;
+    if (got - want).abs() > 1e-4 {
+        return Err(nntrainer::Error::Runtime(format!("smoke mismatch {got} vs {want}")));
+    }
+    println!("artifact catalog OK ({} artifacts, smoke passed)", nntrainer::runtime::catalog::ARTIFACTS.len());
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Plan + runtime metrics: the numbers every evaluation figure reports.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::exec::ideal_peak_bytes;
+use crate::tensor::{TensorRole, TensorTable};
+
+pub const KIB: f64 = 1024.0;
+pub const MIB: f64 = 1024.0 * 1024.0;
+
+/// Constant we report as the framework's own footprint, mirroring the
+/// paper's "baseline" series (NNTrainer: 12.3 MiB, TensorFlow: 337.8 MiB,
+/// PyTorch: 105.4 MiB). Ours is the release binary + libxla runtime
+/// resident set measured once; it is a *reported constant*, not part of
+/// the pool accounting.
+pub const BASELINE_NNTRAINER_MIB: f64 = 12.3;
+pub const BASELINE_TENSORFLOW_MIB: f64 = 337.8;
+pub const BASELINE_PYTORCH_MIB: f64 = 105.4;
+
+/// Result of memory planning for one compiled model.
+#[derive(Clone, Debug)]
+pub struct PlanReport {
+    pub planner: &'static str,
+    /// Pool size = peak training memory, known before execution.
+    pub pool_bytes: usize,
+    /// Analytic lower bound (max simultaneous live bytes).
+    pub ideal_bytes: usize,
+    /// Sum of every root tensor (what a no-reuse allocator needs).
+    pub total_bytes: usize,
+    /// Per-role byte totals (root tensors).
+    pub by_role: HashMap<String, usize>,
+    pub n_tensors: usize,
+    pub n_merged: usize,
+}
+
+impl PlanReport {
+    pub fn from_table(table: &TensorTable, pool_len: usize, planner: &'static str) -> Self {
+        let mut by_role: HashMap<String, usize> = HashMap::new();
+        let mut total = 0usize;
+        let mut n_tensors = 0usize;
+        let mut n_merged = 0usize;
+        for s in table.iter() {
+            if s.eos.is_empty() {
+                continue;
+            }
+            if s.merged_into.is_some() {
+                n_merged += 1;
+                continue;
+            }
+            n_tensors += 1;
+            total += s.dim.bytes();
+            *by_role.entry(s.role.to_string()).or_default() += s.dim.bytes();
+        }
+        PlanReport {
+            planner,
+            pool_bytes: pool_len * 4,
+            ideal_bytes: ideal_peak_bytes(table),
+            total_bytes: total,
+            by_role,
+            n_tensors,
+            n_merged,
+        }
+    }
+
+    pub fn pool_mib(&self) -> f64 {
+        self.pool_bytes as f64 / MIB
+    }
+    pub fn ideal_mib(&self) -> f64 {
+        self.ideal_bytes as f64 / MIB
+    }
+    pub fn pool_kib(&self) -> f64 {
+        self.pool_bytes as f64 / KIB
+    }
+    pub fn ideal_kib(&self) -> f64 {
+        self.ideal_bytes as f64 / KIB
+    }
+    /// Planner overhead over the analytic ideal.
+    pub fn overhead(&self) -> f64 {
+        if self.ideal_bytes == 0 {
+            return 0.0;
+        }
+        self.pool_bytes as f64 / self.ideal_bytes as f64
+    }
+}
+
+/// Simple wall-clock timer for latency rows.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Breakdown helper for reports.
+pub fn role_bytes(table: &TensorTable, role: TensorRole) -> usize {
+    table
+        .iter()
+        .filter(|s| s.merged_into.is_none() && !s.eos.is_empty() && s.role == role)
+        .map(|s| s.dim.bytes())
+        .sum()
+}

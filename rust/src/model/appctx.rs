@@ -1,0 +1,75 @@
+//! AppContext (paper §4): per-application registry of custom layers so
+//! "applications running multiple neural network models simultaneously"
+//! can share extensions across their models.
+
+use std::collections::HashMap;
+
+use crate::layers::{builtin_factories, LayerFactory};
+
+/// Registry of layer factories (built-ins + application extensions).
+#[derive(Default)]
+pub struct AppContext {
+    custom: HashMap<&'static str, LayerFactory>,
+}
+
+impl AppContext {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or override) a layer type.
+    pub fn register_layer(&mut self, name: &'static str, factory: LayerFactory) {
+        self.custom.insert(name, factory);
+    }
+
+    /// Effective factory table: built-ins overlaid with customs.
+    pub fn factories(&self) -> HashMap<&'static str, LayerFactory> {
+        let mut m = builtin_factories();
+        for (k, v) in &self.custom {
+            m.insert(k, *v);
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Result;
+    use crate::layers::{FinalizeOut, Layer, Props, RunCtx};
+    use crate::tensor::TensorDim;
+
+    struct Identity;
+    impl Layer for Identity {
+        fn kind(&self) -> &'static str {
+            "identity"
+        }
+        fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
+            Ok(FinalizeOut { out_dims: vec![in_dims[0]], ..Default::default() })
+        }
+        fn forward(&self, ctx: &RunCtx) {
+            let (x, o) = (ctx.input(0), ctx.output(0));
+            if x.as_ptr() != o.as_ptr() {
+                o.copy_from_slice(x);
+            }
+        }
+        fn calc_derivative(&self, ctx: &RunCtx) {
+            if ctx.has_in_deriv(0) {
+                ctx.in_deriv(0).copy_from_slice(ctx.out_deriv(0));
+            }
+        }
+    }
+
+    fn make_identity(_p: &Props) -> Result<Box<dyn Layer>> {
+        Ok(Box::new(Identity))
+    }
+
+    #[test]
+    fn custom_layer_registration() {
+        let mut ctx = AppContext::new();
+        ctx.register_layer("identity", make_identity);
+        let f = ctx.factories();
+        assert!(f.contains_key("identity"));
+        assert!(f.contains_key("fully_connected"));
+    }
+}

@@ -1,0 +1,78 @@
+//! Checkpointing: binary weight save/load (`NNTR` format, version 1).
+//!
+//! Layout: magic `NNTR`, u32 version, u32 count, then per weight:
+//! u32 name-len, name bytes, u32 f32-count, little-endian f32 data.
+//! Used by the transfer-learning flow (train backbone → save → load into
+//! a frozen-backbone model whose weight names match).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+
+use crate::error::{Error, Result};
+use crate::exec::Executor;
+
+const MAGIC: &[u8; 4] = b"NNTR";
+const VERSION: u32 = 1;
+
+pub fn save(exec: &Executor, path: &str) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    let names = exec.weight_names();
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(names.len() as u32).to_le_bytes())?;
+    for name in names {
+        let data = exec.read_weight(&name)?;
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        w.write_all(&(data.len() as u32).to_le_bytes())?;
+        for v in data {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load weights by name; unknown names are skipped (transfer learning
+/// loads a backbone checkpoint into a bigger model). Returns the number
+/// of tensors restored.
+pub fn load(exec: &Executor, path: &str) -> Result<usize> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Checkpoint(format!("bad magic {magic:?}")));
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        return Err(Error::Checkpoint(format!("unsupported version {version}")));
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut restored = 0usize;
+    for _ in 0..count {
+        let nlen = read_u32(&mut r)? as usize;
+        if nlen > 4096 {
+            return Err(Error::Checkpoint(format!("implausible name length {nlen}")));
+        }
+        let mut nbuf = vec![0u8; nlen];
+        r.read_exact(&mut nbuf)?;
+        let name = String::from_utf8(nbuf)
+            .map_err(|e| Error::Checkpoint(format!("bad name utf8: {e}")))?;
+        let dlen = read_u32(&mut r)? as usize;
+        let mut data = vec![0f32; dlen];
+        let mut b4 = [0u8; 4];
+        for v in data.iter_mut() {
+            r.read_exact(&mut b4)?;
+            *v = f32::from_le_bytes(b4);
+        }
+        if exec.write_weight(&name, &data).is_ok() {
+            restored += 1;
+        }
+    }
+    Ok(restored)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}

@@ -1,0 +1,201 @@
+//! INI model loader (paper §4 *Load*: "NNTrainer users may describe a
+//! neural network model … with an initialization file").
+//!
+//! Format mirrors NNTrainer's: a `[Model]` section with hyper-parameters
+//! (loss, optimizer, batch size, epochs), then one section per layer in
+//! topological order:
+//!
+//! ```ini
+//! [Model]
+//! Type = NeuralNetwork
+//! Loss = cross_entropy
+//! Optimizer = sgd
+//! Learning_rate = 0.01
+//! Batch_Size = 32
+//! Epochs = 3
+//!
+//! [inputlayer]
+//! Type = input
+//! Input_Shape = 1:28:28
+//!
+//! [fc1]
+//! Type = fully_connected
+//! Unit = 100
+//! Activation = relu
+//! ```
+
+use crate::error::{Error, Result};
+use crate::graph::NodeDesc;
+use crate::layers::Props;
+
+use super::model::ModelBuilder;
+
+/// Parsed INI description.
+#[derive(Debug, Default)]
+pub struct IniModel {
+    pub model_props: Props,
+    pub layers: Vec<NodeDesc>,
+}
+
+/// Parse INI text. `#` and `;` start comments; keys are
+/// case-insensitive; section order defines layer order.
+pub fn parse(text: &str) -> Result<IniModel> {
+    let mut out = IniModel::default();
+    let mut section: Option<String> = None;
+    let mut props = Props::new();
+    let flush = |name: Option<String>, props: &mut Props, out: &mut IniModel| -> Result<()> {
+        let Some(name) = name else { return Ok(()) };
+        if name.eq_ignore_ascii_case("model") {
+            out.model_props = std::mem::take(props);
+        } else {
+            let mut p = std::mem::take(props);
+            let ltype = p
+                .string("type")
+                .ok_or_else(|| Error::model(format!("section [{name}] missing Type")))?
+                .to_ascii_lowercase();
+            p.set("type", "");
+            out.layers.push(NodeDesc::new(name, ltype, p));
+        }
+        Ok(())
+    };
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split(['#', ';']).next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(Error::model(format!("line {}: unterminated section", lineno + 1)));
+            }
+            flush(section.take(), &mut props, &mut out)?;
+            section = Some(line[1..line.len() - 1].trim().to_string());
+        } else if let Some(eq) = line.find('=') {
+            if section.is_none() {
+                return Err(Error::model(format!("line {}: key outside a section", lineno + 1)));
+            }
+            props.set(line[..eq].trim(), line[eq + 1..].trim());
+        } else {
+            return Err(Error::model(format!("line {}: expected `key = value`", lineno + 1)));
+        }
+    }
+    flush(section.take(), &mut props, &mut out)?;
+    Ok(out)
+}
+
+/// Hyper-parameters pulled from the `[Model]` section.
+#[derive(Debug, Clone)]
+pub struct IniHyper {
+    pub batch: usize,
+    pub epochs: usize,
+    pub loss: Option<String>,
+}
+
+/// Build a `ModelBuilder` from INI text: layers + a loss layer appended
+/// from `Loss =`, optimizer from `Optimizer =`.
+pub fn builder_from_ini(text: &str) -> Result<(ModelBuilder, IniHyper)> {
+    let ini = parse(text)?;
+    let hyper = IniHyper {
+        batch: ini.model_props.usize_or("batch_size", 32)?,
+        epochs: ini.model_props.usize_or("epochs", 1)?,
+        loss: ini.model_props.string("loss"),
+    };
+    let mut b = ModelBuilder::new().add_nodes(ini.layers);
+    if let Some(loss) = &hyper.loss {
+        let ltype = match loss.to_ascii_lowercase().as_str() {
+            "mse" => "mse",
+            "cross_entropy" | "cross_entropy_softmax" => "cross_entropy",
+            other => return Err(Error::model(format!("unknown loss `{other}`"))),
+        };
+        b = b.add("loss", ltype, &[]);
+    }
+    let opt_kind = ini.model_props.string("optimizer").unwrap_or_else(|| "sgd".into());
+    let mut opt_props = Props::new();
+    for k in ["learning_rate", "momentum", "beta1", "beta2", "epsilon"] {
+        if let Some(v) = ini.model_props.get(k) {
+            opt_props.set(k, v);
+        }
+    }
+    b.optimizer_kind = opt_kind;
+    b.optimizer_props = opt_props;
+    Ok((b, hyper))
+}
+
+/// Read + build from a file path.
+pub fn builder_from_file(path: &str) -> Result<(ModelBuilder, IniHyper)> {
+    let text = std::fs::read_to_string(path)?;
+    builder_from_ini(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# HandMoji-style description (paper Fig 13: "entire training
+# configuration is described within 30 lines")
+[Model]
+Type = NeuralNetwork
+Loss = cross_entropy
+Optimizer = adam
+Learning_rate = 0.001
+Batch_Size = 8
+Epochs = 2
+
+[inputlayer]
+Type = input
+Input_Shape = 1:16:16
+
+[conv]
+Type = conv2d
+Filters = 4
+Kernel_Size = 3
+Padding = same
+Activation = relu
+
+[flat]
+Type = flatten
+
+[classifier]
+Type = fully_connected
+Unit = 10
+"#;
+
+    #[test]
+    fn parses_sections_in_order() {
+        let ini = parse(SAMPLE).unwrap();
+        assert_eq!(ini.layers.len(), 4);
+        assert_eq!(ini.layers[0].ltype, "input");
+        assert_eq!(ini.layers[1].name, "conv");
+        assert_eq!(ini.layers[1].props.usize("filters").unwrap(), Some(4));
+        assert_eq!(ini.model_props.string("loss").unwrap(), "cross_entropy");
+    }
+
+    #[test]
+    fn builder_appends_loss_and_optimizer() {
+        let (b, hyper) = builder_from_ini(SAMPLE).unwrap();
+        assert_eq!(hyper.batch, 8);
+        assert_eq!(hyper.epochs, 2);
+        assert_eq!(b.nodes.last().unwrap().ltype, "cross_entropy");
+        assert_eq!(b.optimizer_kind, "adam");
+        assert_eq!(b.optimizer_props.f32("learning_rate").unwrap(), Some(0.001));
+    }
+
+    #[test]
+    fn rejects_missing_type() {
+        assert!(parse("[x]\nunit = 3\n").unwrap_err().to_string().contains("Type")
+            || builder_from_ini("[x]\nunit = 3\n").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("key = 1\n").is_err());
+        assert!(parse("[s]\nnot-an-assignment\n").is_err());
+    }
+
+    #[test]
+    fn comments_ignored() {
+        let ini = parse("# top\n[Model] ; trailing\nType = NeuralNetwork # x\n").unwrap();
+        assert_eq!(ini.model_props.string("type").unwrap(), "NeuralNetwork");
+    }
+}

@@ -1,0 +1,12 @@
+//! Model pipeline (paper §4): *Load* (INI or builder API) → *Configure* →
+//! *Compile* (realizers) → *Initialize* (Algorithm 1 + planning) →
+//! *setData* (Batch Queue) → *Train*.
+
+pub mod appctx;
+pub mod checkpoint;
+pub mod ini;
+pub mod model;
+pub mod zoo;
+
+pub use appctx::AppContext;
+pub use model::{Model, ModelBuilder, TrainConfig, TrainSummary};

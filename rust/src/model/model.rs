@@ -1,0 +1,275 @@
+//! The `Model` type: the user-facing API tying compiler, planner,
+//! executor and data pipeline together.
+
+use crate::compiler::{compile_with, CompileOpts};
+use crate::dataset::{BatchQueue, DataProducer};
+use crate::error::{Error, Result};
+use crate::exec::Executor;
+use crate::graph::NodeDesc;
+use crate::layers::Props;
+use crate::metrics::{PlanReport, Timer};
+use crate::model::appctx::AppContext;
+use crate::optimizer;
+
+/// Builder: accumulates layer descriptions and hyper-parameters
+/// (the *Load*/*Configure* stages).
+pub struct ModelBuilder {
+    pub nodes: Vec<NodeDesc>,
+    pub optimizer_kind: String,
+    pub optimizer_props: Props,
+    pub appctx: AppContext,
+}
+
+impl Default for ModelBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelBuilder {
+    pub fn new() -> Self {
+        ModelBuilder {
+            nodes: vec![],
+            optimizer_kind: "sgd".into(),
+            optimizer_props: Props::new(),
+            appctx: AppContext::new(),
+        }
+    }
+
+    /// Add one layer: `add("fc1", "fully_connected", &[("unit","10")])`.
+    pub fn add(mut self, name: &str, ltype: &str, pairs: &[(&str, &str)]) -> Self {
+        self.nodes.push(NodeDesc::new(name, ltype, Props::from_pairs(pairs.iter().copied())));
+        self
+    }
+
+    pub fn add_node(mut self, node: NodeDesc) -> Self {
+        self.nodes.push(node);
+        self
+    }
+
+    pub fn add_nodes(mut self, nodes: impl IntoIterator<Item = NodeDesc>) -> Self {
+        self.nodes.extend(nodes);
+        self
+    }
+
+    pub fn optimizer(mut self, kind: &str, pairs: &[(&str, &str)]) -> Self {
+        self.optimizer_kind = kind.to_string();
+        self.optimizer_props = Props::from_pairs(pairs.iter().copied());
+        self
+    }
+
+    pub fn with_appctx(mut self, ctx: AppContext) -> Self {
+        self.appctx = ctx;
+        self
+    }
+
+    /// *Compile* + *Initialize*: realizers, Algorithm 1, memory planning,
+    /// pool allocation, weight init.
+    pub fn compile(self, opts: &CompileOpts) -> Result<Model> {
+        let opt = optimizer::create(&self.optimizer_kind, &self.optimizer_props)?;
+        let factories = self.appctx.factories();
+        let (exec, report) = compile_with(self.nodes, opt, opts, &factories)?;
+        Ok(Model { exec, report, opts: opts.clone() })
+    }
+}
+
+/// Epoch-level training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    /// Batch-queue depth (backpressure bound).
+    pub queue_depth: usize,
+    /// Print per-epoch summaries.
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { epochs: 1, queue_depth: 2, verbose: false }
+    }
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainSummary {
+    pub epochs: usize,
+    pub iterations: usize,
+    pub final_loss: f32,
+    pub losses_per_epoch: Vec<f32>,
+    pub wall_s: f64,
+}
+
+/// A compiled, planned, ready-to-train model.
+pub struct Model {
+    pub exec: Executor,
+    pub report: PlanReport,
+    pub opts: CompileOpts,
+}
+
+impl Model {
+    /// Peak training memory (the pool), known before execution.
+    pub fn peak_pool_bytes(&self) -> usize {
+        self.report.pool_bytes
+    }
+
+    /// Bind one assembled batch: the flat `[batch, total_in_feat]` input
+    /// is split across input nodes (in graph order), `[batch,
+    /// total_label_feat]` across loss labels.
+    pub fn bind_batch(&self, input: &[f32], label: &[f32]) -> Result<()> {
+        let batch = self.opts.batch;
+        // split inputs by per-node feature size
+        let feats: Vec<usize> = self
+            .exec
+            .graph
+            .input_nodes
+            .iter()
+            .map(|&n| self.exec.graph.nodes[n].out_dims[0].feature_len())
+            .collect();
+        let total: usize = feats.iter().sum();
+        if input.len() != total * batch {
+            return Err(Error::shape(format!(
+                "batch input len {} != {}x{}",
+                input.len(),
+                batch,
+                total
+            )));
+        }
+        let mut off = 0usize;
+        for (k, &f) in feats.iter().enumerate() {
+            if feats.len() == 1 {
+                self.exec.bind_input(k, input)?;
+            } else {
+                let mut buf = vec![0f32; batch * f];
+                for s in 0..batch {
+                    buf[s * f..(s + 1) * f]
+                        .copy_from_slice(&input[s * total + off..s * total + off + f]);
+                }
+                self.exec.bind_input(k, &buf)?;
+            }
+            off += f;
+        }
+        // split labels by loss-node label size
+        let lfeats: Vec<usize> = self
+            .exec
+            .graph
+            .loss_nodes
+            .iter()
+            .map(|&n| self.exec.graph.nodes[n].in_dims[0].feature_len())
+            .collect();
+        let ltotal: usize = lfeats.iter().sum();
+        if label.len() != ltotal * batch {
+            return Err(Error::shape(format!(
+                "batch label len {} != {}x{}",
+                label.len(),
+                batch,
+                ltotal
+            )));
+        }
+        let mut loff = 0usize;
+        for (k, &f) in lfeats.iter().enumerate() {
+            if lfeats.len() == 1 {
+                self.exec.bind_label(k, label)?;
+            } else {
+                let mut buf = vec![0f32; batch * f];
+                for s in 0..batch {
+                    buf[s * f..(s + 1) * f]
+                        .copy_from_slice(&label[s * ltotal + loff..s * ltotal + loff + f]);
+                }
+                self.exec.bind_label(k, &buf)?;
+            }
+            loff += f;
+        }
+        Ok(())
+    }
+
+    /// Train for `cfg.epochs` epochs; `make_producer` is called once per
+    /// epoch (the Batch Queue consumes the producer on its thread).
+    pub fn train(
+        &mut self,
+        make_producer: impl Fn() -> Box<dyn DataProducer>,
+        cfg: &TrainConfig,
+    ) -> Result<TrainSummary> {
+        let timer = Timer::start();
+        let mut summary = TrainSummary { epochs: cfg.epochs, ..Default::default() };
+        for epoch in 0..cfg.epochs {
+            let queue = BatchQueue::spawn(make_producer(), self.opts.batch, cfg.queue_depth);
+            let mut epoch_loss = 0f64;
+            let mut batches = 0usize;
+            while let Some(b) = queue.next() {
+                self.bind_batch(&b.input, &b.label)?;
+                let loss = self.exec.train_iteration();
+                epoch_loss += loss as f64;
+                batches += 1;
+            }
+            if batches == 0 {
+                return Err(Error::Dataset("no full batch produced".into()));
+            }
+            let mean = (epoch_loss / batches as f64) as f32;
+            summary.losses_per_epoch.push(mean);
+            summary.iterations += batches;
+            summary.final_loss = mean;
+            if cfg.verbose {
+                println!("epoch {:>3}: loss {:.6} ({} iters)", epoch + 1, mean, batches);
+            }
+        }
+        summary.wall_s = timer.elapsed_s();
+        Ok(summary)
+    }
+
+    /// Forward-only pass over one bound batch; returns the named node's
+    /// output (defaults to the last non-loss node).
+    pub fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        // bind input only; labels untouched
+        let feats: Vec<usize> = self
+            .exec
+            .graph
+            .input_nodes
+            .iter()
+            .map(|&n| self.exec.graph.nodes[n].out_dims[0].feature_len())
+            .collect();
+        let total: usize = feats.iter().sum();
+        let batch = self.opts.batch;
+        if input.len() != total * batch {
+            return Err(Error::shape(format!(
+                "infer input len {} != {}x{}",
+                input.len(),
+                batch,
+                total
+            )));
+        }
+        let mut off = 0usize;
+        for (k, &f) in feats.iter().enumerate() {
+            if feats.len() == 1 {
+                self.exec.bind_input(k, input)?;
+            } else {
+                let mut buf = vec![0f32; batch * f];
+                for s in 0..batch {
+                    buf[s * f..(s + 1) * f]
+                        .copy_from_slice(&input[s * total + off..s * total + off + f]);
+                }
+                self.exec.bind_input(k, &buf)?;
+            }
+            off += f;
+        }
+        self.exec.forward_pass();
+        // last non-loss, non-input node
+        let last = self
+            .exec
+            .graph
+            .nodes
+            .iter()
+            .rev()
+            .find(|n| !n.is_loss && !n.is_input)
+            .ok_or_else(|| Error::graph("no output node"))?;
+        let name = last.name.clone();
+        self.exec.read_output(&name)
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        crate::model::checkpoint::save(&self.exec, path)
+    }
+
+    pub fn load(&mut self, path: &str) -> Result<usize> {
+        crate::model::checkpoint::load(&self.exec, path)
+    }
+}

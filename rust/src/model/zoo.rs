@@ -1,0 +1,473 @@
+//! Model zoo: every network the paper's evaluation uses, as description
+//! builders (Table 4 component cases, Fig 12 applications, Fig 14
+//! Tacotron2-decoder). Loss layers are included; optimizers are chosen by
+//! the caller.
+
+use crate::graph::NodeDesc;
+use crate::layers::Props;
+
+fn node(name: &str, ltype: &str, pairs: &[(&str, &str)]) -> NodeDesc {
+    NodeDesc::new(name, ltype, Props::from_pairs(pairs.iter().copied()))
+}
+
+// ------------------------------------------------------------ Table 4 cases
+
+/// `Linear`: 150528 → fc 10, MSE (Table 4 row 1).
+pub fn linear_case() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "1:1:150528")]),
+        node("fc0", "fully_connected", &[("unit", "10"), ("bias", "false")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+/// `Conv2D`: 3:224:224 → conv(3 filters, 3x3, stride 2, pad 1) →
+/// 3:112:112, MSE (Table 4 row 2).
+pub fn conv2d_case() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "3:224:224")]),
+        node(
+            "conv0",
+            "conv2d",
+            &[("filters", "3"), ("kernel_size", "3"), ("stride", "2"), ("padding", "1"), ("bias", "false")],
+        ),
+        node("loss", "mse", &[]),
+    ]
+}
+
+/// `LSTM`: 150528 (T=1) → lstm(10), MSE (Table 4 row 3).
+pub fn lstm_case() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "1:1:150528")]),
+        node("lstm0", "lstm", &[("unit", "10")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+/// Model A (Linear): fc128 → fc64 → fc10 (paper Fig 4; dims recovered
+/// from Table 4's 188250 kiB ideal — see DESIGN.md).
+pub fn model_a_linear() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "1:1:150528")]),
+        node("fc0", "fully_connected", &[("unit", "128"), ("bias", "false")]),
+        node("fc1", "fully_connected", &[("unit", "64"), ("bias", "false")]),
+        node("fc2", "fully_connected", &[("unit", "10"), ("bias", "false")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+/// Model A (Conv2D): three stride-2 convs, 224 → 112 → 56 → 28.
+pub fn model_a_conv() -> Vec<NodeDesc> {
+    let conv = |name: &str| {
+        node(
+            name,
+            "conv2d",
+            &[("filters", "3"), ("kernel_size", "3"), ("stride", "2"), ("padding", "1"), ("bias", "false")],
+        )
+    };
+    vec![
+        node("in", "input", &[("input_shape", "3:224:224")]),
+        conv("conv0"),
+        conv("conv1"),
+        conv("conv2"),
+        node("loss", "mse", &[]),
+    ]
+}
+
+/// Model B (Linear): fc64 → sigmoid → fc10 (Fig 5; 112935 kiB ideal).
+pub fn model_b_linear() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "1:1:150528")]),
+        node("fc0", "fully_connected", &[("unit", "64"), ("bias", "false")]),
+        node("act", "activation", &[("act", "sigmoid")]),
+        node("fc1", "fully_connected", &[("unit", "10"), ("bias", "false")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+/// Model B (Conv2D): conv s2 → sigmoid → conv s2, 224 → 112 → 56.
+pub fn model_b_conv() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "3:224:224")]),
+        node(
+            "conv0",
+            "conv2d",
+            &[("filters", "3"), ("kernel_size", "3"), ("stride", "2"), ("padding", "1"), ("bias", "false")],
+        ),
+        node("act", "activation", &[("act", "sigmoid")]),
+        node(
+            "conv1",
+            "conv2d",
+            &[("filters", "3"), ("kernel_size", "3"), ("stride", "2"), ("padding", "1"), ("bias", "false")],
+        ),
+        node("loss", "mse", &[]),
+    ]
+}
+
+/// Model C (Linear): fc10 → sigmoid → flatten → fc10 (Fig 6; ~49399 kiB).
+pub fn model_c_linear() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "1:1:150528")]),
+        node("fc0", "fully_connected", &[("unit", "10"), ("bias", "false")]),
+        node("act", "activation", &[("act", "sigmoid")]),
+        node("flat", "flatten", &[]),
+        node("fc1", "fully_connected", &[("unit", "10"), ("bias", "false")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+/// Model C (Conv2D): conv s2 → sigmoid → flatten (out 64:1:1:37632).
+pub fn model_c_conv() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "3:224:224")]),
+        node(
+            "conv0",
+            "conv2d",
+            &[("filters", "3"), ("kernel_size", "3"), ("stride", "2"), ("padding", "1"), ("bias", "false")],
+        ),
+        node("act", "activation", &[("act", "sigmoid")]),
+        node("flat", "flatten", &[]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+/// Model D: input → fc → multiout → {sigmoid, relu} → addition → fc10
+/// (paper: "input layer, addition, and linear … and a multi-output layer
+/// with two activation layers").
+pub fn model_d() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "1:1:150528")]),
+        node("fc0", "fully_connected", &[("unit", "128"), ("bias", "false")]),
+        node("mo", "multiout", &[("outputs", "2")]),
+        node("act_a", "activation", &[("act", "sigmoid"), ("input_layers", "mo(0)")]),
+        node("act_b", "activation", &[("act", "relu"), ("input_layers", "mo(1)")]),
+        node("add", "addition", &[("input_layers", "act_a,act_b")]),
+        node("fc1", "fully_connected", &[("unit", "10"), ("bias", "false")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+/// All ten Table-4 component cases, in the paper's row order.
+pub fn table4_cases() -> Vec<(&'static str, Vec<NodeDesc>, f64)> {
+    // (name, nodes, paper's ideal kiB)
+    vec![
+        ("Linear", linear_case(), 49397.0),
+        ("Conv2D", conv2d_case(), 65856.0),
+        ("LSTM", lstm_case(), 84731.0),
+        ("Model A (Linear)", model_a_linear(), 188250.0),
+        ("Model A (Conv2D)", model_a_conv(), 51157.0),
+        ("Model B (Linear)", model_b_linear(), 112935.0),
+        ("Model B (Conv2D)", model_b_conv(), 54097.0),
+        ("Model C (Linear)", model_c_linear(), 49399.0),
+        ("Model C (Conv2D)", model_c_conv(), 65856.0),
+        ("Model D", model_d(), 162295.0),
+    ]
+}
+
+// ------------------------------------------------------- Fig 12 applications
+
+/// LeNet-5 on 1:32:32 (Fig 12 first case — the 96.5 % saving headline).
+pub fn lenet5() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "1:32:32")]),
+        node("c1", "conv2d", &[("filters", "6"), ("kernel_size", "5"), ("activation", "tanh")]),
+        node("s2", "pooling2d", &[("pooling", "average"), ("pool_size", "2")]),
+        node("c3", "conv2d", &[("filters", "16"), ("kernel_size", "5"), ("activation", "tanh")]),
+        node("s4", "pooling2d", &[("pooling", "average"), ("pool_size", "2")]),
+        node("flat", "flatten", &[]),
+        node("f5", "fully_connected", &[("unit", "120"), ("activation", "tanh")]),
+        node("f6", "fully_connected", &[("unit", "84"), ("activation", "tanh")]),
+        node("f7", "fully_connected", &[("unit", "10")]),
+        node("loss", "cross_entropy", &[]),
+    ]
+}
+
+/// VGG16 (CIFAR layout, 3:32:32; 512-unit head as in common CIFAR ports).
+pub fn vgg16() -> Vec<NodeDesc> {
+    let mut nodes = vec![node("in", "input", &[("input_shape", "3:32:32")])];
+    let cfg: &[usize] = &[64, 64, 0, 128, 128, 0, 256, 256, 256, 0, 512, 512, 512, 0, 512, 512, 512, 0];
+    let mut ci = 0usize;
+    let mut pi = 0usize;
+    let filters_strings: Vec<String> = cfg.iter().map(|f| f.to_string()).collect();
+    for (k, &f) in cfg.iter().enumerate() {
+        if f == 0 {
+            nodes.push(node(&format!("pool{pi}"), "pooling2d", &[("pooling", "max"), ("pool_size", "2")]));
+            pi += 1;
+        } else {
+            nodes.push(node(
+                &format!("conv{ci}"),
+                "conv2d",
+                &[
+                    ("filters", filters_strings[k].as_str()),
+                    ("kernel_size", "3"),
+                    ("padding", "same"),
+                    ("activation", "relu"),
+                ],
+            ));
+            ci += 1;
+        }
+    }
+    nodes.push(node("flat", "flatten", &[]));
+    nodes.push(node("fc0", "fully_connected", &[("unit", "512"), ("activation", "relu")]));
+    nodes.push(node("fc1", "fully_connected", &[("unit", "512"), ("activation", "relu")]));
+    nodes.push(node("fc2", "fully_connected", &[("unit", "10")]));
+    nodes.push(node("loss", "cross_entropy", &[]));
+    nodes
+}
+
+/// ResNet-18 (CIFAR layout): conv64 + 4 stages × 2 basic blocks with
+/// addition shortcuts, global average pool, fc10.
+pub fn resnet18() -> Vec<NodeDesc> {
+    resnet18_inner(false)
+}
+
+/// ResNet-18 with the backbone frozen and only the final fc trainable —
+/// the Fig 12 "transfer learning" case.
+pub fn resnet18_transfer() -> Vec<NodeDesc> {
+    resnet18_inner(true)
+}
+
+fn resnet18_inner(freeze_backbone: bool) -> Vec<NodeDesc> {
+    let tr = if freeze_backbone { "false" } else { "true" };
+    let mut nodes = vec![
+        node("in", "input", &[("input_shape", "3:32:32")]),
+        node(
+            "stem",
+            "conv2d",
+            &[("filters", "64"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu"), ("trainable", tr)],
+        ),
+    ];
+    let mut prev = "stem".to_string();
+    let stages: &[(usize, usize)] = &[(64, 1), (64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2), (512, 1)];
+    for (bi, &(filters, stride)) in stages.iter().enumerate() {
+        let f = filters.to_string();
+        let s = stride.to_string();
+        let c1 = format!("b{bi}_c1");
+        let c2 = format!("b{bi}_c2");
+        let add = format!("b{bi}_add");
+        let out = format!("b{bi}_out");
+        // main path
+        nodes.push(NodeDesc::new(
+            &c1,
+            "conv2d",
+            Props::from_pairs([
+                ("filters", f.as_str()),
+                ("kernel_size", "3"),
+                ("padding", "same"),
+                ("stride", s.as_str()),
+                ("activation", "relu"),
+                ("input_layers", prev.as_str()),
+                ("trainable", tr),
+            ]),
+        ));
+        nodes.push(NodeDesc::new(
+            &c2,
+            "conv2d",
+            Props::from_pairs([
+                ("filters", f.as_str()),
+                ("kernel_size", "3"),
+                ("padding", "same"),
+                ("input_layers", c1.as_str()),
+                ("trainable", tr),
+            ]),
+        ));
+        // shortcut (1x1 stride conv when shape changes)
+        let shortcut = if stride != 1 || (bi > 0 && stages[bi - 1].0 != filters) || bi == 2 || bi == 4 || bi == 6 {
+            let sc = format!("b{bi}_sc");
+            nodes.push(NodeDesc::new(
+                &sc,
+                "conv2d",
+                Props::from_pairs([
+                    ("filters", f.as_str()),
+                    ("kernel_size", "1"),
+                    ("stride", s.as_str()),
+                    ("input_layers", prev.as_str()),
+                    ("trainable", tr),
+                ]),
+            ));
+            sc
+        } else {
+            prev.clone()
+        };
+        nodes.push(NodeDesc::new(
+            &add,
+            "addition",
+            Props::from_pairs([("input_layers", format!("{c2},{shortcut}").as_str())]),
+        ));
+        nodes.push(NodeDesc::new(
+            &out,
+            "activation",
+            Props::from_pairs([("act", "relu"), ("input_layers", add.as_str())]),
+        ));
+        prev = out;
+    }
+    nodes.push(NodeDesc::new(
+        "gap",
+        "pooling2d",
+        Props::from_pairs([("pooling", "global_average"), ("input_layers", prev.as_str())]),
+    ));
+    nodes.push(node("flat", "flatten", &[]));
+    nodes.push(node("fc", "fully_connected", &[("unit", "10")]));
+    nodes.push(node("loss", "cross_entropy", &[]));
+    nodes
+}
+
+/// Product Rating (Fig 12, last case): two embeddings (MovieLens-sized
+/// user table) → concat → 3 linear layers → rating.
+pub fn product_rating() -> Vec<NodeDesc> {
+    vec![
+        node("user", "input", &[("input_shape", "1:1:1")]),
+        node("item", "input", &[("input_shape", "1:1:1")]),
+        node(
+            "emb_u",
+            "embedding",
+            &[("in_dim", "193610"), ("out_dim", "64"), ("input_layers", "user")],
+        ),
+        node(
+            "emb_m",
+            "embedding",
+            &[("in_dim", "26744"), ("out_dim", "64"), ("input_layers", "item")],
+        ),
+        node("flat_u", "flatten", &[("input_layers", "emb_u")]),
+        node("flat_m", "flatten", &[("input_layers", "emb_m")]),
+        node("cat", "concat", &[("input_layers", "flat_u,flat_m")]),
+        node("fc0", "fully_connected", &[("unit", "128"), ("activation", "relu")]),
+        node("fc1", "fully_connected", &[("unit", "64"), ("activation", "relu")]),
+        node("fc2", "fully_connected", &[("unit", "1"), ("activation", "sigmoid")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+// ------------------------------------------------------ Fig 14 Tacotron2
+
+/// Tacotron2-decoder-shaped model (see DESIGN.md §Substitutions):
+/// teacher-forced prev-frame sequence → Prenet (2 time-distributed
+/// linears) → 2 LSTMs → mel + gate heads. `t` = time iterations,
+/// `mel` = mel bins (80).
+pub fn tacotron_decoder(t: usize, mel: usize, lstm_units: usize) -> Vec<NodeDesc> {
+    let shape = format!("1:{t}:{mel}");
+    let units = lstm_units.to_string();
+    let melu = mel.to_string();
+    vec![
+        node("frames", "input", &[("input_shape", shape.as_str())]),
+        node(
+            "prenet0",
+            "fully_connected",
+            &[("unit", "256"), ("time_distributed", "true"), ("activation", "relu")],
+        ),
+        node(
+            "prenet1",
+            "fully_connected",
+            &[("unit", "128"), ("time_distributed", "true"), ("activation", "relu")],
+        ),
+        node("dec_lstm0", "lstm", &[("unit", units.as_str()), ("return_sequences", "true")]),
+        node("dec_lstm1", "lstm", &[("unit", units.as_str()), ("return_sequences", "true")]),
+        node("mo", "multiout", &[("outputs", "2")]),
+        node(
+            "mel_head",
+            "fully_connected",
+            &[("unit", melu.as_str()), ("time_distributed", "true"), ("input_layers", "mo(0)")],
+        ),
+        node(
+            "gate_head",
+            "fully_connected",
+            &[
+                ("unit", "1"),
+                ("time_distributed", "true"),
+                ("activation", "sigmoid"),
+                ("input_layers", "mo(1)"),
+            ],
+        ),
+        node("mel_loss", "mse", &[("input_layers", "mel_head")]),
+        node("gate_loss", "mse", &[("input_layers", "gate_head")]),
+    ]
+}
+
+/// Tacotron2 Postnet: 5 Conv1D layers over `mel:1:t` (channels × time).
+pub fn postnet(t: usize, mel: usize) -> Vec<NodeDesc> {
+    let shape = format!("{mel}:1:{t}");
+    let melu = mel.to_string();
+    let mut nodes = vec![node("mel_in", "input", &[("input_shape", shape.as_str())])];
+    for k in 0..4 {
+        nodes.push(node(
+            &format!("post{k}"),
+            "conv1d",
+            &[("filters", "512"), ("kernel_size", "5"), ("padding", "same"), ("activation", "tanh")],
+        ));
+    }
+    nodes.push(node(
+        "post4",
+        "conv1d",
+        &[("filters", melu.as_str()), ("kernel_size", "5"), ("padding", "same")],
+    ));
+    nodes.push(node("loss", "mse", &[]));
+    nodes
+}
+
+// ----------------------------------------------------------- e2e / misc
+
+/// Small MLP whose shapes match the AOT artifact catalog
+/// (`python/compile/model.py::MLP_SPEC`) — used by the end-to-end example
+/// and the XLA-vs-native oracle tests. 16x16 digits → 256-64-10.
+pub fn mlp_e2e() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "1:1:256")]),
+        node("fc0", "fully_connected", &[("unit", "64"), ("activation", "sigmoid")]),
+        node("fc1", "fully_connected", &[("unit", "10")]),
+        node("loss", "cross_entropy", &[]),
+    ]
+}
+
+/// HandMoji classifier head (Fig 13): cached backbone features → 1 fc.
+pub fn handmoji_head(feat: usize, classes: usize) -> Vec<NodeDesc> {
+    let f = format!("1:1:{feat}");
+    let c = classes.to_string();
+    vec![
+        node("feat", "input", &[("input_shape", f.as_str())]),
+        node("classifier", "fully_connected", &[("unit", c.as_str())]),
+        node("loss", "cross_entropy", &[]),
+    ]
+}
+
+/// Small conv backbone standing in for MobileNetV2 in the HandMoji flow.
+pub fn handmoji_backbone(side: usize) -> Vec<NodeDesc> {
+    let shape = format!("1:{side}:{side}");
+    vec![
+        node("in", "input", &[("input_shape", shape.as_str())]),
+        node("c0", "conv2d", &[("filters", "8"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("p0", "pooling2d", &[("pooling", "max"), ("pool_size", "2")]),
+        node("c1", "conv2d", &[("filters", "16"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("p1", "pooling2d", &[("pooling", "max"), ("pool_size", "2")]),
+        node("flat", "flatten", &[]),
+        node("feat", "fully_connected", &[("unit", "64"), ("activation", "relu")]),
+        node("head", "fully_connected", &[("unit", "10")]),
+        node("loss", "cross_entropy", &[]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_models_have_losses() {
+        for (name, nodes) in [
+            ("lenet", lenet5()),
+            ("vgg", vgg16()),
+            ("resnet", resnet18()),
+            ("pr", product_rating()),
+            ("taco", tacotron_decoder(10, 80, 256)),
+            ("postnet", postnet(10, 80)),
+        ] {
+            assert!(
+                nodes.iter().any(|n| n.ltype.contains("mse") || n.ltype.contains("cross_entropy")),
+                "{name} missing loss"
+            );
+        }
+    }
+
+    #[test]
+    fn table4_has_ten_cases() {
+        assert_eq!(table4_cases().len(), 10);
+    }
+}

@@ -1,0 +1,78 @@
+//! Adam optimizer (two state slots: first/second moments).
+
+use super::Optimizer;
+
+pub struct Adam {
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+}
+
+impl Adam {
+    pub fn new(lr: f32, b1: f32, b2: f32, eps: f32) -> Self {
+        Adam { lr, b1, b2, eps }
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn state_slots(&self) -> usize {
+        2
+    }
+
+    fn apply(&self, w: &mut [f32], g: &[f32], states: &mut [&mut [f32]], iter: u64) {
+        let t = iter.max(1) as i32;
+        let bc1 = 1.0 - self.b1.powi(t);
+        let bc2 = 1.0 - self.b2.powi(t);
+        let (m, rest) = states.split_at_mut(1);
+        let m = &mut m[0];
+        let v = &mut rest[0];
+        for i in 0..w.len() {
+            m[i] = self.b1 * m[i] + (1.0 - self.b1) * g[i];
+            v[i] = self.b2 * v[i] + (1.0 - self.b2) * g[i] * g[i];
+            let mh = m[i] / bc1;
+            let vh = v[i] / bc2;
+            w[i] -= self.lr * mh / (vh.sqrt() + self.eps);
+        }
+    }
+
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_magnitude() {
+        // First Adam step moves by ~lr regardless of gradient scale.
+        let o = Adam::new(0.001, 0.9, 0.999, 1e-8);
+        for scale in [0.01f32, 1.0, 100.0] {
+            let mut w = [0.0f32];
+            let mut m = vec![0.0f32];
+            let mut v = vec![0.0f32];
+            o.apply(&mut w, &[scale], &mut [&mut m, &mut v], 1);
+            assert!((w[0] + 0.001).abs() < 1e-5, "scale {scale}: {}", w[0]);
+        }
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize (w-3)^2
+        let o = Adam::new(0.1, 0.9, 0.999, 1e-8);
+        let mut w = [0.0f32];
+        let mut m = vec![0.0f32];
+        let mut v = vec![0.0f32];
+        for t in 1..=500 {
+            let g = 2.0 * (w[0] - 3.0);
+            o.apply(&mut w, &[g], &mut [&mut m, &mut v], t);
+        }
+        assert!((w[0] - 3.0).abs() < 0.05, "{}", w[0]);
+    }
+}

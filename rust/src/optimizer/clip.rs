@@ -1,0 +1,46 @@
+//! Global-norm gradient clipping (paper §5.2: supported for the
+//! Tacotron2 decoder; forces deferred gradient application because the
+//! norm spans every gradient of the model).
+
+/// Scale all gradients so their global L2 norm is at most `max_norm`.
+/// Returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [&mut [f32]], max_norm: f32) -> f32 {
+    let mut sq = 0f64;
+    for g in grads.iter() {
+        for &v in g.iter() {
+            sq += (v as f64) * (v as f64);
+        }
+    }
+    let norm = sq.sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            for v in g.iter_mut() {
+                *v *= scale;
+            }
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clips_when_over() {
+        let mut a = vec![3.0f32, 0.0];
+        let mut b = vec![0.0f32, 4.0];
+        let n = clip_global_norm(&mut [&mut a, &mut b], 1.0);
+        assert!((n - 5.0).abs() < 1e-6);
+        let new_norm: f32 = (a.iter().chain(b.iter()).map(|v| v * v).sum::<f32>()).sqrt();
+        assert!((new_norm - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn no_clip_when_under() {
+        let mut a = vec![0.3f32];
+        clip_global_norm(&mut [&mut a], 1.0);
+        assert_eq!(a[0], 0.3);
+    }
+}

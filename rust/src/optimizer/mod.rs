@@ -1,0 +1,44 @@
+//! Optimizers. Applied by the executor either per-layer (right after the
+//! layer's compute-gradient step — the paper's default, which lets
+//! gradient buffers die immediately) or deferred to iteration end (forced
+//! by gradient clipping and by weight-shared/unrolled models, which need
+//! gradient accumulation — paper §5.2, Tacotron2).
+
+pub mod adam;
+pub mod clip;
+pub mod sgd;
+
+pub use adam::Adam;
+pub use clip::clip_global_norm;
+pub use sgd::Sgd;
+
+use crate::error::{Error, Result};
+use crate::layers::Props;
+
+/// An optimizer updates one weight from its gradient and per-weight state.
+pub trait Optimizer: Send {
+    fn name(&self) -> &'static str;
+    /// Number of per-weight state tensors (same shape as the weight).
+    fn state_slots(&self) -> usize;
+    /// In-place update. `states` has exactly `state_slots()` entries.
+    /// `iter` is the 1-based apply count (Adam bias correction).
+    fn apply(&self, w: &mut [f32], g: &[f32], states: &mut [&mut [f32]], iter: u64);
+    fn learning_rate(&self) -> f32;
+}
+
+/// Build an optimizer from properties (`optimizer = sgd|adam`).
+pub fn create(kind: &str, props: &Props) -> Result<Box<dyn Optimizer>> {
+    match kind.trim().to_ascii_lowercase().as_str() {
+        "sgd" => Ok(Box::new(Sgd::new(
+            props.f32_or("learning_rate", 1e-2)?,
+            props.f32_or("momentum", 0.0)?,
+        ))),
+        "adam" => Ok(Box::new(Adam::new(
+            props.f32_or("learning_rate", 1e-3)?,
+            props.f32_or("beta1", 0.9)?,
+            props.f32_or("beta2", 0.999)?,
+            props.f32_or("epsilon", 1e-8)?,
+        ))),
+        other => Err(Error::model(format!("unknown optimizer `{other}`"))),
+    }
+}

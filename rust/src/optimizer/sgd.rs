@@ -1,0 +1,73 @@
+//! Stochastic gradient descent, optional momentum.
+
+use super::Optimizer;
+
+pub struct Sgd {
+    lr: f32,
+    momentum: f32,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32) -> Self {
+        Sgd { lr, momentum }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn state_slots(&self) -> usize {
+        if self.momentum > 0.0 {
+            1
+        } else {
+            0
+        }
+    }
+
+    fn apply(&self, w: &mut [f32], g: &[f32], states: &mut [&mut [f32]], _iter: u64) {
+        if self.momentum > 0.0 {
+            let v = &mut states[0];
+            for i in 0..w.len() {
+                v[i] = self.momentum * v[i] + g[i];
+                w[i] -= self.lr * v[i];
+            }
+        } else {
+            for i in 0..w.len() {
+                w[i] -= self.lr * g[i];
+            }
+        }
+    }
+
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_step() {
+        let o = Sgd::new(0.1, 0.0);
+        let mut w = [1.0f32, 2.0];
+        o.apply(&mut w, &[1.0, -1.0], &mut [], 1);
+        assert_eq!(w, [0.9, 2.1]);
+        assert_eq!(o.state_slots(), 0);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let o = Sgd::new(0.1, 0.9);
+        assert_eq!(o.state_slots(), 1);
+        let mut w = [0.0f32];
+        let mut v = vec![0.0f32];
+        o.apply(&mut w, &[1.0], &mut [&mut v], 1);
+        assert!((w[0] + 0.1).abs() < 1e-6);
+        o.apply(&mut w, &[1.0], &mut [&mut v], 2);
+        // v = 0.9*1 + 1 = 1.9; w = -0.1 - 0.19
+        assert!((w[0] + 0.29).abs() < 1e-6);
+    }
+}

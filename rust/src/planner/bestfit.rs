@@ -1,0 +1,74 @@
+//! Best-fit planner with slot splitting — the paper's stated future work
+//! ("a planning algorithm that can minimize or resolve fragmentation").
+//!
+//! Differences from Algorithm 2: a dead slot may be *split* (a tensor
+//! takes only the prefix it needs, the remainder stays reusable), and
+//! among eligible slots the smallest adequate one is chosen (best fit).
+//! Adjacent free remainders are not coalesced across different death
+//! times; in practice this removes the Fig 8 `ΔW_0`-vs-`D_2`
+//! fragmentation case entirely (see `ablation_planners`).
+
+use crate::error::Result;
+use crate::tensor::{Region, TensorTable};
+
+use super::{allocatable, sort_by_schedule, Planner};
+
+pub struct BestFitPlanner;
+
+#[derive(Debug, Clone)]
+struct Slot {
+    offset: usize,
+    len: usize,
+    max_eo: u32,
+}
+
+impl Planner for BestFitPlanner {
+    fn name(&self) -> &'static str {
+        "bestfit"
+    }
+
+    fn plan(&self, table: &mut TensorTable) -> Result<usize> {
+        let mut ids = allocatable(table);
+        sort_by_schedule(table, &mut ids);
+        let mut slots: Vec<Slot> = Vec::new();
+        let mut pool_len = 0usize;
+        for id in ids {
+            let (need, min_eo, max_eo) = {
+                let s = table.get(id);
+                (s.dim.len(), s.min_eo().unwrap(), s.max_eo().unwrap())
+            };
+            // best fit among dead slots
+            let mut best: Option<(usize, usize)> = None; // (idx, waste)
+            for (k, sl) in slots.iter().enumerate() {
+                if sl.max_eo < min_eo && sl.len >= need {
+                    let waste = sl.len - need;
+                    if best.map(|(_, w)| waste < w).unwrap_or(true) {
+                        best = Some((k, waste));
+                    }
+                }
+            }
+            match best {
+                Some((k, _)) => {
+                    let sl = slots[k].clone();
+                    table.get_mut(id).region = Some(Region { offset: sl.offset, len: need });
+                    // occupied prefix
+                    slots[k] = Slot { offset: sl.offset, len: need, max_eo };
+                    // free remainder keeps the old death time
+                    if sl.len > need {
+                        slots.push(Slot {
+                            offset: sl.offset + need,
+                            len: sl.len - need,
+                            max_eo: sl.max_eo,
+                        });
+                    }
+                }
+                None => {
+                    table.get_mut(id).region = Some(Region { offset: pool_len, len: need });
+                    slots.push(Slot { offset: pool_len, len: need, max_eo });
+                    pool_len += need;
+                }
+            }
+        }
+        Ok(pool_len)
+    }
+}

@@ -1,0 +1,82 @@
+//! Memory planners (paper §4.2): map every root tensor's live interval
+//! `[min EO, max EO]` to an offset in the Memory Pool.
+//!
+//! * [`NaivePlanner`] — no reuse; models conventional frameworks.
+//! * [`SortingPlanner`] — the paper's Algorithm 2 (simple sorting-based,
+//!   whole-slot reuse; fragments as in Fig 8).
+//! * [`BestFitPlanner`] — the paper's stated future work: slot splitting
+//!   with best-fit selection, resolving the Fig 8 fragmentation.
+
+pub mod bestfit;
+pub mod naive;
+pub mod offload;
+pub mod pool;
+pub mod sorting;
+pub mod validate;
+
+use crate::error::Result;
+use crate::tensor::{TensorId, TensorTable};
+
+pub use bestfit::BestFitPlanner;
+pub use naive::NaivePlanner;
+pub use pool::MemoryPool;
+pub use sorting::SortingPlanner;
+
+/// Planner selector used in model compile options.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlannerKind {
+    Naive,
+    Sorting,
+    BestFit,
+}
+
+impl PlannerKind {
+    pub fn instance(&self) -> Box<dyn Planner> {
+        match self {
+            PlannerKind::Naive => Box::new(NaivePlanner),
+            PlannerKind::Sorting => Box::new(SortingPlanner),
+            PlannerKind::BestFit => Box::new(BestFitPlanner),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "naive" => Some(PlannerKind::Naive),
+            "sorting" => Some(PlannerKind::Sorting),
+            "bestfit" | "best_fit" => Some(PlannerKind::BestFit),
+            _ => None,
+        }
+    }
+}
+
+/// A memory planner assigns a `Region` to every allocatable root tensor
+/// and returns the pool length (f32 elements). Peak memory is therefore
+/// known before execution.
+pub trait Planner {
+    fn name(&self) -> &'static str;
+    fn plan(&self, table: &mut TensorTable) -> Result<usize>;
+}
+
+/// Tensors that need pool space: merge roots with at least one EO.
+/// (Placeholders are hosted in the pool too — the Batch Queue binds user
+/// data by copying into their regions.)
+pub fn allocatable(table: &TensorTable) -> Vec<TensorId> {
+    table
+        .iter()
+        .filter(|s| s.merged_into.is_none() && !s.eos.is_empty())
+        .map(|s| s.id)
+        .collect()
+}
+
+/// Sort ids by ascending first-use EO, ties by descending last-use EO
+/// (Algorithm 2 lines 1–4).
+pub fn sort_by_schedule(table: &TensorTable, ids: &mut [TensorId]) {
+    ids.sort_by(|&a, &b| {
+        let sa = table.get(a);
+        let sb = table.get(b);
+        sa.min_eo()
+            .cmp(&sb.min_eo())
+            .then(sb.max_eo().cmp(&sa.max_eo()))
+            .then(a.cmp(&b))
+    });
+}

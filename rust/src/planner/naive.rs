@@ -1,0 +1,31 @@
+//! Naive planner: every tensor gets its own allocation, no reuse.
+//!
+//! This is the baseline that models conventional frameworks' allocation
+//! policy for the Fig 9 / Fig 11 / Fig 12 comparisons (see DESIGN.md
+//! §Substitutions): TensorFlow/PyTorch keep all activations, derivatives
+//! and gradients alive for the whole iteration, so their peak is the sum
+//! of everything.
+
+use crate::error::Result;
+use crate::tensor::{Region, TensorTable};
+
+use super::{allocatable, Planner};
+
+pub struct NaivePlanner;
+
+impl Planner for NaivePlanner {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn plan(&self, table: &mut TensorTable) -> Result<usize> {
+        let ids = allocatable(table);
+        let mut off = 0usize;
+        for id in ids {
+            let len = table.get(id).dim.len();
+            table.get_mut(id).region = Some(Region { offset: off, len });
+            off += len;
+        }
+        Ok(off)
+    }
+}

@@ -1,0 +1,97 @@
+//! The Memory Pool: one contiguous arena holding every tensor of a
+//! compiled model at planner-assigned offsets (paper §4.2).
+//!
+//! Peak memory is `buf.len() * 4` bytes and is known *before* training
+//! starts — the paper's headline operational property ("engineers can
+//! calculate the memory requirement before actual execution").
+
+use std::cell::UnsafeCell;
+
+use crate::tensor::Region;
+
+/// Contiguous f32 arena.
+///
+/// # Safety discipline
+/// Views are handed out as raw-slice reborrows of disjoint regions. The
+/// Memory Planner guarantees (and `planner::validate` checks) that any two
+/// distinct live tensors occupy disjoint regions; tensors that *do* share a
+/// region (MV/RV/E merges) are only accessed through layers written for
+/// in-place semantics. The pool is single-threaded (`!Sync`).
+pub struct MemoryPool {
+    buf: UnsafeCell<Vec<f32>>,
+}
+
+impl MemoryPool {
+    pub fn new(len: usize) -> Self {
+        MemoryPool {
+            buf: UnsafeCell::new(vec![0.0; len]),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        unsafe { (*self.buf.get()).len() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Immutable view of a region.
+    #[inline]
+    pub fn view(&self, r: Region) -> &[f32] {
+        debug_assert!(r.end() <= self.len(), "region {:?} out of pool", r);
+        unsafe {
+            let v = &*self.buf.get();
+            std::slice::from_raw_parts(v.as_ptr().add(r.offset), r.len)
+        }
+    }
+
+    /// Mutable view of a region.
+    ///
+    /// Takes `&self`: disjointness of simultaneously-held views is the
+    /// planner's (validated) invariant, see type-level docs.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub fn view_mut(&self, r: Region) -> &mut [f32] {
+        debug_assert!(r.end() <= self.len(), "region {:?} out of pool", r);
+        unsafe {
+            let v = &mut *self.buf.get();
+            std::slice::from_raw_parts_mut(v.as_mut_ptr().add(r.offset), r.len)
+        }
+    }
+
+    /// Zero the whole arena (used between inference/training switches).
+    pub fn clear(&self) {
+        self.view_mut(Region {
+            offset: 0,
+            len: self.len(),
+        })
+        .fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_views() {
+        let p = MemoryPool::new(16);
+        let a = p.view_mut(Region { offset: 0, len: 8 });
+        let b = p.view_mut(Region { offset: 8, len: 8 });
+        a.fill(1.0);
+        b.fill(2.0);
+        assert_eq!(p.view(Region { offset: 0, len: 8 })[7], 1.0);
+        assert_eq!(p.view(Region { offset: 8, len: 8 })[0], 2.0);
+    }
+
+    #[test]
+    fn bytes() {
+        let p = MemoryPool::new(10);
+        assert_eq!(p.bytes(), 40);
+    }
+}

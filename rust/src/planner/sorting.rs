@@ -1,0 +1,65 @@
+//! Algorithm 2: the paper's simple sorting-based memory planner.
+//!
+//! Tensors are laid out in ascending first-use order; each new tensor
+//! reuses the slot of a previously-placed tensor whose last use strictly
+//! precedes the new tensor's first use (`EO_max(T_j) < EO_min(T_i)`),
+//! provided the slot is large enough. A slot keeps its original length —
+//! a smaller tensor occupying a large dead slot wastes the tail, which
+//! is exactly the fragmentation the paper shows in Fig 8 and defers to
+//! future work (see [`super::BestFitPlanner`]).
+
+use crate::error::Result;
+use crate::tensor::{Region, TensorTable};
+
+use super::{allocatable, sort_by_schedule, Planner};
+
+pub struct SortingPlanner;
+
+#[derive(Debug)]
+struct Slot {
+    offset: usize,
+    len: usize,
+    /// Last EO of the current occupant.
+    max_eo: u32,
+}
+
+impl Planner for SortingPlanner {
+    fn name(&self) -> &'static str {
+        "sorting"
+    }
+
+    fn plan(&self, table: &mut TensorTable) -> Result<usize> {
+        let mut ids = allocatable(table);
+        sort_by_schedule(table, &mut ids);
+        let mut slots: Vec<Slot> = Vec::new();
+        let mut pool_len = 0usize;
+        for id in ids {
+            let (need, min_eo, max_eo) = {
+                let s = table.get(id);
+                (s.dim.len(), s.min_eo().unwrap(), s.max_eo().unwrap())
+            };
+            // find a dead slot big enough (first match in offset order —
+            // the paper's backwards scan keeps the earliest assignment)
+            let mut chosen: Option<usize> = None;
+            for (k, sl) in slots.iter().enumerate() {
+                if sl.max_eo < min_eo && sl.len >= need {
+                    chosen = Some(k);
+                    break;
+                }
+            }
+            match chosen {
+                Some(k) => {
+                    let sl = &mut slots[k];
+                    table.get_mut(id).region = Some(Region { offset: sl.offset, len: need });
+                    sl.max_eo = max_eo;
+                }
+                None => {
+                    table.get_mut(id).region = Some(Region { offset: pool_len, len: need });
+                    slots.push(Slot { offset: pool_len, len: need, max_eo });
+                    pool_len += need;
+                }
+            }
+        }
+        Ok(pool_len)
+    }
+}

@@ -1,0 +1,76 @@
+//! Plan validation: no two tensors whose live EO intervals intersect may
+//! occupy overlapping pool regions. Run after every plan (cheap —
+//! hundreds of tensors) and hammered by the property tests.
+
+use crate::error::{Error, Result};
+use crate::tensor::TensorTable;
+
+/// Check the planner's core invariant. Also verifies every allocatable
+/// tensor received a region that fits its dims inside `pool_len`.
+pub fn validate_plan(table: &TensorTable, pool_len: usize) -> Result<()> {
+    let mut live: Vec<(u32, u32, usize, usize, &str)> = Vec::new(); // (min, max, off, end, name)
+    for s in table.iter() {
+        if s.merged_into.is_some() || s.eos.is_empty() {
+            continue;
+        }
+        let r = s.region.ok_or_else(|| {
+            Error::planner(format!("tensor `{}` not assigned a region", s.name))
+        })?;
+        if r.len < s.dim.len() {
+            return Err(Error::planner(format!(
+                "tensor `{}` region too small: {} < {}",
+                s.name,
+                r.len,
+                s.dim.len()
+            )));
+        }
+        if r.end() > pool_len {
+            return Err(Error::planner(format!(
+                "tensor `{}` region {:?} exceeds pool {}",
+                s.name, r, pool_len
+            )));
+        }
+        live.push((s.min_eo().unwrap(), s.max_eo().unwrap(), r.offset, r.end(), &s.name));
+    }
+    for i in 0..live.len() {
+        for j in i + 1..live.len() {
+            let a = &live[i];
+            let b = &live[j];
+            let time_overlap = a.0 <= b.1 && b.0 <= a.1;
+            let space_overlap = a.2 < b.3 && b.2 < a.3;
+            if time_overlap && space_overlap {
+                return Err(Error::planner(format!(
+                    "live tensors overlap: `{}` [{},{}]@{}..{} vs `{}` [{},{}]@{}..{}",
+                    a.4, a.0, a.1, a.2, a.3, b.4, b.0, b.1, b.2, b.3
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Merged tensors must resolve to a root with a region covering them.
+pub fn validate_merges(table: &TensorTable) -> Result<()> {
+    for s in table.iter() {
+        if s.merged_into.is_none() || s.eos.is_empty() {
+            continue;
+        }
+        let root = table.resolve(s.id);
+        let rs = table.get(root);
+        if rs.merged_into.is_some() {
+            return Err(Error::planner(format!(
+                "merge chain of `{}` ends in merged tensor `{}`",
+                s.name, rs.name
+            )));
+        }
+        if let Some(r) = rs.region {
+            if r.len < s.dim.len() {
+                return Err(Error::planner(format!(
+                    "view `{}` larger than its root `{}`",
+                    s.name, rs.name
+                )));
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Artifact catalog: the shape contract between `python/compile/aot.py`
+//! and the Rust runtime. Shapes are duplicated here as constants (and
+//! asserted against `manifest.json` at load) so the Rust side type-checks
+//! buffer sizes without parsing JSON on the hot path.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Demo-MLP spec — keep in sync with `python/compile/model.py` and
+/// `zoo::mlp_e2e`.
+pub const MLP_IN: usize = 256;
+pub const MLP_HIDDEN: usize = 64;
+pub const MLP_OUT: usize = 10;
+pub const MLP_BATCH: usize = 32;
+
+/// Oracle shapes (`model.py::ORACLE_*`).
+pub const ORACLE_LINEAR: (usize, usize, usize) = (8, 32, 16); // m,k,n
+pub const ORACLE_CONV: (usize, usize, usize, usize, usize, usize) = (2, 3, 8, 8, 4, 3); // b,c,h,w,oc,k
+pub const ORACLE_LSTM: (usize, usize, usize, usize) = (2, 5, 4, 6); // b,t,i,h
+pub const ORACLE_XENT: (usize, usize) = (8, 10); // r,c
+
+/// Lightweight manifest check: every expected artifact file exists.
+pub struct ArtifactCatalog {
+    pub dir: std::path::PathBuf,
+}
+
+pub const ARTIFACTS: &[&str] = &[
+    "mlp_train_step",
+    "mlp_forward",
+    "oracle_linear_fwd",
+    "oracle_linear_sigmoid_fwd",
+    "oracle_conv2d_fwd",
+    "oracle_lstm_fwd",
+    "oracle_softmax_xent",
+];
+
+impl ArtifactCatalog {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        for name in ARTIFACTS {
+            let p = dir.join(format!("{name}.hlo.txt"));
+            if !p.exists() {
+                return Err(Error::Runtime(format!(
+                    "missing artifact `{}` — run `make artifacts`",
+                    p.display()
+                )));
+            }
+        }
+        Ok(ArtifactCatalog { dir })
+    }
+
+    /// Default location relative to the repo root / binary cwd.
+    pub fn default_dir() -> std::path::PathBuf {
+        // honour NNTRAINER_ARTIFACTS, else ./artifacts
+        std::env::var("NNTRAINER_ARTIFACTS")
+            .map(Into::into)
+            .unwrap_or_else(|_| "artifacts".into())
+    }
+}

@@ -1,0 +1,101 @@
+//! Thin wrapper over the `xla` crate: one PJRT CPU client, HLO-text
+//! loading, compile caching, f32-buffer execution.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// A loaded + compiled executable with its input arity.
+pub struct LoadedExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// PJRT CPU runtime holding compiled artifacts by name.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, LoadedExec>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(XlaRuntime {
+            client,
+            dir: artifact_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load `<dir>/<name>.hlo.txt`, compile, and cache.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact `{}` not found — run `make artifacts`",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+        self.cache.insert(name.to_string(), LoadedExec { exe, name: name.to_string() });
+        Ok(())
+    }
+
+    /// Execute a loaded artifact on f32 inputs (shape given per input),
+    /// returning every output flattened to `Vec<f32>`.
+    ///
+    /// All aot.py artifacts are lowered with `return_tuple=True`, so the
+    /// single result is a tuple we unpack.
+    pub fn run_f32(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        let exec = self.cache.get(name).unwrap();
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| Error::Runtime(format!("reshape input: {e}")))?;
+            lits.push(lit);
+        }
+        let mut result = exec
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {name}: {e}")))?;
+        let tuple = result
+            .decompose_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            out.push(
+                t.to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("to_vec {name}: {e}")))?,
+            );
+        }
+        Ok(out)
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.cache.keys().map(|s| s.as_str()).collect()
+    }
+}

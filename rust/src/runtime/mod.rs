@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//! Python is never involved at runtime — the binary is self-contained
+//! once `make artifacts` has run.
+
+pub mod catalog;
+pub mod client;
+
+pub use catalog::ArtifactCatalog;
+pub use client::XlaRuntime;

@@ -1,0 +1,144 @@
+//! Tensor dimensions in the paper's `B:C:H:W` notation (e.g. `64:3:224:224`).
+
+use std::fmt;
+
+use crate::error::{Error, Result};
+
+/// 4-D tensor dimension, batch-major (NCHW), matching NNTrainer's notation.
+///
+/// Lower-rank tensors are represented with leading 1s, exactly like the
+/// paper's component table writes a flat input as `64:1:1:150528`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TensorDim {
+    pub b: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl TensorDim {
+    pub const fn new(b: usize, c: usize, h: usize, w: usize) -> Self {
+        TensorDim { b, c, h, w }
+    }
+
+    /// A per-sample feature vector: `b:1:1:w`.
+    pub const fn vec(b: usize, w: usize) -> Self {
+        TensorDim::new(b, 1, 1, w)
+    }
+
+    /// Scalar-per-sample: `b:1:1:1`.
+    pub const fn scalar(b: usize) -> Self {
+        TensorDim::new(b, 1, 1, 1)
+    }
+
+    /// Total number of elements.
+    pub const fn len(&self) -> usize {
+        self.b * self.c * self.h * self.w
+    }
+
+    pub const fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Elements per sample (`c*h*w`), the paper's "feature size".
+    pub const fn feature_len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Bytes when stored as f32.
+    pub const fn bytes(&self) -> usize {
+        self.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Same dims with a different batch size (batch is a late-bound
+    /// hyper-parameter in NNTrainer: specs are built per-sample and the
+    /// batch is applied at initialize time).
+    pub const fn with_batch(&self, b: usize) -> Self {
+        TensorDim::new(b, self.c, self.h, self.w)
+    }
+
+    /// Flatten to `b:1:1:(c*h*w)` — what the Flatten realizer produces.
+    pub const fn flattened(&self) -> Self {
+        TensorDim::new(self.b, 1, 1, self.feature_len())
+    }
+
+    /// Parse `"b:c:h:w"` (or shorter forms, right-aligned: `"150528"` is
+    /// `1:1:1:150528`, `"3:224:224"` is `1:3:224:224`).
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.is_empty() || parts.len() > 4 {
+            return Err(Error::shape(format!("bad dim string `{s}`")));
+        }
+        let mut v = [1usize; 4];
+        let off = 4 - parts.len();
+        for (i, p) in parts.iter().enumerate() {
+            v[off + i] = p
+                .trim()
+                .parse::<usize>()
+                .map_err(|e| Error::shape(format!("bad dim `{s}`: {e}")))?;
+        }
+        Ok(TensorDim::new(v[0], v[1], v[2], v[3]))
+    }
+}
+
+impl fmt::Display for TensorDim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}:{}:{}", self.b, self.c, self.h, self.w)
+    }
+}
+
+impl fmt::Debug for TensorDim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full() {
+        let d = TensorDim::parse("64:3:224:224").unwrap();
+        assert_eq!(d, TensorDim::new(64, 3, 224, 224));
+        assert_eq!(d.len(), 64 * 3 * 224 * 224);
+        assert_eq!(d.feature_len(), 3 * 224 * 224);
+    }
+
+    #[test]
+    fn parse_right_aligned() {
+        assert_eq!(TensorDim::parse("150528").unwrap(), TensorDim::vec(1, 150528));
+        assert_eq!(
+            TensorDim::parse("3:224:224").unwrap(),
+            TensorDim::new(1, 3, 224, 224)
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(TensorDim::parse("a:b").is_err());
+        assert!(TensorDim::parse("1:2:3:4:5").is_err());
+        assert!(TensorDim::parse("").is_err());
+    }
+
+    #[test]
+    fn bytes_and_batch() {
+        let d = TensorDim::vec(64, 150528);
+        assert_eq!(d.bytes(), 64 * 150528 * 4);
+        assert_eq!(d.with_batch(1).bytes(), 150528 * 4);
+        // Table 4, Linear input: 64:1:1:150528 = 37632 kiB
+        assert_eq!(d.bytes() / 1024, 37632);
+    }
+
+    #[test]
+    fn flatten() {
+        let d = TensorDim::new(64, 3, 224, 224);
+        assert_eq!(d.flattened(), TensorDim::vec(64, 3 * 224 * 224));
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        let d = TensorDim::new(2, 3, 4, 5);
+        assert_eq!(TensorDim::parse(&d.to_string()).unwrap(), d);
+    }
+}

@@ -1,0 +1,156 @@
+//! Tensor lifespans (paper Table 2) and tensor create modes (paper Table 3).
+//!
+//! A lifespan says *during which execution phases of the requesting layer*
+//! the tensor's data must be valid; Algorithm 1 turns `(lifespan, layer)`
+//! pairs into concrete integer execution orders (EOs).
+
+use std::fmt;
+
+/// Bit flags over the three per-layer execution phases, plus the two
+/// whole-training spans. Matches paper Table 2.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Lifespan(u8);
+
+impl Lifespan {
+    /// Valid during the layer's forward step only.
+    pub const FORWARD: Lifespan = Lifespan(0b001);
+    /// Valid during the layer's compute-gradient step.
+    pub const CALC_GRAD: Lifespan = Lifespan(0b010);
+    /// Valid during the layer's compute-derivative step.
+    pub const CALC_DERIV: Lifespan = Lifespan(0b100);
+    /// Backward = gradient + derivative (paper's `B`).
+    pub const BACKWARD: Lifespan = Lifespan(0b110);
+    /// Valid for the whole iteration, reset afterwards (paper's `I`).
+    pub const ITERATION: Lifespan = Lifespan(0b111);
+    /// Valid for the entire training run (paper's `M`): weights,
+    /// optimizer state.
+    pub const MAX: Lifespan = Lifespan(0b1111);
+
+    pub const fn union(self, other: Lifespan) -> Lifespan {
+        Lifespan(self.0 | other.0)
+    }
+
+    pub const fn contains(self, other: Lifespan) -> bool {
+        self.0 & other.0 == other.0
+    }
+
+    pub const fn is_max(self) -> bool {
+        self.0 & 0b1000 != 0
+    }
+
+    pub const fn forward(self) -> bool {
+        self.0 & 0b001 != 0
+    }
+    pub const fn calc_grad(self) -> bool {
+        self.0 & 0b010 != 0
+    }
+    pub const fn calc_deriv(self) -> bool {
+        self.0 & 0b100 != 0
+    }
+}
+
+impl fmt::Debug for Lifespan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_max() {
+            return write!(f, "M");
+        }
+        let mut parts = vec![];
+        if self.forward() {
+            parts.push("F");
+        }
+        if self.calc_grad() {
+            parts.push("CG");
+        }
+        if self.calc_deriv() {
+            parts.push("CD");
+        }
+        write!(f, "{}", parts.join(","))
+    }
+}
+
+/// How a tensor request binds to storage (paper Table 3).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CreateMode {
+    /// `P` — holds externally-owned memory (network inputs / labels fed by
+    /// the Batch Queue). Tracked for EO analysis, not allocated in the pool.
+    Placeholder,
+    /// `C` — allocate a fresh tensor in the pool.
+    Create,
+    /// `MV(target)` — memory-sharing view of `target` whose data *changes*
+    /// (in-place ops: activations, batch-norm). Merged only when the
+    /// target's integrity is preserved (Alg. 1 line 17).
+    ModifyView(TensorId),
+    /// `RV(target)` — memory-sharing view whose data is guaranteed
+    /// unchanged (flatten / reshape). Always merged.
+    ReadOnlyView(TensorId),
+    /// `E(target)` — tensor sharing: same spec *and* same data
+    /// (time-unrolled weights). Always merged, EOs combined.
+    Extend(TensorId),
+}
+
+/// Index of a tensor request within a `TensorTable`.
+pub type TensorId = usize;
+
+/// What role the tensor plays — used for reporting (Fig 9's breakdown),
+/// optimizer hookup and transfer-learning freezes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorRole {
+    /// Network input / label (usually `Placeholder`).
+    Input,
+    /// Intermediate activation (layer output).
+    Activation,
+    /// Back-propagated derivative buffer.
+    Derivative,
+    /// Trainable weight.
+    Weight,
+    /// Gradient of a weight.
+    Gradient,
+    /// Optimizer state (momentum, adam moments).
+    OptState,
+    /// Scratch/temporary (im2col buffers, lstm gate caches…).
+    Temp,
+}
+
+impl fmt::Display for TensorRole {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            TensorRole::Input => "input",
+            TensorRole::Activation => "act",
+            TensorRole::Derivative => "deriv",
+            TensorRole::Weight => "weight",
+            TensorRole::Gradient => "grad",
+            TensorRole::OptState => "opt",
+            TensorRole::Temp => "temp",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifespan_flags() {
+        assert!(Lifespan::BACKWARD.calc_grad());
+        assert!(Lifespan::BACKWARD.calc_deriv());
+        assert!(!Lifespan::BACKWARD.forward());
+        assert!(Lifespan::ITERATION.forward());
+        assert!(Lifespan::MAX.is_max());
+        assert!(!Lifespan::ITERATION.is_max());
+    }
+
+    #[test]
+    fn union_contains() {
+        let fs = Lifespan::FORWARD.union(Lifespan::CALC_GRAD);
+        assert!(fs.contains(Lifespan::FORWARD));
+        assert!(fs.contains(Lifespan::CALC_GRAD));
+        assert!(!fs.contains(Lifespan::CALC_DERIV));
+    }
+
+    #[test]
+    fn debug_format() {
+        assert_eq!(format!("{:?}", Lifespan::FORWARD.union(Lifespan::CALC_GRAD)), "F,CG");
+        assert_eq!(format!("{:?}", Lifespan::MAX), "M");
+    }
+}

@@ -1,0 +1,10 @@
+//! Tensor subsystem: dimensions, lifespans/create modes (paper Tables 2–3),
+//! tensor specifications and the spec registry ("Tensor Pool").
+
+pub mod dims;
+pub mod lifespan;
+pub mod spec;
+
+pub use dims::TensorDim;
+pub use lifespan::{CreateMode, Lifespan, TensorId, TensorRole};
+pub use spec::{Initializer, Region, TensorSpec, TensorTable};

@@ -1,0 +1,364 @@
+//! Tensor specifications and the tensor table (the paper's "Tensor Pool").
+//!
+//! Specification and data are managed independently (paper §4): a
+//! `TensorSpec` records *what* a tensor is (dims, lifespan, create mode,
+//! role); its storage is a `Region` into the `MemoryPool`, assigned later
+//! by the Memory Planner. Placeholders never receive a region.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use super::dims::TensorDim;
+use super::lifespan::{CreateMode, Lifespan, TensorId, TensorRole};
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+
+/// Weight initializer, applied at initialize time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Initializer {
+    Zeros,
+    Ones,
+    Constant(f32),
+    /// Xavier/Glorot uniform over (fan_in, fan_out).
+    XavierUniform { fan_in: usize, fan_out: usize },
+    /// He normal over fan_in.
+    HeNormal { fan_in: usize },
+    /// Uniform in [-a, a].
+    Uniform(f32),
+    /// No initialization required (activations, derivs, temps).
+    None,
+}
+
+impl Initializer {
+    pub fn apply(&self, buf: &mut [f32], rng: &mut Rng) {
+        match *self {
+            Initializer::Zeros | Initializer::None => buf.fill(0.0),
+            Initializer::Ones => buf.fill(1.0),
+            Initializer::Constant(c) => buf.fill(c),
+            Initializer::XavierUniform { fan_in, fan_out } => {
+                let a = (6.0 / (fan_in + fan_out) as f32).sqrt();
+                rng.fill_uniform(buf, -a, a);
+            }
+            Initializer::HeNormal { fan_in } => {
+                let std = (2.0 / fan_in as f32).sqrt();
+                rng.fill_normal(buf, std);
+            }
+            Initializer::Uniform(a) => rng.fill_uniform(buf, -a, a),
+        }
+    }
+}
+
+/// A contiguous span of the memory pool, in f32 elements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Region {
+    pub offset: usize,
+    pub len: usize,
+}
+
+impl Region {
+    pub fn end(&self) -> usize {
+        self.offset + self.len
+    }
+    pub fn overlaps(&self, other: &Region) -> bool {
+        self.offset < other.end() && other.offset < self.end()
+    }
+}
+
+/// Full specification of one tensor request.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub id: TensorId,
+    pub name: String,
+    pub dim: TensorDim,
+    pub role: TensorRole,
+    pub mode: CreateMode,
+    pub init: Initializer,
+    /// Cumulative lifespan over all requests (informational; the EOs are
+    /// what the planner consumes).
+    pub lifespan: Lifespan,
+    /// Execution orders at which this tensor must hold valid data
+    /// (Algorithm 1 output). Sorted ascending after `finish_orders`.
+    pub eos: Vec<u32>,
+    /// If merged into another tensor by MV/RV/E resolution, the target id.
+    pub merged_into: Option<TensorId>,
+    /// Pool placement (None for placeholders and merged tensors).
+    pub region: Option<Region>,
+    /// Weights of frozen (non-trainable) layers skip gradient allocation.
+    pub trainable: bool,
+}
+
+impl TensorSpec {
+    pub fn min_eo(&self) -> Option<u32> {
+        self.eos.iter().copied().min()
+    }
+    pub fn max_eo(&self) -> Option<u32> {
+        self.eos.iter().copied().max()
+    }
+    pub fn is_placeholder(&self) -> bool {
+        matches!(self.mode, CreateMode::Placeholder)
+    }
+}
+
+/// Registry of all tensor requests of a compiled model.
+///
+/// Layers request tensors during `finalize`; Algorithm 1 assigns EOs;
+/// MV/RV/E merging collapses views; the Memory Planner assigns regions.
+#[derive(Default, Debug, Clone)]
+pub struct TensorTable {
+    specs: Vec<TensorSpec>,
+    by_name: HashMap<String, TensorId>,
+}
+
+impl TensorTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a new tensor request. Names must be unique; layers prefix
+    /// requests with their own name (`"fc0:weight"`).
+    pub fn request(
+        &mut self,
+        name: impl Into<String>,
+        dim: TensorDim,
+        role: TensorRole,
+        mode: CreateMode,
+        init: Initializer,
+    ) -> Result<TensorId> {
+        let name = name.into();
+        if self.by_name.contains_key(&name) {
+            return Err(Error::graph(format!("duplicate tensor `{name}`")));
+        }
+        // Views/extends must point at existing tensors.
+        match mode {
+            CreateMode::ModifyView(t) | CreateMode::ReadOnlyView(t) | CreateMode::Extend(t) => {
+                if t >= self.specs.len() {
+                    return Err(Error::graph(format!(
+                        "tensor `{name}` views unknown target id {t}"
+                    )));
+                }
+                if let CreateMode::Extend(t) = mode {
+                    // E shares *everything*: spec must match.
+                    if self.specs[t].dim != dim {
+                        return Err(Error::shape(format!(
+                            "extend `{name}`: dim {} != target dim {}",
+                            dim, self.specs[t].dim
+                        )));
+                    }
+                }
+            }
+            _ => {}
+        }
+        let id = self.specs.len();
+        self.specs.push(TensorSpec {
+            id,
+            name: name.clone(),
+            dim,
+            role,
+            mode,
+            init,
+            lifespan: Lifespan::FORWARD, // refined as EOs are added
+            eos: vec![],
+            merged_into: None,
+            region: None,
+            trainable: true,
+        });
+        self.by_name.insert(name, id);
+        Ok(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn get(&self, id: TensorId) -> &TensorSpec {
+        &self.specs[id]
+    }
+    pub fn get_mut(&mut self, id: TensorId) -> &mut TensorSpec {
+        &mut self.specs[id]
+    }
+    pub fn by_name(&self, name: &str) -> Option<TensorId> {
+        self.by_name.get(name).copied()
+    }
+    pub fn iter(&self) -> impl Iterator<Item = &TensorSpec> {
+        self.specs.iter()
+    }
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut TensorSpec> {
+        self.specs.iter_mut()
+    }
+
+    /// Follow `merged_into` links to the storage root of a tensor.
+    pub fn resolve(&self, id: TensorId) -> TensorId {
+        let mut cur = id;
+        while let Some(next) = self.specs[cur].merged_into {
+            cur = next;
+        }
+        cur
+    }
+
+    /// Add an execution order to a tensor (Algorithm 1 line 10).
+    pub fn add_eo(&mut self, id: TensorId, eo: u32, span: Lifespan) {
+        let s = &mut self.specs[id];
+        s.eos.push(eo);
+        s.lifespan = s.lifespan.union(span);
+    }
+
+    /// Sort and dedup every tensor's EOs (end of Algorithm 1).
+    pub fn finish_orders(&mut self) {
+        for s in &mut self.specs {
+            s.eos.sort_unstable();
+            s.eos.dedup();
+        }
+    }
+
+    /// Total bytes of every *allocated* root tensor — only meaningful after
+    /// planning; used for reporting.
+    pub fn allocated_bytes(&self) -> usize {
+        self.specs
+            .iter()
+            .filter(|s| s.merged_into.is_none() && !s.is_placeholder())
+            .map(|s| s.dim.bytes())
+            .sum()
+    }
+}
+
+impl fmt::Display for TensorTable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for s in &self.specs {
+            writeln!(
+                f,
+                "{:>4} {:<28} {:>16} {:<6} {:?} eos={:?} merged={:?} region={:?}",
+                s.id,
+                s.name,
+                s.dim.to_string(),
+                s.role.to_string(),
+                s.lifespan,
+                s.eos,
+                s.merged_into,
+                s.region
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dim() -> TensorDim {
+        TensorDim::vec(2, 4)
+    }
+
+    #[test]
+    fn request_and_lookup() {
+        let mut t = TensorTable::new();
+        let id = t
+            .request("a", dim(), TensorRole::Activation, CreateMode::Create, Initializer::None)
+            .unwrap();
+        assert_eq!(t.by_name("a"), Some(id));
+        assert_eq!(t.get(id).dim, dim());
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let mut t = TensorTable::new();
+        t.request("a", dim(), TensorRole::Activation, CreateMode::Create, Initializer::None)
+            .unwrap();
+        assert!(t
+            .request("a", dim(), TensorRole::Activation, CreateMode::Create, Initializer::None)
+            .is_err());
+    }
+
+    #[test]
+    fn view_of_unknown_target_rejected() {
+        let mut t = TensorTable::new();
+        assert!(t
+            .request(
+                "v",
+                dim(),
+                TensorRole::Activation,
+                CreateMode::ModifyView(3),
+                Initializer::None
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn extend_requires_same_dim() {
+        let mut t = TensorTable::new();
+        let a = t
+            .request("w", dim(), TensorRole::Weight, CreateMode::Create, Initializer::Zeros)
+            .unwrap();
+        assert!(t
+            .request(
+                "w2",
+                TensorDim::vec(2, 8),
+                TensorRole::Weight,
+                CreateMode::Extend(a),
+                Initializer::Zeros
+            )
+            .is_err());
+        assert!(t
+            .request("w3", dim(), TensorRole::Weight, CreateMode::Extend(a), Initializer::Zeros)
+            .is_ok());
+    }
+
+    #[test]
+    fn resolve_follows_chain() {
+        let mut t = TensorTable::new();
+        let a = t
+            .request("a", dim(), TensorRole::Activation, CreateMode::Create, Initializer::None)
+            .unwrap();
+        let b = t
+            .request(
+                "b",
+                dim(),
+                TensorRole::Activation,
+                CreateMode::ModifyView(a),
+                Initializer::None,
+            )
+            .unwrap();
+        let c = t
+            .request(
+                "c",
+                dim(),
+                TensorRole::Activation,
+                CreateMode::ReadOnlyView(b),
+                Initializer::None,
+            )
+            .unwrap();
+        t.get_mut(b).merged_into = Some(a);
+        t.get_mut(c).merged_into = Some(b);
+        assert_eq!(t.resolve(c), a);
+        assert_eq!(t.resolve(a), a);
+    }
+
+    #[test]
+    fn eo_bookkeeping() {
+        let mut t = TensorTable::new();
+        let a = t
+            .request("a", dim(), TensorRole::Activation, CreateMode::Create, Initializer::None)
+            .unwrap();
+        t.add_eo(a, 7, Lifespan::CALC_GRAD);
+        t.add_eo(a, 0, Lifespan::FORWARD);
+        t.add_eo(a, 7, Lifespan::CALC_GRAD);
+        t.finish_orders();
+        assert_eq!(t.get(a).eos, vec![0, 7]);
+        assert_eq!(t.get(a).min_eo(), Some(0));
+        assert_eq!(t.get(a).max_eo(), Some(7));
+        assert!(t.get(a).lifespan.calc_grad());
+    }
+
+    #[test]
+    fn region_overlap() {
+        let a = Region { offset: 0, len: 10 };
+        let b = Region { offset: 10, len: 5 };
+        let c = Region { offset: 9, len: 2 };
+        assert!(!a.overlaps(&b));
+        assert!(a.overlaps(&c));
+        assert!(c.overlaps(&b));
+    }
+}

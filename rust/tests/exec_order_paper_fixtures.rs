@@ -1,0 +1,273 @@
+//! The paper's worked examples as literal test fixtures.
+//!
+//! * Model A (Fig 4): EO table for three weighted layers.
+//! * Model B (Fig 5): in-place activation — `D_1` and `X_2` not allocated.
+//! * Model C (Fig 6): flatten RV-merges even with interleaved EOs.
+//! * Fig 7/8: sorting-planner reuse traces and the `D_2` fragmentation
+//!   case that the best-fit planner resolves.
+
+use nntrainer::compiler::realizer::realize_all;
+use nntrainer::exec::{eo_of, ideal_peak_bytes, init_graph, InitOptions};
+use nntrainer::graph::{Graph, NodeDesc};
+use nntrainer::layers::{builtin_factories, Props};
+use nntrainer::planner::{
+    validate::validate_plan, BestFitPlanner, NaivePlanner, Planner, SortingPlanner,
+};
+use nntrainer::tensor::TensorRole;
+
+fn node(name: &str, ltype: &str, pairs: &[(&str, &str)]) -> NodeDesc {
+    NodeDesc::new(name, ltype, Props::from_pairs(pairs.iter().copied()))
+}
+
+fn build(nodes: Vec<NodeDesc>, opts: &InitOptions) -> nntrainer::exec::InitGraph {
+    let nodes = realize_all(nodes).unwrap();
+    let graph = Graph::wire(nodes).unwrap();
+    init_graph(&graph, &builtin_factories(), opts).unwrap()
+}
+
+/// Fig 4 model A: in → fc → fc → fc (+ loss at the end to drive
+/// backward). We check the *structure* of the EO assignment: forward EOs
+/// ascend, backward EOs of layer i are 3N−2(i+1) and +1, weights span
+/// [0, apply], inputs carry (F, CG), derivatives carry (CG, CD).
+#[test]
+fn fig4_model_a_exec_orders() {
+    let n = 5; // in, fc0, fc1, fc2, loss
+    let ig = build(
+        vec![
+            node("in", "input", &[("input_shape", "1:1:8")]),
+            node("fc0", "fully_connected", &[("unit", "8"), ("bias", "false")]),
+            node("fc1", "fully_connected", &[("unit", "8"), ("bias", "false")]),
+            node("fc2", "fully_connected", &[("unit", "4"), ("bias", "false")]),
+            node("loss", "mse", &[]),
+        ],
+        &InitOptions { batch: 2, ..Default::default() },
+    );
+    assert_eq!(ig.nodes.len(), n);
+    // fc0 is node 1
+    let eo = eo_of(1, n);
+    assert_eq!((eo.f, eo.cg, eo.cd), (1, 3 * 5 - 4, 3 * 5 - 3));
+
+    let t = &ig.table;
+    // X_0 (network input): EOs {0(bind/F), F(consumer)=1, CG(fc0)=11}
+    let x0 = t.get(t.by_name("in:out0").unwrap());
+    assert_eq!(x0.eos, vec![0, 1, 11]);
+    // X_1 = fc0 out: F(write)=1, F(fc1 read)=2, CG(fc1)=9
+    let x1 = t.get(t.by_name("fc0:out0").unwrap());
+    assert_eq!(x1.eos, vec![1, 2, 9]);
+    // W_0: [0, eo_apply]
+    let w0 = t.get(t.by_name("fc0:weight").unwrap());
+    assert_eq!(w0.min_eo(), Some(0));
+    assert_eq!(w0.max_eo(), Some(ig.eo_apply));
+    // ΔW_0: CG(fc0)=11 .. CD(fc0)=12 (per-layer apply after CD)
+    let g0 = t.get(t.by_name("fc0:weight:grad").unwrap());
+    assert_eq!(g0.eos, vec![11, 12]);
+    // D_1 (fc0's dout, written by fc1's CD=10, read by fc0 B=11,12)
+    let d1 = t.get(t.by_name("fc0:dout0").unwrap());
+    assert_eq!(d1.eos, vec![10, 11, 12]);
+}
+
+/// Fig 5 model B: the activation's output and its input-side derivative
+/// are MV-merged — "D_1 and X_2 are not allocated".
+#[test]
+fn fig5_model_b_inplace_merges() {
+    let ig = build(
+        vec![
+            node("in", "input", &[("input_shape", "1:1:8")]),
+            node("fc0", "fully_connected", &[("unit", "8"), ("bias", "false")]),
+            node("act", "activation", &[("act", "sigmoid")]),
+            node("fc1", "fully_connected", &[("unit", "4"), ("bias", "false")]),
+            node("loss", "mse", &[]),
+        ],
+        &InitOptions { batch: 2, ..Default::default() },
+    );
+    let t = &ig.table;
+    // X_2 (activation out) merged into X_1 (fc0 out)
+    let x2 = t.get(t.by_name("act:out0").unwrap());
+    assert!(x2.merged_into.is_some(), "activation output must MV-merge");
+    assert_eq!(t.resolve(x2.id), t.by_name("fc0:out0").unwrap());
+    // D_1 (fc0:dout0) merged into D_2 (act:dout0)
+    let d1 = t.get(t.by_name("fc0:dout0").unwrap());
+    assert!(d1.merged_into.is_some(), "in-place derivative must merge");
+    assert_eq!(t.resolve(d1.id), t.by_name("act:dout0").unwrap());
+}
+
+/// Same model with `inplace: false` (the ablation): nothing merges.
+#[test]
+fn fig5_inplace_disabled_keeps_tensors() {
+    let ig = build(
+        vec![
+            node("in", "input", &[("input_shape", "1:1:8")]),
+            node("fc0", "fully_connected", &[("unit", "8"), ("bias", "false")]),
+            node("act", "activation", &[("act", "sigmoid")]),
+            node("fc1", "fully_connected", &[("unit", "4"), ("bias", "false")]),
+            node("loss", "mse", &[]),
+        ],
+        &InitOptions { batch: 2, inplace: false, ..Default::default() },
+    );
+    let t = &ig.table;
+    assert!(t.get(t.by_name("act:out0").unwrap()).merged_into.is_none());
+    assert!(t.get(t.by_name("fc0:dout0").unwrap()).merged_into.is_none());
+}
+
+/// Fig 6 model C: flatten is RV — merged even though the target's EOs
+/// extend past the view's first use (integrity guaranteed by contract).
+#[test]
+fn fig6_model_c_readonly_view_merges() {
+    let ig = build(
+        vec![
+            node("in", "input", &[("input_shape", "1:1:8")]),
+            node("fc0", "fully_connected", &[("unit", "8"), ("bias", "false")]),
+            node("act", "activation", &[("act", "sigmoid")]),
+            node("flat", "flatten", &[]),
+            node("fc1", "fully_connected", &[("unit", "4"), ("bias", "false")]),
+            node("loss", "mse", &[]),
+        ],
+        &InitOptions { batch: 2, ..Default::default() },
+    );
+    let t = &ig.table;
+    let flat_out = t.get(t.by_name("flat:out0").unwrap());
+    assert!(flat_out.merged_into.is_some(), "flatten output must RV-merge");
+    // chain resolves through the activation merge to fc0's output
+    assert_eq!(t.resolve(flat_out.id), t.by_name("fc0:out0").unwrap());
+    // flatten's derivative side merges too
+    let act_dout = t.get(t.by_name("act:dout0").unwrap());
+    assert!(act_dout.merged_into.is_some());
+}
+
+/// MV merge must be *refused* when the target is still live after the
+/// view's first write (Algorithm 1 line 17's integrity check) — the
+/// view is demoted to a fresh tensor instead.
+#[test]
+fn mv_integrity_demotion() {
+    // fc0's output feeds BOTH an activation (wants MV) and, via multiout,
+    // a second consumer that reads it later — the merge would corrupt it.
+    let ig = build(
+        vec![
+            node("in", "input", &[("input_shape", "1:1:8")]),
+            node("fc0", "fully_connected", &[("unit", "8"), ("bias", "false")]),
+            node("act", "activation", &[("act", "sigmoid"), ("input_layers", "fc0")]),
+            node("fc_a", "fully_connected", &[("unit", "4"), ("bias", "false"), ("input_layers", "act")]),
+            node("fc_b", "fully_connected", &[("unit", "4"), ("bias", "false"), ("input_layers", "fc0")]),
+            node("add", "addition", &[("input_layers", "fc_a,fc_b")]),
+            node("loss", "mse", &[]),
+        ],
+        &InitOptions { batch: 2, ..Default::default() },
+    );
+    let t = &ig.table;
+    // multiout realizer fans fc0 out; the activation's input is a
+    // multiout branch. The branch copies are fresh tensors, so the MV
+    // merge is onto the branch — fc0:out0 itself must stay intact.
+    let fc0_out = t.get(t.by_name("fc0:out0").unwrap());
+    assert!(fc0_out.merged_into.is_none());
+    // validate the plan end-to-end for good measure
+    let mut table = ig.table;
+    let len = SortingPlanner.plan(&mut table).unwrap();
+    validate_plan(&table, len).unwrap();
+}
+
+/// Fig 7: the sorting planner reuses slots — pool must be well below the
+/// naive sum, and ≥ the analytic ideal.
+#[test]
+fn fig7_sorting_planner_reuses() {
+    let ig = build(
+        vec![
+            node("in", "input", &[("input_shape", "1:1:64")]),
+            node("fc0", "fully_connected", &[("unit", "64"), ("bias", "false")]),
+            node("fc1", "fully_connected", &[("unit", "64"), ("bias", "false")]),
+            node("fc2", "fully_connected", &[("unit", "8"), ("bias", "false")]),
+            node("loss", "mse", &[]),
+        ],
+        &InitOptions { batch: 16, ..Default::default() },
+    );
+    let ideal = ideal_peak_bytes(&ig.table);
+
+    let mut t_naive = ig.table.clone();
+    let naive = NaivePlanner.plan(&mut t_naive).unwrap() * 4;
+    let mut t_sort = ig.table.clone();
+    let sorted = SortingPlanner.plan(&mut t_sort).unwrap() * 4;
+    validate_plan(&t_sort, sorted / 4).unwrap();
+
+    assert!(sorted < naive, "sorting {sorted} !< naive {naive}");
+    assert!(sorted >= ideal, "sorting {sorted} < ideal {ideal}?!");
+    // the planner should be within 2x of ideal on this simple chain
+    assert!(sorted <= ideal * 2, "sorting {sorted} vs ideal {ideal}");
+}
+
+/// Fig 8: fragmentation — best-fit (slot splitting) never exceeds the
+/// sorting planner, and both are validated.
+#[test]
+fn fig8_bestfit_not_worse() {
+    for nodes in [
+        vec![
+            node("in", "input", &[("input_shape", "1:1:256")]),
+            node("fc0", "fully_connected", &[("unit", "32"), ("bias", "false")]),
+            node("act", "activation", &[("act", "sigmoid")]),
+            node("fc1", "fully_connected", &[("unit", "128"), ("bias", "false")]),
+            node("fc2", "fully_connected", &[("unit", "8"), ("bias", "false")]),
+            node("loss", "mse", &[]),
+        ],
+        vec![
+            node("in", "input", &[("input_shape", "2:16:16")]),
+            node("c0", "conv2d", &[("filters", "4"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+            node("p0", "pooling2d", &[("pooling", "max"), ("pool_size", "2")]),
+            node("flat", "flatten", &[]),
+            node("fc", "fully_connected", &[("unit", "10")]),
+            node("loss", "cross_entropy", &[]),
+        ],
+    ] {
+        let ig = build(nodes, &InitOptions { batch: 8, ..Default::default() });
+        let mut t_sort = ig.table.clone();
+        let sorted = SortingPlanner.plan(&mut t_sort).unwrap();
+        validate_plan(&t_sort, sorted).unwrap();
+        let mut t_best = ig.table.clone();
+        let best = BestFitPlanner.plan(&mut t_best).unwrap();
+        validate_plan(&t_best, best).unwrap();
+        assert!(best <= sorted, "bestfit {best} > sorting {sorted}");
+    }
+}
+
+/// Inference mode drops derivatives and gradients entirely (paper §3:
+/// "We can drop a significant part of buffers for inference").
+#[test]
+fn inference_mode_drops_backward_tensors() {
+    let ig = build(
+        vec![
+            node("in", "input", &[("input_shape", "1:1:32")]),
+            node("fc0", "fully_connected", &[("unit", "32"), ("activation", "sigmoid")]),
+            node("fc1", "fully_connected", &[("unit", "8")]),
+            node("loss", "mse", &[]),
+        ],
+        &InitOptions { batch: 4, training: false, ..Default::default() },
+    );
+    for s in ig.table.iter() {
+        assert!(
+            !matches!(s.role, TensorRole::Derivative | TensorRole::Gradient),
+            "inference graph contains {} ({})",
+            s.name,
+            s.role
+        );
+    }
+}
+
+/// Frozen-backbone pruning: layers before the first trainable layer get
+/// no derivative buffers at all (transfer-learning memory claim, Fig 12).
+#[test]
+fn frozen_backbone_prunes_derivatives() {
+    let ig = build(
+        vec![
+            node("in", "input", &[("input_shape", "1:1:32")]),
+            node("frozen0", "fully_connected", &[("unit", "32"), ("trainable", "false")]),
+            node("frozen1", "fully_connected", &[("unit", "32"), ("trainable", "false")]),
+            node("head", "fully_connected", &[("unit", "8")]),
+            node("loss", "mse", &[]),
+        ],
+        &InitOptions { batch: 4, ..Default::default() },
+    );
+    let t = &ig.table;
+    assert!(t.by_name("frozen0:dout0").is_none());
+    assert!(t.by_name("frozen1:weight:grad").is_none());
+    // head's input derivative exists only if an ancestor trains; none does
+    assert!(t.by_name("frozen1:dout0").is_none());
+    // the head itself still trains
+    assert!(t.by_name("head:weight:grad").is_some());
+}

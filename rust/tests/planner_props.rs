@@ -1,0 +1,214 @@
+//! Property tests over the memory planners (offline substitute for
+//! proptest — seeded xorshift generators, many random cases).
+//!
+//! Invariants:
+//!  1. No two live tensors overlap (validate_plan) — for every planner.
+//!  2. pool ≥ analytic ideal; naive ≥ sorting; bestfit ≤ sorting.
+//!  3. Planning is deterministic.
+//!  4. Randomly-generated *graphs* (not just intervals) plan validly.
+
+use nntrainer::compiler::realizer::realize_all;
+use nntrainer::exec::{ideal_peak_bytes, init_graph, InitOptions};
+use nntrainer::graph::{Graph, NodeDesc};
+use nntrainer::layers::{builtin_factories, Props};
+use nntrainer::planner::validate::{validate_merges, validate_plan};
+use nntrainer::planner::{BestFitPlanner, NaivePlanner, Planner, SortingPlanner};
+use nntrainer::rng::Rng;
+use nntrainer::tensor::{CreateMode, Initializer, Lifespan, TensorDim, TensorRole, TensorTable};
+
+fn node(name: &str, ltype: &str, pairs: &[(&str, &str)]) -> NodeDesc {
+    NodeDesc::new(name, ltype, Props::from_pairs(pairs.iter().copied()))
+}
+
+/// Random interval workload straight into a TensorTable.
+fn random_table(rng: &mut Rng, n_tensors: usize, eo_max: u32) -> TensorTable {
+    let mut t = TensorTable::new();
+    for i in 0..n_tensors {
+        let id = t
+            .request(
+                format!("t{i}"),
+                TensorDim::vec(1, 1 + rng.below(4096)),
+                TensorRole::Temp,
+                CreateMode::Create,
+                Initializer::None,
+            )
+            .unwrap();
+        let a = rng.below(eo_max as usize) as u32;
+        let b = rng.below(eo_max as usize) as u32;
+        t.add_eo(id, a.min(b), Lifespan::FORWARD);
+        t.add_eo(id, a.max(b), Lifespan::CALC_DERIV);
+    }
+    t.finish_orders();
+    t
+}
+
+#[test]
+fn prop_planners_valid_on_random_intervals() {
+    let mut rng = Rng::new(2024);
+    let (mut wins, mut total) = (0usize, 0usize);
+    for case in 0..60 {
+        let n = 5 + rng.below(60);
+        let eo_max = 3 + rng.below(40) as u32;
+        let base = random_table(&mut rng, n, eo_max);
+        let ideal = ideal_peak_bytes(&base);
+
+        let mut results = vec![];
+        for planner in [&NaivePlanner as &dyn Planner, &SortingPlanner, &BestFitPlanner] {
+            let mut t = base.clone();
+            let len = planner.plan(&mut t).unwrap();
+            validate_plan(&t, len).unwrap_or_else(|e| panic!("case {case} {}: {e}", planner.name()));
+            assert!(len * 4 >= ideal, "case {case} {}: {} < ideal {}", planner.name(), len * 4, ideal);
+            results.push(len);
+        }
+        let (naive, sorting, bestfit) = (results[0], results[1], results[2]);
+        assert!(sorting <= naive, "case {case}: sorting {sorting} > naive {naive}");
+        // best-fit splitting is not *universally* better (classic
+        // allocator result) — allow small regressions, track wins below.
+        assert!(
+            bestfit as f64 <= sorting as f64 * 1.25,
+            "case {case}: bestfit {bestfit} pathologically above sorting {sorting}"
+        );
+        if bestfit <= sorting {
+            wins += 1;
+        }
+        total += 1;
+    }
+    assert!(
+        wins * 10 >= total * 8,
+        "bestfit should win >=80% of cases: {wins}/{total}"
+    );
+}
+
+#[test]
+fn prop_planning_is_deterministic() {
+    let mut rng = Rng::new(7);
+    let base = random_table(&mut rng, 40, 24);
+    let mut t1 = base.clone();
+    let mut t2 = base.clone();
+    SortingPlanner.plan(&mut t1).unwrap();
+    SortingPlanner.plan(&mut t2).unwrap();
+    for (a, b) in t1.iter().zip(t2.iter()) {
+        assert_eq!(a.region, b.region, "{}", a.name);
+    }
+}
+
+/// Random *model graphs*: chains of random layers with occasional fan-out,
+/// realized, initialized, planned and validated end to end.
+#[test]
+fn prop_random_graphs_plan_validly() {
+    let mut rng = Rng::new(99);
+    for case in 0..25 {
+        let depth = 2 + rng.below(6);
+        let mut nodes = vec![node("in", "input", &[("input_shape", "1:1:24")])];
+        let mut units = 24usize;
+        for d in 0..depth {
+            let name = format!("l{d}");
+            let choice = rng.below(4);
+            let nd = match choice {
+                0 => {
+                    units = 4 + rng.below(24);
+                    NodeDesc::new(
+                        &name,
+                        "fully_connected",
+                        Props::from_pairs([("unit", units.to_string().as_str())]),
+                    )
+                }
+                1 => NodeDesc::new(
+                    &name,
+                    "activation",
+                    Props::from_pairs([(
+                        "act",
+                        ["sigmoid", "relu", "tanh"][rng.below(3)],
+                    )]),
+                ),
+                2 => NodeDesc::new(&name, "flatten", Props::new()),
+                _ => NodeDesc::new(
+                    &name,
+                    "dropout",
+                    Props::from_pairs([("rate", "0.3")]),
+                ),
+            };
+            nodes.push(nd);
+        }
+        nodes.push(node("loss", "mse", &[]));
+        let realized = realize_all(nodes).unwrap();
+        let graph = Graph::wire(realized).unwrap();
+        let batch = 1 + rng.below(8);
+        let ig = init_graph(
+            &graph,
+            &builtin_factories(),
+            &InitOptions { batch, ..Default::default() },
+        )
+        .unwrap_or_else(|e| panic!("case {case}: init {e}"));
+        for planner in [&SortingPlanner as &dyn Planner, &BestFitPlanner] {
+            let mut t = ig.table.clone();
+            let len = planner.plan(&mut t).unwrap();
+            validate_plan(&t, len).unwrap_or_else(|e| panic!("case {case} {}: {e}", planner.name()));
+            validate_merges(&t).unwrap();
+        }
+    }
+}
+
+/// Weights / optimizer state must never share space with anything:
+/// their [0, apply] interval pins them.
+#[test]
+fn prop_weights_never_aliased() {
+    let nodes = vec![
+        node("in", "input", &[("input_shape", "1:1:32")]),
+        node("fc0", "fully_connected", &[("unit", "32"), ("activation", "sigmoid")]),
+        node("fc1", "fully_connected", &[("unit", "8")]),
+        node("loss", "mse", &[]),
+    ];
+    let realized = realize_all(nodes).unwrap();
+    let graph = Graph::wire(realized).unwrap();
+    let ig = init_graph(
+        &graph,
+        &builtin_factories(),
+        &InitOptions { batch: 4, opt_slots: 2, ..Default::default() },
+    )
+    .unwrap();
+    let mut t = ig.table.clone();
+    let _len = SortingPlanner.plan(&mut t).unwrap();
+    let weights: Vec<_> = t
+        .iter()
+        .filter(|s| matches!(s.role, TensorRole::Weight | TensorRole::OptState))
+        .filter(|s| s.merged_into.is_none())
+        .map(|s| s.region.unwrap())
+        .collect();
+    let others: Vec<_> = t
+        .iter()
+        .filter(|s| !matches!(s.role, TensorRole::Weight | TensorRole::OptState))
+        .filter(|s| s.merged_into.is_none() && !s.eos.is_empty())
+        .map(|s| s.region.unwrap())
+        .collect();
+    for w in &weights {
+        for o in &others {
+            assert!(!w.overlaps(o), "weight region {w:?} aliased by {o:?}");
+        }
+    }
+}
+
+/// Failure injection: the validator actually catches corrupted plans.
+#[test]
+fn validator_catches_overlap() {
+    let mut rng = Rng::new(3);
+    let mut t = random_table(&mut rng, 20, 12);
+    let len = SortingPlanner.plan(&mut t).unwrap();
+    validate_plan(&t, len).unwrap();
+    // corrupt: force tensor 1 onto tensor 0's offset with overlapping EOs
+    let r0 = t.get(0).region.unwrap();
+    t.get_mut(1).region = Some(r0);
+    let e0: Vec<u32> = t.get(0).eos.clone();
+    t.get_mut(1).eos = e0;
+    assert!(validate_plan(&t, len).is_err());
+}
+
+#[test]
+fn validator_catches_out_of_pool() {
+    let mut rng = Rng::new(4);
+    let mut t = random_table(&mut rng, 5, 6);
+    let len = SortingPlanner.plan(&mut t).unwrap();
+    let r = t.get(0).region.unwrap();
+    t.get_mut(0).region = Some(nntrainer::tensor::Region { offset: len, len: r.len });
+    assert!(validate_plan(&t, len).is_err());
+}
