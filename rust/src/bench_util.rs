@@ -40,6 +40,17 @@ pub fn conventional_profile(batch: usize) -> CompileOpts {
     }
 }
 
+/// NNTrainer profile under a primary-memory budget: the offload advisor
+/// plans idle-gap swaps and the executor runs the proactive swap runtime
+/// (`benches/swap_runtime.rs`).
+pub fn budget_profile(batch: usize, budget_bytes: usize) -> CompileOpts {
+    CompileOpts {
+        batch,
+        memory_budget_bytes: Some(budget_bytes),
+        ..Default::default()
+    }
+}
+
 /// Plan a model under a profile (no allocation).
 pub fn plan(nodes: Vec<NodeDesc>, opts: &CompileOpts) -> Result<PlanReport> {
     plan_only(nodes, opts)
@@ -80,7 +91,7 @@ pub fn train_random(
         let queue = BatchQueue::spawn(make, batch, 2);
         while let Some(b) = queue.next() {
             model.bind_batch(&b.input, &b.label)?;
-            model.exec.train_iteration();
+            model.exec.try_train_iteration()?;
             iters += 1;
         }
     }

@@ -12,7 +12,15 @@ use crate::graph::{Graph, NodeDesc};
 use crate::layers::{builtin_factories, LayerFactory};
 use crate::metrics::PlanReport;
 use crate::optimizer::Optimizer;
-use crate::planner::{validate::validate_merges, validate::validate_plan, PlannerKind};
+use crate::planner::{
+    gapfit::GapFitPlanner,
+    offload,
+    validate::{validate_gap_plan, validate_merges, validate_plan},
+    PlannerKind,
+};
+use crate::runtime::store::StoreKind;
+use crate::runtime::swap::SwapExec;
+use crate::tensor::TensorTable;
 
 /// Compile options — the knobs the evaluation sweeps.
 #[derive(Clone, Debug)]
@@ -26,6 +34,19 @@ pub struct CompileOpts {
     pub conventional: bool,
     pub clip_norm: Option<f32>,
     pub seed: u64,
+    /// Primary-memory budget in bytes. When set, the offload advisor
+    /// plans idle-gap swaps, the gap-aware planner shrinks the pool
+    /// accordingly, and the executor runs the proactive swap runtime
+    /// (`planner` is then ignored in favour of the gap-aware planner).
+    ///
+    /// The budget is a *target*, not a hard guarantee: when even maximal
+    /// swapping cannot reach it, compile still succeeds with the best
+    /// achievable pool — check `exec.swap_plan().unwrap().fits` and
+    /// `Model::peak_pool_bytes()` (known before training) against the
+    /// device limit, as `examples/batch_budget.rs` does.
+    pub memory_budget_bytes: Option<usize>,
+    /// Secondary store backing the swap runtime (host RAM or spill file).
+    pub swap_store: StoreKind,
 }
 
 impl Default for CompileOpts {
@@ -38,6 +59,35 @@ impl Default for CompileOpts {
             conventional: false,
             clip_norm: None,
             seed: 42,
+            memory_budget_bytes: None,
+            swap_store: StoreKind::Host,
+        }
+    }
+}
+
+/// Plan memory for an initialized table: either the selected plain
+/// planner, or — under a memory budget — the offload advisor plus the
+/// gap-aware planner. Returns the pool length (f32 elements), the name of
+/// the planner that ran, and the offload plan when a budget was set.
+fn plan_memory(
+    table: &mut TensorTable,
+    opts: &CompileOpts,
+) -> Result<(usize, &'static str, Option<offload::OffloadPlan>)> {
+    match opts.memory_budget_bytes {
+        Some(budget) => {
+            let plan = offload::advise(table, budget);
+            let gapfit = GapFitPlanner { plan: &plan };
+            let pool_len = crate::planner::Planner::plan(&gapfit, table)?;
+            validate_gap_plan(table, &plan, pool_len)?;
+            validate_merges(table)?;
+            Ok((pool_len, "gapfit", Some(plan)))
+        }
+        None => {
+            let planner = opts.planner.instance();
+            let pool_len = planner.plan(table)?;
+            validate_plan(table, pool_len)?;
+            validate_merges(table)?;
+            Ok((pool_len, planner.name(), None))
         }
     }
 }
@@ -69,11 +119,8 @@ pub fn plan_only(nodes: Vec<NodeDesc>, opts: &CompileOpts) -> Result<PlanReport>
         opt_slots: 0,
     };
     let mut ig = init_graph(&graph, &builtin_factories(), &init_opts)?;
-    let planner = opts.planner.instance();
-    let pool_len = planner.plan(&mut ig.table)?;
-    validate_plan(&ig.table, pool_len)?;
-    validate_merges(&ig.table)?;
-    Ok(PlanReport::from_table(&ig.table, pool_len, planner.name()))
+    let (pool_len, planner_name, _plan) = plan_memory(&mut ig.table, opts)?;
+    Ok(PlanReport::from_table(&ig.table, pool_len, planner_name))
 }
 
 /// `compile` with a custom layer registry (AppContext extensions).
@@ -94,11 +141,23 @@ pub fn compile_with(
         opt_slots: optimizer.state_slots(),
     };
     let mut ig = init_graph(&graph, factories, &init_opts)?;
-    let planner = opts.planner.instance();
-    let pool_len = planner.plan(&mut ig.table)?;
-    validate_plan(&ig.table, pool_len)?;
-    validate_merges(&ig.table)?;
-    let report = PlanReport::from_table(&ig.table, pool_len, planner.name());
-    let exec = Executor::new(ig, pool_len, optimizer, opts.clip_norm, opts.training, opts.seed)?;
+    let (pool_len, planner_name, plan) = plan_memory(&mut ig.table, opts)?;
+    let report = PlanReport::from_table(&ig.table, pool_len, planner_name);
+    let swap = match plan {
+        Some(plan) => {
+            let store = opts.swap_store.instance()?;
+            Some(SwapExec::new(&ig.table, &plan, store)?)
+        }
+        None => None,
+    };
+    let exec = Executor::new(
+        ig,
+        pool_len,
+        optimizer,
+        opts.clip_norm,
+        opts.training,
+        opts.seed,
+        swap,
+    )?;
     Ok((exec, report))
 }

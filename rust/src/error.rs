@@ -1,6 +1,7 @@
-//! Error type shared across the crate.
+//! Error type shared across the crate. Hand-rolled `Display`/`Error`
+//! impls — the offline build carries no proc-macro dependencies.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide error enumeration.
 ///
@@ -8,39 +9,64 @@ use thiserror::Error;
 /// planner inconsistencies) are reported through this type; hot-path code
 /// (forward / backward) is shape-checked at initialize time and does not
 /// return `Result`.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Model description (INI or API) is malformed.
-    #[error("model description: {0}")]
     ModelDesc(String),
     /// A layer property had an unknown key or unparsable value.
-    #[error("invalid property `{key}` = `{value}`: {reason}")]
     Property {
         key: String,
         value: String,
         reason: String,
     },
     /// Tensor shapes are inconsistent at graph-initialize time.
-    #[error("shape mismatch: {0}")]
     Shape(String),
     /// Graph wiring error (unknown layer name, cycle outside recurrent scope…).
-    #[error("graph: {0}")]
     Graph(String),
     /// Memory planner produced or detected an invalid plan.
-    #[error("planner: {0}")]
     Planner(String),
     /// Data pipeline failure.
-    #[error("dataset: {0}")]
     Dataset(String),
     /// Checkpoint serialization/deserialization failure.
-    #[error("checkpoint: {0}")]
     Checkpoint(String),
-    /// PJRT runtime failure (artifact missing, compile/execute error).
-    #[error("runtime: {0}")]
+    /// Runtime failure (swap store I/O, PJRT artifact missing, compile/
+    /// execute error, residency violation).
     Runtime(String),
     /// I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::ModelDesc(s) => write!(f, "model description: {s}"),
+            Error::Property { key, value, reason } => {
+                write!(f, "invalid property `{key}` = `{value}`: {reason}")
+            }
+            Error::Shape(s) => write!(f, "shape mismatch: {s}"),
+            Error::Graph(s) => write!(f, "graph: {s}"),
+            Error::Planner(s) => write!(f, "planner: {s}"),
+            Error::Dataset(s) => write!(f, "dataset: {s}"),
+            Error::Checkpoint(s) => write!(f, "checkpoint: {s}"),
+            Error::Runtime(s) => write!(f, "runtime: {s}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

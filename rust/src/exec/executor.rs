@@ -11,8 +11,10 @@ use std::collections::HashMap;
 use crate::error::{Error, Result};
 use crate::layers::RunCtx;
 use crate::optimizer::{clip_global_norm, Optimizer};
+use crate::planner::offload::OffloadPlan;
 use crate::planner::pool::MemoryPool;
 use crate::rng::Rng;
+use crate::runtime::swap::{SwapExec, SwapStats};
 use crate::tensor::{CreateMode, TensorId, TensorRole};
 
 use super::order::{eo_of, InitGraph};
@@ -41,6 +43,11 @@ pub struct Executor {
     pub deferred_apply: bool,
     pub iter: u64,
     apply_count: u64,
+    /// Proactive swap runtime, present when the model was compiled under
+    /// a primary-memory budget. Engaged around every training step and
+    /// around forward steps in forward-only passes (the budgeted pool
+    /// aliases regions across idle gaps, so eviction must run there too).
+    swap: Option<SwapExec>,
     /// Loss captured at the loss layers' forward steps. The loss output
     /// tensor is only live at its forward EO — its pool region is
     /// (correctly) reused during backward, so it must be read *at* that
@@ -58,6 +65,7 @@ impl Executor {
         clip_norm: Option<f32>,
         training: bool,
         seed: u64,
+        swap: Option<SwapExec>,
     ) -> Result<Executor> {
         let n = graph.nodes.len();
         let mut steps: Vec<(u32, StepOp)> = Vec::with_capacity(3 * n + 1);
@@ -96,6 +104,7 @@ impl Executor {
             deferred_apply: deferred,
             iter: 0,
             apply_count: 0,
+            swap,
             last_loss: 0.0,
         };
         exec.init_weights(seed);
@@ -182,11 +191,30 @@ impl Executor {
     }
 
     /// One full training iteration over the bound batch; returns the loss.
+    /// Panics on swap-runtime failures — use [`Executor::try_train_iteration`]
+    /// when running under a memory budget.
     pub fn train_iteration(&mut self) -> f32 {
+        self.try_train_iteration().expect("train_iteration")
+    }
+
+    /// One full training iteration over the bound batch; returns the loss.
+    ///
+    /// With the swap runtime active, every step is bracketed by the
+    /// evict/prefetch protocol: due prefetches are completed (and the
+    /// residency guard run) before the step, and entries whose gap opens
+    /// at this EO are evicted right after it.
+    pub fn try_train_iteration(&mut self) -> Result<f32> {
         self.iter += 1;
         self.last_loss = 0.0;
+        if let Some(sw) = self.swap.as_mut() {
+            sw.begin_iteration()?;
+        }
         for k in 0..self.steps.len() {
             let (eo, op) = self.steps[k];
+            if let Some(sw) = self.swap.as_mut() {
+                sw.pre_step(eo, &self.pool)?;
+                sw.check_residency(eo)?;
+            }
             if let Some(grads) = self.zero_before.get(&eo) {
                 for &g in grads {
                     let r = self.graph.table.get(g).region.unwrap();
@@ -233,19 +261,51 @@ impl Executor {
                     self.apply_all();
                 }
             }
-        }
-        self.last_loss
-    }
-
-    /// Forward-only pass (inference / feature extraction).
-    pub fn forward_pass(&mut self) {
-        self.iter += 1;
-        for k in 0..self.steps.len() {
-            if let (_, StepOp::Forward(i)) = self.steps[k] {
-                let ctx = self.ctx_infer(i);
-                self.graph.nodes[i].layer.forward(&ctx);
+            if let Some(sw) = self.swap.as_mut() {
+                sw.post_step(eo, &self.pool)?;
             }
         }
+        if let Some(sw) = self.swap.as_mut() {
+            sw.end_iteration(&self.pool)?;
+        }
+        Ok(self.last_loss)
+    }
+
+    /// Forward-only pass (inference / feature extraction). Panics on
+    /// swap-runtime failures — use [`Executor::try_forward_pass`] when
+    /// running under a memory budget.
+    pub fn forward_pass(&mut self) {
+        self.try_forward_pass().expect("forward_pass")
+    }
+
+    /// Forward-only pass. The swap protocol runs over the forward steps
+    /// too: a budget-compiled pool aliases regions across idle gaps, so
+    /// skipping eviction here would let a gap tenant clobber a still-live
+    /// tensor (e.g. a skip-connection activation read again later in
+    /// forward). Entries whose prefetch EO lies in the (skipped) backward
+    /// half are restored in the end-of-pass sweep.
+    pub fn try_forward_pass(&mut self) -> Result<()> {
+        self.iter += 1;
+        if let Some(sw) = self.swap.as_mut() {
+            sw.begin_iteration()?;
+        }
+        for k in 0..self.steps.len() {
+            if let (eo, StepOp::Forward(i)) = self.steps[k] {
+                if let Some(sw) = self.swap.as_mut() {
+                    sw.pre_step(eo, &self.pool)?;
+                    sw.check_residency(eo)?;
+                }
+                let ctx = self.ctx_infer(i);
+                self.graph.nodes[i].layer.forward(&ctx);
+                if let Some(sw) = self.swap.as_mut() {
+                    sw.post_step(eo, &self.pool)?;
+                }
+            }
+        }
+        if let Some(sw) = self.swap.as_mut() {
+            sw.end_iteration(&self.pool)?;
+        }
+        Ok(())
     }
 
     fn apply_node(&mut self, i: usize) {
@@ -353,5 +413,26 @@ impl Executor {
 
     pub fn steps(&self) -> &[(u32, StepOp)] {
         &self.steps
+    }
+
+    /// Whether this executor runs under a memory budget with the swap
+    /// runtime engaged.
+    pub fn swap_active(&self) -> bool {
+        self.swap.is_some()
+    }
+
+    /// Cumulative swap-runtime counters (None when no budget was set).
+    pub fn swap_stats(&self) -> Option<SwapStats> {
+        self.swap.as_ref().map(|s| s.stats)
+    }
+
+    /// The offload plan being executed (None when no budget was set).
+    pub fn swap_plan(&self) -> Option<&OffloadPlan> {
+        self.swap.as_ref().map(|s| s.plan())
+    }
+
+    /// Mutable access to the swap runtime (tests: plan-corruption hooks).
+    pub fn swap_mut(&mut self) -> Option<&mut SwapExec> {
+        self.swap.as_mut()
     }
 }

@@ -197,7 +197,7 @@ impl Model {
             let mut batches = 0usize;
             while let Some(b) = queue.next() {
                 self.bind_batch(&b.input, &b.label)?;
-                let loss = self.exec.train_iteration();
+                let loss = self.exec.try_train_iteration()?;
                 epoch_loss += loss as f64;
                 batches += 1;
             }
@@ -251,7 +251,7 @@ impl Model {
             }
             off += f;
         }
-        self.exec.forward_pass();
+        self.exec.try_forward_pass()?;
         // last non-loss, non-input node
         let last = self
             .exec

@@ -8,6 +8,7 @@
 //!   with best-fit selection, resolving the Fig 8 fragmentation.
 
 pub mod bestfit;
+pub mod gapfit;
 pub mod naive;
 pub mod offload;
 pub mod pool;
@@ -18,7 +19,9 @@ use crate::error::Result;
 use crate::tensor::{TensorId, TensorTable};
 
 pub use bestfit::BestFitPlanner;
+pub use gapfit::GapFitPlanner;
 pub use naive::NaivePlanner;
+pub use offload::{OffloadEntry, OffloadPlan};
 pub use pool::MemoryPool;
 pub use sorting::SortingPlanner;
 

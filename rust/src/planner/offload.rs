@@ -12,7 +12,13 @@
 //! budget, and reports the resulting peak and the per-iteration swap
 //! traffic the background copies would cost.
 
-use crate::tensor::{TensorId, TensorRole, TensorTable};
+use crate::tensor::{TensorId, TensorRole, TensorSpec, TensorTable};
+
+/// How many EOs before its next use a prefetched tensor must be resident
+/// again. The swap runtime restores an offloaded tensor's region at the
+/// step boundary one EO ahead of `prefetch_before`; the gap-aware planner
+/// reserves the region from that same point, so the two never disagree.
+pub const PREFETCH_LEAD: u32 = 1;
 
 /// One swap decision: evict after `evict_after`, prefetch back before
 /// `prefetch_before` (both EOs; the gap in between is spent in secondary
@@ -41,7 +47,7 @@ pub struct OffloadPlan {
 
 /// Live segments of a tensor: maximal runs of consecutive EOs with gaps
 /// of at most 1 between them. A tensor with one segment never idles.
-fn segments(eos: &[u32]) -> Vec<(u32, u32)> {
+pub fn segments(eos: &[u32]) -> Vec<(u32, u32)> {
     let mut segs = Vec::new();
     let mut start = match eos.first() {
         Some(&e) => e,
@@ -59,6 +65,36 @@ fn segments(eos: &[u32]) -> Vec<(u32, u32)> {
     segs
 }
 
+/// EO intervals (inclusive) during which a tensor occupies its primary
+/// region. Not offloaded: one interval spanning its whole life. Offloaded:
+/// one interval per live segment; every segment except the first is
+/// widened by [`PREFETCH_LEAD`] at the front (the prefetch copy lands
+/// before the segment's first use — the first segment instead *starts*
+/// with the tensor's first write, so widening it would grow the footprint
+/// beyond the unswapped life and break peak monotonicity). This is the
+/// liveness model shared by the advisor's peak accounting, the gap-aware
+/// planner and the plan validator.
+pub fn live_intervals(s: &TensorSpec, offloaded: bool) -> Vec<(u32, u32)> {
+    if !offloaded {
+        match (s.min_eo(), s.max_eo()) {
+            (Some(a), Some(z)) => vec![(a, z)],
+            _ => vec![],
+        }
+    } else {
+        segments(&s.eos)
+            .into_iter()
+            .enumerate()
+            .map(|(k, (a, z))| {
+                if k == 0 {
+                    (a, z)
+                } else {
+                    (a.saturating_sub(PREFETCH_LEAD), z)
+                }
+            })
+            .collect()
+    }
+}
+
 /// Peak live bytes when `offloaded` tensors only occupy primary memory
 /// during their live segments (plus one EO of prefetch lead).
 fn peak_with(table: &TensorTable, offloaded: &[bool]) -> usize {
@@ -68,16 +104,9 @@ fn peak_with(table: &TensorTable, offloaded: &[bool]) -> usize {
             continue;
         }
         let b = s.dim.bytes() as i64;
-        if offloaded[s.id] {
-            for (a, z) in segments(&s.eos) {
-                // prefetch lands one EO early
-                let a = a.saturating_sub(1);
-                events.push((a, b));
-                events.push((z + 1, -b));
-            }
-        } else {
-            events.push((s.min_eo().unwrap(), b));
-            events.push((s.max_eo().unwrap() + 1, -b));
+        for (a, z) in live_intervals(s, offloaded[s.id]) {
+            events.push((a, b));
+            events.push((z + 1, -b));
         }
     }
     events.sort();
@@ -107,6 +136,10 @@ pub fn advise(table: &TensorTable, budget_bytes: usize) -> OffloadPlan {
                 TensorRole::Activation | TensorRole::Temp | TensorRole::Derivative
             )
         })
+        // Whole-training tensors (e.g. batch-norm running stats) record
+        // only {0, apply} as EOs — their real per-step accesses are not in
+        // the set, so their apparent idle gap is an illusion: never swap.
+        .filter(|s| !s.lifespan.is_max())
         .filter_map(|s| {
             let segs = segments(&s.eos);
             if segs.len() < 2 {

@@ -64,6 +64,27 @@ impl MemoryPool {
         }
     }
 
+    /// Release a region for the duration of an offload gap. The caller
+    /// (the swap runtime) has already copied the contents to the
+    /// secondary store; the gap-aware planner may hand the same address
+    /// range to other tensors until the region is reacquired. In debug
+    /// builds the region is poisoned with NaN so that any read of
+    /// evicted data is immediately visible in the numerics.
+    pub fn release_gap(&self, r: Region) {
+        #[cfg(debug_assertions)]
+        self.view_mut(r).fill(f32::NAN);
+        #[cfg(not(debug_assertions))]
+        let _ = r;
+    }
+
+    /// Reacquire a released region: copy the secondary-store bytes back.
+    /// Any gap-sharing tenant of this address range is dead by now — the
+    /// gap-aware planner reserves the range from one EO before the
+    /// owner's next use.
+    pub fn reacquire(&self, r: Region, data: &[f32]) {
+        self.view_mut(r)[..data.len()].copy_from_slice(data);
+    }
+
     /// Zero the whole arena (used between inference/training switches).
     pub fn clear(&self) {
         self.view_mut(Region {

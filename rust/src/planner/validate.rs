@@ -2,8 +2,38 @@
 //! occupy overlapping pool regions. Run after every plan (cheap —
 //! hundreds of tensors) and hammered by the property tests.
 
+use std::collections::HashSet;
+
 use crate::error::{Error, Result};
-use crate::tensor::TensorTable;
+use crate::planner::gapfit::intervals_overlap;
+use crate::planner::offload::{live_intervals, OffloadPlan};
+use crate::tensor::{TensorId, TensorTable};
+
+/// Shared structural check: the tensor has a region, it covers its dims,
+/// and it lies inside the pool. Returns the region.
+fn checked_region(
+    s: &crate::tensor::TensorSpec,
+    pool_len: usize,
+) -> Result<crate::tensor::Region> {
+    let r = s
+        .region
+        .ok_or_else(|| Error::planner(format!("tensor `{}` not assigned a region", s.name)))?;
+    if r.len < s.dim.len() {
+        return Err(Error::planner(format!(
+            "tensor `{}` region too small: {} < {}",
+            s.name,
+            r.len,
+            s.dim.len()
+        )));
+    }
+    if r.end() > pool_len {
+        return Err(Error::planner(format!(
+            "tensor `{}` region {:?} exceeds pool {}",
+            s.name, r, pool_len
+        )));
+    }
+    Ok(r)
+}
 
 /// Check the planner's core invariant. Also verifies every allocatable
 /// tensor received a region that fits its dims inside `pool_len`.
@@ -13,23 +43,7 @@ pub fn validate_plan(table: &TensorTable, pool_len: usize) -> Result<()> {
         if s.merged_into.is_some() || s.eos.is_empty() {
             continue;
         }
-        let r = s.region.ok_or_else(|| {
-            Error::planner(format!("tensor `{}` not assigned a region", s.name))
-        })?;
-        if r.len < s.dim.len() {
-            return Err(Error::planner(format!(
-                "tensor `{}` region too small: {} < {}",
-                s.name,
-                r.len,
-                s.dim.len()
-            )));
-        }
-        if r.end() > pool_len {
-            return Err(Error::planner(format!(
-                "tensor `{}` region {:?} exceeds pool {}",
-                s.name, r, pool_len
-            )));
-        }
+        let r = checked_region(s, pool_len)?;
         live.push((s.min_eo().unwrap(), s.max_eo().unwrap(), r.offset, r.end(), &s.name));
     }
     for i in 0..live.len() {
@@ -42,6 +56,45 @@ pub fn validate_plan(table: &TensorTable, pool_len: usize) -> Result<()> {
                 return Err(Error::planner(format!(
                     "live tensors overlap: `{}` [{},{}]@{}..{} vs `{}` [{},{}]@{}..{}",
                     a.4, a.0, a.1, a.2, a.3, b.4, b.0, b.1, b.2, b.3
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Gap-aware variant of [`validate_plan`]: under an [`OffloadPlan`], an
+/// offloaded tensor only occupies its region during its live segments
+/// (front-widened by the prefetch lead), so overlap is checked against
+/// interval *lists* rather than one `[min, max]` span per tensor.
+pub fn validate_gap_plan(
+    table: &TensorTable,
+    plan: &OffloadPlan,
+    pool_len: usize,
+) -> Result<()> {
+    let offloaded: HashSet<TensorId> = plan.entries.iter().map(|e| e.tensor).collect();
+    let mut live: Vec<(Vec<(u32, u32)>, usize, usize, &str)> = Vec::new();
+    for s in table.iter() {
+        if s.merged_into.is_some() || s.eos.is_empty() {
+            continue;
+        }
+        let r = checked_region(s, pool_len)?;
+        live.push((
+            live_intervals(s, offloaded.contains(&s.id)),
+            r.offset,
+            r.end(),
+            &s.name,
+        ));
+    }
+    for i in 0..live.len() {
+        for j in i + 1..live.len() {
+            let a = &live[i];
+            let b = &live[j];
+            let space_overlap = a.1 < b.3 && b.1 < a.3;
+            if space_overlap && intervals_overlap(&a.0, &b.0) {
+                return Err(Error::planner(format!(
+                    "live tensors overlap under offload plan: `{}` {:?}@{}..{} vs `{}` {:?}@{}..{}",
+                    a.3, a.0, a.1, a.2, b.3, b.0, b.1, b.2
                 )));
             }
         }

@@ -1,10 +1,26 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
-//! `python/compile/aot.py` and executes them on the request path.
-//! Python is never involved at runtime — the binary is self-contained
-//! once `make artifacts` has run.
+//! Runtime services.
+//!
+//! * `store` / `swap` — the proactive swap runtime: secondary-memory
+//!   stores and the EO-scheduled evict/prefetch engine that executes an
+//!   `OffloadPlan` during training (see DESIGN.md §Swap runtime).
+//! * `client` / `catalog` — PJRT runtime: loads the AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py` and executes them on
+//!   the request path. Python is never involved at runtime — the binary
+//!   is self-contained once `make artifacts` has run. The real client
+//!   needs the `xla` crate and is gated behind the `pjrt` feature; the
+//!   default (offline) build uses a stub that errors at construction.
 
 pub mod catalog;
+pub mod store;
+pub mod swap;
+
+#[cfg(feature = "pjrt")]
+pub mod client;
+#[cfg(not(feature = "pjrt"))]
+#[path = "client_stub.rs"]
 pub mod client;
 
 pub use catalog::ArtifactCatalog;
 pub use client::XlaRuntime;
+pub use store::{FileStore, HostStore, SecondaryStore, StoreKind};
+pub use swap::{SwapExec, SwapStats};

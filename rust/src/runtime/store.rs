@@ -1,0 +1,239 @@
+//! Secondary-memory stores backing the swap runtime (paper §6 future
+//! work: "dynamic off-loading using secondary memory").
+//!
+//! A store holds the bytes of evicted tensors between their idle-gap
+//! endpoints. Keys are offload-entry indices (stable for the life of a
+//! compiled model), so a tensor with several idle gaps per iteration uses
+//! one slot per gap. Two backends:
+//!
+//! * [`HostStore`] — an in-memory buffer pool; models swapping from a
+//!   fast primary arena (e.g. a device/TPU pool) to host RAM.
+//! * [`FileStore`] — a spill file in the OS temp directory; models
+//!   swapping to flash, the on-device case the paper targets.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+
+/// Byte sink/source for evicted tensors. Implementations must be cheap to
+/// call from the executor's hot loop (no allocation on the `put` path
+/// after warm-up) and `Send` so the prefetcher thread can own a handle.
+pub trait SecondaryStore: Send {
+    fn kind(&self) -> &'static str;
+    /// Store `data` under `key`, overwriting any previous contents.
+    fn put(&mut self, key: usize, data: &[f32]) -> Result<()>;
+    /// Read `key` back into `out` (exactly the length that was `put`).
+    fn get(&mut self, key: usize, out: &mut [f32]) -> Result<()>;
+}
+
+/// Which secondary store a memory-budgeted compile should use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreKind {
+    /// In-memory host buffers (default).
+    Host,
+    /// File-backed spill in the OS temp directory.
+    File,
+}
+
+impl Default for StoreKind {
+    fn default() -> Self {
+        StoreKind::Host
+    }
+}
+
+impl StoreKind {
+    pub fn instance(&self) -> Result<Box<dyn SecondaryStore>> {
+        Ok(match self {
+            StoreKind::Host => Box::new(HostStore::new()),
+            StoreKind::File => Box::new(FileStore::in_temp_dir()?),
+        })
+    }
+}
+
+/// In-memory secondary store: one buffer per offload entry, reused across
+/// iterations so steady-state swapping is allocation-free.
+#[derive(Default)]
+pub struct HostStore {
+    slots: HashMap<usize, Vec<f32>>,
+}
+
+impl HostStore {
+    pub fn new() -> Self {
+        HostStore::default()
+    }
+}
+
+impl SecondaryStore for HostStore {
+    fn kind(&self) -> &'static str {
+        "host"
+    }
+
+    fn put(&mut self, key: usize, data: &[f32]) -> Result<()> {
+        let slot = self.slots.entry(key).or_default();
+        slot.clear();
+        slot.extend_from_slice(data);
+        Ok(())
+    }
+
+    fn get(&mut self, key: usize, out: &mut [f32]) -> Result<()> {
+        let slot = self
+            .slots
+            .get(&key)
+            .ok_or_else(|| Error::Runtime(format!("swap store: key {key} was never put")))?;
+        if slot.len() != out.len() {
+            return Err(Error::Runtime(format!(
+                "swap store: key {key} holds {} f32s, asked for {}",
+                slot.len(),
+                out.len()
+            )));
+        }
+        out.copy_from_slice(slot);
+        Ok(())
+    }
+}
+
+static FILE_STORE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// File-backed secondary store. Slots are allocated append-only on first
+/// `put` and overwritten in place afterwards; the file is removed on drop.
+pub struct FileStore {
+    file: File,
+    path: PathBuf,
+    /// key → (byte offset, f32 length)
+    slots: HashMap<usize, (u64, usize)>,
+    end: u64,
+    scratch: Vec<u8>,
+}
+
+impl FileStore {
+    pub fn in_temp_dir() -> Result<Self> {
+        let seq = FILE_STORE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "nntrainer-swap-{}-{}.bin",
+            std::process::id(),
+            seq
+        ));
+        Self::create(path)
+    }
+
+    pub fn create(path: PathBuf) -> Result<Self> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)?;
+        Ok(FileStore { file, path, slots: HashMap::new(), end: 0, scratch: Vec::new() })
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for FileStore {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+impl SecondaryStore for FileStore {
+    fn kind(&self) -> &'static str {
+        "file"
+    }
+
+    fn put(&mut self, key: usize, data: &[f32]) -> Result<()> {
+        let offset = match self.slots.get(&key) {
+            Some(&(off, len)) if len == data.len() => off,
+            _ => {
+                let off = self.end;
+                self.end += (data.len() * 4) as u64;
+                self.slots.insert(key, (off, data.len()));
+                off
+            }
+        };
+        self.scratch.clear();
+        self.scratch.reserve(data.len() * 4);
+        for v in data {
+            self.scratch.extend_from_slice(&v.to_le_bytes());
+        }
+        self.file.seek(SeekFrom::Start(offset))?;
+        self.file.write_all(&self.scratch)?;
+        Ok(())
+    }
+
+    fn get(&mut self, key: usize, out: &mut [f32]) -> Result<()> {
+        let &(offset, len) = self
+            .slots
+            .get(&key)
+            .ok_or_else(|| Error::Runtime(format!("swap store: key {key} was never put")))?;
+        if len != out.len() {
+            return Err(Error::Runtime(format!(
+                "swap store: key {key} holds {len} f32s, asked for {}",
+                out.len()
+            )));
+        }
+        self.scratch.clear();
+        self.scratch.resize(len * 4, 0);
+        self.file.seek(SeekFrom::Start(offset))?;
+        self.file.read_exact(&mut self.scratch)?;
+        for (i, v) in out.iter_mut().enumerate() {
+            *v = f32::from_le_bytes([
+                self.scratch[4 * i],
+                self.scratch[4 * i + 1],
+                self.scratch[4 * i + 2],
+                self.scratch[4 * i + 3],
+            ]);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(store: &mut dyn SecondaryStore) {
+        let a = vec![1.0f32, -2.5, 3.25, f32::MIN_POSITIVE, -0.0];
+        let b = vec![9.0f32; 7];
+        store.put(0, &a).unwrap();
+        store.put(1, &b).unwrap();
+        let mut out = vec![0f32; a.len()];
+        store.get(0, &mut out).unwrap();
+        // bitwise: swap must preserve exact representations (incl. -0.0)
+        for (x, y) in out.iter().zip(a.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // overwrite in place
+        let a2 = vec![7.0f32; 5];
+        store.put(0, &a2).unwrap();
+        store.get(0, &mut out).unwrap();
+        assert_eq!(out, a2);
+        let mut out_b = vec![0f32; b.len()];
+        store.get(1, &mut out_b).unwrap();
+        assert_eq!(out_b, b);
+        // wrong length and missing key are errors
+        let mut wrong = vec![0f32; 3];
+        assert!(store.get(0, &mut wrong).is_err());
+        assert!(store.get(99, &mut out).is_err());
+    }
+
+    #[test]
+    fn host_roundtrip() {
+        roundtrip(&mut HostStore::new());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut s = FileStore::in_temp_dir().unwrap();
+        let path = s.path().to_path_buf();
+        roundtrip(&mut s);
+        assert!(path.exists());
+        drop(s);
+        assert!(!path.exists(), "spill file removed on drop");
+    }
+}

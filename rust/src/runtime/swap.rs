@@ -1,0 +1,450 @@
+//! Proactive swap runtime: executes an [`OffloadPlan`] during training.
+//!
+//! The paper's stated future work — "we can swap in and out proactively
+//! in background" — falls out of Algorithm 1's execution orders: every
+//! tensor access point is known before training starts, so eviction and
+//! prefetch are *scheduled*, not demand-paged. The protocol, per training
+//! step at execution order `e`:
+//!
+//! 1. **pre-step** — complete every prefetch whose `prefetch_before` is
+//!    within [`PREFETCH_LEAD`] of `e`: copy the staged bytes back into the
+//!    tensor's pool region ([`MemoryPool::reacquire`]). If the background
+//!    fetch has not finished, block (counted as swap stall); if it was
+//!    never issued (gap shorter than the issue horizon), fetch inline.
+//! 2. **residency guard** — no offloaded tensor may be `Evicted` or
+//!    `Fetching` at one of its own use EOs. Any violation means the plan
+//!    and the runtime have drifted; the step fails loudly instead of
+//!    computing on poisoned data.
+//! 3. **execute the layer phase** (the executor's job).
+//! 4. **post-step** — evict every entry with `evict_after == e`: copy the
+//!    region to the [`SecondaryStore`], release it
+//!    ([`MemoryPool::release_gap`]), then top up the background prefetch
+//!    queue (double-buffered: up to [`PREFETCH_DEPTH`] fetches in flight).
+//!
+//! The background thread only ever touches the store and its own staging
+//! buffers — never the pool — so the pool stays single-threaded; the main
+//! thread performs every region copy at a deterministic point in the step
+//! order, which is what keeps swapped and unswapped training bitwise
+//! identical (see `rust/tests/swap_equivalence.rs`).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::planner::offload::{OffloadPlan, PREFETCH_LEAD};
+use crate::planner::pool::MemoryPool;
+use crate::tensor::{Region, Residency, TensorId, TensorTable};
+
+use super::store::SecondaryStore;
+
+/// Number of background prefetches kept in flight (double buffering).
+pub const PREFETCH_DEPTH: usize = 2;
+
+/// One scheduled gap of one tensor (a tensor with several idle gaps per
+/// iteration has one entry per gap).
+struct SwapEntry {
+    tensor: TensorId,
+    name: String,
+    region: Region,
+    evict_after: u32,
+    prefetch_before: u32,
+}
+
+/// Use points of an offloaded root tensor, for the residency guard.
+struct RootInfo {
+    name: String,
+    eos: Vec<u32>,
+}
+
+enum Req {
+    Fetch(usize),
+    Stop,
+}
+
+/// Cumulative swap-runtime counters (whole run, not per iteration).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SwapStats {
+    pub evictions: u64,
+    pub prefetches: u64,
+    /// Prefetches that had to run inline on the training thread because
+    /// the gap was shorter than the issue horizon.
+    pub sync_fetches: u64,
+    pub bytes_out: u64,
+    pub bytes_in: u64,
+    /// Wall time the training thread spent waiting on swap-ins.
+    pub stall_ns: u64,
+}
+
+impl SwapStats {
+    pub fn stall_ms(&self) -> f64 {
+        self.stall_ns as f64 / 1e6
+    }
+}
+
+/// Executable swap schedule bound to one compiled model's pool layout.
+pub struct SwapExec {
+    entries: Vec<SwapEntry>,
+    plan: OffloadPlan,
+    /// EO → entries to evict right after the step at that EO.
+    evict_at: HashMap<u32, Vec<usize>>,
+    /// Entry indices sorted by `prefetch_before` — both the completion
+    /// barrier order and the background issue order.
+    by_prefetch: Vec<usize>,
+    roots: HashMap<TensorId, RootInfo>,
+    residency: HashMap<TensorId, Residency>,
+    // per-iteration entry state
+    evicted: Vec<bool>,
+    issued: Vec<bool>,
+    restored: Vec<bool>,
+    staged: HashMap<usize, Vec<f32>>,
+    failed: HashMap<usize, Error>,
+    next_due: usize,
+    issue_cursor: usize,
+    outstanding: usize,
+    store: Arc<Mutex<Box<dyn SecondaryStore>>>,
+    store_kind: &'static str,
+    req_tx: Sender<Req>,
+    done_rx: Receiver<(usize, Result<Vec<f32>>)>,
+    /// Staging buffers handed back to the worker for reuse, keeping the
+    /// steady-state prefetch path allocation-free.
+    recycle_tx: Sender<Vec<f32>>,
+    worker: Option<JoinHandle<()>>,
+    pub stats: SwapStats,
+}
+
+impl SwapExec {
+    /// Build the schedule from a planned table (regions assigned by the
+    /// gap-aware planner) and spawn the background prefetcher.
+    pub fn new(
+        table: &TensorTable,
+        plan: &OffloadPlan,
+        store: Box<dyn SecondaryStore>,
+    ) -> Result<SwapExec> {
+        let mut entries = Vec::with_capacity(plan.entries.len());
+        let mut roots: HashMap<TensorId, RootInfo> = HashMap::new();
+        let mut residency: HashMap<TensorId, Residency> = HashMap::new();
+        for e in &plan.entries {
+            let s = table.get(e.tensor);
+            if e.evict_after >= e.prefetch_before {
+                return Err(Error::planner(format!(
+                    "offload entry for `{}` has an empty gap ({} >= {})",
+                    s.name, e.evict_after, e.prefetch_before
+                )));
+            }
+            let region = s.region.ok_or_else(|| {
+                Error::planner(format!("offloaded tensor `{}` has no region", s.name))
+            })?;
+            entries.push(SwapEntry {
+                tensor: e.tensor,
+                name: s.name.clone(),
+                region,
+                evict_after: e.evict_after,
+                prefetch_before: e.prefetch_before,
+            });
+            roots
+                .entry(e.tensor)
+                .or_insert_with(|| RootInfo { name: s.name.clone(), eos: s.eos.clone() });
+            residency.insert(e.tensor, Residency::Resident);
+        }
+        let n = entries.len();
+        let mut evict_at: HashMap<u32, Vec<usize>> = HashMap::new();
+        for (i, e) in entries.iter().enumerate() {
+            evict_at.entry(e.evict_after).or_default().push(i);
+        }
+        let mut by_prefetch: Vec<usize> = (0..n).collect();
+        by_prefetch.sort_by_key(|&i| (entries[i].prefetch_before, i));
+
+        let store_kind = store.kind();
+        let store = Arc::new(Mutex::new(store));
+        let (req_tx, req_rx) = channel::<Req>();
+        let (done_tx, done_rx) = channel::<(usize, Result<Vec<f32>>)>();
+        let (recycle_tx, recycle_rx) = channel::<Vec<f32>>();
+        let lens: Vec<usize> = entries.iter().map(|e| e.region.len).collect();
+        let wstore = Arc::clone(&store);
+        let worker = std::thread::Builder::new()
+            .name("nntrainer-prefetch".into())
+            .spawn(move || {
+                while let Ok(req) = req_rx.recv() {
+                    match req {
+                        Req::Fetch(i) => {
+                            // reuse a returned staging buffer when one is
+                            // available — steady state allocates nothing
+                            let mut buf = recycle_rx.try_recv().unwrap_or_default();
+                            if buf.len() != lens[i] {
+                                buf.resize(lens[i], 0.0);
+                            }
+                            let res = wstore.lock().unwrap().get(i, &mut buf).map(|()| buf);
+                            if done_tx.send((i, res)).is_err() {
+                                break;
+                            }
+                        }
+                        Req::Stop => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn prefetch thread: {e}")))?;
+
+        Ok(SwapExec {
+            entries,
+            plan: plan.clone(),
+            evict_at,
+            by_prefetch,
+            roots,
+            residency,
+            evicted: vec![false; n],
+            issued: vec![false; n],
+            restored: vec![false; n],
+            staged: HashMap::new(),
+            failed: HashMap::new(),
+            next_due: 0,
+            issue_cursor: 0,
+            outstanding: 0,
+            store,
+            store_kind,
+            req_tx,
+            done_rx,
+            recycle_tx,
+            worker: Some(worker),
+            stats: SwapStats::default(),
+        })
+    }
+
+    pub fn plan(&self) -> &OffloadPlan {
+        &self.plan
+    }
+
+    pub fn store_kind(&self) -> &'static str {
+        self.store_kind
+    }
+
+    pub fn n_entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn residency_of(&self, root: TensorId) -> Option<Residency> {
+        self.residency.get(&root).copied()
+    }
+
+    /// Reset per-iteration state. Every entry must have been restored by
+    /// the previous iteration's `end_iteration`.
+    pub fn begin_iteration(&mut self) -> Result<()> {
+        if self.outstanding != 0 || !self.staged.is_empty() {
+            return Err(Error::Runtime(
+                "swap runtime: stale prefetches at iteration start".into(),
+            ));
+        }
+        self.evicted.iter_mut().for_each(|v| *v = false);
+        self.issued.iter_mut().for_each(|v| *v = false);
+        self.restored.iter_mut().for_each(|v| *v = false);
+        self.residency.values_mut().for_each(|r| *r = Residency::Resident);
+        self.failed.clear();
+        self.next_due = 0;
+        self.issue_cursor = 0;
+        Ok(())
+    }
+
+    /// Complete every prefetch due at or before the step at `eo`.
+    pub fn pre_step(&mut self, eo: u32, pool: &MemoryPool) -> Result<()> {
+        while self.next_due < self.by_prefetch.len() {
+            let idx = self.by_prefetch[self.next_due];
+            if self.entries[idx].prefetch_before > eo.saturating_add(PREFETCH_LEAD) {
+                break;
+            }
+            self.finish_prefetch(idx, pool)?;
+            self.next_due += 1;
+        }
+        Ok(())
+    }
+
+    /// The residency guard: no offloaded tensor may be away from primary
+    /// memory at one of its own use EOs. Catches plan/runtime drift (and
+    /// deliberately corrupted plans) before a layer computes on poison.
+    pub fn check_residency(&self, eo: u32) -> Result<()> {
+        for (id, info) in &self.roots {
+            let state = self.residency.get(id).copied().unwrap_or(Residency::Resident);
+            if state != Residency::Resident && info.eos.binary_search(&eo).is_ok() {
+                return Err(Error::Runtime(format!(
+                    "residency violation: `{}` is {:?} at EO {eo}, one of its use points — \
+                     the offload plan and the swap runtime have drifted",
+                    info.name, state
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Evict entries whose gap starts after the step at `eo`, then top up
+    /// the background prefetch queue.
+    pub fn post_step(&mut self, eo: u32, pool: &MemoryPool) -> Result<()> {
+        if let Some(idxs) = self.evict_at.get(&eo) {
+            for &idx in idxs {
+                let e = &self.entries[idx];
+                self.store.lock().unwrap().put(idx, pool.view(e.region))?;
+                pool.release_gap(e.region);
+                self.evicted[idx] = true;
+                self.residency.insert(e.tensor, Residency::Evicted);
+                self.stats.evictions += 1;
+                self.stats.bytes_out += (e.region.len * 4) as u64;
+            }
+        }
+        self.drain_completions();
+        self.pump_issues();
+        Ok(())
+    }
+
+    /// Restore everything still out (e.g. a final gap whose prefetch EO
+    /// has no step in this schedule) so weights/outputs can be read and
+    /// the next iteration starts clean.
+    pub fn end_iteration(&mut self, pool: &MemoryPool) -> Result<()> {
+        for k in 0..self.by_prefetch.len() {
+            let idx = self.by_prefetch[k];
+            if !self.restored[idx] {
+                self.finish_prefetch(idx, pool)?;
+            }
+        }
+        self.next_due = self.by_prefetch.len();
+        while self.outstanding > 0 {
+            match self.done_rx.recv() {
+                Ok((i, res)) => {
+                    self.outstanding -= 1;
+                    if let Ok(data) = res {
+                        self.staged.insert(i, data);
+                    }
+                }
+                Err(_) => return Err(Error::Runtime("swap prefetch thread died".into())),
+            }
+        }
+        self.staged.clear();
+        Ok(())
+    }
+
+    fn finish_prefetch(&mut self, idx: usize, pool: &MemoryPool) -> Result<()> {
+        if self.restored[idx] {
+            return Ok(());
+        }
+        if !self.evicted[idx] {
+            // the gap never opened this iteration — data is still in the
+            // pool region, nothing to copy
+            self.restored[idx] = true;
+            return Ok(());
+        }
+        if let Some(err) = self.failed.remove(&idx) {
+            return Err(err);
+        }
+        if let Some(data) = self.staged.remove(&idx) {
+            pool.reacquire(self.entries[idx].region, &data);
+            let _ = self.recycle_tx.send(data);
+        } else if self.issued[idx] {
+            // in flight — wait for the worker (this is the swap stall)
+            let t0 = Instant::now();
+            loop {
+                match self.done_rx.recv() {
+                    Ok((i, res)) => {
+                        self.outstanding -= 1;
+                        match res {
+                            Ok(data) => {
+                                if i == idx {
+                                    pool.reacquire(self.entries[idx].region, &data);
+                                    let _ = self.recycle_tx.send(data);
+                                    self.stats.stall_ns += t0.elapsed().as_nanos() as u64;
+                                    break;
+                                }
+                                self.staged.insert(i, data);
+                            }
+                            Err(err) => {
+                                if i == idx {
+                                    return Err(err);
+                                }
+                                // unrelated entry failed: record it there,
+                                // keep waiting for ours
+                                self.failed.insert(i, err);
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        return Err(Error::Runtime("swap prefetch thread died".into()))
+                    }
+                }
+            }
+        } else {
+            // never issued (gap shorter than the issue horizon): inline
+            let t0 = Instant::now();
+            let region = self.entries[idx].region;
+            let mut buf = vec![0f32; region.len];
+            self.store.lock().unwrap().get(idx, &mut buf)?;
+            pool.reacquire(region, &buf);
+            self.stats.sync_fetches += 1;
+            self.stats.stall_ns += t0.elapsed().as_nanos() as u64;
+        }
+        self.restored[idx] = true;
+        self.residency.insert(self.entries[idx].tensor, Residency::Resident);
+        self.stats.prefetches += 1;
+        self.stats.bytes_in += (self.entries[idx].region.len * 4) as u64;
+        self.pump_issues();
+        Ok(())
+    }
+
+    fn drain_completions(&mut self) {
+        while let Ok((i, res)) = self.done_rx.try_recv() {
+            self.outstanding -= 1;
+            match res {
+                Ok(data) => {
+                    self.staged.insert(i, data);
+                }
+                Err(err) => {
+                    self.failed.insert(i, err);
+                }
+            }
+        }
+    }
+
+    /// Issue background fetches in deadline (`prefetch_before`) order, up
+    /// to [`PREFETCH_DEPTH`] in flight. An entry not yet evicted blocks
+    /// the queue — issuing later-deadline entries first would let a slow
+    /// fetch starve an earlier barrier.
+    fn pump_issues(&mut self) {
+        while self.outstanding < PREFETCH_DEPTH && self.issue_cursor < self.by_prefetch.len() {
+            let idx = self.by_prefetch[self.issue_cursor];
+            if self.restored[idx] || self.issued[idx] {
+                self.issue_cursor += 1;
+                continue;
+            }
+            if !self.evicted[idx] {
+                break;
+            }
+            if self.req_tx.send(Req::Fetch(idx)).is_err() {
+                break; // worker gone; the sync fallback will surface it
+            }
+            self.issued[idx] = true;
+            self.residency.insert(self.entries[idx].tensor, Residency::Fetching);
+            self.outstanding += 1;
+            self.issue_cursor += 1;
+        }
+    }
+
+    /// Test hook: move one entry's prefetch deadline, desynchronizing the
+    /// schedule from the plan — the residency guard must then trip.
+    #[doc(hidden)]
+    pub fn delay_prefetch_for_test(&mut self, entry: usize, new_prefetch_before: u32) {
+        self.entries[entry].prefetch_before = new_prefetch_before;
+        self.by_prefetch
+            .sort_by_key(|&i| (self.entries[i].prefetch_before, i));
+    }
+
+    /// Name of an entry's tensor (diagnostics, tests).
+    pub fn entry_tensor_name(&self, entry: usize) -> &str {
+        &self.entries[entry].name
+    }
+}
+
+impl Drop for SwapExec {
+    fn drop(&mut self) {
+        let _ = self.req_tx.send(Req::Stop);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -91,6 +91,24 @@ pub enum CreateMode {
 /// Index of a tensor request within a `TensorTable`.
 pub type TensorId = usize;
 
+/// Primary-memory residency of a tensor under the swap runtime
+/// (`runtime::swap`). Outside a memory-budgeted run every tensor is
+/// `Resident` for its whole life; with an `OffloadPlan` active, offloaded
+/// tensors cycle `Resident → Evicted → Fetching → Resident` across each
+/// idle gap. Layers must only ever observe `Resident` tensors — the
+/// executor's residency guard enforces this at every step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Residency {
+    /// Data is valid in the tensor's pool region.
+    Resident,
+    /// Data lives in the secondary store; the pool region may be reused
+    /// by other tensors during the gap.
+    Evicted,
+    /// A background prefetch has been issued but not yet copied into the
+    /// pool region.
+    Fetching,
+}
+
 /// What role the tensor plays — used for reporting (Fig 9's breakdown),
 /// optimizer hookup and transfer-learning freezes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -6,5 +6,5 @@ pub mod lifespan;
 pub mod spec;
 
 pub use dims::TensorDim;
-pub use lifespan::{CreateMode, Lifespan, TensorId, TensorRole};
+pub use lifespan::{CreateMode, Lifespan, Residency, TensorId, TensorRole};
 pub use spec::{Initializer, Region, TensorSpec, TensorTable};

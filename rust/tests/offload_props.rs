@@ -1,0 +1,244 @@
+//! Offload-advisor property tests over seeded random tensor tables, plus
+//! gap-aware-planner validation on the same populations. The advisor is
+//! pure analysis (Algorithm-1 EOs in, swap schedule out), so its
+//! invariants can be hammered without running a model:
+//!
+//! * every entry's gap is genuinely idle (`evict_after < prefetch_before`,
+//!   no use EO strictly inside, both endpoints are real use EOs)
+//! * only idle-capable roles are offloaded, never weights/grads/opt state
+//! * the advised peak never exceeds the unswapped peak, and never
+//!   increases when the budget shrinks
+//! * swap traffic is monotone: a smaller budget swaps at least as much
+//! * `fits` is exactly `primary_peak_bytes <= budget`
+//! * the gap-aware planner realizes every plan into a validated layout
+
+use nntrainer::planner::offload::{advise, segments, OffloadPlan};
+use nntrainer::planner::validate::{validate_gap_plan, validate_merges};
+use nntrainer::planner::{GapFitPlanner, Planner};
+use nntrainer::rng::Rng;
+use nntrainer::tensor::{
+    CreateMode, Initializer, Lifespan, TensorDim, TensorRole, TensorTable,
+};
+
+const EO_SPAN: u32 = 48;
+
+/// A random table of Create-mode tensors with sorted, deduped EO sets —
+/// the shape `init_graph` + `finish_orders` hands the planners.
+fn random_table(rng: &mut Rng) -> TensorTable {
+    let mut t = TensorTable::new();
+    let n = 3 + rng.below(18);
+    for i in 0..n {
+        let role = match rng.below(6) {
+            0 => TensorRole::Weight,
+            1 => TensorRole::Gradient,
+            2 => TensorRole::Temp,
+            3 => TensorRole::Derivative,
+            4 => TensorRole::OptState,
+            _ => TensorRole::Activation,
+        };
+        let len = 1 + rng.below(512);
+        let id = t
+            .request(
+                format!("t{i}"),
+                TensorDim::vec(1, len),
+                role,
+                CreateMode::Create,
+                Initializer::None,
+            )
+            .unwrap();
+        if matches!(role, TensorRole::Weight | TensorRole::OptState) {
+            t.add_eo(id, 0, Lifespan::MAX);
+            t.add_eo(id, EO_SPAN, Lifespan::MAX);
+        } else {
+            let uses = 1 + rng.below(6);
+            for _ in 0..uses {
+                t.add_eo(id, rng.below(EO_SPAN as usize) as u32, Lifespan::FORWARD);
+            }
+        }
+    }
+    t.finish_orders();
+    t
+}
+
+fn check_entries(t: &TensorTable, plan: &OffloadPlan) {
+    let mut traffic = 0usize;
+    for e in &plan.entries {
+        let s = t.get(e.tensor);
+        assert!(
+            e.evict_after < e.prefetch_before,
+            "`{}`: empty gap {} >= {}",
+            e.name,
+            e.evict_after,
+            e.prefetch_before
+        );
+        assert!(
+            !matches!(
+                s.role,
+                TensorRole::Weight
+                    | TensorRole::Gradient
+                    | TensorRole::OptState
+                    | TensorRole::Input
+            ),
+            "`{}`: role {:?} must never be offloaded",
+            e.name,
+            s.role
+        );
+        assert!(!s.is_placeholder(), "`{}`: placeholders are externally bound", e.name);
+        assert!(s.merged_into.is_none(), "`{}`: only roots get entries", e.name);
+        // gap endpoints are real uses; the interior is genuinely idle
+        assert!(s.eos.binary_search(&e.evict_after).is_ok());
+        assert!(s.eos.binary_search(&e.prefetch_before).is_ok());
+        for &eo in &s.eos {
+            assert!(
+                !(eo > e.evict_after && eo < e.prefetch_before),
+                "`{}`: use EO {eo} inside gap ({}, {})",
+                e.name,
+                e.evict_after,
+                e.prefetch_before
+            );
+        }
+        assert_eq!(e.bytes, s.dim.bytes());
+        traffic += 2 * e.bytes;
+    }
+    assert_eq!(traffic, plan.swap_bytes_per_iter, "traffic accounting drifted");
+}
+
+#[test]
+fn advisor_invariants_random_tables() {
+    let mut rng = Rng::new(20260731);
+    for case in 0..200 {
+        let t = random_table(&mut rng);
+        let full = advise(&t, usize::MAX);
+        assert!(full.entries.is_empty(), "case {case}: unconstrained budget swapped");
+        assert!(full.fits);
+        let unswapped_peak = full.primary_peak_bytes;
+
+        // shrinking budgets: peak and traffic must be monotone
+        let budgets = [
+            unswapped_peak,
+            unswapped_peak * 3 / 4,
+            unswapped_peak / 2,
+            unswapped_peak / 4,
+            1,
+        ];
+        let mut prev_peak = usize::MAX;
+        let mut prev_traffic = 0usize;
+        for &budget in &budgets {
+            let plan = advise(&t, budget);
+            check_entries(&t, &plan);
+            assert!(
+                plan.primary_peak_bytes <= unswapped_peak,
+                "case {case}: advised peak above unswapped peak"
+            );
+            assert!(
+                plan.primary_peak_bytes <= prev_peak,
+                "case {case}: peak grew as the budget shrank"
+            );
+            assert!(
+                plan.swap_bytes_per_iter >= prev_traffic,
+                "case {case}: traffic shrank as the budget shrank"
+            );
+            assert_eq!(
+                plan.fits,
+                plan.primary_peak_bytes <= budget,
+                "case {case}: fits flag inconsistent with peak/budget"
+            );
+            prev_peak = plan.primary_peak_bytes;
+            prev_traffic = plan.swap_bytes_per_iter;
+        }
+    }
+}
+
+#[test]
+fn gapfit_realizes_every_plan() {
+    let mut rng = Rng::new(777);
+    for case in 0..100 {
+        let mut t = random_table(&mut rng);
+        let full_peak = advise(&t, usize::MAX).primary_peak_bytes;
+        let budget = match case % 3 {
+            0 => full_peak / 2,
+            1 => full_peak / 4,
+            _ => 1,
+        };
+        let plan = advise(&t, budget);
+        let pool_len = GapFitPlanner { plan: &plan }.plan(&mut t).unwrap();
+        validate_gap_plan(&t, &plan, pool_len).unwrap();
+        validate_merges(&t).unwrap();
+        // the realized pool can never beat the advised live-set bound
+        assert!(
+            pool_len * 4 >= plan.primary_peak_bytes,
+            "case {case}: pool {} below the analytic bound {}",
+            pool_len * 4,
+            plan.primary_peak_bytes
+        );
+    }
+}
+
+#[test]
+fn segments_and_gaps_agree() {
+    let mut rng = Rng::new(9);
+    for _ in 0..100 {
+        let t = random_table(&mut rng);
+        let plan = advise(&t, 1); // offload everything offloadable
+        // per tensor: entries == consecutive-segment windows
+        for s in t.iter() {
+            let n_entries = plan.entries.iter().filter(|e| e.tensor == s.id).count();
+            if n_entries > 0 {
+                let segs = segments(&s.eos);
+                assert_eq!(
+                    n_entries,
+                    segs.len() - 1,
+                    "`{}`: one entry per idle gap",
+                    s.name
+                );
+            }
+        }
+    }
+}
+
+/// Real-model sanity on top of the synthetic populations: the conv stack
+/// from the advisor's unit tests, through graph init, at a 75% budget.
+#[test]
+fn real_model_plan_realizes() {
+    use nntrainer::compiler::realizer::realize_all;
+    use nntrainer::exec::{init_graph, InitOptions};
+    use nntrainer::graph::{Graph, NodeDesc};
+    use nntrainer::layers::{builtin_factories, Props};
+
+    let nodes = vec![
+        NodeDesc::new("in", "input", Props::from_pairs([("input_shape", "4:16:16")])),
+        NodeDesc::new(
+            "c0",
+            "conv2d",
+            Props::from_pairs([("filters", "16"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        ),
+        NodeDesc::new(
+            "c1",
+            "conv2d",
+            Props::from_pairs([("filters", "16"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        ),
+        NodeDesc::new(
+            "c2",
+            "conv2d",
+            Props::from_pairs([("filters", "16"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        ),
+        NodeDesc::new("flat", "flatten", Props::new()),
+        NodeDesc::new("fc", "fully_connected", Props::from_pairs([("unit", "10")])),
+        NodeDesc::new("loss", "mse", Props::new()),
+    ];
+    let graph = Graph::wire(realize_all(nodes).unwrap()).unwrap();
+    let mut ig = init_graph(
+        &graph,
+        &builtin_factories(),
+        &InitOptions { batch: 32, ..Default::default() },
+    )
+    .unwrap();
+    let full = advise(&ig.table, usize::MAX).primary_peak_bytes;
+    let plan = advise(&ig.table, full * 75 / 100);
+    assert!(plan.fits);
+    check_entries(&ig.table, &plan);
+    let pool_len = GapFitPlanner { plan: &plan }.plan(&mut ig.table).unwrap();
+    validate_gap_plan(&ig.table, &plan, pool_len).unwrap();
+    assert!(pool_len * 4 >= plan.primary_peak_bytes);
+    assert!(pool_len * 4 < full, "gap-aware planning must beat the unswapped peak");
+}
