@@ -1,44 +1,45 @@
-//! Batch-size under a memory budget (the Fig 11 story, as a tool): given
-//! a model and a device budget (512 MiB in the paper), report the largest
-//! feasible batch per allocation profile — computable *before* any
-//! training because the planner knows the peak in advance.
+//! Batch-size under a memory budget (the Fig 11 story, as an API): give
+//! `compile_for` a [`DeviceProfile`] with a budget and *no explicit
+//! batch*, and the session auto-selects the largest batch whose planned
+//! pool fits — the ROADMAP's budget-aware batch scheduler, computable
+//! before any training because the planner knows the peak in advance.
+//! (The seed did this by hand with a power-of-two sweep; the search now
+//! lives behind `Session::compile_for` and returns the exact maximum.)
 //!
-//! Three profiles: the conventional-framework emulation, the NNTrainer
-//! planner, and the NNTrainer planner **plus the proactive swap runtime**
-//! (idle-gap tensors spend forward→backward gaps in secondary memory, so
-//! the primary pool shrinks further and the feasible batch grows).
+//! Three device profiles: the conventional-framework emulation, the
+//! NNTrainer planner, and the NNTrainer planner **plus the proactive
+//! swap runtime** (idle-gap tensors spend forward→backward gaps in
+//! secondary memory, so the primary pool shrinks further and the
+//! feasible batch grows).
 //!
 //! ```sh
 //! cargo run --release --example batch_budget [budget_mib]
 //! ```
 
-use nntrainer::compiler::CompileOpts;
 use nntrainer::metrics::{BASELINE_NNTRAINER_MIB, BASELINE_TENSORFLOW_MIB, MIB};
-use nntrainer::model::{zoo, Model, ModelBuilder};
+use nntrainer::model::{zoo, DeviceProfile, Session, TrainSpec};
 use nntrainer::planner::PlannerKind;
 
-fn compile(batch: usize, planner: PlannerKind, conventional: bool, budget: Option<usize>) -> Model {
-    ModelBuilder::new()
-        .add_nodes(zoo::model_a_linear())
+struct Row {
+    batch: usize,
+    pool_bytes: usize,
+    fits: bool,
+}
+
+/// Compile model A (Linear) with automatic batch selection under the
+/// profile's budget; the session (and its pool) is dropped before the
+/// next profile compiles, so the profiles don't stack in memory.
+fn auto_row(profile: DeviceProfile) -> Row {
+    let cs = Session::describe(zoo::model_a_linear())
         .optimizer("sgd", &[])
-        .compile(&CompileOpts {
-            batch,
-            planner,
-            conventional,
-            inplace: !conventional,
-            memory_budget_bytes: budget,
-            ..Default::default()
-        })
-        .expect("compile")
-}
-
-fn peak_mib(batch: usize, planner: PlannerKind, conventional: bool) -> f64 {
-    compile(batch, planner, conventional, None).peak_pool_bytes() as f64 / MIB
-}
-
-/// Pool under the swap runtime, targeting the whole post-baseline budget.
-fn swap_peak_mib(batch: usize, target_bytes: usize) -> f64 {
-    compile(batch, PlannerKind::Sorting, false, Some(target_bytes)).peak_pool_bytes() as f64 / MIB
+        .configure(TrainSpec { batch: None, ..Default::default() })
+        .compile_for(profile)
+        .expect("compile");
+    Row {
+        batch: cs.batch(),
+        pool_bytes: cs.peak_pool_bytes(),
+        fits: cs.fits_budget() == Some(true),
+    }
 }
 
 fn main() {
@@ -46,53 +47,59 @@ fn main() {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(512.0);
-    println!("model A (Linear), budget {budget} MiB (incl. framework baseline)\n");
+    println!("model A (Linear), device budget {budget} MiB (incl. framework baseline)\n");
     // Framework baselines from paper §5.1: NNTrainer 12.3 MiB, TF 337.8 MiB.
+    let nn_pool = ((budget - BASELINE_NNTRAINER_MIB).max(1.0) * MIB) as usize;
+    let conv_pool = ((budget - BASELINE_TENSORFLOW_MIB).max(1.0) * MIB) as usize;
+
+    let conv = auto_row(DeviceProfile {
+        memory_budget_bytes: Some(conv_pool),
+        ..DeviceProfile::conventional()
+    });
+    let nn = auto_row(DeviceProfile {
+        memory_budget_bytes: Some(nn_pool),
+        swap: false,
+        ..DeviceProfile::default()
+    });
+    let swapped = auto_row(DeviceProfile {
+        memory_budget_bytes: Some(nn_pool),
+        swap: true,
+        planner: PlannerKind::Sorting,
+        ..DeviceProfile::default()
+    });
+
+    // both columns baseline-inclusive: pool+baseline vs the device budget
     println!(
-        "{:>6} {:>22} {:>20} {:>26}",
-        "batch", "nntrainer (pool+12.3)", "  +swap (pool+12.3)", "conventional (pool+337.8)"
+        "{:>26} {:>10} {:>16} {:>12} {:>6}",
+        "profile", "batch", "pool+base MiB", "budget MiB", "fits"
     );
-    let swap_target = ((budget - BASELINE_NNTRAINER_MIB).max(1.0) * MIB) as usize;
-    let mut max_nn = 0usize;
-    let mut max_swap = 0usize;
-    let mut max_conv = 0usize;
-    for shift in 0..9 {
-        let b = 1usize << shift;
-        let nn = peak_mib(b, PlannerKind::Sorting, false) + BASELINE_NNTRAINER_MIB;
-        let sw = swap_peak_mib(b, swap_target) + BASELINE_NNTRAINER_MIB;
-        let conv = peak_mib(b, PlannerKind::Naive, true) + BASELINE_TENSORFLOW_MIB;
-        let nn_ok = nn <= budget;
-        let sw_ok = sw <= budget;
-        let conv_ok = conv <= budget;
-        if nn_ok {
-            max_nn = b;
-        }
-        if sw_ok {
-            max_swap = b;
-        }
-        if conv_ok {
-            max_conv = b;
-        }
+    for (name, baseline, row) in [
+        ("conventional (TF base)", BASELINE_TENSORFLOW_MIB, &conv),
+        ("nntrainer", BASELINE_NNTRAINER_MIB, &nn),
+        ("nntrainer + swap runtime", BASELINE_NNTRAINER_MIB, &swapped),
+    ] {
         println!(
-            "{b:>6} {:>18.1} {} {:>16.1} {} {:>22.1} {}",
-            nn,
-            if nn_ok { "ok " } else { "OVER" },
-            sw,
-            if sw_ok { "ok " } else { "OVER" },
-            conv,
-            if conv_ok { "ok " } else { "OVER" }
+            "{:>26} {:>10} {:>16.1} {:>12.1} {:>6}",
+            name,
+            row.batch,
+            row.pool_bytes as f64 / MIB + baseline,
+            budget,
+            if row.fits { "yes" } else { "no" },
         );
     }
+
     println!(
-        "\nlargest feasible batch: nntrainer-profile {max_nn}, with swap runtime {max_swap}, \
-         conventional-profile {max_conv}"
+        "\nlargest feasible batch: nntrainer-profile {}, with swap runtime {}, \
+         conventional-profile {}",
+        nn.batch, swapped.batch, conv.batch
     );
     println!(
         "(paper Fig 11: NNTrainer trains at batch 128 under 512 MiB; TensorFlow \
          exceeds it from batch 16 — baselines {BASELINE_NNTRAINER_MIB}/{BASELINE_TENSORFLOW_MIB} MiB from §5.1. \
-         The swap column is this repo's extension: the proactive swap runtime executes the \
-         offload advisor's plan, so the pool undercuts even the gap-free optimum.)"
+         The swap row is this repo's extension: the proactive swap runtime executes the \
+         offload advisor's plan, so the pool undercuts even the gap-free optimum — and \
+         the batch search, which probes plans without allocating, rides it automatically.)"
     );
-    assert!(max_nn > max_conv);
-    assert!(max_swap >= max_nn);
+    assert!(nn.batch > conv.batch, "planner profile must beat conventional");
+    assert!(swapped.batch >= nn.batch, "swap runtime must never shrink the batch");
 }

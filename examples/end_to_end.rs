@@ -16,10 +16,9 @@
 //! make artifacts && cargo run --release --example end_to_end
 //! ```
 
-use nntrainer::compiler::CompileOpts;
 use nntrainer::dataset::{BatchQueue, DataProducer, DigitsProducer};
 use nntrainer::metrics::Timer;
-use nntrainer::model::{zoo, ModelBuilder};
+use nntrainer::model::{zoo, DeviceProfile, Session, TrainSpec};
 use nntrainer::rng::Rng;
 use nntrainer::runtime::catalog::{self, ArtifactCatalog};
 use nntrainer::runtime::XlaRuntime;
@@ -80,11 +79,12 @@ fn main() -> nntrainer::Result<()> {
     let xla_time = timer.elapsed_s();
     println!("XLA path: {steps} steps in {xla_time:.2}s ({:.1} steps/s)", steps as f64 / xla_time);
 
-    // ---------------- native path (NNTrainer engine) --------------------
-    let mut model = ModelBuilder::new()
-        .add_nodes(zoo::mlp_e2e())
+    // ---------------- native path (NNTrainer engine, session API) -------
+    let mut session = Session::describe(zoo::mlp_e2e())
         .optimizer("sgd", &[("learning_rate", "0.5")]) // = MLP_LR in model.py
-        .compile(&CompileOpts { batch: bsz, ..Default::default() })?;
+        .configure(TrainSpec { batch: Some(bsz), ..Default::default() })
+        .compile_for(DeviceProfile::unconstrained())?;
+    let model = &mut session.model;
     model.exec.write_weight("fc0:weight", &w0)?;
     model.exec.write_weight("fc0:bias", &b0)?;
     model.exec.write_weight("fc1:weight", &w1)?;

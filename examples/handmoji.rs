@@ -1,17 +1,19 @@
 //! HandMoji (paper Fig 13): on-device personalization on a watch-class
-//! budget. A frozen backbone acts as feature extractor; the user's few
-//! hand-drawn symbols are pushed through it **once**, features are
-//! cached, and only a single fully-connected classifier trains — the
-//! whole flow finishes in well under the paper's 10-second budget.
+//! budget, through the session lifecycle. A frozen backbone acts as
+//! feature extractor; the user's few hand-drawn symbols are pushed
+//! through it **once**, features are cached, and only a single
+//! fully-connected classifier trains — the whole flow finishes in well
+//! under the paper's 10-second budget.
 //!
-//! The model description is a ~20-line INI string, mirroring the paper's
-//! "entire training configuration is described within 30 lines".
+//! The classifier description is a ~20-line INI string whose `[Model]`
+//! hyper-parameters (`Batch_Size`, `Epochs`, `Learning_rate`) flow
+//! straight into the session's `TrainSpec` defaults — mirroring the
+//! paper's "entire training configuration is described within 30 lines".
 
-use nntrainer::compiler::CompileOpts;
 use nntrainer::dataset::producer::{CachedProducer, Sample};
 use nntrainer::dataset::{DataProducer, DigitsProducer};
 use nntrainer::metrics::Timer;
-use nntrainer::model::{ini, zoo, ModelBuilder, TrainConfig};
+use nntrainer::model::{zoo, DeviceProfile, Session, TrainSpec};
 
 /// The on-device training half: classifier over cached features.
 const HEAD_INI: &str = r#"
@@ -37,14 +39,14 @@ fn main() -> nntrainer::Result<()> {
     let total = Timer::start();
 
     // ---- pre-trained backbone (vendor-shipped in the paper; trained
-    // here on generic glyphs, then frozen) ------------------------------
-    let mut backbone = ModelBuilder::new()
-        .add_nodes(zoo::handmoji_backbone(16))
+    // here on generic glyphs, then used frozen) -------------------------
+    let mut backbone = Session::describe(zoo::handmoji_backbone(16))
         .optimizer("sgd", &[("learning_rate", "0.2")])
-        .compile(&CompileOpts { batch: 10, ..Default::default() })?;
+        .configure(TrainSpec { batch: Some(10), epochs: 2, ..Default::default() })
+        .compile_for(DeviceProfile::unconstrained())?;
     let make = || -> Box<dyn DataProducer> { Box::new(DigitsProducer::new(200, 16, 1, 5)) };
-    backbone.train(make, &TrainConfig { epochs: 2, ..Default::default() })?;
-    println!("backbone ready ({:.2} MiB peak)", backbone.report.pool_mib());
+    backbone.train(make)?;
+    println!("backbone ready ({:.2} MiB peak)", backbone.report().pool_mib());
 
     // ---- the user draws 5 samples for each of 2 symbols ----------------
     // (synthetic stand-ins: two distinct digit glyph classes)
@@ -66,9 +68,7 @@ fn main() -> nntrainer::Result<()> {
         for _ in 0..10 {
             batch.extend_from_slice(img);
         }
-        backbone.exec.bind_input(0, &batch)?;
-        backbone.exec.forward_pass();
-        let feats = backbone.exec.read_output("feat/activation")?;
+        let feats = backbone.infer_node(&batch, "feat/activation")?;
         let mut onehot = vec![0f32; 2];
         onehot[*label] = 1.0;
         cached.push(Sample { input: feats[..64].to_vec(), label: onehot });
@@ -76,17 +76,21 @@ fn main() -> nntrainer::Result<()> {
     println!("features cached once in {:.0} ms", extract.elapsed_ms());
 
     // ---- train the classifier head from the INI description ------------
-    let (builder, hyper) = ini::builder_from_ini(HEAD_INI)?;
-    let mut head = builder.compile(&CompileOpts { batch: hyper.batch, ..Default::default() })?;
+    // `configure_default` picks up Batch_Size/Epochs/Learning_rate from
+    // the [Model] section.
+    let mut head = Session::from_ini_str(HEAD_INI)?
+        .configure_default()
+        .compile_for(DeviceProfile::unconstrained())?;
     println!(
-        "classifier plan: {:.1} KiB peak pool — watch-class budget",
-        head.report.pool_bytes as f64 / 1024.0
+        "classifier plan: {:.1} KiB peak pool @ batch {} — watch-class budget",
+        head.report().pool_bytes as f64 / 1024.0,
+        head.batch()
     );
     let train = Timer::start();
     let cached2 = cached.clone();
     let make_head =
         move || -> Box<dyn DataProducer> { Box::new(CachedProducer::new(cached2.clone())) };
-    let summary = head.train(&make_head, &TrainConfig { epochs: hyper.epochs, ..Default::default() })?;
+    let summary = head.train(&make_head)?;
     println!(
         "personalized in {:.0} ms over {} epochs: loss {:.4} -> {:.4}",
         train.elapsed_ms(),

@@ -1,20 +1,21 @@
-//! Quickstart: build a small classifier with the builder API, inspect
-//! the memory plan (known *before* training — the paper's headline
-//! operational property), train it, run inference.
+//! Quickstart: the lifecycle-staged session API. Describe a small
+//! classifier (*Load*), declare the training contract (*Configure*),
+//! compile it for a device (*Compile*/*Initialize* — the memory plan is
+//! known *before* training, the paper's headline operational property),
+//! then train and run inference.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use nntrainer::compiler::CompileOpts;
 use nntrainer::dataset::{DataProducer, DigitsProducer};
 use nntrainer::metrics::MIB;
-use nntrainer::model::{ModelBuilder, TrainConfig};
+use nntrainer::model::{DeviceProfile, Session, TrainSpec};
 
 fn main() -> nntrainer::Result<()> {
-    // Load/Configure: describe the network (equivalently via INI; see
-    // examples/handmoji.rs).
-    let builder = ModelBuilder::new()
+    // Load: describe the network (equivalently via INI; see
+    // examples/handmoji.rs) and pick an optimizer.
+    let session = Session::builder()
         .add("in", "input", &[("input_shape", "1:16:16")])
         .add(
             "conv",
@@ -28,20 +29,29 @@ fn main() -> nntrainer::Result<()> {
         .add("loss", "cross_entropy", &[])
         .optimizer("sgd", &[("learning_rate", "0.3")]);
 
-    // Compile/Initialize: realizers → Algorithm 1 → memory planner.
-    let mut model = builder.compile(&CompileOpts { batch: 16, ..Default::default() })?;
-    println!("== memory plan ({}) ==", model.report.planner);
-    println!("peak pool:   {:8.2} MiB (known before execution)", model.report.pool_mib());
-    println!("ideal bound: {:8.2} MiB", model.report.ideal_mib());
-    println!("no-reuse sum:{:8.2} MiB", model.report.total_bytes as f64 / MIB);
+    // Configure: the training-algorithm contract.
+    let configured = session.configure(TrainSpec {
+        batch: Some(16),
+        epochs: 3,
+        verbose: true,
+        ..Default::default()
+    });
+
+    // Compile/Initialize for a device: realizers → Algorithm 1 → planner.
+    let mut model = configured.compile_for(DeviceProfile::unconstrained())?;
+    let rep = model.report();
+    println!("== memory plan ({}) ==", rep.planner);
+    println!("peak pool:   {:8.2} MiB (known before execution)", rep.pool_mib());
+    println!("ideal bound: {:8.2} MiB", rep.ideal_mib());
+    println!("no-reuse sum:{:8.2} MiB", rep.total_bytes as f64 / MIB);
     println!(
         "tensors: {} allocated, {} merged away (MV/RV/E)",
-        model.report.n_tensors, model.report.n_merged
+        rep.n_tensors, rep.n_merged
     );
 
     // setData/Train: synthetic digit glyphs, 3 epochs.
     let make = || -> Box<dyn DataProducer> { Box::new(DigitsProducer::new(320, 16, 1, 42)) };
-    let summary = model.train(make, &TrainConfig { epochs: 3, verbose: true, ..Default::default() })?;
+    let summary = model.train(make)?;
     println!(
         "trained {} iterations in {:.2}s — loss {:.4} -> {:.4}",
         summary.iterations, summary.wall_s, summary.losses_per_epoch[0], summary.final_loss

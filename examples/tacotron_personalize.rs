@@ -1,21 +1,32 @@
-//! Tacotron2-decoder personalization (paper §5.2 / Fig 14): fine-tune the
-//! decoder of a TTS model on a handful of "user recordings" (synthetic
-//! mel-like sequences — see DESIGN.md §Substitutions).
+//! Tacotron2-decoder personalization (paper §5.2 / Fig 14) through the
+//! session lifecycle: a "vendor" decoder is pre-trained and checkpointed,
+//! then a user device fine-tunes it on a handful of "user recordings"
+//! (synthetic mel-like sequences — see DESIGN.md §Substitutions) with the
+//! backbone frozen, the output heads swapped fresh, and the whole run
+//! held under a primary-memory budget by the proactive swap runtime:
 //!
-//! Exercises the full recurrent feature set: time-distributed Prenet,
-//! stacked LSTMs with teacher forcing (the input *is* the ground-truth
-//! previous frame), mel + gate heads behind a multi-out, gradient
-//! accumulation with deferred apply, gradient clipping, Adam — plus a
-//! separately-trained Postnet (Conv1D stack), and a compiler-unrolled
-//! attention micro-decoder demonstrating `E`-shared weights.
+//! * `TrainSpec::freeze` pins the Prenet + first LSTM — no gradient or
+//!   optimizer tensors are even planned for them;
+//! * `CompiledSession::personalize` loads the checkpoint, re-initializes
+//!   the mel/gate heads, and fine-tunes with `EarlyStop` + iteration
+//!   callbacks;
+//! * frozen weights are asserted **bitwise identical** to the checkpoint
+//!   after fine-tuning.
+//!
+//! Also exercises the rest of the recurrent feature set as before:
+//! gradient clipping + Adam with deferred apply, a separately-trained
+//! Postnet (Conv1D stack), and a compiler-unrolled attention
+//! micro-decoder demonstrating `E`-shared weights.
 
 use nntrainer::compiler::unroll::{at, unroll, UnrollSpec};
-use nntrainer::compiler::CompileOpts;
+use nntrainer::dataset::producer::CachedProducer;
 use nntrainer::dataset::{DataProducer, SeqProducer};
 use nntrainer::graph::NodeDesc;
 use nntrainer::layers::Props;
-use nntrainer::metrics::Timer;
-use nntrainer::model::{zoo, ModelBuilder, TrainConfig};
+use nntrainer::model::{
+    zoo, CallbackAction, DeviceProfile, EarlyStop, OnIteration, PersonalizeOpts, Session,
+    TrainCallback, TrainSpec,
+};
 
 const T: usize = 24; // time iterations (paper: >100; scaled to the 1-core box)
 const MEL: usize = 40;
@@ -25,52 +36,126 @@ fn node(name: &str, ltype: &str, pairs: &[(&str, &str)]) -> NodeDesc {
 }
 
 fn main() -> nntrainer::Result<()> {
-    // ---- decoder fine-tuning -------------------------------------------
     let batch = 8;
-    let mut decoder = ModelBuilder::new()
-        .add_nodes(zoo::tacotron_decoder(T, MEL, 128))
-        .optimizer("adam", &[("learning_rate", "0.002")])
-        .compile(&CompileOpts {
-            batch,
-            clip_norm: Some(1.0), // paper: Gradient Clipping supported
-            ..Default::default()
-        })?;
-    println!(
-        "decoder plan: peak {:.2} MiB (ideal {:.2} MiB), {} tensors, deferred apply: {}",
-        decoder.report.pool_mib(),
-        decoder.report.ideal_mib(),
-        decoder.report.n_tensors,
-        decoder.exec.deferred_apply,
-    );
-
-    // "user reads 18 sentences" → 18 mel sequences; labels = [mel | gate]
     let label_len = T * MEL + T;
+    // vendor corpus: 64 synthetic mel sequences; labels = [mel | gate]
     let make = move || -> Box<dyn DataProducer> {
         Box::new(SeqProducer::new(64, T, MEL, label_len, 18))
     };
-    let timer = Timer::start();
-    let summary = decoder.train(make, &TrainConfig { epochs: 4, verbose: true, ..Default::default() })?;
+    // "user reads 18 sentences": a small *fixed* recording set, drawn
+    // once from a different stream and cached for every fine-tune epoch
+    let user = CachedProducer::materialize(&mut SeqProducer::new(64, T, MEL, label_len, 99), 16)
+        .samples;
+    let make_user = move || -> Box<dyn DataProducer> {
+        Box::new(CachedProducer::new(user.clone()))
+    };
+
+    // ---- vendor pre-training + checkpoint ------------------------------
+    let mut vendor = Session::describe(zoo::tacotron_decoder(T, MEL, 128))
+        .optimizer("adam", &[("learning_rate", "0.002")])
+        .configure(TrainSpec {
+            batch: Some(batch),
+            epochs: 2,
+            clip_norm: Some(1.0), // paper: Gradient Clipping supported
+            ..Default::default()
+        })
+        .compile_for(DeviceProfile::unconstrained())?;
     println!(
-        "decoder fine-tune: {} iters, {:.2}s ({:.0} ms/iter), loss {:.4} -> {:.4}",
-        summary.iterations,
-        summary.wall_s,
-        summary.wall_s * 1e3 / summary.iterations as f64,
-        summary.losses_per_epoch[0],
-        summary.final_loss
+        "vendor decoder plan: peak {:.2} MiB (ideal {:.2} MiB), {} tensors, deferred apply: {}",
+        vendor.report().pool_mib(),
+        vendor.report().ideal_mib(),
+        vendor.report().n_tensors,
+        vendor.model.exec.deferred_apply,
     );
-    let _ = timer;
-    assert!(summary.final_loss < summary.losses_per_epoch[0]);
+    let pre = vendor.train(make)?;
+    println!("vendor pre-train: loss {:.4} -> {:.4}", pre.losses_per_epoch[0], pre.final_loss);
+    let ckpt = std::env::temp_dir().join("tacotron_vendor.nntr");
+    let ckpt_path = ckpt.to_string_lossy().into_owned();
+    vendor.save(&ckpt_path)?;
+
+    // ---- on-device personalization under a budget ----------------------
+    let budget = vendor.peak_pool_bytes() * 80 / 100;
+    let mut personal = Session::describe(zoo::tacotron_decoder(T, MEL, 128))
+        .optimizer("adam", &[("learning_rate", "0.002")])
+        .configure(TrainSpec {
+            batch: Some(batch),
+            epochs: 8,
+            clip_norm: Some(1.0),
+            freeze: vec!["prenet".into(), "dec_lstm0".into()],
+            ..Default::default()
+        })
+        .compile_for(DeviceProfile::with_budget_bytes(budget))?;
+    let frozen = personal.frozen_weight_names();
+    println!(
+        "personal decoder: pool {:.2} MiB under a {:.2} MiB budget (fits: {:?}, swap: {}), \
+         {} frozen weights",
+        personal.report().pool_mib(),
+        budget as f64 / (1024.0 * 1024.0),
+        personal.fits_budget(),
+        personal.model.exec.swap_active(),
+        frozen.len()
+    );
+    assert!(!frozen.is_empty(), "freeze must pin the backbone");
+    assert!(
+        personal.peak_pool_bytes() <= vendor.peak_pool_bytes(),
+        "frozen + budgeted plan must not exceed the vendor plan"
+    );
+
+    let mut iters_seen = 0usize;
+    let mut counter = OnIteration(|_ev: &nntrainer::model::TrainEvent| {
+        iters_seen += 1;
+        CallbackAction::Continue
+    });
+    let mut early = EarlyStop::new(2, 1e-4);
+    let report = personal.personalize(
+        &PersonalizeOpts {
+            checkpoint: Some(ckpt_path.clone()),
+            reinit: vec!["mel_head".into(), "gate_head".into()],
+            ..Default::default()
+        },
+        make_user,
+        &mut [&mut counter as &mut dyn TrainCallback, &mut early],
+    )?;
+    drop(counter);
+    println!(
+        "personalize: restored {} tensors, reinitialized {} head weights, \
+         {} epochs ({} iterations): loss {:.4} -> {:.4}",
+        report.restored,
+        report.reinitialized,
+        report.summary.epochs,
+        report.summary.iterations,
+        report.summary.losses_per_epoch[0],
+        report.summary.final_loss
+    );
+    assert!(report.restored > 0, "checkpoint restored nothing");
+    assert!(report.reinitialized >= 2, "mel + gate heads must re-init");
+    assert_eq!(iters_seen, report.summary.iterations, "on_iteration saw every step");
+    assert!(
+        report.summary.final_loss < report.summary.losses_per_epoch[0],
+        "fine-tuning made no progress"
+    );
+
+    // frozen backbone is bitwise identical to the vendor checkpoint
+    for name in &frozen {
+        let theirs = vendor.model.exec.read_weight(name)?;
+        let ours = personal.model.exec.read_weight(name)?;
+        assert_eq!(theirs.len(), ours.len(), "{name}: length");
+        for (k, (a, b)) in theirs.iter().zip(ours.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{name}[{k}] drifted: {a} vs {b}");
+        }
+    }
+    println!("frozen backbone verified bitwise against the checkpoint");
+    let _ = std::fs::remove_file(&ckpt_path);
 
     // ---- postnet (runs after time iteration, Conv1D over mel x T) ------
-    let mut postnet = ModelBuilder::new()
-        .add_nodes(zoo::postnet(T, MEL))
+    let mut postnet = Session::describe(zoo::postnet(T, MEL))
         .optimizer("adam", &[("learning_rate", "0.0002")])
-        .compile(&CompileOpts { batch: 4, ..Default::default() })?;
-    println!("postnet plan: peak {:.2} MiB", postnet.report.pool_mib());
+        .configure(TrainSpec { batch: Some(4), epochs: 10, ..Default::default() })
+        .compile_for(DeviceProfile::unconstrained())?;
+    println!("postnet plan: peak {:.2} MiB", postnet.report().pool_mib());
     // residual-refinement task: target = the input mel itself (the
     // postnet learns a near-identity refinement, as in Tacotron2)
     let make_post = move || -> Box<dyn DataProducer> {
-        use nntrainer::dataset::producer::CachedProducer;
         let mut seq = SeqProducer::new(16, MEL, T, 1, 4);
         let samples = (0..16)
             .map(|k| {
@@ -80,7 +165,7 @@ fn main() -> nntrainer::Result<()> {
             .collect();
         Box::new(CachedProducer::new(samples))
     };
-    let psum = postnet.train(&make_post, &TrainConfig { epochs: 10, ..Default::default() })?;
+    let psum = postnet.train(&make_post)?;
     println!("postnet: loss {:.4} -> {:.4}", psum.losses_per_epoch[0], psum.final_loss);
 
     // ---- unrolled attention micro-decoder (E-shared weights) -----------
@@ -108,12 +193,18 @@ fn main() -> nntrainer::Result<()> {
         &[("unit", "8"), ("input_layers", at("state", t_steps - 1).as_str())],
     ));
     nodes.push(node("loss", "mse", &[]));
-    let mut attn_dec = ModelBuilder::new()
-        .add_nodes(nodes)
+    let mut attn_dec = Session::describe(nodes)
         .optimizer("adam", &[("learning_rate", "0.005")])
-        .compile(&CompileOpts { batch: 4, clip_norm: Some(1.0), ..Default::default() })?;
+        .configure(TrainSpec {
+            batch: Some(4),
+            epochs: 8,
+            clip_norm: Some(1.0),
+            ..Default::default()
+        })
+        .compile_for(DeviceProfile::unconstrained())?;
     // weights of the unrolled steps share storage: count roots
     let shared: usize = attn_dec
+        .model
         .exec
         .graph
         .table
@@ -130,7 +221,7 @@ fn main() -> nntrainer::Result<()> {
     let make_attn = move || -> Box<dyn DataProducer> {
         Box::new(SeqProducer::new(32, 11, 32, 8, 3)) // 10 memory rows + 1 seed row
     };
-    let asum = attn_dec.train(&make_attn, &TrainConfig { epochs: 8, ..Default::default() })?;
+    let asum = attn_dec.train(&make_attn)?;
     println!("attention decoder: loss {:.4} -> {:.4}", asum.losses_per_epoch[0], asum.final_loss);
     assert!(asum.final_loss < asum.losses_per_epoch[0]);
     println!("TACOTRON PERSONALIZATION OK");

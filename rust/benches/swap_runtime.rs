@@ -5,6 +5,9 @@
 //! * `advised`  — the advisor's live-set peak under the plan
 //! * `achieved` — the gap-aware planner's actual pool (what training
 //!   allocates; the number that must undercut the device budget)
+//! * `frag%`    — fragmentation: achieved-over-advised overhead, the
+//!   ROADMAP metric the first-fit vs best-fit placement comparison runs
+//!   on (placer column: `gapfit` = first-fit, `gapfit-bestfit`)
 //! * `stall`    — wall time per iteration the training thread spent
 //!   waiting on swap-ins (background double-buffering hides the rest)
 //!
@@ -17,6 +20,7 @@ use nntrainer::bench_util::{
 use nntrainer::compiler::plan_only;
 use nntrainer::graph::NodeDesc;
 use nntrainer::model::zoo;
+use nntrainer::planner::PlannerKind;
 use nntrainer::runtime::StoreKind;
 
 fn run_case(
@@ -25,23 +29,34 @@ fn run_case(
     nodes: Vec<NodeDesc>,
     batch: usize,
     store: StoreKind,
+    placer: PlannerKind,
 ) {
     let base = plan_only(nodes.clone(), &nntrainer_profile(batch)).expect("plan");
     let target = base.pool_bytes * 70 / 100;
     let mut opts = budget_profile(batch, target);
     opts.swap_store = store;
+    opts.planner = placer;
     let dataset = bench_dataset();
     let (model, secs, iters) = train_random(nodes, &opts, dataset, 1, 0.01).expect("train");
     let plan = model.exec.swap_plan().expect("swap plan").clone();
     let stats = model.exec.swap_stats().expect("swap stats");
     let iters = iters.max(1);
+    let achieved = model.peak_pool_bytes();
+    let frag = if plan.primary_peak_bytes > 0 {
+        (achieved as f64 - plan.primary_peak_bytes as f64) * 100.0
+            / plan.primary_peak_bytes as f64
+    } else {
+        0.0
+    };
     table.row(vec![
         name.to_string(),
+        model.report.planner.to_string(),
         format!("{:?}", store).to_lowercase(),
         fmt_mib(base.pool_bytes),
         fmt_mib(target),
         fmt_mib(plan.primary_peak_bytes),
-        fmt_mib(model.peak_pool_bytes()),
+        fmt_mib(achieved),
+        format!("{frag:.1}"),
         (if plan.fits { "yes" } else { "no" }).into(),
         fmt_mib(plan.swap_bytes_per_iter),
         format!("{:.3}", stats.stall_ms() / iters as f64),
@@ -54,25 +69,30 @@ fn main() {
     println!("\n== Proactive swap runtime: realized peak + per-iteration cost (70% target) ==\n");
     let mut table = Table::new(&[
         "model",
+        "placer",
         "store",
         "unswapped",
         "target",
         "advised",
         "achieved",
+        "frag%",
         "fits",
         "swap MiB/it",
         "stall ms/it",
         "sync/it",
         "iter ms",
     ]);
-    run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host);
-    run_case(&mut table, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::Host);
-    run_case(&mut table, "Model B (Conv)", zoo::model_b_conv(), 16, StoreKind::Host);
-    run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::File);
+    for placer in [PlannerKind::Sorting, PlannerKind::BestFit] {
+        run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, placer);
+        run_case(&mut table, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::Host, placer);
+        run_case(&mut table, "Model B (Conv)", zoo::model_b_conv(), 16, StoreKind::Host, placer);
+    }
+    run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::File, PlannerKind::Sorting);
     table.print();
     println!(
         "\nachieved = gap-aware planner pool (what training actually allocates); \
-         advised = live-set bound under the plan.\n\
+         advised = live-set bound under the plan; frag% = achieved overhead \
+         over the advised bound (first-fit `gapfit` vs `gapfit-bestfit` placement).\n\
          stall = training-thread wait on swap-ins; the rest of the traffic is \
          hidden by the double-buffered background prefetcher."
     );

@@ -13,7 +13,7 @@ use crate::layers::{builtin_factories, LayerFactory};
 use crate::metrics::PlanReport;
 use crate::optimizer::Optimizer;
 use crate::planner::{
-    gapfit::GapFitPlanner,
+    gapfit::{GapBestFitPlanner, GapFitPlanner},
     offload,
     validate::{validate_gap_plan, validate_merges, validate_plan},
     PlannerKind,
@@ -36,8 +36,9 @@ pub struct CompileOpts {
     pub seed: u64,
     /// Primary-memory budget in bytes. When set, the offload advisor
     /// plans idle-gap swaps, the gap-aware planner shrinks the pool
-    /// accordingly, and the executor runs the proactive swap runtime
-    /// (`planner` is then ignored in favour of the gap-aware planner).
+    /// accordingly, and the executor runs the proactive swap runtime.
+    /// `planner` then selects the gap-aware *placement*: `BestFit` runs
+    /// the best-fit hole search, anything else the first-fit default.
     ///
     /// The budget is a *target*, not a hard guarantee: when even maximal
     /// swapping cannot reach it, compile still succeeds with the best
@@ -76,11 +77,16 @@ fn plan_memory(
     match opts.memory_budget_bytes {
         Some(budget) => {
             let plan = offload::advise(table, budget);
-            let gapfit = GapFitPlanner { plan: &plan };
-            let pool_len = crate::planner::Planner::plan(&gapfit, table)?;
+            let (pool_len, name) = if opts.planner == PlannerKind::BestFit {
+                let placer = GapBestFitPlanner { plan: &plan };
+                (crate::planner::Planner::plan(&placer, table)?, "gapfit-bestfit")
+            } else {
+                let placer = GapFitPlanner { plan: &plan };
+                (crate::planner::Planner::plan(&placer, table)?, "gapfit")
+            };
             validate_gap_plan(table, &plan, pool_len)?;
             validate_merges(table)?;
-            Ok((pool_len, "gapfit", Some(plan)))
+            Ok((pool_len, name, Some(plan)))
         }
         None => {
             let planner = opts.planner.instance();
@@ -108,6 +114,20 @@ pub fn compile(
 /// init. Used by the memory benches (a conventional-profile VGG16 plan
 /// describes gigabytes it never needs to touch).
 pub fn plan_only(nodes: Vec<NodeDesc>, opts: &CompileOpts) -> Result<PlanReport> {
+    plan_with(nodes, opts, &builtin_factories(), 0)
+}
+
+/// [`plan_only`] with a custom layer registry and an optimizer
+/// state-slot count. The session auto-batch search probes candidate
+/// batches with the *exact* tensor population the real compile will plan
+/// — optimizer state included, which `plan_only` (kept bench-compatible)
+/// omits.
+pub fn plan_with(
+    nodes: Vec<NodeDesc>,
+    opts: &CompileOpts,
+    factories: &HashMap<&'static str, LayerFactory>,
+    opt_slots: usize,
+) -> Result<PlanReport> {
     let nodes = realizer::realize_all(nodes)?;
     let graph = Graph::wire(nodes)?;
     let init_opts = InitOptions {
@@ -116,9 +136,9 @@ pub fn plan_only(nodes: Vec<NodeDesc>, opts: &CompileOpts) -> Result<PlanReport>
         inplace: opts.inplace && !opts.conventional,
         conventional: opts.conventional,
         deferred_apply: opts.clip_norm.is_some(),
-        opt_slots: 0,
+        opt_slots,
     };
-    let mut ig = init_graph(&graph, &builtin_factories(), &init_opts)?;
+    let mut ig = init_graph(&graph, factories, &init_opts)?;
     let (pool_len, planner_name, _plan) = plan_memory(&mut ig.table, opts)?;
     Ok(PlanReport::from_table(&ig.table, pool_len, planner_name))
 }

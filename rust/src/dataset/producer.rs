@@ -36,6 +36,13 @@ impl CachedProducer {
     pub fn new(samples: Vec<Sample>) -> Self {
         CachedProducer { samples }
     }
+
+    /// Materialize the first `n` samples of another producer — the
+    /// personalization flows fine-tune on a small, fixed user dataset
+    /// (the paper's "user reads 18 sentences").
+    pub fn materialize(src: &mut dyn DataProducer, n: usize) -> Self {
+        CachedProducer { samples: (0..n).map(|i| src.sample(i)).collect() }
+    }
 }
 
 impl DataProducer for CachedProducer {

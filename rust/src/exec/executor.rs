@@ -411,6 +411,71 @@ impl Executor {
             .collect()
     }
 
+    /// Names of root weights belonging to frozen (non-trainable) layers —
+    /// the set `personalize` must leave bitwise untouched.
+    pub fn frozen_weight_names(&self) -> Vec<String> {
+        self.graph
+            .table
+            .iter()
+            .filter(|s| {
+                s.role == TensorRole::Weight
+                    && s.merged_into.is_none()
+                    && !s.eos.is_empty()
+                    && !s.trainable
+            })
+            .map(|s| s.name.clone())
+            .collect()
+    }
+
+    /// Re-run the initializers of every weight and optimizer-state tensor
+    /// whose *layer name* starts with one of `prefixes` (tensor names are
+    /// `layer:weight`) — the head-swap half of personalization: the
+    /// backbone keeps its checkpointed weights while the head restarts
+    /// fresh, with its optimizer state re-zeroed alongside. A prefix
+    /// matching no weight tensor is an error (mirroring the freeze API:
+    /// a typoed head name must not silently keep the checkpoint's head),
+    /// checked before anything is mutated. Returns the number of weight
+    /// tensors reinitialized.
+    pub fn reinit_weights_matching(&mut self, prefixes: &[String], seed: u64) -> Result<usize> {
+        let eligible = |s: &crate::tensor::TensorSpec| {
+            s.merged_into.is_none()
+                && !s.eos.is_empty()
+                && matches!(s.role, TensorRole::Weight | TensorRole::OptState)
+        };
+        let layer_of = |name: &str| name.split(':').next().unwrap_or("").to_string();
+        // validate first so a bad prefix cannot leave a half-reinit head
+        for p in prefixes {
+            let hit = self
+                .graph
+                .table
+                .iter()
+                .any(|s| eligible(s) && layer_of(&s.name).starts_with(p.as_str()));
+            if !hit {
+                return Err(Error::graph(format!(
+                    "reinit prefix `{p}` matches no weight tensor"
+                )));
+            }
+        }
+        let mut rng = Rng::new(seed);
+        let mut count = 0usize;
+        for s in self.graph.table.iter() {
+            if !eligible(s) {
+                continue;
+            }
+            let layer = layer_of(&s.name);
+            if !prefixes.iter().any(|p| layer.starts_with(p.as_str())) {
+                continue;
+            }
+            if let Some(r) = s.region {
+                s.init.apply(self.pool.view_mut(r), &mut rng);
+                if s.role == TensorRole::Weight {
+                    count += 1;
+                }
+            }
+        }
+        Ok(count)
+    }
+
     pub fn steps(&self) -> &[(u32, StepOp)] {
         &self.steps
     }

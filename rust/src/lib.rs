@@ -9,11 +9,32 @@
 //!
 //! Architecture (see DESIGN.md):
 //! * **L3** — this crate: the coordinator/framework (graph compiler,
-//!   realizers, planners, executor, data pipeline, model API).
+//!   realizers, planners, executor, data pipeline, and the
+//!   lifecycle-staged session API: `Session::describe → configure →
+//!   compile_for → CompiledSession::{train, infer, personalize}`).
 //! * **L2/L1** — `python/compile`: JAX train-step + Pallas kernels,
 //!   AOT-lowered once to `artifacts/*.hlo.txt`.
 //! * **runtime** — loads those artifacts via PJRT (`xla` crate); Python
 //!   never runs on the training path.
+
+// CI runs `cargo clippy -- -D warnings`. Structural/style lints that the
+// paper-faithful layout trips wholesale (module named like its parent,
+// EO-indexed step loops that also mutate `self`, arg-heavy constructors
+// mirroring Algorithm-1 inputs) are opted out here once; correctness
+// lints stay denying.
+#![allow(
+    clippy::module_inception,
+    clippy::needless_range_loop,
+    clippy::new_without_default,
+    clippy::len_without_is_empty,
+    clippy::type_complexity,
+    clippy::too_many_arguments,
+    clippy::comparison_chain,
+    clippy::ptr_arg,
+    clippy::manual_memcpy,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if
+)]
 
 pub mod backend;
 pub mod bench_util;

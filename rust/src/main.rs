@@ -1,26 +1,35 @@
-//! `nntrainer` CLI — the leader entrypoint.
+//! `nntrainer` CLI — the leader entrypoint, driving the lifecycle-staged
+//! session API (`Session::from_ini_file → configure → compile_for`).
 //!
 //! ```text
-//! nntrainer plan  <model.ini> [--batch N] [--planner sorting|naive|bestfit] [--conventional] [--table]
-//! nntrainer train <model.ini> [--batch N] [--epochs N] [--save ckpt.bin] [--data digits|random]
+//! nntrainer plan  <model.ini> [--batch N] [--budget-mib M] [--planner sorting|naive|bestfit]
+//!                 [--conventional] [--no-swap] [--table]
+//! nntrainer train <model.ini> [--batch N] [--budget-mib M] [--epochs N] [--early-stop P]
+//!                 [--save ckpt.bin] [--data digits|random]
 //! nntrainer zoo                              # list built-in evaluation models
 //! nntrainer artifacts [--dir artifacts]      # check + smoke the PJRT artifact catalog
 //! ```
+//!
+//! With `--budget-mib` and no `--batch`, the largest batch whose planned
+//! pool fits the budget is selected automatically.
+
+// Same clippy posture as the library crate (see lib.rs); CI denies
+// warnings.
+#![allow(clippy::too_many_arguments, clippy::type_complexity)]
 
 use std::process::ExitCode;
 
-use nntrainer::compiler::CompileOpts;
 use nntrainer::dataset::{DataProducer, DigitsProducer, RandomProducer};
 use nntrainer::metrics::MIB;
-use nntrainer::model::{ini, TrainConfig};
+use nntrainer::model::{DeviceProfile, EarlyStop, Session, TrainCallback, TrainSpec};
 use nntrainer::planner::PlannerKind;
 use nntrainer::runtime::catalog::ArtifactCatalog;
 use nntrainer::runtime::XlaRuntime;
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage:\n  nntrainer plan  <model.ini> [--batch N] [--planner P] [--conventional] [--table]\n  \
-         nntrainer train <model.ini> [--batch N] [--epochs N] [--save F] [--data digits|random]\n  \
+        "usage:\n  nntrainer plan  <model.ini> [--batch N] [--budget-mib M] [--planner P] [--conventional] [--no-swap] [--table]\n  \
+         nntrainer train <model.ini> [--batch N] [--budget-mib M] [--epochs N] [--early-stop P] [--save F] [--data digits|random]\n  \
          nntrainer zoo\n  nntrainer artifacts [--dir D]"
     );
     ExitCode::from(2)
@@ -63,23 +72,50 @@ fn main() -> ExitCode {
     }
 }
 
-fn compile_opts(args: &Args, default_batch: usize) -> nntrainer::Result<CompileOpts> {
+/// Parse a `--flag value` pair, erroring (like `--planner`) instead of
+/// silently ignoring a malformed value.
+fn parse_opt<T: std::str::FromStr>(args: &Args, name: &str) -> nntrainer::Result<Option<T>> {
+    match args.opt(name) {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<T>()
+            .map(Some)
+            .map_err(|_| nntrainer::Error::model(format!("invalid value `{v}` for {name}"))),
+    }
+}
+
+/// Resolve the two lifecycle contracts from INI defaults + CLI flags.
+/// With `--budget-mib` and no explicit `--batch`, the batch is delegated
+/// to the budget-aware auto-selection.
+fn spec_and_profile(
+    session: &Session,
+    args: &Args,
+) -> nntrainer::Result<(TrainSpec, DeviceProfile)> {
     let planner = match args.opt("--planner") {
         Some(p) => PlannerKind::parse(&p)
             .ok_or_else(|| nntrainer::Error::model(format!("unknown planner `{p}`")))?,
         None => PlannerKind::Sorting,
     };
     let conventional = args.flag("--conventional");
-    Ok(CompileOpts {
-        batch: args
-            .opt("--batch")
-            .map(|b| b.parse().unwrap_or(default_batch))
-            .unwrap_or(default_batch),
+    let budget = parse_opt::<f64>(args, "--budget-mib")?.map(|m| (m * MIB) as usize);
+    let mut spec = session.default_spec();
+    if let Some(b) = parse_opt::<usize>(args, "--batch")? {
+        spec.batch = Some(b);
+    } else if budget.is_some() {
+        spec.batch = None; // auto-select under the budget
+    }
+    if let Some(e) = parse_opt::<usize>(args, "--epochs")? {
+        spec.epochs = e;
+    }
+    let profile = DeviceProfile {
+        memory_budget_bytes: budget,
+        swap: !args.flag("--no-swap"),
         planner,
         conventional,
         inplace: !conventional,
-        ..Default::default()
-    })
+        ..DeviceProfile::default()
+    };
+    Ok((spec, profile))
 }
 
 fn cmd_plan(args: &Args) -> nntrainer::Result<()> {
@@ -87,13 +123,30 @@ fn cmd_plan(args: &Args) -> nntrainer::Result<()> {
         .rest
         .first()
         .ok_or_else(|| nntrainer::Error::model("plan: missing model.ini"))?;
-    let (builder, hyper) = ini::builder_from_file(path)?;
-    let opts = compile_opts(args, hyper.batch)?;
-    let model = builder.compile(&opts)?;
-    let rep = &model.report;
+    let session = Session::from_ini_file(path)?;
+    let (spec, profile) = spec_and_profile(&session, args)?;
+    let auto = spec.batch.is_none();
+    let model = session.configure(spec).compile_for(profile)?;
+    let rep = model.report();
     println!("model:        {path}");
-    println!("planner:      {} (conventional profile: {})", rep.planner, opts.conventional);
-    println!("batch:        {}", opts.batch);
+    println!(
+        "planner:      {} (conventional profile: {})",
+        rep.planner,
+        model.profile().conventional
+    );
+    println!(
+        "batch:        {}{}",
+        model.batch(),
+        if auto { "  <- auto (largest fitting the budget)" } else { "" }
+    );
+    if let Some(fits) = model.fits_budget() {
+        let b = model.profile().memory_budget_bytes.unwrap_or(0);
+        println!(
+            "budget:       {:.3} MiB ({})",
+            b as f64 / MIB,
+            if fits { "fits" } else { "EXCEEDED — best effort" }
+        );
+    }
     println!("peak pool:    {:.3} MiB  <- known before execution", rep.pool_mib());
     println!("ideal bound:  {:.3} MiB  (planner overhead x{:.3})", rep.ideal_mib(), rep.overhead());
     println!("no-reuse sum: {:.3} MiB", rep.total_bytes as f64 / MIB);
@@ -104,7 +157,7 @@ fn cmd_plan(args: &Args) -> nntrainer::Result<()> {
         println!("  {role:<8} {:>10.3} MiB", *bytes as f64 / MIB);
     }
     if args.flag("--table") {
-        println!("{}", model.exec.graph.table);
+        println!("{}", model.model.exec.graph.table);
     }
     Ok(())
 }
@@ -114,29 +167,30 @@ fn cmd_train(args: &Args) -> nntrainer::Result<()> {
         .rest
         .first()
         .ok_or_else(|| nntrainer::Error::model("train: missing model.ini"))?;
-    let (builder, hyper) = ini::builder_from_file(path)?;
-    let opts = compile_opts(args, hyper.batch)?;
-    let epochs = args
-        .opt("--epochs")
-        .map(|e| e.parse().unwrap_or(hyper.epochs))
-        .unwrap_or(hyper.epochs);
-    let mut model = builder.compile(&opts)?;
-    println!("peak pool {:.3} MiB; training {epochs} epochs @ batch {}", model.report.pool_mib(), opts.batch);
+    let session = Session::from_ini_file(path)?;
+    let (mut spec, profile) = spec_and_profile(&session, args)?;
+    spec.verbose = true;
+    let mut model = session.configure(spec).compile_for(profile)?;
+    println!(
+        "peak pool {:.3} MiB; training {} epochs @ batch {}",
+        model.report().pool_mib(),
+        model.spec().epochs,
+        model.batch()
+    );
 
     // input/label sizes from the compiled graph
-    let in_len: usize = model
-        .exec
+    let exec = &model.model.exec;
+    let in_len: usize = exec
         .graph
         .input_nodes
         .iter()
-        .map(|&n| model.exec.graph.nodes[n].out_dims[0].feature_len())
+        .map(|&n| exec.graph.nodes[n].out_dims[0].feature_len())
         .sum();
-    let lb_len: usize = model
-        .exec
+    let lb_len: usize = exec
         .graph
         .loss_nodes
         .iter()
-        .map(|&n| model.exec.graph.nodes[n].in_dims[0].feature_len())
+        .map(|&n| exec.graph.nodes[n].in_dims[0].feature_len())
         .sum();
     let data = args.opt("--data").unwrap_or_else(|| "random".into());
     let n = 512usize;
@@ -149,10 +203,16 @@ fn cmd_train(args: &Args) -> nntrainer::Result<()> {
             _ => Box::new(RandomProducer::new(n, in_len, lb_len, 42)),
         }
     };
-    let summary = model.train(make, &TrainConfig { epochs, verbose: true, ..Default::default() })?;
+    let summary = match parse_opt::<usize>(args, "--early-stop")? {
+        Some(patience) => {
+            let mut es = EarlyStop::new(patience, 0.0);
+            model.train_with(make, &mut [&mut es as &mut dyn TrainCallback])?
+        }
+        None => model.train(make)?,
+    };
     println!(
-        "done: {} iterations, {:.2}s, final loss {:.5}",
-        summary.iterations, summary.wall_s, summary.final_loss
+        "done: {} iterations over {} epochs, {:.2}s, final loss {:.5}",
+        summary.iterations, summary.epochs, summary.wall_s, summary.final_loss
     );
     if let Some(save) = args.opt("--save") {
         model.save(&save)?;

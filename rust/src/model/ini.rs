@@ -82,7 +82,11 @@ pub fn parse(text: &str) -> Result<IniModel> {
     Ok(out)
 }
 
-/// Hyper-parameters pulled from the `[Model]` section.
+/// Hyper-parameters pulled from the `[Model]` section. They are wired
+/// into the session lifecycle by `Session::from_ini_str`: `Batch_Size`
+/// and `Epochs` become the `TrainSpec` defaults; `Learning_rate` (and
+/// the other optimizer keys) reach the model through the builder's
+/// optimizer props below, not through this struct.
 #[derive(Debug, Clone)]
 pub struct IniHyper {
     pub batch: usize,

@@ -1,12 +1,23 @@
 //! Model pipeline (paper §4): *Load* (INI or builder API) → *Configure* →
 //! *Compile* (realizers) → *Initialize* (Algorithm 1 + planning) →
 //! *setData* (Batch Queue) → *Train*.
+//!
+//! The staged lifecycle is a typestate (`session.rs`):
+//! `Session::describe → configure(TrainSpec) → compile_for(DeviceProfile)
+//! → CompiledSession::{train, infer, personalize}`. The seed-era
+//! `ModelBuilder`/`Model` pair survives as a shim over it.
 
 pub mod appctx;
 pub mod checkpoint;
 pub mod ini;
 pub mod model;
+pub mod session;
 pub mod zoo;
 
 pub use appctx::AppContext;
 pub use model::{Model, ModelBuilder, TrainConfig, TrainSummary};
+pub use session::{
+    CallbackAction, CompiledSession, ConfiguredSession, DeviceProfile, EarlyStop, OnEpochEnd,
+    OnIteration, PersonalizeOpts, PersonalizeReport, Session, TrainCallback, TrainEvent,
+    TrainSpec, DEFAULT_BATCH,
+};

@@ -1,18 +1,23 @@
-//! The `Model` type: the user-facing API tying compiler, planner,
-//! executor and data pipeline together.
+//! The seed-era `Model` type and `ModelBuilder` — kept as a thin
+//! **deprecated shim** over the lifecycle-staged [`Session`] API
+//! (`model/session.rs`): `ModelBuilder::compile(&CompileOpts)` routes
+//! through `Session::configure(..).compile_for(..)` so every seed and
+//! PR-1 caller (including the swap-equivalence suites) runs unchanged,
+//! while new code gets budget-aware batch selection, freeze contracts and
+//! training callbacks from the one real path.
 
-use crate::compiler::{compile_with, CompileOpts};
-use crate::dataset::{BatchQueue, DataProducer};
+use crate::compiler::CompileOpts;
+use crate::dataset::DataProducer;
 use crate::error::{Error, Result};
 use crate::exec::Executor;
 use crate::graph::NodeDesc;
 use crate::layers::Props;
-use crate::metrics::{PlanReport, Timer};
+use crate::metrics::PlanReport;
 use crate::model::appctx::AppContext;
-use crate::optimizer;
+use crate::model::session::{run_training, DeviceProfile, Session, TrainSpec};
 
 /// Builder: accumulates layer descriptions and hyper-parameters
-/// (the *Load*/*Configure* stages).
+/// (the *Load*/*Configure* stages). Deprecated in favour of [`Session`].
 pub struct ModelBuilder {
     pub nodes: Vec<NodeDesc>,
     pub optimizer_kind: String,
@@ -63,13 +68,29 @@ impl ModelBuilder {
         self
     }
 
-    /// *Compile* + *Initialize*: realizers, Algorithm 1, memory planning,
-    /// pool allocation, weight init.
+    /// *Compile* + *Initialize* — **deprecated shim**: lowers the flat
+    /// `CompileOpts` onto the [`Session`] lifecycle
+    /// (`configure(TrainSpec)` + `compile_for(DeviceProfile)`) and
+    /// unwraps the result. Field-for-field equivalent to the seed path,
+    /// so plans, pools and training remain bitwise identical.
     pub fn compile(self, opts: &CompileOpts) -> Result<Model> {
-        let opt = optimizer::create(&self.optimizer_kind, &self.optimizer_props)?;
-        let factories = self.appctx.factories();
-        let (exec, report) = compile_with(self.nodes, opt, opts, &factories)?;
-        Ok(Model { exec, report, opts: opts.clone() })
+        let spec = TrainSpec {
+            batch: Some(opts.batch),
+            training: opts.training,
+            clip_norm: opts.clip_norm,
+            seed: opts.seed,
+            ..TrainSpec::default()
+        };
+        let profile = DeviceProfile {
+            memory_budget_bytes: opts.memory_budget_bytes,
+            swap: true,
+            swap_store: opts.swap_store,
+            planner: opts.planner,
+            conventional: opts.conventional,
+            inplace: opts.inplace,
+            ..DeviceProfile::default()
+        };
+        Ok(Session::from_builder(self).configure(spec).compile_for(profile)?.into_model())
     }
 }
 
@@ -106,6 +127,62 @@ pub struct Model {
     pub opts: CompileOpts,
 }
 
+/// Which placeholder family a flat buffer scatters into.
+#[derive(Clone, Copy)]
+enum BindTarget {
+    Input,
+    Label,
+}
+
+/// Split a flat `[batch, total_feat]` buffer across the target nodes in
+/// graph order — the one scatter loop shared by batch binding and the
+/// inference path (the seed shipped two diverging copies of it).
+fn scatter_flat(
+    exec: &Executor,
+    batch: usize,
+    data: &[f32],
+    target: BindTarget,
+    what: &str,
+) -> Result<()> {
+    let feats: Vec<usize> = match target {
+        BindTarget::Input => exec
+            .graph
+            .input_nodes
+            .iter()
+            .map(|&n| exec.graph.nodes[n].out_dims[0].feature_len())
+            .collect(),
+        BindTarget::Label => exec
+            .graph
+            .loss_nodes
+            .iter()
+            .map(|&n| exec.graph.nodes[n].in_dims[0].feature_len())
+            .collect(),
+    };
+    let total: usize = feats.iter().sum();
+    if data.len() != total * batch {
+        return Err(Error::shape(format!("{what} len {} != {}x{}", data.len(), batch, total)));
+    }
+    let mut off = 0usize;
+    for (k, &f) in feats.iter().enumerate() {
+        let bind = |buf: &[f32]| match target {
+            BindTarget::Input => exec.bind_input(k, buf),
+            BindTarget::Label => exec.bind_label(k, buf),
+        };
+        if feats.len() == 1 {
+            bind(data)?;
+        } else {
+            let mut buf = vec![0f32; batch * f];
+            for s in 0..batch {
+                buf[s * f..(s + 1) * f]
+                    .copy_from_slice(&data[s * total + off..s * total + off + f]);
+            }
+            bind(&buf)?;
+        }
+        off += f;
+    }
+    Ok(())
+}
+
 impl Model {
     /// Peak training memory (the pool), known before execution.
     pub fn peak_pool_bytes(&self) -> usize {
@@ -116,70 +193,8 @@ impl Model {
     /// is split across input nodes (in graph order), `[batch,
     /// total_label_feat]` across loss labels.
     pub fn bind_batch(&self, input: &[f32], label: &[f32]) -> Result<()> {
-        let batch = self.opts.batch;
-        // split inputs by per-node feature size
-        let feats: Vec<usize> = self
-            .exec
-            .graph
-            .input_nodes
-            .iter()
-            .map(|&n| self.exec.graph.nodes[n].out_dims[0].feature_len())
-            .collect();
-        let total: usize = feats.iter().sum();
-        if input.len() != total * batch {
-            return Err(Error::shape(format!(
-                "batch input len {} != {}x{}",
-                input.len(),
-                batch,
-                total
-            )));
-        }
-        let mut off = 0usize;
-        for (k, &f) in feats.iter().enumerate() {
-            if feats.len() == 1 {
-                self.exec.bind_input(k, input)?;
-            } else {
-                let mut buf = vec![0f32; batch * f];
-                for s in 0..batch {
-                    buf[s * f..(s + 1) * f]
-                        .copy_from_slice(&input[s * total + off..s * total + off + f]);
-                }
-                self.exec.bind_input(k, &buf)?;
-            }
-            off += f;
-        }
-        // split labels by loss-node label size
-        let lfeats: Vec<usize> = self
-            .exec
-            .graph
-            .loss_nodes
-            .iter()
-            .map(|&n| self.exec.graph.nodes[n].in_dims[0].feature_len())
-            .collect();
-        let ltotal: usize = lfeats.iter().sum();
-        if label.len() != ltotal * batch {
-            return Err(Error::shape(format!(
-                "batch label len {} != {}x{}",
-                label.len(),
-                batch,
-                ltotal
-            )));
-        }
-        let mut loff = 0usize;
-        for (k, &f) in lfeats.iter().enumerate() {
-            if lfeats.len() == 1 {
-                self.exec.bind_label(k, label)?;
-            } else {
-                let mut buf = vec![0f32; batch * f];
-                for s in 0..batch {
-                    buf[s * f..(s + 1) * f]
-                        .copy_from_slice(&label[s * ltotal + loff..s * ltotal + loff + f]);
-                }
-                self.exec.bind_label(k, &buf)?;
-            }
-            loff += f;
-        }
-        Ok(())
+        scatter_flat(&self.exec, self.opts.batch, input, BindTarget::Input, "batch input")?;
+        scatter_flat(&self.exec, self.opts.batch, label, BindTarget::Label, "batch label")
     }
 
     /// Train for `cfg.epochs` epochs; `make_producer` is called once per
@@ -189,68 +204,13 @@ impl Model {
         make_producer: impl Fn() -> Box<dyn DataProducer>,
         cfg: &TrainConfig,
     ) -> Result<TrainSummary> {
-        let timer = Timer::start();
-        let mut summary = TrainSummary { epochs: cfg.epochs, ..Default::default() };
-        for epoch in 0..cfg.epochs {
-            let queue = BatchQueue::spawn(make_producer(), self.opts.batch, cfg.queue_depth);
-            let mut epoch_loss = 0f64;
-            let mut batches = 0usize;
-            while let Some(b) = queue.next() {
-                self.bind_batch(&b.input, &b.label)?;
-                let loss = self.exec.try_train_iteration()?;
-                epoch_loss += loss as f64;
-                batches += 1;
-            }
-            if batches == 0 {
-                return Err(Error::Dataset("no full batch produced".into()));
-            }
-            let mean = (epoch_loss / batches as f64) as f32;
-            summary.losses_per_epoch.push(mean);
-            summary.iterations += batches;
-            summary.final_loss = mean;
-            if cfg.verbose {
-                println!("epoch {:>3}: loss {:.6} ({} iters)", epoch + 1, mean, batches);
-            }
-        }
-        summary.wall_s = timer.elapsed_s();
-        Ok(summary)
+        run_training(self, &make_producer, cfg, &mut [])
     }
 
-    /// Forward-only pass over one bound batch; returns the named node's
-    /// output (defaults to the last non-loss node).
+    /// Forward-only pass over one bound batch; returns the last non-loss
+    /// node's output.
     pub fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>> {
-        // bind input only; labels untouched
-        let feats: Vec<usize> = self
-            .exec
-            .graph
-            .input_nodes
-            .iter()
-            .map(|&n| self.exec.graph.nodes[n].out_dims[0].feature_len())
-            .collect();
-        let total: usize = feats.iter().sum();
-        let batch = self.opts.batch;
-        if input.len() != total * batch {
-            return Err(Error::shape(format!(
-                "infer input len {} != {}x{}",
-                input.len(),
-                batch,
-                total
-            )));
-        }
-        let mut off = 0usize;
-        for (k, &f) in feats.iter().enumerate() {
-            if feats.len() == 1 {
-                self.exec.bind_input(k, input)?;
-            } else {
-                let mut buf = vec![0f32; batch * f];
-                for s in 0..batch {
-                    buf[s * f..(s + 1) * f]
-                        .copy_from_slice(&input[s * total + off..s * total + off + f]);
-                }
-                self.exec.bind_input(k, &buf)?;
-            }
-            off += f;
-        }
+        scatter_flat(&self.exec, self.opts.batch, input, BindTarget::Input, "infer input")?;
         self.exec.try_forward_pass()?;
         // last non-loss, non-input node
         let last = self
@@ -263,6 +223,14 @@ impl Model {
             .ok_or_else(|| Error::graph("no output node"))?;
         let name = last.name.clone();
         self.exec.read_output(&name)
+    }
+
+    /// Forward-only pass reading a named node's output (feature
+    /// extraction).
+    pub fn infer_node(&mut self, input: &[f32], node: &str) -> Result<Vec<f32>> {
+        scatter_flat(&self.exec, self.opts.batch, input, BindTarget::Input, "infer input")?;
+        self.exec.try_forward_pass()?;
+        self.exec.read_output(node)
     }
 
     pub fn save(&self, path: &str) -> Result<()> {

@@ -1,0 +1,747 @@
+//! Lifecycle-staged session API — the paper's pipeline as a typestate:
+//!
+//! ```text
+//! Session::describe(..)            Load      (builder calls, zoo nets, INI)
+//!   .configure(TrainSpec)          Configure (what is trainable, epochs, clip)
+//!   .compile_for(DeviceProfile)    Compile + Initialize (what the device affords)
+//!   -> CompiledSession             Train / Infer / Personalize
+//! ```
+//!
+//! Each stage is a distinct type, so stage order is enforced by the
+//! compiler: you cannot train an unplanned model or re-plan a compiled
+//! one. [`TrainSpec`] owns the training-algorithm contract (batch,
+//! epochs, gradient clipping, *freeze* set); [`DeviceProfile`] owns the
+//! device contract (memory budget, swap store, planner choice) that used
+//! to be hand-assembled as `CompileOpts`. `compile_for` implements the
+//! ROADMAP's budget-aware batch scheduler: with no explicit batch and a
+//! memory budget, it binary-searches the largest batch whose *planned*
+//! pool fits — pure analysis via [`crate::compiler::plan_with`], no pool
+//! is allocated during the search.
+//!
+//! [`CompiledSession::personalize`] makes the paper's §5 scenario
+//! first-class: load a checkpoint, keep the frozen backbone bitwise
+//! intact, re-initialize a swapped head, and fine-tune under the budget
+//! with [`TrainCallback`] hooks (`on_iteration`, `on_epoch_end`,
+//! [`EarlyStop`]) so training algorithms compose without touching the
+//! executor.
+//!
+//! The seed-era `ModelBuilder::compile(&CompileOpts)` survives as a thin
+//! shim over this path (see `model.rs`), so PR-1 callers run unchanged.
+
+use std::collections::HashMap;
+
+use crate::compiler::{compile_with, plan_with, CompileOpts};
+use crate::dataset::{BatchQueue, DataProducer};
+use crate::error::{Error, Result};
+use crate::graph::NodeDesc;
+use crate::layers::{LayerFactory, Props};
+use crate::metrics::{PlanReport, Timer, MIB};
+use crate::model::appctx::AppContext;
+use crate::model::model::{Model, ModelBuilder, TrainConfig, TrainSummary};
+use crate::model::{checkpoint, ini};
+use crate::optimizer::{self, Optimizer};
+use crate::planner::PlannerKind;
+use crate::runtime::store::StoreKind;
+
+/// Batch used when neither the caller nor a memory budget decides one.
+pub const DEFAULT_BATCH: usize = 32;
+
+// --------------------------------------------------------------- contracts
+
+/// The training-algorithm contract (*Configure* stage): what is trained,
+/// for how long, and under which regularization — everything the device
+/// does not dictate.
+#[derive(Clone, Debug)]
+pub struct TrainSpec {
+    /// Samples per iteration. `None` delegates the choice: under a
+    /// [`DeviceProfile`] memory budget the largest fitting batch is
+    /// auto-selected, otherwise [`DEFAULT_BATCH`] is used.
+    pub batch: Option<usize>,
+    pub epochs: usize,
+    /// Global-norm gradient clipping (forces deferred apply).
+    pub clip_norm: Option<f32>,
+    /// Weight-init / shuffle seed.
+    pub seed: u64,
+    /// Batch-queue depth (backpressure bound).
+    pub queue_depth: usize,
+    /// Print per-epoch summaries.
+    pub verbose: bool,
+    /// Compile for training (backward graph + gradients). `false` plans
+    /// a forward-only (inference/feature-extraction) session.
+    pub training: bool,
+    /// Layer-name prefixes to freeze (`trainable = false`): frozen layers
+    /// get no gradient or optimizer-state tensors planned at all — the
+    /// planner table shrinks, not just the update loop. This is the
+    /// paper's fine-tune-a-frozen-backbone contract as an API instead of
+    /// per-layer string props.
+    pub freeze: Vec<String>,
+}
+
+impl Default for TrainSpec {
+    fn default() -> Self {
+        TrainSpec {
+            batch: None,
+            epochs: 1,
+            clip_norm: None,
+            seed: 42,
+            queue_depth: 2,
+            verbose: false,
+            training: true,
+            freeze: vec![],
+        }
+    }
+}
+
+/// The device contract (*Compile* stage): what the hardware affords.
+/// Subsumes the seed-era `CompileOpts` knobs that described the device
+/// rather than the algorithm.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    /// Primary-memory budget in bytes. Drives both automatic batch
+    /// selection (when [`TrainSpec::batch`] is `None`) and — with
+    /// [`DeviceProfile::swap`] — the proactive swap runtime. The budget
+    /// is a target, not a hard guarantee; check
+    /// [`CompiledSession::fits_budget`].
+    pub memory_budget_bytes: Option<usize>,
+    /// Engage the proactive swap runtime under the budget. With `false`
+    /// the budget only constrains batch selection against the plain
+    /// planner's pool.
+    pub swap: bool,
+    /// Secondary store backing the swap runtime.
+    pub swap_store: StoreKind,
+    /// Memory planner; under a budget `BestFit` selects the best-fit
+    /// gap-aware placement, anything else the first-fit default.
+    pub planner: PlannerKind,
+    /// Conventional-framework allocation profile (Fig 9 baseline).
+    pub conventional: bool,
+    /// MV/RV in-place realization.
+    pub inplace: bool,
+    /// Upper bound for the automatic batch search.
+    pub max_batch: usize,
+}
+
+impl Default for DeviceProfile {
+    fn default() -> Self {
+        DeviceProfile {
+            memory_budget_bytes: None,
+            swap: true,
+            swap_store: StoreKind::Host,
+            planner: PlannerKind::Sorting,
+            conventional: false,
+            inplace: true,
+            max_batch: 512,
+        }
+    }
+}
+
+impl DeviceProfile {
+    /// No budget: plan with the selected planner, allocate whatever the
+    /// model needs.
+    pub fn unconstrained() -> Self {
+        Self::default()
+    }
+
+    /// Budget in bytes, swap runtime engaged.
+    pub fn with_budget_bytes(bytes: usize) -> Self {
+        DeviceProfile { memory_budget_bytes: Some(bytes), ..Self::default() }
+    }
+
+    /// Budget in MiB, swap runtime engaged.
+    pub fn with_budget_mib(mib: f64) -> Self {
+        Self::with_budget_bytes((mib * MIB) as usize)
+    }
+
+    /// Conventional-framework emulation (naive planner, no in-place, no
+    /// swap) — the evaluation's baseline device profile.
+    pub fn conventional() -> Self {
+        DeviceProfile {
+            planner: PlannerKind::Naive,
+            conventional: true,
+            inplace: false,
+            swap: false,
+            ..Self::default()
+        }
+    }
+}
+
+// --------------------------------------------------------------- callbacks
+
+/// What a callback wants the training loop to do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CallbackAction {
+    Continue,
+    /// Stop training after the current bookkeeping; `TrainSummary.epochs`
+    /// reflects the epochs actually run.
+    Stop,
+}
+
+/// One training observation handed to callbacks. For `on_iteration`,
+/// `loss` is the iteration loss; for `on_epoch_end` it is the epoch mean.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainEvent {
+    pub epoch: usize,
+    /// Global iteration count so far (1-based).
+    pub iteration: usize,
+    pub loss: f32,
+}
+
+/// Training-loop hooks. Both methods default to `Continue`, so a
+/// callback implements only the events it cares about.
+pub trait TrainCallback {
+    fn on_iteration(&mut self, _ev: &TrainEvent) -> CallbackAction {
+        CallbackAction::Continue
+    }
+    fn on_epoch_end(&mut self, _ev: &TrainEvent) -> CallbackAction {
+        CallbackAction::Continue
+    }
+}
+
+/// Adapter: a closure as an `on_iteration` callback.
+pub struct OnIteration<F: FnMut(&TrainEvent) -> CallbackAction>(pub F);
+
+impl<F: FnMut(&TrainEvent) -> CallbackAction> TrainCallback for OnIteration<F> {
+    fn on_iteration(&mut self, ev: &TrainEvent) -> CallbackAction {
+        (self.0)(ev)
+    }
+}
+
+/// Adapter: a closure as an `on_epoch_end` callback.
+pub struct OnEpochEnd<F: FnMut(&TrainEvent) -> CallbackAction>(pub F);
+
+impl<F: FnMut(&TrainEvent) -> CallbackAction> TrainCallback for OnEpochEnd<F> {
+    fn on_epoch_end(&mut self, ev: &TrainEvent) -> CallbackAction {
+        (self.0)(ev)
+    }
+}
+
+/// Stop when the epoch-mean loss has not improved by at least
+/// `min_delta` for `patience` consecutive epochs.
+pub struct EarlyStop {
+    pub patience: usize,
+    pub min_delta: f32,
+    best: f32,
+    bad: usize,
+}
+
+impl EarlyStop {
+    pub fn new(patience: usize, min_delta: f32) -> Self {
+        EarlyStop { patience, min_delta, best: f32::INFINITY, bad: 0 }
+    }
+
+    /// Best epoch-mean loss seen so far.
+    pub fn best(&self) -> f32 {
+        self.best
+    }
+}
+
+impl TrainCallback for EarlyStop {
+    fn on_epoch_end(&mut self, ev: &TrainEvent) -> CallbackAction {
+        if ev.loss < self.best - self.min_delta {
+            self.best = ev.loss;
+            self.bad = 0;
+            CallbackAction::Continue
+        } else {
+            self.bad += 1;
+            if self.bad >= self.patience {
+                CallbackAction::Stop
+            } else {
+                CallbackAction::Continue
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- typestates
+
+/// *Load* stage: an editable model description plus optimizer choice.
+pub struct Session {
+    nodes: Vec<NodeDesc>,
+    optimizer_kind: String,
+    optimizer_props: Props,
+    appctx: AppContext,
+    defaults: TrainSpec,
+}
+
+impl Session {
+    /// Describe from a ready node list (zoo nets, realizer output).
+    pub fn describe(nodes: impl IntoIterator<Item = NodeDesc>) -> Self {
+        Session::builder().add_nodes(nodes)
+    }
+
+    /// Empty description; grow it with [`Session::add`].
+    pub fn builder() -> Self {
+        Session {
+            nodes: vec![],
+            optimizer_kind: "sgd".into(),
+            optimizer_props: Props::new(),
+            appctx: AppContext::new(),
+            defaults: TrainSpec::default(),
+        }
+    }
+
+    /// Adopt a seed-era [`ModelBuilder`] (the compat shim's entry).
+    pub fn from_builder(b: ModelBuilder) -> Self {
+        Session {
+            nodes: b.nodes,
+            optimizer_kind: b.optimizer_kind,
+            optimizer_props: b.optimizer_props,
+            appctx: b.appctx,
+            defaults: TrainSpec::default(),
+        }
+    }
+
+    /// *Load* from INI text. The `[Model]` hyper-parameters that the
+    /// seed parsed and then ignored — `Batch_Size`, `Epochs` (and
+    /// `Learning_rate`, which flows into the optimizer) — become the
+    /// session's [`TrainSpec`] defaults; see [`Session::default_spec`].
+    pub fn from_ini_str(text: &str) -> Result<Self> {
+        let (b, hyper) = ini::builder_from_ini(text)?;
+        let mut s = Session::from_builder(b);
+        s.defaults.batch = Some(hyper.batch);
+        s.defaults.epochs = hyper.epochs;
+        Ok(s)
+    }
+
+    /// *Load* from an INI file path.
+    pub fn from_ini_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Session::from_ini_str(&text)
+    }
+
+    /// Add one layer: `add("fc1", "fully_connected", &[("unit","10")])`.
+    pub fn add(mut self, name: &str, ltype: &str, pairs: &[(&str, &str)]) -> Self {
+        self.nodes.push(NodeDesc::new(name, ltype, Props::from_pairs(pairs.iter().copied())));
+        self
+    }
+
+    pub fn add_node(mut self, node: NodeDesc) -> Self {
+        self.nodes.push(node);
+        self
+    }
+
+    pub fn add_nodes(mut self, nodes: impl IntoIterator<Item = NodeDesc>) -> Self {
+        self.nodes.extend(nodes);
+        self
+    }
+
+    pub fn optimizer(mut self, kind: &str, pairs: &[(&str, &str)]) -> Self {
+        self.optimizer_kind = kind.to_string();
+        self.optimizer_props = Props::from_pairs(pairs.iter().copied());
+        self
+    }
+
+    pub fn with_appctx(mut self, ctx: AppContext) -> Self {
+        self.appctx = ctx;
+        self
+    }
+
+    /// The spec [`Session::configure_default`] would use — INI-derived
+    /// where the description came from INI. Clone, tweak, pass to
+    /// [`Session::configure`].
+    pub fn default_spec(&self) -> TrainSpec {
+        self.defaults.clone()
+    }
+
+    /// *Configure* with an explicit spec.
+    pub fn configure(self, spec: TrainSpec) -> ConfiguredSession {
+        ConfiguredSession { session: self, spec }
+    }
+
+    /// *Configure* with the description's own defaults.
+    pub fn configure_default(self) -> ConfiguredSession {
+        let spec = self.default_spec();
+        self.configure(spec)
+    }
+}
+
+/// *Configure* stage: description + training contract, awaiting a device.
+pub struct ConfiguredSession {
+    session: Session,
+    spec: TrainSpec,
+}
+
+impl ConfiguredSession {
+    pub fn spec(&self) -> &TrainSpec {
+        &self.spec
+    }
+
+    /// *Compile* + *Initialize* for a device: apply the freeze set, pick
+    /// the batch (auto under a budget), run realizers / Algorithm 1 /
+    /// planning / validation, allocate the pool, init weights.
+    pub fn compile_for(self, profile: DeviceProfile) -> Result<CompiledSession> {
+        let ConfiguredSession { session, spec } = self;
+        let mut nodes = session.nodes;
+        apply_freeze(&mut nodes, &spec.freeze)?;
+        let optimizer: Box<dyn Optimizer> =
+            optimizer::create(&session.optimizer_kind, &session.optimizer_props)?;
+        let factories = session.appctx.factories();
+        let batch = match (spec.batch, profile.memory_budget_bytes) {
+            (Some(b), _) => b,
+            (None, Some(budget)) => {
+                auto_batch(&nodes, &spec, &profile, optimizer.state_slots(), &factories, budget)?
+            }
+            (None, None) => DEFAULT_BATCH,
+        };
+        let opts = resolve_opts(batch, &spec, &profile);
+        let (exec, report) = compile_with(nodes, optimizer, &opts, &factories)?;
+        Ok(CompiledSession { model: Model { exec, report, opts }, spec, profile })
+    }
+}
+
+/// Set `trainable = false` on every layer whose name starts with one of
+/// `prefixes`; a prefix matching nothing is an error (a silently inert
+/// freeze is how backbones end up trained by accident).
+fn apply_freeze(nodes: &mut [NodeDesc], prefixes: &[String]) -> Result<usize> {
+    let mut frozen = 0usize;
+    for p in prefixes {
+        let mut hit = false;
+        for nd in nodes.iter_mut() {
+            if nd.name.starts_with(p.as_str()) {
+                nd.props.set("trainable", "false");
+                hit = true;
+                frozen += 1;
+            }
+        }
+        if !hit {
+            return Err(Error::model(format!("freeze prefix `{p}` matches no layer")));
+        }
+    }
+    Ok(frozen)
+}
+
+/// Lower the two contracts onto the executable `CompileOpts`.
+fn resolve_opts(batch: usize, spec: &TrainSpec, profile: &DeviceProfile) -> CompileOpts {
+    CompileOpts {
+        batch,
+        training: spec.training,
+        planner: profile.planner,
+        inplace: profile.inplace,
+        conventional: profile.conventional,
+        clip_norm: spec.clip_norm,
+        seed: spec.seed,
+        memory_budget_bytes: if profile.swap { profile.memory_budget_bytes } else { None },
+        swap_store: profile.swap_store,
+    }
+}
+
+/// Budget-aware batch scheduler (ROADMAP): largest batch whose *planned*
+/// pool fits `budget`, found by exponential growth + binary search over
+/// the monotone batch→pool curve. Probes run through
+/// [`crate::compiler::plan_with`] — full planning and validation, no pool
+/// allocation. When the swap runtime is engaged the probe pool is the
+/// advised (gap-aware) peak, so swapping buys larger batches. If even
+/// batch 1 misses the budget, 1 is returned (the budget is a target; the
+/// caller can inspect [`CompiledSession::fits_budget`]).
+fn auto_batch(
+    nodes: &[NodeDesc],
+    spec: &TrainSpec,
+    profile: &DeviceProfile,
+    opt_slots: usize,
+    factories: &HashMap<&'static str, LayerFactory>,
+    budget: usize,
+) -> Result<usize> {
+    let fits = |b: usize| -> Result<bool> {
+        let report = plan_with(nodes.to_vec(), &resolve_opts(b, spec, profile), factories, opt_slots)?;
+        Ok(report.pool_bytes <= budget)
+    };
+    if !fits(1)? {
+        return Ok(1);
+    }
+    let mut lo = 1usize; // known to fit
+    let mut first_over = None;
+    let mut b = 2usize;
+    while b <= profile.max_batch {
+        if fits(b)? {
+            lo = b;
+            b *= 2;
+        } else {
+            first_over = Some(b);
+            break;
+        }
+    }
+    let mut hi = match first_over {
+        Some(h) => h,
+        // doubling ran past the cap without finding a miss: the answer is
+        // in (lo, max_batch] — check the cap itself, else search up to it
+        None => {
+            if lo >= profile.max_batch {
+                return Ok(lo);
+            }
+            if fits(profile.max_batch)? {
+                return Ok(profile.max_batch);
+            }
+            profile.max_batch
+        }
+    };
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mid)? {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Ok(lo)
+}
+
+// ------------------------------------------------------- compiled session
+
+/// Head-swap + fine-tune description for [`CompiledSession::personalize`].
+#[derive(Clone, Debug)]
+pub struct PersonalizeOpts {
+    /// Checkpoint to restore before fine-tuning (backbone weights;
+    /// unknown names are skipped, as in transfer learning).
+    pub checkpoint: Option<String>,
+    /// Layer-name prefixes whose weights are re-initialized after the
+    /// checkpoint load — the swapped-in head. Optimizer state re-zeroes
+    /// alongside; a prefix matching no weight tensor errors (like
+    /// [`TrainSpec::freeze`]), so a typoed head name cannot silently keep
+    /// the checkpoint's head.
+    pub reinit: Vec<String>,
+    pub reinit_seed: u64,
+    /// Fine-tune epochs; `None` uses the session's [`TrainSpec::epochs`].
+    pub epochs: Option<usize>,
+}
+
+impl Default for PersonalizeOpts {
+    fn default() -> Self {
+        PersonalizeOpts { checkpoint: None, reinit: vec![], reinit_seed: 0x5EED, epochs: None }
+    }
+}
+
+/// What [`CompiledSession::personalize`] did.
+#[derive(Clone, Debug)]
+pub struct PersonalizeReport {
+    /// Tensors restored from the checkpoint.
+    pub restored: usize,
+    /// Weight tensors re-initialized (the swapped head).
+    pub reinitialized: usize,
+    pub summary: TrainSummary,
+}
+
+/// *Initialize*d and ready: train, infer, personalize. The planned peak
+/// is known before the first iteration ([`CompiledSession::peak_pool_bytes`]).
+pub struct CompiledSession {
+    /// The underlying compiled model — the escape hatch for callers that
+    /// need executor-level access (oracle tests, weight I/O).
+    pub model: Model,
+    spec: TrainSpec,
+    profile: DeviceProfile,
+}
+
+impl CompiledSession {
+    /// The batch the session trains at (explicit or auto-selected).
+    pub fn batch(&self) -> usize {
+        self.model.opts.batch
+    }
+
+    pub fn spec(&self) -> &TrainSpec {
+        &self.spec
+    }
+
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+
+    pub fn report(&self) -> &PlanReport {
+        &self.model.report
+    }
+
+    /// Peak training memory (the pool), known before execution.
+    pub fn peak_pool_bytes(&self) -> usize {
+        self.model.peak_pool_bytes()
+    }
+
+    /// Whether the planned pool honours the profile's budget
+    /// (`None` when no budget was set).
+    pub fn fits_budget(&self) -> Option<bool> {
+        self.profile
+            .memory_budget_bytes
+            .map(|b| self.model.report.pool_bytes <= b)
+    }
+
+    /// Root weights the freeze set pinned (bitwise-invariant under
+    /// training).
+    pub fn frozen_weight_names(&self) -> Vec<String> {
+        self.model.exec.frozen_weight_names()
+    }
+
+    /// Train for the spec's epochs.
+    pub fn train(
+        &mut self,
+        make_producer: impl Fn() -> Box<dyn DataProducer>,
+    ) -> Result<TrainSummary> {
+        self.train_with(make_producer, &mut [])
+    }
+
+    /// Train with callbacks observing every iteration and epoch.
+    pub fn train_with(
+        &mut self,
+        make_producer: impl Fn() -> Box<dyn DataProducer>,
+        callbacks: &mut [&mut dyn TrainCallback],
+    ) -> Result<TrainSummary> {
+        let cfg = self.train_config();
+        run_training(&mut self.model, &make_producer, &cfg, callbacks)
+    }
+
+    /// The paper's §5 flow in one call: restore a checkpoint, re-init the
+    /// swapped head, fine-tune with callbacks. Frozen layers (declared in
+    /// [`TrainSpec::freeze`] before compile) have no gradient or
+    /// optimizer tensors planned, so their weights are untouchable by
+    /// construction.
+    pub fn personalize(
+        &mut self,
+        opts: &PersonalizeOpts,
+        make_producer: impl Fn() -> Box<dyn DataProducer>,
+        callbacks: &mut [&mut dyn TrainCallback],
+    ) -> Result<PersonalizeReport> {
+        let restored = match &opts.checkpoint {
+            Some(path) => checkpoint::load(&self.model.exec, path)?,
+            None => 0,
+        };
+        let reinitialized = if opts.reinit.is_empty() {
+            0
+        } else {
+            self.model.exec.reinit_weights_matching(&opts.reinit, opts.reinit_seed)?
+        };
+        let mut cfg = self.train_config();
+        if let Some(epochs) = opts.epochs {
+            cfg.epochs = epochs;
+        }
+        let summary = run_training(&mut self.model, &make_producer, &cfg, callbacks)?;
+        Ok(PersonalizeReport { restored, reinitialized, summary })
+    }
+
+    /// Forward-only pass; returns the last non-loss node's output.
+    pub fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        self.model.infer(input)
+    }
+
+    /// Forward-only pass reading a named node's output — feature
+    /// extraction for the cache-then-train personalization flows.
+    pub fn infer_node(&mut self, input: &[f32], node: &str) -> Result<Vec<f32>> {
+        self.model.infer_node(input, node)
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        self.model.save(path)
+    }
+
+    pub fn load(&mut self, path: &str) -> Result<usize> {
+        self.model.load(path)
+    }
+
+    /// Unwrap into the seed-era [`Model`] (the compat shim's exit).
+    pub fn into_model(self) -> Model {
+        self.model
+    }
+
+    fn train_config(&self) -> TrainConfig {
+        TrainConfig {
+            epochs: self.spec.epochs,
+            queue_depth: self.spec.queue_depth,
+            verbose: self.spec.verbose,
+        }
+    }
+}
+
+// ----------------------------------------------------------- training loop
+
+/// The one training loop (epochs × Batch-Queue iterations) shared by
+/// [`Model::train`], [`CompiledSession::train_with`] and
+/// [`CompiledSession::personalize`]. Callback `Stop` ends training after
+/// the current iteration's bookkeeping; a partial epoch still contributes
+/// its mean to `losses_per_epoch`, and `summary.epochs` reports the
+/// epochs actually entered.
+pub(crate) fn run_training<F>(
+    model: &mut Model,
+    make_producer: &F,
+    cfg: &TrainConfig,
+    callbacks: &mut [&mut dyn TrainCallback],
+) -> Result<TrainSummary>
+where
+    F: Fn() -> Box<dyn DataProducer>,
+{
+    let timer = Timer::start();
+    let mut summary = TrainSummary { epochs: cfg.epochs, ..Default::default() };
+    let mut stopped = false;
+    for epoch in 0..cfg.epochs {
+        let queue = BatchQueue::spawn(make_producer(), model.opts.batch, cfg.queue_depth);
+        let mut epoch_loss = 0f64;
+        let mut batches = 0usize;
+        while let Some(b) = queue.next() {
+            model.bind_batch(&b.input, &b.label)?;
+            let loss = model.exec.try_train_iteration()?;
+            epoch_loss += loss as f64;
+            batches += 1;
+            let ev = TrainEvent { epoch, iteration: summary.iterations + batches, loss };
+            for cb in callbacks.iter_mut() {
+                if cb.on_iteration(&ev) == CallbackAction::Stop {
+                    stopped = true;
+                }
+            }
+            if stopped {
+                break;
+            }
+        }
+        if batches == 0 {
+            return Err(Error::Dataset("no full batch produced".into()));
+        }
+        let mean = (epoch_loss / batches as f64) as f32;
+        summary.losses_per_epoch.push(mean);
+        summary.iterations += batches;
+        summary.final_loss = mean;
+        if cfg.verbose {
+            println!("epoch {:>3}: loss {:.6} ({} iters)", epoch + 1, mean, batches);
+        }
+        if !stopped {
+            let ev = TrainEvent { epoch, iteration: summary.iterations, loss: mean };
+            for cb in callbacks.iter_mut() {
+                if cb.on_epoch_end(&ev) == CallbackAction::Stop {
+                    stopped = true;
+                }
+            }
+        }
+        if stopped {
+            summary.epochs = epoch + 1;
+            break;
+        }
+    }
+    summary.wall_s = timer.elapsed_s();
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn early_stop_counts_plateaus() {
+        let mut es = EarlyStop::new(2, 0.01);
+        let ev = |loss| TrainEvent { epoch: 0, iteration: 1, loss };
+        assert_eq!(es.on_epoch_end(&ev(1.0)), CallbackAction::Continue);
+        assert_eq!(es.on_epoch_end(&ev(0.5)), CallbackAction::Continue); // improves
+        assert_eq!(es.on_epoch_end(&ev(0.499)), CallbackAction::Continue); // < min_delta
+        assert_eq!(es.on_epoch_end(&ev(0.498)), CallbackAction::Stop); // 2nd plateau
+        assert_eq!(es.best(), 0.5);
+    }
+
+    #[test]
+    fn early_stop_resets_on_improvement() {
+        let mut es = EarlyStop::new(2, 0.0);
+        let ev = |loss| TrainEvent { epoch: 0, iteration: 1, loss };
+        assert_eq!(es.on_epoch_end(&ev(1.0)), CallbackAction::Continue);
+        assert_eq!(es.on_epoch_end(&ev(1.0)), CallbackAction::Continue); // plateau 1
+        assert_eq!(es.on_epoch_end(&ev(0.9)), CallbackAction::Continue); // reset
+        assert_eq!(es.on_epoch_end(&ev(0.9)), CallbackAction::Continue); // plateau 1
+        assert_eq!(es.on_epoch_end(&ev(0.9)), CallbackAction::Stop); // plateau 2
+    }
+
+    #[test]
+    fn freeze_prefix_must_match() {
+        let mut nodes = vec![NodeDesc::new("conv0", "conv2d", Props::new())];
+        assert!(apply_freeze(&mut nodes, &["conv".into()]).is_ok());
+        assert_eq!(nodes[0].props.get("trainable"), Some("false"));
+        assert!(apply_freeze(&mut nodes, &["nope".into()]).is_err());
+    }
+}

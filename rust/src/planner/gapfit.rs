@@ -10,9 +10,11 @@
 //! lets the pool actually shrink to the advisor's `primary_peak_bytes`
 //! instead of merely reporting it.
 //!
-//! Placement is lowest-feasible-offset first-fit: for each tensor,
-//! collect the address ranges of every already-placed, time-overlapping
-//! tensor and slide up from offset 0 to the first hole large enough. Two
+//! Placement: for each tensor, collect the address ranges of every
+//! already-placed, time-overlapping tensor, then pick a hole by one of
+//! two [`GapStrategy`] rules — *first-fit* (lowest feasible offset, the
+//! PR-1 default) or *best-fit* (smallest adequate hole between blocked
+//! ranges, reducing the fragmentation first-fit leaves behind). Two
 //! deterministic orderings are tried — schedule order (Algorithm 2's
 //! sort) and size-descending — and the layout with the smaller pool
 //! wins; on the evaluation models this lands within a few percent of the
@@ -26,9 +28,27 @@ use crate::tensor::{Region, TensorId, TensorTable};
 use super::offload::{live_intervals, OffloadPlan};
 use super::{allocatable, sort_by_schedule, Planner};
 
+/// Hole-selection rule for gap-aware placement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum GapStrategy {
+    /// Lowest feasible offset.
+    #[default]
+    FirstFit,
+    /// Smallest adequate hole between blocked ranges (least waste); falls
+    /// back to the open end above every blocked range. ROADMAP follow-up:
+    /// `benches/swap_runtime.rs` reports the fragmentation of both.
+    BestFit,
+}
+
 /// Planner that consumes an [`OffloadPlan`] and assigns regions under the
-/// plan's segmented liveness model.
+/// plan's segmented liveness model using first-fit placement.
 pub struct GapFitPlanner<'a> {
+    pub plan: &'a OffloadPlan,
+}
+
+/// Best-fit variant of [`GapFitPlanner`], selected under a memory budget
+/// by `CompileOpts`/`DeviceProfile` `planner = PlannerKind::BestFit`.
+pub struct GapBestFitPlanner<'a> {
     pub plan: &'a OffloadPlan,
 }
 
@@ -50,12 +70,13 @@ pub fn intervals_overlap(a: &[(u32, u32)], b: &[(u32, u32)]) -> bool {
     false
 }
 
-/// First-fit placement of `ids` (in the given order) under segmented
-/// liveness; returns the pool length and each tensor's region.
+/// Placement of `ids` (in the given order) under segmented liveness;
+/// returns the pool length and each tensor's region.
 fn place(
     table: &TensorTable,
     offloaded: &HashSet<TensorId>,
     ids: &[TensorId],
+    strategy: GapStrategy,
 ) -> (usize, Vec<(TensorId, Region)>) {
     struct Placed {
         intervals: Vec<(u32, u32)>,
@@ -76,18 +97,74 @@ fn place(
             .map(|p| (p.offset, p.offset + p.len))
             .collect();
         forbidden.sort_unstable();
-        let mut offset = 0usize;
-        for &(a, b) in &forbidden {
-            if offset + need <= a {
-                break;
+        let offset = match strategy {
+            GapStrategy::FirstFit => {
+                let mut offset = 0usize;
+                for &(a, b) in &forbidden {
+                    if offset + need <= a {
+                        break;
+                    }
+                    offset = offset.max(b);
+                }
+                offset
             }
-            offset = offset.max(b);
-        }
+            GapStrategy::BestFit => {
+                // sweep the (possibly mutually overlapping) blocked ranges
+                // in address order, scoring each bounded hole by waste; the
+                // open end above everything is the fallback
+                let mut best: Option<(usize, usize)> = None; // (offset, waste)
+                let mut cursor = 0usize;
+                for &(a, b) in &forbidden {
+                    if a > cursor {
+                        let hole = a - cursor;
+                        if hole >= need {
+                            let waste = hole - need;
+                            if best.map(|(_, w)| waste < w).unwrap_or(true) {
+                                best = Some((cursor, waste));
+                            }
+                        }
+                    }
+                    cursor = cursor.max(b);
+                }
+                best.map(|(o, _)| o).unwrap_or(cursor)
+            }
+        };
         regions.push((id, Region { offset, len: need }));
         pool_len = pool_len.max(offset + need);
         placed.push(Placed { intervals, offset, len: need });
     }
     (pool_len, regions)
+}
+
+/// Shared driver: try both deterministic orderings under `strategy`,
+/// commit the smaller layout.
+fn plan_gaps(
+    table: &mut TensorTable,
+    plan: &OffloadPlan,
+    strategy: GapStrategy,
+) -> Result<usize> {
+    let offloaded: HashSet<TensorId> = plan.entries.iter().map(|e| e.tensor).collect();
+    let ids = allocatable(table);
+
+    let mut by_schedule = ids.clone();
+    sort_by_schedule(table, &mut by_schedule);
+    let mut by_size = ids;
+    by_size.sort_by_key(|&id| {
+        let s = table.get(id);
+        (std::cmp::Reverse(s.dim.len()), s.min_eo().unwrap_or(u32::MAX), id)
+    });
+
+    let (len_a, regions_a) = place(table, &offloaded, &by_schedule, strategy);
+    let (len_b, regions_b) = place(table, &offloaded, &by_size, strategy);
+    let (pool_len, regions) = if len_b < len_a {
+        (len_b, regions_b)
+    } else {
+        (len_a, regions_a)
+    };
+    for (id, r) in regions {
+        table.get_mut(id).region = Some(r);
+    }
+    Ok(pool_len)
 }
 
 impl Planner for GapFitPlanner<'_> {
@@ -96,29 +173,17 @@ impl Planner for GapFitPlanner<'_> {
     }
 
     fn plan(&self, table: &mut TensorTable) -> Result<usize> {
-        let offloaded: HashSet<TensorId> =
-            self.plan.entries.iter().map(|e| e.tensor).collect();
-        let ids = allocatable(table);
+        plan_gaps(table, self.plan, GapStrategy::FirstFit)
+    }
+}
 
-        let mut by_schedule = ids.clone();
-        sort_by_schedule(table, &mut by_schedule);
-        let mut by_size = ids;
-        by_size.sort_by_key(|&id| {
-            let s = table.get(id);
-            (std::cmp::Reverse(s.dim.len()), s.min_eo().unwrap_or(u32::MAX), id)
-        });
+impl Planner for GapBestFitPlanner<'_> {
+    fn name(&self) -> &'static str {
+        "gapfit-bestfit"
+    }
 
-        let (len_a, regions_a) = place(table, &offloaded, &by_schedule);
-        let (len_b, regions_b) = place(table, &offloaded, &by_size);
-        let (pool_len, regions) = if len_b < len_a {
-            (len_b, regions_b)
-        } else {
-            (len_a, regions_a)
-        };
-        for (id, r) in regions {
-            table.get_mut(id).region = Some(r);
-        }
-        Ok(pool_len)
+    fn plan(&self, table: &mut TensorTable) -> Result<usize> {
+        plan_gaps(table, self.plan, GapStrategy::BestFit)
     }
 }
 
@@ -185,6 +250,53 @@ mod tests {
         let pool_len = GapFitPlanner { plan: &plan }.plan(&mut t).unwrap();
         validate_gap_plan(&t, &plan, pool_len).unwrap();
         assert_eq!(pool_len, 2000);
+    }
+
+    #[test]
+    fn bestfit_validates_and_reuses_gaps() {
+        // same scenario as `gap_reuse_shrinks_pool`: best-fit must find
+        // the identical (optimal) single-slot layout
+        let mut t = table_with(&[
+            ("a", 1000, &[0, 1, 10], TensorRole::Activation),
+            ("b", 1000, &[4, 5], TensorRole::Activation),
+        ]);
+        let plan = advise(&t, 1000 * 4);
+        assert!(plan.fits, "{plan:?}");
+        let pool_len = GapBestFitPlanner { plan: &plan }.plan(&mut t).unwrap();
+        assert_eq!(pool_len, 1000);
+        validate_gap_plan(&t, &plan, pool_len).unwrap();
+    }
+
+    #[test]
+    fn bestfit_prefers_smallest_adequate_hole() {
+        // `q` and `s` die at EO 1, carving two bounded holes (30-wide at
+        // offset 5, 12-wide at offset 40) between the long-lived blockers;
+        // the 10-element `t` must take the 12-hole under best-fit and the
+        // lower 30-hole under first-fit
+        let t = table_with(&[
+            ("p", 5, &[0, 30], TensorRole::Activation),
+            ("q", 30, &[0, 1], TensorRole::Activation),
+            ("r", 5, &[0, 30], TensorRole::Activation),
+            ("s", 12, &[0, 1], TensorRole::Activation),
+            ("u", 8, &[0, 30], TensorRole::Activation),
+            ("t", 10, &[5, 30], TensorRole::Activation),
+        ]);
+        let ids: Vec<TensorId> = (0..6).collect();
+        let none = HashSet::new();
+        let (_, ff) = place(&t, &none, &ids, GapStrategy::FirstFit);
+        let (_, bf) = place(&t, &none, &ids, GapStrategy::BestFit);
+        let off = |rs: &[(TensorId, Region)], id: TensorId| {
+            rs.iter().find(|(i, _)| *i == id).unwrap().1.offset
+        };
+        for rs in [&ff, &bf] {
+            assert_eq!(off(rs, 0), 0);
+            assert_eq!(off(rs, 1), 5);
+            assert_eq!(off(rs, 2), 35);
+            assert_eq!(off(rs, 3), 40);
+            assert_eq!(off(rs, 4), 52);
+        }
+        assert_eq!(off(&ff, 5), 5, "first-fit takes the lowest (30-wide) hole");
+        assert_eq!(off(&bf, 5), 40, "best-fit takes the least-waste (12-wide) hole");
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::error::Result;
 use crate::tensor::{TensorId, TensorTable};
 
 pub use bestfit::BestFitPlanner;
-pub use gapfit::GapFitPlanner;
+pub use gapfit::{GapBestFitPlanner, GapFitPlanner, GapStrategy};
 pub use naive::NaivePlanner;
 pub use offload::{OffloadEntry, OffloadPlan};
 pub use pool::MemoryPool;

@@ -31,18 +31,13 @@ pub trait SecondaryStore: Send {
 }
 
 /// Which secondary store a memory-budgeted compile should use.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum StoreKind {
     /// In-memory host buffers (default).
+    #[default]
     Host,
     /// File-backed spill in the OS temp directory.
     File,
-}
-
-impl Default for StoreKind {
-    fn default() -> Self {
-        StoreKind::Host
-    }
 }
 
 impl StoreKind {

@@ -1,0 +1,522 @@
+//! Lifecycle-session API suite: the typestate path must be plan- and
+//! training-equivalent to the seed `ModelBuilder::compile` shim, the
+//! budget-aware auto-batch must be maximal and monotone in the budget,
+//! freeze must shrink the planner table (not just skip updates),
+//! `personalize` must leave frozen weights bitwise intact, callbacks must
+//! observe and stop training, INI hyper-parameters must round-trip into a
+//! trained model, and the best-fit gap placement must stay bitwise
+//! swap-equivalent.
+
+use nntrainer::compiler::{plan_only, CompileOpts};
+use nntrainer::dataset::producer::{CachedProducer, Sample};
+use nntrainer::dataset::{DataProducer, DigitsProducer};
+use nntrainer::graph::NodeDesc;
+use nntrainer::layers::Props;
+use nntrainer::model::{
+    CallbackAction, CompiledSession, DeviceProfile, EarlyStop, ModelBuilder, OnIteration,
+    Session, TrainSpec,
+};
+use nntrainer::planner::PlannerKind;
+use nntrainer::rng::Rng;
+use nntrainer::tensor::TensorRole;
+
+fn node(name: &str, ltype: &str, pairs: &[(&str, &str)]) -> NodeDesc {
+    NodeDesc::new(name, ltype, Props::from_pairs(pairs.iter().copied()))
+}
+
+fn mlp() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "1:1:64")]),
+        node("h0", "fully_connected", &[("unit", "48"), ("activation", "relu")]),
+        node("h1", "fully_connected", &[("unit", "32"), ("activation", "relu")]),
+        node("out", "fully_connected", &[("unit", "10")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+/// Conv backbone (`c0`, `c1`) + fc head (`head`) — the freeze /
+/// personalize scenario.
+fn conv_net() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "2:8:8")]),
+        node("c0", "conv2d", &[("filters", "4"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("c1", "conv2d", &[("filters", "4"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("flat", "flatten", &[]),
+        node("head", "fully_connected", &[("unit", "6")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+fn feat_lens(cs: &CompiledSession) -> (usize, usize) {
+    let exec = &cs.model.exec;
+    let in_len = exec
+        .graph
+        .input_nodes
+        .iter()
+        .map(|&n| exec.graph.nodes[n].out_dims[0].feature_len())
+        .sum();
+    let lb_len = exec
+        .graph
+        .loss_nodes
+        .iter()
+        .map(|&n| exec.graph.nodes[n].in_dims[0].feature_len())
+        .sum();
+    (in_len, lb_len)
+}
+
+/// Fixed random dataset sized to the session's graph.
+fn fixed_samples(cs: &CompiledSession, n: usize, seed: u64) -> Vec<Sample> {
+    let (in_len, lb_len) = feat_lens(cs);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut input = vec![0f32; in_len];
+            let mut label = vec![0f32; lb_len];
+            rng.fill_uniform(&mut input, -1.0, 1.0);
+            rng.fill_uniform(&mut label, 0.0, 1.0);
+            Sample { input, label }
+        })
+        .collect()
+}
+
+fn probe_pool(nodes: Vec<NodeDesc>, batch: usize) -> usize {
+    plan_only(nodes, &CompileOpts { batch, ..Default::default() }).unwrap().pool_bytes
+}
+
+// ------------------------------------------------------------- typestate
+
+#[test]
+fn typestate_matches_legacy_compile() {
+    let batch = 8usize;
+    let mut legacy = ModelBuilder::new()
+        .add_nodes(mlp())
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .compile(&CompileOpts { batch, ..Default::default() })
+        .unwrap();
+    let mut staged = Session::describe(mlp())
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .configure(TrainSpec { batch: Some(batch), ..Default::default() })
+        .compile_for(DeviceProfile::unconstrained())
+        .unwrap();
+    assert_eq!(legacy.peak_pool_bytes(), staged.peak_pool_bytes());
+    assert_eq!(legacy.report.planner, staged.report().planner);
+
+    let mut rng = Rng::new(0xBEEF);
+    let mut input = vec![0f32; 64 * batch];
+    let mut label = vec![0f32; 10 * batch];
+    for it in 0..3 {
+        rng.fill_uniform(&mut input, -1.0, 1.0);
+        rng.fill_uniform(&mut label, 0.0, 1.0);
+        legacy.bind_batch(&input, &label).unwrap();
+        staged.model.bind_batch(&input, &label).unwrap();
+        let l0 = legacy.exec.try_train_iteration().unwrap();
+        let l1 = staged.model.exec.try_train_iteration().unwrap();
+        assert_eq!(l0.to_bits(), l1.to_bits(), "iteration {it} diverged");
+    }
+}
+
+// ------------------------------------------------------------- auto batch
+
+#[test]
+fn auto_batch_is_maximal_under_budget() {
+    let budget = probe_pool(mlp(), 13);
+    let cs = Session::describe(mlp())
+        .optimizer("sgd", &[])
+        .configure(TrainSpec { batch: None, ..Default::default() })
+        .compile_for(DeviceProfile {
+            memory_budget_bytes: Some(budget),
+            swap: false,
+            ..Default::default()
+        })
+        .unwrap();
+    let b = cs.batch();
+    assert!(b >= 13, "budget covers batch 13, got {b}");
+    assert!(probe_pool(mlp(), b) <= budget, "selected batch overflows the budget");
+    assert!(probe_pool(mlp(), b + 1) > budget, "batch {b} is not maximal");
+    // the compiled plan is the probed plan
+    assert_eq!(cs.report().pool_bytes, probe_pool(mlp(), b));
+    assert_eq!(cs.fits_budget(), Some(true));
+}
+
+#[test]
+fn auto_batch_monotone_in_budget() {
+    let auto = |budget: usize| -> usize {
+        Session::describe(mlp())
+            .optimizer("sgd", &[])
+            .configure(TrainSpec { batch: None, ..Default::default() })
+            .compile_for(DeviceProfile {
+                memory_budget_bytes: Some(budget),
+                swap: false,
+                ..Default::default()
+            })
+            .unwrap()
+            .batch()
+    };
+    let budgets = [probe_pool(mlp(), 2), probe_pool(mlp(), 6), probe_pool(mlp(), 24)];
+    let batches: Vec<usize> = budgets.iter().map(|&b| auto(b)).collect();
+    assert!(batches[0] >= 2 && batches[1] >= 6 && batches[2] >= 24, "{batches:?}");
+    assert!(
+        batches[0] <= batches[1] && batches[1] <= batches[2],
+        "batch not monotone in budget: {batches:?}"
+    );
+}
+
+#[test]
+fn auto_batch_swap_extends_the_feasible_batch() {
+    // conv activations idle between forward and backward, so the swap
+    // runtime's gap-aware pool fits more batch into the same budget
+    let budget = probe_pool(conv_net(), 8);
+    let auto = |swap: bool| -> CompiledSession {
+        Session::describe(conv_net())
+            .optimizer("sgd", &[])
+            .configure(TrainSpec { batch: None, ..Default::default() })
+            .compile_for(DeviceProfile {
+                memory_budget_bytes: Some(budget),
+                swap,
+                ..Default::default()
+            })
+            .unwrap()
+    };
+    let plain = auto(false);
+    let swapped = auto(true);
+    assert!(plain.batch() >= 8);
+    assert!(
+        swapped.batch() >= plain.batch(),
+        "swap shrank the feasible batch: {} < {}",
+        swapped.batch(),
+        plain.batch()
+    );
+    assert!(swapped.model.exec.swap_active());
+    assert!(!plain.model.exec.swap_active());
+}
+
+#[test]
+fn auto_batch_reaches_non_power_of_two_cap() {
+    let auto = |budget: usize| -> usize {
+        Session::describe(mlp())
+            .optimizer("sgd", &[])
+            .configure(TrainSpec { batch: None, ..Default::default() })
+            .compile_for(DeviceProfile {
+                memory_budget_bytes: Some(budget),
+                swap: false,
+                max_batch: 48,
+                ..Default::default()
+            })
+            .unwrap()
+            .batch()
+    };
+    // budget far above any pool: the answer is the cap itself, which the
+    // power-of-two doubling alone would miss (…32, 64>cap)
+    assert_eq!(auto(usize::MAX / 8), 48);
+    // budget landing between the last power of two and the cap
+    assert_eq!(auto(probe_pool(mlp(), 40)), 40);
+}
+
+#[test]
+fn auto_batch_without_budget_uses_default() {
+    let cs = Session::describe(mlp())
+        .optimizer("sgd", &[])
+        .configure(TrainSpec { batch: None, ..Default::default() })
+        .compile_for(DeviceProfile::unconstrained())
+        .unwrap();
+    assert_eq!(cs.batch(), nntrainer::model::DEFAULT_BATCH);
+}
+
+// ----------------------------------------------------------------- freeze
+
+fn role_count(cs: &CompiledSession, role: TensorRole) -> usize {
+    cs.model
+        .exec
+        .graph
+        .table
+        .iter()
+        .filter(|s| s.role == role && s.merged_into.is_none() && !s.eos.is_empty())
+        .count()
+}
+
+#[test]
+fn freeze_shrinks_planner_table() {
+    let compile = |freeze: Vec<String>| -> CompiledSession {
+        Session::describe(conv_net())
+            .optimizer("adam", &[("learning_rate", "0.01")])
+            .configure(TrainSpec { batch: Some(4), freeze, ..Default::default() })
+            .compile_for(DeviceProfile::unconstrained())
+            .unwrap()
+    };
+    let full = compile(vec![]);
+    let frozen = compile(vec!["c0".into(), "c1".into()]);
+
+    // no gradient or optimizer-state tensors planned for frozen layers
+    assert!(
+        role_count(&frozen, TensorRole::Gradient) < role_count(&full, TensorRole::Gradient),
+        "gradient table did not shrink"
+    );
+    assert!(
+        role_count(&frozen, TensorRole::OptState) < role_count(&full, TensorRole::OptState),
+        "optimizer-state table did not shrink"
+    );
+    for s in frozen.model.exec.graph.table.iter() {
+        let layer = s.name.split(':').next().unwrap();
+        if layer == "c0" || layer == "c1" {
+            assert!(
+                !matches!(s.role, TensorRole::Gradient | TensorRole::OptState),
+                "frozen layer planned `{}` ({:?})",
+                s.name,
+                s.role
+            );
+        }
+    }
+    // conv weight + bias per frozen conv layer
+    assert_eq!(frozen.frozen_weight_names().len(), 4);
+    assert!(full.frozen_weight_names().is_empty());
+    assert!(
+        frozen.peak_pool_bytes() <= full.peak_pool_bytes(),
+        "freezing must not grow the pool"
+    );
+}
+
+#[test]
+fn freeze_unknown_prefix_errors() {
+    let err = Session::describe(conv_net())
+        .optimizer("sgd", &[])
+        .configure(TrainSpec {
+            batch: Some(2),
+            freeze: vec!["nonexistent".into()],
+            ..Default::default()
+        })
+        .compile_for(DeviceProfile::unconstrained())
+        .unwrap_err();
+    assert!(err.to_string().contains("nonexistent"), "{err}");
+}
+
+// ------------------------------------------------------------ personalize
+
+#[test]
+fn personalize_keeps_frozen_weights_bitwise() {
+    let data_seed = 0xDA7A;
+    // vendor: train everything, checkpoint
+    let mut vendor = Session::describe(conv_net())
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .configure(TrainSpec { batch: Some(4), epochs: 2, ..Default::default() })
+        .compile_for(DeviceProfile::unconstrained())
+        .unwrap();
+    let samples = fixed_samples(&vendor, 16, data_seed);
+    let mk = samples.clone();
+    let make = move || -> Box<dyn DataProducer> { Box::new(CachedProducer::new(mk.clone())) };
+    vendor.train(&make).unwrap();
+    let ckpt = std::env::temp_dir().join("session_api_personalize.nntr");
+    let ckpt_path = ckpt.to_string_lossy().into_owned();
+    vendor.save(&ckpt_path).unwrap();
+
+    // user device: frozen backbone, fresh head, fine-tune
+    let mut personal = Session::describe(conv_net())
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .configure(TrainSpec {
+            batch: Some(4),
+            epochs: 4,
+            freeze: vec!["c0".into(), "c1".into()],
+            ..Default::default()
+        })
+        .compile_for(DeviceProfile::unconstrained())
+        .unwrap();
+    let frozen = personal.frozen_weight_names();
+    assert_eq!(frozen.len(), 4);
+    let report = personal
+        .personalize(
+            &nntrainer::model::PersonalizeOpts {
+                checkpoint: Some(ckpt_path.clone()),
+                reinit: vec!["head".into()],
+                ..Default::default()
+            },
+            &make,
+            &mut [],
+        )
+        .unwrap();
+    let _ = std::fs::remove_file(&ckpt_path);
+
+    assert!(report.restored > 0, "checkpoint restored nothing");
+    assert_eq!(report.reinitialized, 2, "head weight + bias re-init");
+    assert!(
+        report.summary.final_loss < report.summary.losses_per_epoch[0],
+        "fine-tune made no progress: {:?}",
+        report.summary.losses_per_epoch
+    );
+    // frozen backbone bitwise identical to the vendor checkpoint
+    for name in &frozen {
+        let a = vendor.model.exec.read_weight(name).unwrap();
+        let b = personal.model.exec.read_weight(name).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{name}[{k}]: {x} vs {y}");
+        }
+    }
+    // the trainable head must actually have moved away from re-init
+    let head_before = {
+        // fresh compile, same seeds, reinit only — no training
+        let mut probe = Session::describe(conv_net())
+            .optimizer("sgd", &[("learning_rate", "0.05")])
+            .configure(TrainSpec {
+                batch: Some(4),
+                freeze: vec!["c0".into(), "c1".into()],
+                ..Default::default()
+            })
+            .compile_for(DeviceProfile::unconstrained())
+            .unwrap();
+        probe.model.exec.reinit_weights_matching(&["head".into()], 0x5EED).unwrap();
+        probe.model.exec.read_weight("head:weight").unwrap()
+    };
+    let head_after = personal.model.exec.read_weight("head:weight").unwrap();
+    assert_ne!(head_before, head_after, "head did not train");
+}
+
+#[test]
+fn personalize_rejects_typoed_reinit_prefix() {
+    let mut cs = Session::describe(conv_net())
+        .optimizer("sgd", &[])
+        .configure(TrainSpec { batch: Some(4), ..Default::default() })
+        .compile_for(DeviceProfile::unconstrained())
+        .unwrap();
+    let before = cs.model.exec.read_weight("head:weight").unwrap();
+    let err = cs
+        .model
+        .exec
+        .reinit_weights_matching(&["haed".into()], 1)
+        .unwrap_err();
+    assert!(err.to_string().contains("haed"), "{err}");
+    // fail-loud must also be fail-clean: nothing was mutated
+    assert_eq!(before, cs.model.exec.read_weight("head:weight").unwrap());
+}
+
+// -------------------------------------------------------------- callbacks
+
+#[test]
+fn early_stop_ends_training() {
+    let mut cs = Session::describe(mlp())
+        .optimizer("sgd", &[("learning_rate", "0.0")]) // loss frozen → instant plateau
+        .configure(TrainSpec { batch: Some(4), epochs: 30, ..Default::default() })
+        .compile_for(DeviceProfile::unconstrained())
+        .unwrap();
+    let samples = fixed_samples(&cs, 12, 7);
+    let make = move || -> Box<dyn DataProducer> { Box::new(CachedProducer::new(samples.clone())) };
+    let mut es = EarlyStop::new(2, 0.0);
+    let summary = cs.train_with(&make, &mut [&mut es]).unwrap();
+    // epoch 1 improves on +inf, epochs 2-3 plateau (lr 0) → stop at 3
+    assert_eq!(summary.epochs, 3, "{:?}", summary.losses_per_epoch);
+    assert_eq!(summary.losses_per_epoch.len(), 3);
+    assert!(summary.iterations < 30 * 3);
+}
+
+#[test]
+fn on_iteration_can_stop_mid_epoch() {
+    let mut cs = Session::describe(mlp())
+        .optimizer("sgd", &[("learning_rate", "0.01")])
+        .configure(TrainSpec { batch: Some(4), epochs: 5, ..Default::default() })
+        .compile_for(DeviceProfile::unconstrained())
+        .unwrap();
+    let samples = fixed_samples(&cs, 40, 11); // 10 iterations per epoch
+    let make = move || -> Box<dyn DataProducer> { Box::new(CachedProducer::new(samples.clone())) };
+    let mut seen = 0usize;
+    let mut stopper = OnIteration(|ev: &nntrainer::model::TrainEvent| {
+        seen += 1;
+        assert!(ev.loss.is_finite());
+        if ev.iteration >= 3 {
+            CallbackAction::Stop
+        } else {
+            CallbackAction::Continue
+        }
+    });
+    let summary = cs.train_with(&make, &mut [&mut stopper]).unwrap();
+    drop(stopper);
+    assert_eq!(summary.iterations, 3, "stopped after the 3rd iteration");
+    assert_eq!(summary.epochs, 1);
+    assert_eq!(summary.losses_per_epoch.len(), 1, "partial epoch still reports a mean");
+    assert_eq!(seen, 3);
+}
+
+// ------------------------------------------------------------------- INI
+
+const ROUND_TRIP_INI: &str = r#"
+[Model]
+Type = NeuralNetwork
+Loss = cross_entropy
+Optimizer = sgd
+Learning_rate = 0.4
+Batch_Size = 4
+Epochs = 3
+
+[inputlayer]
+Type = input
+Input_Shape = 1:8:8
+
+[fc0]
+Type = fully_connected
+Unit = 24
+Activation = sigmoid
+
+[fc1]
+Type = fully_connected
+Unit = 10
+"#;
+
+#[test]
+fn ini_hyper_params_drive_the_session() {
+    let session = Session::from_ini_str(ROUND_TRIP_INI).unwrap();
+    let spec = session.default_spec();
+    assert_eq!(spec.batch, Some(4));
+    assert_eq!(spec.epochs, 3);
+
+    let mut cs = session
+        .configure_default()
+        .compile_for(DeviceProfile::unconstrained())
+        .unwrap();
+    assert_eq!(cs.batch(), 4);
+    let make = || -> Box<dyn DataProducer> { Box::new(DigitsProducer::new(40, 8, 1, 3)) };
+    let summary = cs.train(make).unwrap();
+    assert_eq!(summary.epochs, 3, "INI Epochs drives the run");
+    assert_eq!(summary.iterations, 30, "40 samples / batch 4 x 3 epochs");
+    assert!(
+        summary.final_loss < summary.losses_per_epoch[0],
+        "INI learning rate produced no progress: {:?}",
+        summary.losses_per_epoch
+    );
+}
+
+// -------------------------------------------------- best-fit gap placement
+
+#[test]
+fn gap_bestfit_is_bitwise_swap_equivalent() {
+    let batch = 8usize;
+    let base_pool = probe_pool(conv_net(), batch);
+    let budget = base_pool * 75 / 100;
+    let mut base = Session::describe(conv_net())
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .configure(TrainSpec { batch: Some(batch), ..Default::default() })
+        .compile_for(DeviceProfile::unconstrained())
+        .unwrap();
+    let mut bestfit = Session::describe(conv_net())
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .configure(TrainSpec { batch: Some(batch), ..Default::default() })
+        .compile_for(DeviceProfile {
+            memory_budget_bytes: Some(budget),
+            planner: PlannerKind::BestFit,
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(bestfit.report().planner, "gapfit-bestfit");
+    assert!(bestfit.model.exec.swap_active());
+    assert!(bestfit.peak_pool_bytes() < base_pool, "best-fit gap pool did not shrink");
+
+    let (in_len, lb_len) = feat_lens(&base);
+    let mut rng = Rng::new(0xFEED);
+    let mut input = vec![0f32; in_len * batch];
+    let mut label = vec![0f32; lb_len * batch];
+    for it in 0..4 {
+        rng.fill_uniform(&mut input, -1.0, 1.0);
+        rng.fill_uniform(&mut label, 0.0, 1.0);
+        base.model.bind_batch(&input, &label).unwrap();
+        bestfit.model.bind_batch(&input, &label).unwrap();
+        let l0 = base.model.exec.try_train_iteration().unwrap();
+        let l1 = bestfit.model.exec.try_train_iteration().unwrap();
+        assert_eq!(l0.to_bits(), l1.to_bits(), "iteration {it}: best-fit placement diverged");
+    }
+}
