@@ -8,8 +8,13 @@
 //! * `frag%`    — fragmentation: achieved-over-advised overhead, the
 //!   ROADMAP metric the first-fit vs best-fit placement comparison runs
 //!   on (placer column: `gapfit` = first-fit, `gapfit-bestfit`)
+//! * `tuning`/`lead`/`depth` — swap tuning: `fixed` keeps the global
+//!   1-EO lead and depth 2; `calibrated` micro-benchmarks the store and
+//!   derives per-entry leads (`lead` = widest) plus the in-flight depth
 //! * `stall`    — wall time per iteration the training thread spent
-//!   waiting on swap-ins (background double-buffering hides the rest)
+//!   waiting on swap-ins (background prefetching hides the rest). The
+//!   acceptance row: on the file-spill store, `calibrated` stalls must
+//!   undercut `fixed` (ideally ~zero) with bitwise-identical training.
 //!
 //! Run: `cargo bench --bench swap_runtime` (dataset size via
 //! `NNTRAINER_BENCH_DATASET`).
@@ -21,8 +26,9 @@ use nntrainer::compiler::plan_only;
 use nntrainer::graph::NodeDesc;
 use nntrainer::model::zoo;
 use nntrainer::planner::PlannerKind;
-use nntrainer::runtime::StoreKind;
+use nntrainer::runtime::{StoreKind, SwapTuning};
 
+#[allow(clippy::too_many_arguments)]
 fn run_case(
     table: &mut Table,
     name: &str,
@@ -30,16 +36,20 @@ fn run_case(
     batch: usize,
     store: StoreKind,
     placer: PlannerKind,
+    tuning: SwapTuning,
 ) {
     let base = plan_only(nodes.clone(), &nntrainer_profile(batch)).expect("plan");
     let target = base.pool_bytes * 70 / 100;
     let mut opts = budget_profile(batch, target);
+    opts.swap_tuning = tuning;
     opts.swap_store = store;
     opts.planner = placer;
     let dataset = bench_dataset();
     let (model, secs, iters) = train_random(nodes, &opts, dataset, 1, 0.01).expect("train");
     let plan = model.exec.swap_plan().expect("swap plan").clone();
     let stats = model.exec.swap_stats().expect("swap stats");
+    let depth = model.exec.swap_depth().unwrap_or(0);
+    let lead = model.exec.swap_max_lead().unwrap_or(0);
     let iters = iters.max(1);
     let achieved = model.peak_pool_bytes();
     let frag = if plan.primary_peak_bytes > 0 {
@@ -52,6 +62,7 @@ fn run_case(
         name.to_string(),
         model.report.planner.to_string(),
         format!("{:?}", store).to_lowercase(),
+        format!("{:?}", tuning).to_lowercase(),
         fmt_mib(base.pool_bytes),
         fmt_mib(target),
         fmt_mib(plan.primary_peak_bytes),
@@ -59,6 +70,8 @@ fn run_case(
         format!("{frag:.1}"),
         (if plan.fits { "yes" } else { "no" }).into(),
         fmt_mib(plan.swap_bytes_per_iter),
+        format!("{lead}"),
+        format!("{depth}"),
         format!("{:.3}", stats.stall_ms() / iters as f64),
         format!("{:.1}", stats.sync_fetches as f64 / iters as f64),
         format!("{:.1}", secs * 1e3 / iters as f64),
@@ -71,6 +84,7 @@ fn main() {
         "model",
         "placer",
         "store",
+        "tuning",
         "unswapped",
         "target",
         "advised",
@@ -78,22 +92,34 @@ fn main() {
         "frag%",
         "fits",
         "swap MiB/it",
+        "lead",
+        "depth",
         "stall ms/it",
         "sync/it",
         "iter ms",
     ]);
     for placer in [PlannerKind::Sorting, PlannerKind::BestFit] {
-        run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, placer);
-        run_case(&mut table, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::Host, placer);
-        run_case(&mut table, "Model B (Conv)", zoo::model_b_conv(), 16, StoreKind::Host, placer);
+        run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, placer, SwapTuning::Fixed);
+        run_case(&mut table, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed);
+        run_case(&mut table, "Model B (Conv)", zoo::model_b_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed);
     }
-    run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::File, PlannerKind::Sorting);
+    // the acceptance comparison: fixed vs calibrated tuning on the
+    // file-spill store (the slow path where fixed constants stall)
+    for tuning in [SwapTuning::Fixed, SwapTuning::Calibrated] {
+        run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::File, PlannerKind::Sorting, tuning);
+        run_case(&mut table, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::File, PlannerKind::Sorting, tuning);
+    }
+    run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, PlannerKind::Sorting, SwapTuning::Calibrated);
     table.print();
     println!(
         "\nachieved = gap-aware planner pool (what training actually allocates); \
          advised = live-set bound under the plan; frag% = achieved overhead \
          over the advised bound (first-fit `gapfit` vs `gapfit-bestfit` placement).\n\
+         tuning: fixed = global 1-EO lead / depth 2; calibrated = per-entry leads \
+         and depth derived from the measured store bandwidth (lead column = widest \
+         lead in effect after warmup recalibration, depth = in-flight fetches \
+         after epoch-boundary adaptation).\n\
          stall = training-thread wait on swap-ins; the rest of the traffic is \
-         hidden by the double-buffered background prefetcher."
+         hidden by the background prefetcher."
     );
 }

@@ -94,6 +94,11 @@ pub fn train_random(
             model.exec.try_train_iteration()?;
             iters += 1;
         }
+        // epoch boundary, as in session::run_training: calibrated swap
+        // tuning reacts to the stall telemetry this epoch accrued
+        if let Some(sw) = model.exec.swap_mut() {
+            sw.adapt_depth();
+        }
     }
     Ok((model, start.elapsed().as_secs_f64(), iters))
 }

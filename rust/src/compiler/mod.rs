@@ -18,7 +18,8 @@ use crate::planner::{
     validate::{validate_gap_plan, validate_merges, validate_plan},
     PlannerKind,
 };
-use crate::runtime::store::StoreKind;
+use crate::runtime::calibrate::{self, SwapCalibration, SwapTuning};
+use crate::runtime::store::{SecondaryStore, StoreKind};
 use crate::runtime::swap::SwapExec;
 use crate::tensor::TensorTable;
 
@@ -48,6 +49,11 @@ pub struct CompileOpts {
     pub memory_budget_bytes: Option<usize>,
     /// Secondary store backing the swap runtime (host RAM or spill file).
     pub swap_store: StoreKind,
+    /// How the swap runtime's prefetch leads/depth are chosen:
+    /// `Fixed` keeps the PR-1 constants, `Calibrated` micro-benchmarks
+    /// the store at compile time and derives per-entry leads
+    /// (`runtime/calibrate.rs`). Only meaningful under a budget.
+    pub swap_tuning: SwapTuning,
 }
 
 impl Default for CompileOpts {
@@ -62,21 +68,45 @@ impl Default for CompileOpts {
             seed: 42,
             memory_budget_bytes: None,
             swap_store: StoreKind::Host,
+            swap_tuning: SwapTuning::Fixed,
         }
     }
 }
 
 /// Plan memory for an initialized table: either the selected plain
 /// planner, or — under a memory budget — the offload advisor plus the
-/// gap-aware planner. Returns the pool length (f32 elements), the name of
-/// the planner that ran, and the offload plan when a budget was set.
+/// gap-aware planner. With `SwapTuning::Calibrated` and a store to
+/// probe, the advisor's fixed leads are replaced by bandwidth-derived
+/// per-entry leads *before* placement, so the pool layout reserves
+/// exactly the residency the runtime will use. Returns the pool length
+/// (f32 elements), the name of the planner that ran, the offload plan,
+/// and the calibration state for the swap runtime.
+///
+/// Probe-only callers ([`plan_with`], the auto-batch search) pass no
+/// store and plan with fixed leads: calibration is a measurement, so
+/// budget probes stay cheap and deterministic. The realized pool of a
+/// calibrated compile can therefore exceed a probe's estimate by the
+/// widened-lead residency — the budget remains a target, not a bound.
 fn plan_memory(
     table: &mut TensorTable,
     opts: &CompileOpts,
-) -> Result<(usize, &'static str, Option<offload::OffloadPlan>)> {
+    store: Option<&mut dyn SecondaryStore>,
+) -> Result<(usize, &'static str, Option<offload::OffloadPlan>, Option<SwapCalibration>)> {
     match opts.memory_budget_bytes {
         Some(budget) => {
-            let plan = offload::advise(table, budget);
+            let mut plan = offload::advise(table, budget);
+            let calibration = match (opts.swap_tuning, store) {
+                (SwapTuning::Calibrated, Some(store)) if !plan.entries.is_empty() => {
+                    let probe_len =
+                        plan.entries.iter().map(|e| e.bytes / 4).max().unwrap_or(1 << 12);
+                    let store_cal = calibrate::probe_store(store, probe_len)?;
+                    let cost =
+                        calibrate::EoCostModel::from_table(table, &calibrate::probe_compute());
+                    calibrate::derive_leads(&mut plan, table, budget, &store_cal, &cost);
+                    Some(SwapCalibration::new(store_cal, cost))
+                }
+                _ => None,
+            };
             let (pool_len, name) = if opts.planner == PlannerKind::BestFit {
                 let placer = GapBestFitPlanner { plan: &plan };
                 (crate::planner::Planner::plan(&placer, table)?, "gapfit-bestfit")
@@ -86,14 +116,14 @@ fn plan_memory(
             };
             validate_gap_plan(table, &plan, pool_len)?;
             validate_merges(table)?;
-            Ok((pool_len, name, Some(plan)))
+            Ok((pool_len, name, Some(plan), calibration))
         }
         None => {
             let planner = opts.planner.instance();
             let pool_len = planner.plan(table)?;
             validate_plan(table, pool_len)?;
             validate_merges(table)?;
-            Ok((pool_len, planner.name(), None))
+            Ok((pool_len, planner.name(), None, None))
         }
     }
 }
@@ -139,7 +169,7 @@ pub fn plan_with(
         opt_slots,
     };
     let mut ig = init_graph(&graph, factories, &init_opts)?;
-    let (pool_len, planner_name, _plan) = plan_memory(&mut ig.table, opts)?;
+    let (pool_len, planner_name, _plan, _cal) = plan_memory(&mut ig.table, opts, None)?;
     Ok(PlanReport::from_table(&ig.table, pool_len, planner_name))
 }
 
@@ -161,14 +191,20 @@ pub fn compile_with(
         opt_slots: optimizer.state_slots(),
     };
     let mut ig = init_graph(&graph, factories, &init_opts)?;
-    let (pool_len, planner_name, plan) = plan_memory(&mut ig.table, opts)?;
-    let report = PlanReport::from_table(&ig.table, pool_len, planner_name);
-    let swap = match plan {
-        Some(plan) => {
-            let store = opts.swap_store.instance()?;
-            Some(SwapExec::new(&ig.table, &plan, store)?)
-        }
+    // the store is created before planning so Calibrated tuning can
+    // probe the very instance the runtime will swap through
+    let mut store = match opts.memory_budget_bytes {
+        Some(_) => Some(opts.swap_store.instance()?),
         None => None,
+    };
+    let (pool_len, planner_name, plan, calibration) =
+        plan_memory(&mut ig.table, opts, store.as_mut().map(|s| s.as_mut()))?;
+    let report = PlanReport::from_table(&ig.table, pool_len, planner_name);
+    let swap = match (plan, store) {
+        (Some(plan), Some(store)) => {
+            Some(SwapExec::new(&ig.table, &plan, store, calibration)?)
+        }
+        _ => None,
     };
     let exec = Executor::new(
         ig,

@@ -207,7 +207,7 @@ impl Executor {
         self.iter += 1;
         self.last_loss = 0.0;
         if let Some(sw) = self.swap.as_mut() {
-            sw.begin_iteration()?;
+            sw.begin_iteration(true)?;
         }
         for k in 0..self.steps.len() {
             let (eo, op) = self.steps[k];
@@ -287,7 +287,7 @@ impl Executor {
     pub fn try_forward_pass(&mut self) -> Result<()> {
         self.iter += 1;
         if let Some(sw) = self.swap.as_mut() {
-            sw.begin_iteration()?;
+            sw.begin_iteration(false)?;
         }
         for k in 0..self.steps.len() {
             if let (eo, StepOp::Forward(i)) = self.steps[k] {
@@ -489,6 +489,18 @@ impl Executor {
     /// Cumulative swap-runtime counters (None when no budget was set).
     pub fn swap_stats(&self) -> Option<SwapStats> {
         self.swap.as_ref().map(|s| s.stats)
+    }
+
+    /// Current in-flight prefetch depth (None when no budget was set).
+    pub fn swap_depth(&self) -> Option<usize> {
+        self.swap.as_ref().map(|s| s.depth())
+    }
+
+    /// Widest prefetch lead the runtime is currently using — tracks
+    /// warmup recalibration, unlike the compile-time plan's leads
+    /// (None when no budget was set).
+    pub fn swap_max_lead(&self) -> Option<u32> {
+        self.swap.as_ref().map(|s| s.max_lead())
     }
 
     /// The offload plan being executed (None when no budget was set).

@@ -3,9 +3,9 @@
 //!
 //! ```text
 //! nntrainer plan  <model.ini> [--batch N] [--budget-mib M] [--planner sorting|naive|bestfit]
-//!                 [--conventional] [--no-swap] [--table]
+//!                 [--conventional] [--no-swap] [--calibrated] [--table]
 //! nntrainer train <model.ini> [--batch N] [--budget-mib M] [--epochs N] [--early-stop P]
-//!                 [--save ckpt.bin] [--data digits|random]
+//!                 [--calibrated] [--save ckpt.bin] [--data digits|random]
 //! nntrainer zoo                              # list built-in evaluation models
 //! nntrainer artifacts [--dir artifacts]      # check + smoke the PJRT artifact catalog
 //! ```
@@ -24,12 +24,12 @@ use nntrainer::metrics::MIB;
 use nntrainer::model::{DeviceProfile, EarlyStop, Session, TrainCallback, TrainSpec};
 use nntrainer::planner::PlannerKind;
 use nntrainer::runtime::catalog::ArtifactCatalog;
-use nntrainer::runtime::XlaRuntime;
+use nntrainer::runtime::{SwapTuning, XlaRuntime};
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage:\n  nntrainer plan  <model.ini> [--batch N] [--budget-mib M] [--planner P] [--conventional] [--no-swap] [--table]\n  \
-         nntrainer train <model.ini> [--batch N] [--budget-mib M] [--epochs N] [--early-stop P] [--save F] [--data digits|random]\n  \
+        "usage:\n  nntrainer plan  <model.ini> [--batch N] [--budget-mib M] [--planner P] [--conventional] [--no-swap] [--calibrated] [--table]\n  \
+         nntrainer train <model.ini> [--batch N] [--budget-mib M] [--epochs N] [--early-stop P] [--calibrated] [--save F] [--data digits|random]\n  \
          nntrainer zoo\n  nntrainer artifacts [--dir D]"
     );
     ExitCode::from(2)
@@ -110,6 +110,11 @@ fn spec_and_profile(
     let profile = DeviceProfile {
         memory_budget_bytes: budget,
         swap: !args.flag("--no-swap"),
+        swap_tuning: if args.flag("--calibrated") {
+            SwapTuning::Calibrated
+        } else {
+            SwapTuning::Fixed
+        },
         planner,
         conventional,
         inplace: !conventional,

@@ -1,18 +1,45 @@
-//! Checkpointing: binary weight save/load (`NNTR` format, version 1).
+//! Checkpointing: binary weight save/load (`NNTR` format).
 //!
-//! Layout: magic `NNTR`, u32 version, u32 count, then per weight:
-//! u32 name-len, name bytes, u32 f32-count, little-endian f32 data.
-//! Used by the transfer-learning flow (train backbone → save → load into
-//! a frozen-backbone model whose weight names match).
+//! **Version 2** opens with an explicit manifest so a checkpoint's
+//! contents can be diffed against a model *before* any weight bytes
+//! move:
+//!
+//! ```text
+//! magic `NNTR` | u32 version=2 | u32 count
+//! manifest: count × { u32 name-len | name | 4 × u32 dims (b,c,h,w) | u32 f32-count }
+//! data:     count × { f32-count little-endian f32 }
+//! ```
+//!
+//! Version 1 (no manifest; name/len/data interleaved) is still read.
+//!
+//! Loading is *strict*: every tensor the checkpoint carries must exist
+//! in the model with a matching element count, or the load fails with a
+//! full name/shape diff — the silent-skip behaviour that used to train
+//! personalized models from random init when a layer was renamed is
+//! gone. The deliberate exception is [`load_matching`], where the
+//! caller names the layers it is about to re-initialize anyway (the
+//! swapped head of `personalize()`): entries under those prefixes are
+//! never restored — not even when their shapes happen to match — so
+//! the restored count is deterministic; everything else still fails
+//! loudly. Model weights absent from the checkpoint are always fine
+//! (transfer learning loads a backbone into a bigger model).
+//!
+//! All lengths read from the file are validated against the bytes that
+//! actually remain, so a truncated or corrupted checkpoint errors
+//! cleanly instead of attempting a multi-gigabyte allocation or
+//! returning garbage tensors.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 
 use crate::error::{Error, Result};
 use crate::exec::Executor;
+use crate::tensor::TensorDim;
 
 const MAGIC: &[u8; 4] = b"NNTR";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+/// Longest plausible `layer:weight` tensor name.
+const MAX_NAME: usize = 4096;
 
 pub fn save(exec: &Executor, path: &str) -> Result<()> {
     let mut w = BufWriter::new(File::create(path)?);
@@ -20,11 +47,19 @@ pub fn save(exec: &Executor, path: &str) -> Result<()> {
     w.write_all(MAGIC)?;
     w.write_all(&VERSION.to_le_bytes())?;
     w.write_all(&(names.len() as u32).to_le_bytes())?;
-    for name in names {
-        let data = exec.read_weight(&name)?;
+    // manifest
+    for name in &names {
+        let dim = weight_dim(exec, name)?;
         w.write_all(&(name.len() as u32).to_le_bytes())?;
         w.write_all(name.as_bytes())?;
-        w.write_all(&(data.len() as u32).to_le_bytes())?;
+        for d in [dim.b, dim.c, dim.h, dim.w] {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        w.write_all(&(dim.len() as u32).to_le_bytes())?;
+    }
+    // data
+    for name in &names {
+        let data = exec.read_weight(name)?;
         for v in data {
             w.write_all(&v.to_le_bytes())?;
         }
@@ -32,47 +67,267 @@ pub fn save(exec: &Executor, path: &str) -> Result<()> {
     Ok(())
 }
 
-/// Load weights by name; unknown names are skipped (transfer learning
-/// loads a backbone checkpoint into a bigger model). Returns the number
-/// of tensors restored.
-pub fn load(exec: &Executor, path: &str) -> Result<usize> {
-    let mut r = BufReader::new(File::open(path)?);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(Error::Checkpoint(format!("bad magic {magic:?}")));
-    }
-    let version = read_u32(&mut r)?;
-    if version != VERSION {
-        return Err(Error::Checkpoint(format!("unsupported version {version}")));
-    }
-    let count = read_u32(&mut r)? as usize;
-    let mut restored = 0usize;
-    for _ in 0..count {
-        let nlen = read_u32(&mut r)? as usize;
-        if nlen > 4096 {
-            return Err(Error::Checkpoint(format!("implausible name length {nlen}")));
-        }
-        let mut nbuf = vec![0u8; nlen];
-        r.read_exact(&mut nbuf)?;
-        let name = String::from_utf8(nbuf)
-            .map_err(|e| Error::Checkpoint(format!("bad name utf8: {e}")))?;
-        let dlen = read_u32(&mut r)? as usize;
-        let mut data = vec![0f32; dlen];
-        let mut b4 = [0u8; 4];
-        for v in data.iter_mut() {
-            r.read_exact(&mut b4)?;
-            *v = f32::from_le_bytes(b4);
-        }
-        if exec.write_weight(&name, &data).is_ok() {
-            restored += 1;
-        }
-    }
-    Ok(restored)
+/// One manifest row: what the checkpoint says it carries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub dim: TensorDim,
+    /// Element count of the stored data (equals `dim.len()` for files
+    /// this crate writes; trusted only after length validation).
+    pub len: usize,
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+/// Byte-counting reader: every length field is checked against the
+/// bytes genuinely remaining in the file before anything is allocated.
+struct CheckedReader<R> {
+    inner: R,
+    remaining: u64,
+}
+
+impl<R: Read> CheckedReader<R> {
+    fn new(inner: R, total: u64) -> Self {
+        CheckedReader { inner, remaining: total }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<Vec<u8>> {
+        if (n as u64) > self.remaining {
+            return Err(Error::Checkpoint(format!(
+                "truncated checkpoint: {what} needs {n} bytes but only {} remain",
+                self.remaining
+            )));
+        }
+        let mut buf = vec![0u8; n];
+        self.inner.read_exact(&mut buf)?;
+        self.remaining -= n as u64;
+        Ok(buf)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let bytes = self.take(n * 4, what)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn name(&mut self, what: &str) -> Result<String> {
+        let nlen = self.u32(what)? as usize;
+        if nlen > MAX_NAME {
+            return Err(Error::Checkpoint(format!(
+                "implausible name length {nlen} for {what}"
+            )));
+        }
+        let nbuf = self.take(nlen, what)?;
+        String::from_utf8(nbuf).map_err(|e| Error::Checkpoint(format!("bad name utf8: {e}")))
+    }
+}
+
+fn open_checked(path: &str) -> Result<(CheckedReader<BufReader<File>>, u32, usize)> {
+    let file = File::open(path)?;
+    let total = file.metadata()?.len();
+    let mut r = CheckedReader::new(BufReader::new(file), total);
+    let magic = r.take(4, "magic")?;
+    if magic != MAGIC {
+        return Err(Error::Checkpoint(format!("bad magic {magic:?}")));
+    }
+    let version = r.u32("version")?;
+    if version != 1 && version != VERSION {
+        return Err(Error::Checkpoint(format!("unsupported version {version}")));
+    }
+    let count = r.u32("tensor count")? as usize;
+    Ok((r, version, count))
+}
+
+fn read_manifest_from(
+    r: &mut CheckedReader<BufReader<File>>,
+    count: usize,
+) -> Result<Vec<ManifestEntry>> {
+    let mut manifest = Vec::with_capacity(count);
+    for i in 0..count {
+        let name = r.name(&format!("manifest entry {i}"))?;
+        let mut d = [0usize; 4];
+        for v in &mut d {
+            *v = r.u32(&format!("dims of `{name}`"))? as usize;
+        }
+        let len = r.u32(&format!("data length of `{name}`"))? as usize;
+        // the data section must still be able to hold this many f32s
+        if (len as u64) * 4 > r.remaining {
+            return Err(Error::Checkpoint(format!(
+                "corrupted checkpoint: `{name}` claims {len} f32s but at most {} bytes \
+                 of data remain in the file",
+                r.remaining
+            )));
+        }
+        manifest.push(ManifestEntry {
+            name,
+            dim: TensorDim::new(d[0], d[1], d[2], d[3]),
+            len,
+        });
+    }
+    Ok(manifest)
+}
+
+/// Read a v2 checkpoint's manifest without touching the weight data
+/// (v1 files have none — this errors for them).
+pub fn read_manifest(path: &str) -> Result<Vec<ManifestEntry>> {
+    let (mut r, version, count) = open_checked(path)?;
+    if version != VERSION {
+        return Err(Error::Checkpoint(format!(
+            "version {version} checkpoints carry no manifest"
+        )));
+    }
+    read_manifest_from(&mut r, count)
+}
+
+/// Load weights by name, strictly: any checkpoint tensor the model
+/// cannot take (unknown name, element-count mismatch) fails the load
+/// with a diff. Returns the number of tensors restored.
+pub fn load(exec: &Executor, path: &str) -> Result<usize> {
+    load_matching(exec, path, &[])
+}
+
+/// [`load`] with an allow-list: checkpoint tensors whose *layer name*
+/// starts with one of `skip_prefixes` are never restored (matching or
+/// not — the caller re-initializes them anyway, and restoring only the
+/// shape-coincident ones would make the restored count depend on the
+/// coincidence). `personalize()` passes its head (reinit) prefixes
+/// here, so a swapped head with a different shape loads cleanly while
+/// a typoed backbone layer still fails with a diff.
+pub fn load_matching(exec: &Executor, path: &str, skip_prefixes: &[String]) -> Result<usize> {
+    let (mut r, version, count) = open_checked(path)?;
+    match version {
+        VERSION => {
+            let manifest = read_manifest_from(&mut r, count)?;
+            // diff the whole manifest before moving any bytes: the model
+            // must take every non-skipped entry, or nothing is written
+            let mut diffs = Vec::new();
+            for m in &manifest {
+                if skipped(&m.name, skip_prefixes) {
+                    continue;
+                }
+                match model_len(exec, &m.name) {
+                    None => diffs.push(format!(
+                        "  `{}` {} ({} f32) — model has no such weight",
+                        m.name, m.dim, m.len
+                    )),
+                    Some(have) if have != m.len => diffs.push(format!(
+                        "  `{}` {} ({} f32) — model expects {} f32 ({})",
+                        m.name,
+                        m.dim,
+                        m.len,
+                        have,
+                        model_dim(exec, &m.name)
+                    )),
+                    Some(_) => {}
+                }
+            }
+            if !diffs.is_empty() {
+                return Err(Error::Checkpoint(format!(
+                    "checkpoint `{path}` does not match the model ({} of {} tensors):\n{}",
+                    diffs.len(),
+                    manifest.len(),
+                    diffs.join("\n")
+                )));
+            }
+            let mut restored = 0usize;
+            for m in &manifest {
+                let data = r.f32s(m.len, &format!("data of `{}`", m.name))?;
+                if skipped(&m.name, skip_prefixes) {
+                    continue; // the head being swapped out — bytes consumed, not applied
+                }
+                exec.write_weight(&m.name, &data)?;
+                restored += 1;
+            }
+            Ok(restored)
+        }
+        _ => load_v1(exec, &mut r, count, skip_prefixes),
+    }
+}
+
+/// Version-1 fallback: no manifest, so the whole file is read and
+/// diffed *before* any weight is written (the mixed-state hazard —
+/// "first entry restored, second entry fails" — must not come back
+/// through the legacy path). Mismatches outside `skip_prefixes` fail
+/// with the collected diff; every length is validated before
+/// allocation.
+fn load_v1(
+    exec: &Executor,
+    r: &mut CheckedReader<BufReader<File>>,
+    count: usize,
+    skip_prefixes: &[String],
+) -> Result<usize> {
+    let mut pending: Vec<(String, Vec<f32>)> = Vec::with_capacity(count);
+    let mut diffs = Vec::new();
+    for i in 0..count {
+        let name = r.name(&format!("entry {i}"))?;
+        let dlen = r.u32(&format!("data length of `{name}`"))? as usize;
+        if (dlen as u64) * 4 > r.remaining {
+            return Err(Error::Checkpoint(format!(
+                "truncated checkpoint: `{name}` claims {dlen} f32s but only {} bytes remain",
+                r.remaining
+            )));
+        }
+        let data = r.f32s(dlen, &format!("data of `{name}`"))?;
+        match model_len(exec, &name) {
+            Some(have) if have == dlen => {
+                if !skipped(&name, skip_prefixes) {
+                    pending.push((name, data));
+                }
+            }
+            miss => {
+                if !skipped(&name, skip_prefixes) {
+                    diffs.push(match miss {
+                        None => format!("  `{name}` ({dlen} f32) — model has no such weight"),
+                        Some(have) => format!(
+                            "  `{name}` ({dlen} f32) — model expects {have} f32"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    if !diffs.is_empty() {
+        return Err(Error::Checkpoint(format!(
+            "checkpoint does not match the model ({} of {count} tensors):\n{}",
+            diffs.len(),
+            diffs.join("\n")
+        )));
+    }
+    for (name, data) in &pending {
+        exec.write_weight(name, data)?;
+    }
+    Ok(pending.len())
+}
+
+fn skipped(tensor_name: &str, prefixes: &[String]) -> bool {
+    let layer = tensor_name.split(':').next().unwrap_or("");
+    prefixes.iter().any(|p| layer.starts_with(p.as_str()))
+}
+
+fn model_len(exec: &Executor, name: &str) -> Option<usize> {
+    let id = exec.graph.table.by_name(name)?;
+    let root = exec.graph.table.resolve(id);
+    Some(exec.graph.table.get(root).dim.len())
+}
+
+fn model_dim(exec: &Executor, name: &str) -> TensorDim {
+    exec.graph
+        .table
+        .by_name(name)
+        .map(|id| exec.graph.table.get(exec.graph.table.resolve(id)).dim)
+        .unwrap_or(TensorDim::new(0, 0, 0, 0))
+}
+
+fn weight_dim(exec: &Executor, name: &str) -> Result<TensorDim> {
+    let id = exec
+        .graph
+        .table
+        .by_name(name)
+        .ok_or_else(|| Error::Checkpoint(format!("unknown weight `{name}`")))?;
+    Ok(exec.graph.table.get(exec.graph.table.resolve(id)).dim)
 }

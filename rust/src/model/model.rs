@@ -85,6 +85,7 @@ impl ModelBuilder {
             memory_budget_bytes: opts.memory_budget_bytes,
             swap: true,
             swap_store: opts.swap_store,
+            swap_tuning: opts.swap_tuning,
             planner: opts.planner,
             conventional: opts.conventional,
             inplace: opts.inplace,

@@ -41,6 +41,7 @@ use crate::model::model::{Model, ModelBuilder, TrainConfig, TrainSummary};
 use crate::model::{checkpoint, ini};
 use crate::optimizer::{self, Optimizer};
 use crate::planner::PlannerKind;
+use crate::runtime::calibrate::SwapTuning;
 use crate::runtime::store::StoreKind;
 
 /// Batch used when neither the caller nor a memory budget decides one.
@@ -109,6 +110,14 @@ pub struct DeviceProfile {
     pub swap: bool,
     /// Secondary store backing the swap runtime.
     pub swap_store: StoreKind,
+    /// How the swap runtime's prefetch leads and in-flight depth are
+    /// chosen: `Fixed` keeps the global 1-EO lead / depth-2 constants;
+    /// `Calibrated` micro-benchmarks the store at compile time, derives
+    /// per-entry leads from bandwidth vs. per-EO compute, and keeps
+    /// adapting depth from stall telemetry at epoch boundaries. Results
+    /// are bitwise identical either way — tuning only moves when the
+    /// background copies happen.
+    pub swap_tuning: SwapTuning,
     /// Memory planner; under a budget `BestFit` selects the best-fit
     /// gap-aware placement, anything else the first-fit default.
     pub planner: PlannerKind,
@@ -126,6 +135,7 @@ impl Default for DeviceProfile {
             memory_budget_bytes: None,
             swap: true,
             swap_store: StoreKind::Host,
+            swap_tuning: SwapTuning::Fixed,
             planner: PlannerKind::Sorting,
             conventional: false,
             inplace: true,
@@ -149,6 +159,12 @@ impl DeviceProfile {
     /// Budget in MiB, swap runtime engaged.
     pub fn with_budget_mib(mib: f64) -> Self {
         Self::with_budget_bytes((mib * MIB) as usize)
+    }
+
+    /// Same profile with bandwidth-calibrated swap tuning.
+    pub fn calibrated(mut self) -> Self {
+        self.swap_tuning = SwapTuning::Calibrated;
+        self
     }
 
     /// Conventional-framework emulation (naive planner, no in-place, no
@@ -421,6 +437,7 @@ fn resolve_opts(batch: usize, spec: &TrainSpec, profile: &DeviceProfile) -> Comp
         seed: spec.seed,
         memory_budget_bytes: if profile.swap { profile.memory_budget_bytes } else { None },
         swap_store: profile.swap_store,
+        swap_tuning: profile.swap_tuning,
     }
 }
 
@@ -489,8 +506,10 @@ fn auto_batch(
 /// Head-swap + fine-tune description for [`CompiledSession::personalize`].
 #[derive(Clone, Debug)]
 pub struct PersonalizeOpts {
-    /// Checkpoint to restore before fine-tuning (backbone weights;
-    /// unknown names are skipped, as in transfer learning).
+    /// Checkpoint to restore before fine-tuning (backbone weights).
+    /// Loading is strict: a checkpoint tensor the model cannot take
+    /// fails with a name/shape diff — unless its layer is named in
+    /// `reinit` (it is about to be re-initialized anyway).
     pub checkpoint: Option<String>,
     /// Layer-name prefixes whose weights are re-initialized after the
     /// checkpoint load — the swapped-in head. Optimizer state re-zeroes
@@ -595,8 +614,12 @@ impl CompiledSession {
         make_producer: impl Fn() -> Box<dyn DataProducer>,
         callbacks: &mut [&mut dyn TrainCallback],
     ) -> Result<PersonalizeReport> {
+        // strict load with the head prefixes allow-listed: a renamed or
+        // reshaped backbone layer fails with a name/shape diff instead
+        // of silently training from random init; only the layers about
+        // to be re-initialized anyway may mismatch
         let restored = match &opts.checkpoint {
-            Some(path) => checkpoint::load(&self.model.exec, path)?,
+            Some(path) => checkpoint::load_matching(&self.model.exec, path, &opts.reinit)?,
             None => 0,
         };
         let reinitialized = if opts.reinit.is_empty() {
@@ -693,6 +716,11 @@ where
         summary.final_loss = mean;
         if cfg.verbose {
             println!("epoch {:>3}: loss {:.6} ({} iters)", epoch + 1, mean, batches);
+        }
+        // epoch boundary: let calibrated swap tuning react to the stall
+        // telemetry this epoch accrued (no-op under Fixed / no swap)
+        if let Some(sw) = model.exec.swap_mut() {
+            sw.adapt_depth();
         }
         if !stopped {
             let ev = TrainEvent { epoch, iteration: summary.iterations, loss: mean };

@@ -25,7 +25,7 @@ use std::collections::HashSet;
 use crate::error::Result;
 use crate::tensor::{Region, TensorId, TensorTable};
 
-use super::offload::{live_intervals, OffloadPlan};
+use super::offload::{live_intervals, LeadMap, OffloadPlan};
 use super::{allocatable, sort_by_schedule, Planner};
 
 /// Hole-selection rule for gap-aware placement.
@@ -75,6 +75,7 @@ pub fn intervals_overlap(a: &[(u32, u32)], b: &[(u32, u32)]) -> bool {
 fn place(
     table: &TensorTable,
     offloaded: &HashSet<TensorId>,
+    leads: &LeadMap,
     ids: &[TensorId],
     strategy: GapStrategy,
 ) -> (usize, Vec<(TensorId, Region)>) {
@@ -89,7 +90,7 @@ fn place(
     for &id in ids {
         let s = table.get(id);
         let need = s.dim.len();
-        let intervals = live_intervals(s, offloaded.contains(&id));
+        let intervals = live_intervals(s, offloaded.contains(&id).then_some(leads));
         // address ranges blocked by time-overlapping placements
         let mut forbidden: Vec<(usize, usize)> = placed
             .iter()
@@ -144,6 +145,7 @@ fn plan_gaps(
     strategy: GapStrategy,
 ) -> Result<usize> {
     let offloaded: HashSet<TensorId> = plan.entries.iter().map(|e| e.tensor).collect();
+    let leads = plan.lead_map();
     let ids = allocatable(table);
 
     let mut by_schedule = ids.clone();
@@ -154,8 +156,8 @@ fn plan_gaps(
         (std::cmp::Reverse(s.dim.len()), s.min_eo().unwrap_or(u32::MAX), id)
     });
 
-    let (len_a, regions_a) = place(table, &offloaded, &by_schedule, strategy);
-    let (len_b, regions_b) = place(table, &offloaded, &by_size, strategy);
+    let (len_a, regions_a) = place(table, &offloaded, &leads, &by_schedule, strategy);
+    let (len_b, regions_b) = place(table, &offloaded, &leads, &by_size, strategy);
     let (pool_len, regions) = if len_b < len_a {
         (len_b, regions_b)
     } else {
@@ -283,8 +285,9 @@ mod tests {
         ]);
         let ids: Vec<TensorId> = (0..6).collect();
         let none = HashSet::new();
-        let (_, ff) = place(&t, &none, &ids, GapStrategy::FirstFit);
-        let (_, bf) = place(&t, &none, &ids, GapStrategy::BestFit);
+        let leads = LeadMap::default();
+        let (_, ff) = place(&t, &none, &leads, &ids, GapStrategy::FirstFit);
+        let (_, bf) = place(&t, &none, &leads, &ids, GapStrategy::BestFit);
         let off = |rs: &[(TensorId, Region)], id: TensorId| {
             rs.iter().find(|(i, _)| *i == id).unwrap().1.offset
         };

@@ -12,17 +12,30 @@
 //! budget, and reports the resulting peak and the per-iteration swap
 //! traffic the background copies would cost.
 
+use std::collections::HashMap;
+
 use crate::tensor::{TensorId, TensorRole, TensorSpec, TensorTable};
 
-/// How many EOs before its next use a prefetched tensor must be resident
-/// again. The swap runtime restores an offloaded tensor's region at the
-/// step boundary one EO ahead of `prefetch_before`; the gap-aware planner
-/// reserves the region from that same point, so the two never disagree.
+/// Default number of EOs before its next use that a prefetched tensor
+/// must be resident again (`SwapTuning::Fixed`). Under
+/// `SwapTuning::Calibrated` the calibrator widens each entry's lead
+/// individually (`runtime/calibrate.rs`) until the estimated fetch time
+/// fits in the compute time available before the use EO; the gap-aware
+/// planner reserves each region from its entry's own lead point, so the
+/// planner and the runtime never disagree.
 pub const PREFETCH_LEAD: u32 = 1;
+
+/// Default number of background prefetches kept in flight (double
+/// buffering). The calibrator raises it when measured store speed says
+/// the pipeline cannot keep up at depth 2.
+pub const PREFETCH_DEPTH: usize = 2;
 
 /// One swap decision: evict after `evict_after`, prefetch back before
 /// `prefetch_before` (both EOs; the gap in between is spent in secondary
-/// memory).
+/// memory). `lead` is how many EOs before `prefetch_before` the region
+/// is reserved again and the prefetch barrier completes — the per-entry
+/// value the calibrator derives from store bandwidth vs. compute time
+/// (fixed tuning leaves it at [`PREFETCH_LEAD`]).
 #[derive(Clone, Debug)]
 pub struct OffloadEntry {
     pub tensor: TensorId,
@@ -30,6 +43,22 @@ pub struct OffloadEntry {
     pub bytes: usize,
     pub evict_after: u32,
     pub prefetch_before: u32,
+    pub lead: u32,
+}
+
+/// Per-gap prefetch leads, keyed by `(tensor, segment-start EO)` — the
+/// lookup shared by the advisor's peak accounting, the gap-aware planner
+/// and the plan validator, so all three widen exactly the intervals the
+/// swap runtime will reacquire early.
+#[derive(Clone, Debug, Default)]
+pub struct LeadMap(HashMap<(TensorId, u32), u32>);
+
+impl LeadMap {
+    /// Lead for the segment of `tensor` starting at `seg_start`
+    /// (a segment without an entry keeps the default lead).
+    pub fn lead(&self, tensor: TensorId, seg_start: u32) -> u32 {
+        self.0.get(&(tensor, seg_start)).copied().unwrap_or(PREFETCH_LEAD)
+    }
 }
 
 /// Advisor output.
@@ -43,6 +72,27 @@ pub struct OffloadPlan {
     pub swap_bytes_per_iter: usize,
     /// Whether the requested budget was met.
     pub fits: bool,
+    /// Initial in-flight prefetch depth for the swap runtime. Fixed
+    /// tuning uses the double-buffering default; the calibrator derives
+    /// it from store-vs-compute speed (`runtime/calibrate.rs`).
+    pub prefetch_depth: usize,
+}
+
+impl OffloadPlan {
+    /// Per-gap lead lookup for planners/validators.
+    pub fn lead_map(&self) -> LeadMap {
+        LeadMap(
+            self.entries
+                .iter()
+                .map(|e| ((e.tensor, e.prefetch_before), e.lead))
+                .collect(),
+        )
+    }
+
+    /// Largest per-entry lead (diagnostics, benches).
+    pub fn max_lead(&self) -> u32 {
+        self.entries.iter().map(|e| e.lead).max().unwrap_or(0)
+    }
 }
 
 /// Live segments of a tensor: maximal runs of consecutive EOs with gaps
@@ -66,45 +116,52 @@ pub fn segments(eos: &[u32]) -> Vec<(u32, u32)> {
 }
 
 /// EO intervals (inclusive) during which a tensor occupies its primary
-/// region. Not offloaded: one interval spanning its whole life. Offloaded:
-/// one interval per live segment; every segment except the first is
-/// widened by [`PREFETCH_LEAD`] at the front (the prefetch copy lands
-/// before the segment's first use — the first segment instead *starts*
-/// with the tensor's first write, so widening it would grow the footprint
-/// beyond the unswapped life and break peak monotonicity). This is the
-/// liveness model shared by the advisor's peak accounting, the gap-aware
-/// planner and the plan validator.
-pub fn live_intervals(s: &TensorSpec, offloaded: bool) -> Vec<(u32, u32)> {
-    if !offloaded {
-        match (s.min_eo(), s.max_eo()) {
+/// region. Not offloaded (`leads = None`): one interval spanning its
+/// whole life. Offloaded: one interval per live segment; every segment
+/// except the first is widened at the front by its gap's lead from the
+/// [`LeadMap`] (the prefetch copy lands before the segment's first use —
+/// the first segment instead *starts* with the tensor's first write, so
+/// widening it would grow the footprint beyond the unswapped life and
+/// break peak monotonicity). The lead never reaches back to the previous
+/// segment's end: a lead that swallowed the gap would merge the
+/// intervals and the swap runtime rejects such entries outright. This is
+/// the liveness model shared by the advisor's peak accounting, the
+/// gap-aware planner and the plan validator.
+pub fn live_intervals(s: &TensorSpec, leads: Option<&LeadMap>) -> Vec<(u32, u32)> {
+    match leads {
+        None => match (s.min_eo(), s.max_eo()) {
             (Some(a), Some(z)) => vec![(a, z)],
             _ => vec![],
+        },
+        Some(leads) => {
+            let segs = segments(&s.eos);
+            segs.iter()
+                .enumerate()
+                .map(|(k, &(a, z))| {
+                    if k == 0 {
+                        (a, z)
+                    } else {
+                        let lead = leads.lead(s.id, a);
+                        // never widen past the previous segment's end
+                        let floor = segs[k - 1].1 + 1;
+                        (a.saturating_sub(lead).max(floor), z)
+                    }
+                })
+                .collect()
         }
-    } else {
-        segments(&s.eos)
-            .into_iter()
-            .enumerate()
-            .map(|(k, (a, z))| {
-                if k == 0 {
-                    (a, z)
-                } else {
-                    (a.saturating_sub(PREFETCH_LEAD), z)
-                }
-            })
-            .collect()
     }
 }
 
 /// Peak live bytes when `offloaded` tensors only occupy primary memory
-/// during their live segments (plus one EO of prefetch lead).
-fn peak_with(table: &TensorTable, offloaded: &[bool]) -> usize {
+/// during their live segments (front-widened by their gap leads).
+fn peak_with(table: &TensorTable, offloaded: &[bool], leads: &LeadMap) -> usize {
     let mut events: Vec<(u32, i64)> = Vec::new();
     for s in table.iter() {
         if s.merged_into.is_some() || s.eos.is_empty() {
             continue;
         }
         let b = s.dim.bytes() as i64;
-        for (a, z) in live_intervals(s, offloaded[s.id]) {
+        for (a, z) in live_intervals(s, offloaded[s.id].then_some(leads)) {
             events.push((a, b));
             events.push((z + 1, -b));
         }
@@ -117,6 +174,17 @@ fn peak_with(table: &TensorTable, offloaded: &[bool]) -> usize {
         peak = peak.max(cur);
     }
     peak as usize
+}
+
+/// Recompute the plan's live-set peak after per-entry leads changed
+/// (wider leads hold residency longer, so the peak can only grow).
+/// Returns the new peak; callers refresh `primary_peak_bytes`/`fits`.
+pub fn peak_of_plan(table: &TensorTable, plan: &OffloadPlan) -> usize {
+    let mut offloaded = vec![false; table.len()];
+    for e in &plan.entries {
+        offloaded[e.tensor] = true;
+    }
+    peak_with(table, &offloaded, &plan.lead_map())
 }
 
 /// Greedy advisor: offload the largest idle-gap tensors first until the
@@ -152,13 +220,14 @@ pub fn advise(table: &TensorTable, budget_bytes: usize) -> OffloadPlan {
         .collect();
     cands.sort_by(|a, b| b.0.cmp(&a.0));
 
-    let mut peak = peak_with(table, &offloaded);
+    let default_leads = LeadMap::default();
+    let mut peak = peak_with(table, &offloaded, &default_leads);
     for (_, id) in cands {
         if peak <= budget_bytes {
             break;
         }
         offloaded[id] = true;
-        peak = peak_with(table, &offloaded);
+        peak = peak_with(table, &offloaded, &default_leads);
     }
 
     let mut entries = Vec::new();
@@ -173,6 +242,7 @@ pub fn advise(table: &TensorTable, budget_bytes: usize) -> OffloadPlan {
                     bytes: s.dim.bytes(),
                     evict_after: w[0].1,
                     prefetch_before: w[1].0,
+                    lead: PREFETCH_LEAD,
                 });
                 swap += 2 * s.dim.bytes(); // out + back in, per iteration
             }
@@ -183,6 +253,7 @@ pub fn advise(table: &TensorTable, budget_bytes: usize) -> OffloadPlan {
         primary_peak_bytes: peak,
         swap_bytes_per_iter: swap,
         fits: peak <= budget_bytes,
+        prefetch_depth: PREFETCH_DEPTH,
     }
 }
 

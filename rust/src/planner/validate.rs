@@ -65,14 +65,16 @@ pub fn validate_plan(table: &TensorTable, pool_len: usize) -> Result<()> {
 
 /// Gap-aware variant of [`validate_plan`]: under an [`OffloadPlan`], an
 /// offloaded tensor only occupies its region during its live segments
-/// (front-widened by the prefetch lead), so overlap is checked against
-/// interval *lists* rather than one `[min, max]` span per tensor.
+/// (front-widened by each gap's own prefetch lead), so overlap is
+/// checked against interval *lists* rather than one `[min, max]` span
+/// per tensor.
 pub fn validate_gap_plan(
     table: &TensorTable,
     plan: &OffloadPlan,
     pool_len: usize,
 ) -> Result<()> {
     let offloaded: HashSet<TensorId> = plan.entries.iter().map(|e| e.tensor).collect();
+    let leads = plan.lead_map();
     let mut live: Vec<(Vec<(u32, u32)>, usize, usize, &str)> = Vec::new();
     for s in table.iter() {
         if s.merged_into.is_some() || s.eos.is_empty() {
@@ -80,7 +82,7 @@ pub fn validate_gap_plan(
         }
         let r = checked_region(s, pool_len)?;
         live.push((
-            live_intervals(s, offloaded.contains(&s.id)),
+            live_intervals(s, offloaded.contains(&s.id).then_some(&leads)),
             r.offset,
             r.end(),
             &s.name,

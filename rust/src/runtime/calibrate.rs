@@ -1,0 +1,375 @@
+//! Bandwidth-calibrated swap tuning.
+//!
+//! The swap runtime's two scheduling knobs — how far ahead of a use EO a
+//! prefetch must *complete* (the per-entry lead) and how many background
+//! fetches ride in flight (the depth) — were fixed constants in PR 1
+//! (`PREFETCH_LEAD = 1`, `PREFETCH_DEPTH = 2`). That is only correct
+//! when the store moves one tensor per EO of compute: on a slow store
+//! every barrier becomes a counted stall, on a fast one residency is
+//! held longer than needed. This module derives both knobs from
+//! *measurement*:
+//!
+//! 1. **Store probe** ([`probe_store`]) — micro-benchmarks the actual
+//!    [`SecondaryStore`] instance the compile will hand to the runtime:
+//!    streaming write/read bandwidth over a representative buffer plus a
+//!    tiny-op round trip for per-op latency.
+//! 2. **Compute probe** ([`probe_compute`]) — times an FMA sweep to get
+//!    host compute throughput in bytes/ns, the scale that converts
+//!    "bytes touched at an EO" (known exactly from the planner table)
+//!    into estimated nanoseconds of compute ([`EoCostModel`]).
+//! 3. **Lead derivation** ([`derive_leads`]) — for each offload entry,
+//!    widen the lead until the estimated fetch time
+//!    (`latency + bytes / read bandwidth`) fits inside the compute time
+//!    of the EO window `[prefetch_before − lead, prefetch_before)`,
+//!    capped so the lead never swallows the idle gap. The widened leads
+//!    feed straight into the gap-aware planner's reservation model
+//!    (`OffloadPlan::lead_map`), so the pool layout and the runtime
+//!    barrier agree by construction.
+//! 4. **Depth derivation** ([`derive_depth`]) — total fetch time over
+//!    total compute time, clamped to `[2, entries]`: if the store needs
+//!    3× the compute time to move one iteration's traffic, three
+//!    fetches must overlap to hide it.
+//!
+//! The cost model is an *estimate* until training starts; the swap
+//! runtime re-times whole iterations during warmup and rescales the
+//! model (relative per-EO shape from analysis, absolute scale from
+//! measurement), then re-derives leads within each entry's safe bound.
+//! Depth keeps adapting from stall telemetry at epoch boundaries
+//! (`SwapExec::adapt_depth`). Selected via `SwapTuning::Calibrated` on
+//! `DeviceProfile`/`CompileOpts`; `Fixed` preserves the PR-1 constants.
+
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::planner::offload::{peak_of_plan, OffloadPlan, PREFETCH_DEPTH, PREFETCH_LEAD};
+use crate::tensor::TensorTable;
+
+use super::store::SecondaryStore;
+
+/// How the swap runtime's prefetch lead/depth are chosen under a memory
+/// budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SwapTuning {
+    /// PR-1 constants: global 1-EO lead, depth 2. Deterministic plans;
+    /// stalls on stores slower than one tensor per EO of compute.
+    #[default]
+    Fixed,
+    /// Micro-benchmark the store and host compute at compile time,
+    /// derive per-entry leads and the initial depth, then keep adapting
+    /// at runtime (warmup iteration timing rescales the cost model,
+    /// stall telemetry grows the depth at epoch boundaries).
+    Calibrated,
+}
+
+/// Measured secondary-store speed.
+#[derive(Clone, Copy, Debug)]
+pub struct StoreCalibration {
+    /// Streaming write bandwidth, bytes/second.
+    pub write_bps: f64,
+    /// Streaming read bandwidth, bytes/second.
+    pub read_bps: f64,
+    /// Fixed per-operation overhead (seek + syscall + lock), ns.
+    pub per_op_ns: f64,
+}
+
+impl StoreCalibration {
+    /// Estimated time to fetch `bytes` back from the store, ns.
+    pub fn fetch_ns(&self, bytes: usize) -> f64 {
+        self.per_op_ns + bytes as f64 / self.read_bps.max(1.0) * 1e9
+    }
+
+    /// A synthetic calibration for tests: `mbps` both ways, no latency.
+    pub fn synthetic(mbps: f64) -> Self {
+        StoreCalibration {
+            write_bps: mbps * 1e6,
+            read_bps: mbps * 1e6,
+            per_op_ns: 0.0,
+        }
+    }
+}
+
+/// Probe keys far above any offload-entry index, so calibration slots
+/// never collide with scheduled evictions.
+const PROBE_KEY_BULK: usize = usize::MAX;
+const PROBE_KEY_TINY: usize = usize::MAX - 1;
+const PROBE_REPS: u32 = 4;
+
+/// Micro-benchmark a store: one timed slot write (the write path only
+/// matters for eviction overlap, a ROADMAP follow-up), a few timed
+/// reads of a `probe_len`-f32 buffer for the fetch bandwidth the lead
+/// model runs on, and a tiny-buffer round trip for per-op latency.
+/// `probe_len` should be representative of the plan's entry sizes (the
+/// caller passes the largest entry, clamped to keep the probe cheap).
+pub fn probe_store(
+    store: &mut dyn SecondaryStore,
+    probe_len: usize,
+) -> Result<StoreCalibration> {
+    let len = probe_len.clamp(1 << 10, 1 << 18);
+    let buf = vec![1.0f32; len];
+    let mut out = vec![0f32; len];
+    // the slot-allocating write doubles as the (single-shot) write probe
+    let t0 = Instant::now();
+    store.put(PROBE_KEY_BULK, &buf)?;
+    let w_ns = (t0.elapsed().as_nanos() as f64).max(1.0);
+    // warm one read, then time steady-state reps — reads are what the
+    // prefetch lead model is calibrated against
+    store.get(PROBE_KEY_BULK, &mut out)?;
+    let t0 = Instant::now();
+    for _ in 0..PROBE_REPS {
+        store.get(PROBE_KEY_BULK, &mut out)?;
+    }
+    let r_ns = (t0.elapsed().as_nanos() as f64 / PROBE_REPS as f64).max(1.0);
+
+    let tiny = vec![0f32; 16];
+    let mut tiny_out = vec![0f32; 16];
+    store.put(PROBE_KEY_TINY, &tiny)?;
+    let t0 = Instant::now();
+    for _ in 0..PROBE_REPS {
+        store.get(PROBE_KEY_TINY, &mut tiny_out)?;
+    }
+    let per_op_ns = (t0.elapsed().as_nanos() as f64 / PROBE_REPS as f64).max(1.0);
+
+    // release the probe slots: the same store instance backs the whole
+    // training session, and dead probe data must not pin budgeted
+    // memory (newest-first so FileStore can roll its end offset back)
+    store.free(PROBE_KEY_TINY);
+    store.free(PROBE_KEY_BULK);
+
+    let bytes = (len * 4) as f64;
+    Ok(StoreCalibration {
+        write_bps: bytes / w_ns * 1e9,
+        read_bps: bytes / r_ns * 1e9,
+        per_op_ns,
+    })
+}
+
+/// Measured host compute throughput: the scale turning per-EO touched
+/// bytes into estimated compute time.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeCalibration {
+    pub bytes_per_ns: f64,
+}
+
+/// Time an FMA sweep over a ~1 MiB buffer. Deliberately crude — the
+/// absolute scale is replaced by measured iteration time after warmup;
+/// what matters at compile time is the order of magnitude relating
+/// store bandwidth to compute speed.
+pub fn probe_compute() -> ComputeCalibration {
+    let n = 1usize << 18; // 1 MiB of f32
+    let mut v = vec![1.0f32; n];
+    let t0 = Instant::now();
+    for r in 0..PROBE_REPS {
+        let c = 1.0 + (r as f32) * 1e-7;
+        for x in v.iter_mut() {
+            *x = x.mul_add(c, 1e-9);
+        }
+    }
+    let ns = (t0.elapsed().as_nanos() as f64 / PROBE_REPS as f64).max(1.0);
+    std::hint::black_box(&v);
+    ComputeCalibration { bytes_per_ns: (n * 4) as f64 / ns }
+}
+
+/// Per-EO compute-cost model: estimated nanoseconds per execution order.
+/// The *relative* shape comes from exact planner-table analysis (bytes
+/// touched by the tensors using each EO); the *absolute* scale starts
+/// from the compute probe and is rescaled once real iteration timing
+/// exists ([`EoCostModel::rescale_to_iteration_ns`]).
+#[derive(Clone, Debug)]
+pub struct EoCostModel {
+    cost_ns: Vec<f64>,
+}
+
+impl EoCostModel {
+    /// Build from a planned table: each EO's cost is the bytes of every
+    /// per-iteration tensor using it, over measured compute throughput.
+    /// Whole-training (MAX-lifespan) tensors are excluded — their EO set
+    /// does not reflect per-step accesses. Every EO gets a small floor
+    /// so windows over quiet EOs are never estimated as free.
+    pub fn from_table(table: &TensorTable, compute: &ComputeCalibration) -> Self {
+        let max_eo = table
+            .iter()
+            .filter(|s| s.merged_into.is_none())
+            .filter_map(|s| s.max_eo())
+            .max()
+            .unwrap_or(0);
+        let mut bytes = vec![0f64; max_eo as usize + 1];
+        for s in table.iter() {
+            if s.merged_into.is_some() || s.lifespan.is_max() {
+                continue;
+            }
+            for &e in &s.eos {
+                bytes[e as usize] += s.dim.bytes() as f64;
+            }
+        }
+        let floor = 64.0; // bytes; keeps empty EOs from being "free"
+        let scale = 1.0 / compute.bytes_per_ns.max(f64::MIN_POSITIVE);
+        EoCostModel {
+            cost_ns: bytes.iter().map(|b| b.max(floor) * scale).collect(),
+        }
+    }
+
+    /// A uniform model for tests: `n_eos` EOs of `ns_per_eo` each.
+    pub fn uniform(n_eos: usize, ns_per_eo: f64) -> Self {
+        EoCostModel { cost_ns: vec![ns_per_eo; n_eos] }
+    }
+
+    /// Σ estimated cost over EOs `[from, to]` inclusive. EOs beyond the
+    /// model (e.g. a deferred apply step) cost the model's mean.
+    pub fn window_ns(&self, from: u32, to: u32) -> f64 {
+        if to < from || self.cost_ns.is_empty() {
+            return 0.0;
+        }
+        let mean = self.total_ns() / self.cost_ns.len() as f64;
+        (from..=to)
+            .map(|e| self.cost_ns.get(e as usize).copied().unwrap_or(mean))
+            .sum()
+    }
+
+    /// Whole-schedule estimated cost, ns.
+    pub fn total_ns(&self) -> f64 {
+        self.cost_ns.iter().sum()
+    }
+
+    /// Replace the absolute scale with a measured per-iteration wall
+    /// time, keeping the relative per-EO shape (warmup refinement).
+    pub fn rescale_to_iteration_ns(&mut self, measured_iter_ns: f64) {
+        let total = self.total_ns();
+        if total <= 0.0 || measured_iter_ns <= 0.0 {
+            return;
+        }
+        let k = measured_iter_ns / total;
+        for c in &mut self.cost_ns {
+            *c *= k;
+        }
+    }
+}
+
+/// Widest admissible lead for an entry: one less than the idle gap (a
+/// lead that swallows the gap would put the completion barrier at or
+/// before the eviction — the schedule-head edge the runtime rejects).
+pub fn lead_cap(evict_after: u32, prefetch_before: u32) -> u32 {
+    prefetch_before
+        .saturating_sub(evict_after)
+        .saturating_sub(1)
+        .max(1)
+}
+
+/// Derive one entry's lead: widen from 1 EO until the fetch fits in the
+/// compute window before the use EO, capped by the gap.
+pub fn lead_for(
+    entry_bytes: usize,
+    evict_after: u32,
+    prefetch_before: u32,
+    store: &StoreCalibration,
+    cost: &EoCostModel,
+) -> u32 {
+    if prefetch_before == 0 {
+        return PREFETCH_LEAD; // degenerate entry; the runtime rejects it
+    }
+    let fetch = store.fetch_ns(entry_bytes);
+    let cap = lead_cap(evict_after, prefetch_before);
+    let mut lead = PREFETCH_LEAD;
+    while lead < cap
+        && cost.window_ns(prefetch_before.saturating_sub(lead), prefetch_before - 1) < fetch
+    {
+        lead += 1;
+    }
+    lead
+}
+
+/// Write calibrated per-entry leads and the initial depth into the
+/// plan, then refresh its peak/fits for the widened residency.
+pub fn derive_leads(
+    plan: &mut OffloadPlan,
+    table: &TensorTable,
+    budget_bytes: usize,
+    store: &StoreCalibration,
+    cost: &EoCostModel,
+) {
+    for e in &mut plan.entries {
+        e.lead = lead_for(e.bytes, e.evict_after, e.prefetch_before, store, cost);
+    }
+    plan.prefetch_depth = derive_depth(plan, store, cost);
+    plan.primary_peak_bytes = peak_of_plan(table, plan);
+    plan.fits = plan.primary_peak_bytes <= budget_bytes;
+}
+
+/// Initial in-flight depth: the ratio of total fetch time to total
+/// compute time per iteration, clamped to `[PREFETCH_DEPTH, entries]` —
+/// a store that needs N× the compute time to move one iteration's
+/// swap-in traffic needs ~N overlapping fetches to hide it.
+pub fn derive_depth(
+    plan: &OffloadPlan,
+    store: &StoreCalibration,
+    cost: &EoCostModel,
+) -> usize {
+    if plan.entries.is_empty() {
+        return PREFETCH_DEPTH;
+    }
+    let fetch_total: f64 = plan.entries.iter().map(|e| store.fetch_ns(e.bytes)).sum();
+    let ratio = (fetch_total / cost.total_ns().max(1.0)).ceil() as usize;
+    ratio.clamp(PREFETCH_DEPTH, plan.entries.len().max(PREFETCH_DEPTH))
+}
+
+/// Everything the swap runtime needs to keep calibrating after compile:
+/// the store speeds, the (rescalable) cost model, and how many warmup
+/// iterations to time before re-deriving leads.
+#[derive(Clone, Debug)]
+pub struct SwapCalibration {
+    pub store: StoreCalibration,
+    pub cost: EoCostModel,
+    /// Iterations to time before rescaling the cost model and
+    /// re-deriving leads.
+    pub warmup_iters: u64,
+}
+
+impl SwapCalibration {
+    pub fn new(store: StoreCalibration, cost: EoCostModel) -> Self {
+        SwapCalibration { store, cost, warmup_iters: 2 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::store::{HostStore, SecondaryStore};
+
+    #[test]
+    fn store_probe_reports_positive_speeds() {
+        let mut s = HostStore::new();
+        let cal = probe_store(&mut s, 1 << 14).unwrap();
+        assert!(cal.write_bps > 0.0 && cal.read_bps > 0.0 && cal.per_op_ns > 0.0);
+        // probe slots must not collide with entry keys (0..n)
+        let mut out = vec![0f32; 4];
+        assert!(s.get(0, &mut out).is_err(), "probe wrote an entry slot");
+    }
+
+    #[test]
+    fn compute_probe_is_positive() {
+        assert!(probe_compute().bytes_per_ns > 0.0);
+    }
+
+    #[test]
+    fn window_and_rescale() {
+        let mut m = EoCostModel::uniform(10, 100.0);
+        assert_eq!(m.window_ns(2, 4), 300.0);
+        assert_eq!(m.window_ns(4, 2), 0.0);
+        // EOs past the model cost the mean
+        assert_eq!(m.window_ns(9, 10), 200.0);
+        m.rescale_to_iteration_ns(2000.0);
+        assert_eq!(m.window_ns(0, 9), 2000.0);
+    }
+
+    #[test]
+    fn lead_widens_until_fetch_fits() {
+        let cost = EoCostModel::uniform(64, 100.0);
+        // 1000-byte entry at 1 byte/ns needs 1000 ns = 10 EOs of lead
+        let store = StoreCalibration { write_bps: 1e9, read_bps: 1e9, per_op_ns: 0.0 };
+        assert_eq!(lead_for(1000, 0, 40, &store, &cost), 10);
+        // fast store: the default 1-EO lead suffices
+        let fast = StoreCalibration { write_bps: 1e12, read_bps: 1e12, per_op_ns: 0.0 };
+        assert_eq!(lead_for(1000, 0, 40, &fast, &cost), 1);
+        // cap: the lead never swallows the gap
+        assert_eq!(lead_for(1_000_000, 30, 40, &store, &cost), 9);
+    }
+}

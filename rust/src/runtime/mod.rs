@@ -1,8 +1,11 @@
 //! Runtime services.
 //!
-//! * `store` / `swap` — the proactive swap runtime: secondary-memory
-//!   stores and the EO-scheduled evict/prefetch engine that executes an
-//!   `OffloadPlan` during training (see DESIGN.md §Swap runtime).
+//! * `store` / `swap` / `calibrate` — the proactive swap runtime:
+//!   secondary-memory stores, the EO-scheduled evict/prefetch engine
+//!   that executes an `OffloadPlan` during training, and the
+//!   bandwidth-calibration subsystem that derives per-entry prefetch
+//!   leads and in-flight depth from measured store speed (see DESIGN.md
+//!   §Swap runtime).
 //! * `client` / `catalog` — PJRT runtime: loads the AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py` and executes them on
 //!   the request path. Python is never involved at runtime — the binary
@@ -10,6 +13,7 @@
 //!   needs the `xla` crate and is gated behind the `pjrt` feature; the
 //!   default (offline) build uses a stub that errors at construction.
 
+pub mod calibrate;
 pub mod catalog;
 pub mod store;
 pub mod swap;
@@ -20,6 +24,9 @@ pub mod client;
 #[path = "client_stub.rs"]
 pub mod client;
 
+pub use calibrate::{
+    ComputeCalibration, EoCostModel, StoreCalibration, SwapCalibration, SwapTuning,
+};
 pub use catalog::ArtifactCatalog;
 pub use client::XlaRuntime;
 pub use store::{FileStore, HostStore, SecondaryStore, StoreKind};

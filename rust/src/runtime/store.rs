@@ -28,6 +28,10 @@ pub trait SecondaryStore: Send {
     fn put(&mut self, key: usize, data: &[f32]) -> Result<()>;
     /// Read `key` back into `out` (exactly the length that was `put`).
     fn get(&mut self, key: usize, out: &mut [f32]) -> Result<()>;
+    /// Release `key`'s slot (calibration probes free theirs so a
+    /// session-long store never pins dead probe data). Freeing an
+    /// absent key is a no-op.
+    fn free(&mut self, _key: usize) {}
 }
 
 /// Which secondary store a memory-budgeted compile should use.
@@ -88,6 +92,10 @@ impl SecondaryStore for HostStore {
         }
         out.copy_from_slice(slot);
         Ok(())
+    }
+
+    fn free(&mut self, key: usize) {
+        self.slots.remove(&key);
     }
 }
 
@@ -161,6 +169,17 @@ impl SecondaryStore for FileStore {
         Ok(())
     }
 
+    fn free(&mut self, key: usize) {
+        // reclaim the file space too when the slot is the trailing one
+        // (calibration probes are written before any eviction, so
+        // freeing them newest-first rolls `end` back to zero)
+        if let Some((off, len)) = self.slots.remove(&key) {
+            if off + (len * 4) as u64 == self.end {
+                self.end = off;
+            }
+        }
+    }
+
     fn get(&mut self, key: usize, out: &mut [f32]) -> Result<()> {
         let &(offset, len) = self
             .slots
@@ -215,6 +234,10 @@ mod tests {
         let mut wrong = vec![0f32; 3];
         assert!(store.get(0, &mut wrong).is_err());
         assert!(store.get(99, &mut out).is_err());
+        // freed slots are gone; freeing an absent key is a no-op
+        store.free(1);
+        store.free(1);
+        assert!(store.get(1, &mut out_b).is_err());
     }
 
     #[test]

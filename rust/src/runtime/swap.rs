@@ -6,11 +6,12 @@
 //! prefetch are *scheduled*, not demand-paged. The protocol, per training
 //! step at execution order `e`:
 //!
-//! 1. **pre-step** — complete every prefetch whose `prefetch_before` is
-//!    within [`PREFETCH_LEAD`] of `e`: copy the staged bytes back into the
-//!    tensor's pool region ([`MemoryPool::reacquire`]). If the background
-//!    fetch has not finished, block (counted as swap stall); if it was
-//!    never issued (gap shorter than the issue horizon), fetch inline.
+//! 1. **pre-step** — complete every prefetch whose barrier EO
+//!    (`prefetch_before − lead`, per entry) has arrived: copy the staged
+//!    bytes back into the tensor's pool region
+//!    ([`MemoryPool::reacquire`]). If the background fetch has not
+//!    finished, block (counted as swap stall); if it was never issued
+//!    (gap shorter than the issue horizon), fetch inline.
 //! 2. **residency guard** — no offloaded tensor may be `Evicted` or
 //!    `Fetching` at one of its own use EOs. Any violation means the plan
 //!    and the runtime have drifted; the step fails loudly instead of
@@ -19,7 +20,18 @@
 //! 4. **post-step** — evict every entry with `evict_after == e`: copy the
 //!    region to the [`SecondaryStore`], release it
 //!    ([`MemoryPool::release_gap`]), then top up the background prefetch
-//!    queue (double-buffered: up to [`PREFETCH_DEPTH`] fetches in flight).
+//!    queue (deadline-ordered, up to the current depth in flight).
+//!
+//! Leads and depth come from the offload plan: the PR-1 constants under
+//! `SwapTuning::Fixed` (1-EO lead, depth [`PREFETCH_DEPTH`]), or
+//! per-entry values derived from measured store bandwidth under
+//! `SwapTuning::Calibrated` (`runtime/calibrate.rs`). Calibrated runs
+//! keep refining at runtime: warmup iterations are timed to rescale the
+//! per-EO cost model (leads then re-derive within each entry's safe
+//! bound), and [`SwapExec::adapt_depth`] grows the in-flight window at
+//! epoch boundaries while stall telemetry is non-zero. None of this
+//! affects results: tuning only moves *when* copies happen, and every
+//! copy stays on the training thread at a deterministic step boundary.
 //!
 //! The background thread only ever touches the store and its own staging
 //! buffers — never the pool — so the pool stays single-threaded; the main
@@ -34,14 +46,14 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
-use crate::planner::offload::{OffloadPlan, PREFETCH_LEAD};
+use crate::planner::offload::{live_intervals, OffloadPlan};
 use crate::planner::pool::MemoryPool;
 use crate::tensor::{Region, Residency, TensorId, TensorTable};
 
+use super::calibrate::{lead_for, SwapCalibration};
 use super::store::SecondaryStore;
 
-/// Number of background prefetches kept in flight (double buffering).
-pub const PREFETCH_DEPTH: usize = 2;
+pub use crate::planner::offload::PREFETCH_DEPTH;
 
 /// One scheduled gap of one tensor (a tensor with several idle gaps per
 /// iteration has one entry per gap).
@@ -51,6 +63,15 @@ struct SwapEntry {
     region: Region,
     evict_after: u32,
     prefetch_before: u32,
+    /// Completion-barrier lead: the reacquire happens at the pre-step of
+    /// EO `prefetch_before − lead`.
+    lead: u32,
+    /// Barrier EO (`prefetch_before − lead`, saturated).
+    due: u32,
+    /// Widest lead whose early reacquire cannot collide with any other
+    /// tensor placed on an overlapping address range — the bound for
+    /// runtime re-derivation (plan leads are ≤ this by validation).
+    max_lead: u32,
 }
 
 /// Use points of an offloaded root tensor, for the residency guard.
@@ -90,7 +111,7 @@ pub struct SwapExec {
     plan: OffloadPlan,
     /// EO → entries to evict right after the step at that EO.
     evict_at: HashMap<u32, Vec<usize>>,
-    /// Entry indices sorted by `prefetch_before` — both the completion
+    /// Entry indices sorted by barrier EO (`due`) — both the completion
     /// barrier order and the background issue order.
     by_prefetch: Vec<usize>,
     roots: HashMap<TensorId, RootInfo>,
@@ -112,16 +133,41 @@ pub struct SwapExec {
     /// steady-state prefetch path allocation-free.
     recycle_tx: Sender<Vec<f32>>,
     worker: Option<JoinHandle<()>>,
+    /// Current in-flight fetch budget (plan's initial depth; grows via
+    /// [`SwapExec::adapt_depth`] under calibrated tuning).
+    depth: usize,
+    /// Calibration state for runtime refinement (None under Fixed).
+    calibration: Option<SwapCalibration>,
+    /// Warmup timing: iterations measured so far, their total wall ns,
+    /// and the stall ns accrued *inside* them (untimed forward passes
+    /// also accrue stalls, which must not skew the compute estimate).
+    warmup_done: u64,
+    warmup_ns: u64,
+    warmup_stall_ns: u64,
+    /// Wall-clock start and `stats.stall_ns` snapshot of a timed
+    /// (warmup) iteration.
+    iter_start: Option<(Instant, u64)>,
+    /// Stall counter snapshot at the last `adapt_depth` call.
+    last_stall_ns: u64,
     pub stats: SwapStats,
 }
 
 impl SwapExec {
     /// Build the schedule from a planned table (regions assigned by the
     /// gap-aware planner) and spawn the background prefetcher.
+    ///
+    /// Every entry's lead must leave the completion barrier strictly
+    /// after the eviction (`prefetch_before > evict_after + lead`). A
+    /// lead that swallows the gap would fire the barrier before the gap
+    /// opens: the entry would be judged "still resident" while its fetch
+    /// was never issued, and from the *next* iteration on training would
+    /// silently read whatever the gap tenant left in the region — the
+    /// schedule-head edge this constructor now rejects loudly.
     pub fn new(
         table: &TensorTable,
         plan: &OffloadPlan,
         store: Box<dyn SecondaryStore>,
+        calibration: Option<SwapCalibration>,
     ) -> Result<SwapExec> {
         let mut entries = Vec::with_capacity(plan.entries.len());
         let mut roots: HashMap<TensorId, RootInfo> = HashMap::new();
@@ -134,6 +180,13 @@ impl SwapExec {
                     s.name, e.evict_after, e.prefetch_before
                 )));
             }
+            if e.prefetch_before <= e.evict_after.saturating_add(e.lead) {
+                return Err(Error::planner(format!(
+                    "offload entry for `{}` has lead {} swallowing its gap ({}, {}): \
+                     the prefetch barrier would fire before the eviction",
+                    s.name, e.lead, e.evict_after, e.prefetch_before
+                )));
+            }
             let region = s.region.ok_or_else(|| {
                 Error::planner(format!("offloaded tensor `{}` has no region", s.name))
             })?;
@@ -143,11 +196,41 @@ impl SwapExec {
                 region,
                 evict_after: e.evict_after,
                 prefetch_before: e.prefetch_before,
+                lead: e.lead,
+                due: e.prefetch_before.saturating_sub(e.lead),
+                max_lead: e.lead, // widened below from the placed table
             });
             roots
                 .entry(e.tensor)
                 .or_insert_with(|| RootInfo { name: s.name.clone(), eos: s.eos.clone() });
             residency.insert(e.tensor, Residency::Resident);
+        }
+        // Per-entry safe widening bound: the earliest EO at which the
+        // entry's region is free of every *other* tensor placed on an
+        // overlapping address range (their reserved intervals under the
+        // plan's own leads). Runtime re-derivation may widen a lead up
+        // to this without colliding with a gap tenant.
+        let leads = plan.lead_map();
+        let offloaded: std::collections::HashSet<TensorId> =
+            plan.entries.iter().map(|e| e.tensor).collect();
+        for entry in &mut entries {
+            let mut earliest = entry.evict_after + 1;
+            for s in table.iter() {
+                if s.merged_into.is_some() || s.eos.is_empty() || s.id == entry.tensor {
+                    continue;
+                }
+                let Some(r) = s.region else { continue };
+                let overlap = r.offset < entry.region.end() && entry.region.offset < r.end();
+                if !overlap {
+                    continue;
+                }
+                for (_, z) in live_intervals(s, offloaded.contains(&s.id).then_some(&leads)) {
+                    if z < entry.prefetch_before {
+                        earliest = earliest.max(z + 1);
+                    }
+                }
+            }
+            entry.max_lead = (entry.prefetch_before - earliest).max(entry.lead);
         }
         let n = entries.len();
         let mut evict_at: HashMap<u32, Vec<usize>> = HashMap::new();
@@ -155,7 +238,7 @@ impl SwapExec {
             evict_at.entry(e.evict_after).or_default().push(i);
         }
         let mut by_prefetch: Vec<usize> = (0..n).collect();
-        by_prefetch.sort_by_key(|&i| (entries[i].prefetch_before, i));
+        by_prefetch.sort_by_key(|&i| (entries[i].due, entries[i].prefetch_before, i));
 
         let store_kind = store.kind();
         let store = Arc::new(Mutex::new(store));
@@ -208,6 +291,13 @@ impl SwapExec {
             done_rx,
             recycle_tx,
             worker: Some(worker),
+            depth: plan.prefetch_depth.max(PREFETCH_DEPTH),
+            calibration,
+            warmup_done: 0,
+            warmup_ns: 0,
+            warmup_stall_ns: 0,
+            iter_start: None,
+            last_stall_ns: 0,
             stats: SwapStats::default(),
         })
     }
@@ -229,8 +319,11 @@ impl SwapExec {
     }
 
     /// Reset per-iteration state. Every entry must have been restored by
-    /// the previous iteration's `end_iteration`.
-    pub fn begin_iteration(&mut self) -> Result<()> {
+    /// the previous iteration's `end_iteration`. `full_schedule` is true
+    /// for training iterations (every EO runs): only those are timed as
+    /// calibration warmup — a forward-only pass covers a fraction of the
+    /// schedule and would rescale the cost model to nonsense.
+    pub fn begin_iteration(&mut self, full_schedule: bool) -> Result<()> {
         if self.outstanding != 0 || !self.staged.is_empty() {
             return Err(Error::Runtime(
                 "swap runtime: stale prefetches at iteration start".into(),
@@ -243,17 +336,24 @@ impl SwapExec {
         self.failed.clear();
         self.next_due = 0;
         self.issue_cursor = 0;
+        // warmup iterations are timed to rescale the calibrated cost model
+        self.iter_start = match &self.calibration {
+            Some(cal) if full_schedule && self.warmup_done < cal.warmup_iters => {
+                Some((Instant::now(), self.stats.stall_ns))
+            }
+            _ => None,
+        };
         Ok(())
     }
 
-    /// Complete every prefetch due at or before the step at `eo`.
+    /// Complete every prefetch whose barrier EO is at or before `eo`.
     pub fn pre_step(&mut self, eo: u32, pool: &MemoryPool) -> Result<()> {
         while self.next_due < self.by_prefetch.len() {
             let idx = self.by_prefetch[self.next_due];
-            if self.entries[idx].prefetch_before > eo.saturating_add(PREFETCH_LEAD) {
+            if self.entries[idx].due > eo {
                 break;
             }
-            self.finish_prefetch(idx, pool)?;
+            self.finish_prefetch(idx, pool, Some(eo))?;
             self.next_due += 1;
         }
         Ok(())
@@ -302,7 +402,7 @@ impl SwapExec {
         for k in 0..self.by_prefetch.len() {
             let idx = self.by_prefetch[k];
             if !self.restored[idx] {
-                self.finish_prefetch(idx, pool)?;
+                self.finish_prefetch(idx, pool, None)?;
             }
         }
         self.next_due = self.by_prefetch.len();
@@ -318,16 +418,100 @@ impl SwapExec {
             }
         }
         self.staged.clear();
+        if let Some((t0, stall0)) = self.iter_start.take() {
+            self.warmup_ns += t0.elapsed().as_nanos() as u64;
+            self.warmup_stall_ns += self.stats.stall_ns - stall0;
+            self.warmup_done += 1;
+            if self
+                .calibration
+                .as_ref()
+                .is_some_and(|c| self.warmup_done >= c.warmup_iters)
+            {
+                self.recalibrate_leads();
+            }
+        }
         Ok(())
     }
 
-    fn finish_prefetch(&mut self, idx: usize, pool: &MemoryPool) -> Result<()> {
+    /// Warmup refinement (Calibrated): rescale the per-EO cost model so
+    /// the estimated schedule cost matches the measured iteration wall
+    /// time (minus counted stalls), then re-derive every entry's lead
+    /// within its safe bound and re-sort the barrier order. Runs between
+    /// iterations, when no per-iteration state is live.
+    fn recalibrate_leads(&mut self) {
+        let Some(cal) = self.calibration.as_mut() else { return };
+        let compute_ns = self.warmup_ns.saturating_sub(self.warmup_stall_ns) as f64
+            / self.warmup_done.max(1) as f64;
+        cal.cost.rescale_to_iteration_ns(compute_ns);
+        for e in &mut self.entries {
+            let derived = lead_for(
+                e.region.len * 4,
+                e.evict_after,
+                e.prefetch_before,
+                &cal.store,
+                &cal.cost,
+            );
+            e.lead = derived.clamp(1, e.max_lead);
+            e.due = e.prefetch_before.saturating_sub(e.lead);
+        }
+        self.by_prefetch
+            .sort_by_key(|&i| (self.entries[i].due, self.entries[i].prefetch_before, i));
+    }
+
+    /// Epoch-boundary depth adaptation (Calibrated): while stall time
+    /// keeps accruing, double the in-flight fetch budget, up to one
+    /// fetch per entry. No-op under Fixed tuning.
+    pub fn adapt_depth(&mut self) {
+        if self.calibration.is_none() {
+            return;
+        }
+        if self.stats.stall_ns > self.last_stall_ns {
+            self.depth = (self.depth * 2).min(self.entries.len().max(PREFETCH_DEPTH));
+        }
+        self.last_stall_ns = self.stats.stall_ns;
+    }
+
+    /// Current in-flight fetch budget.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Current completion-barrier lead of an entry (diagnostics, tests).
+    pub fn lead_of(&self, entry: usize) -> u32 {
+        self.entries[entry].lead
+    }
+
+    /// Widest lead currently in effect (post-recalibration — the number
+    /// the runtime is actually using, unlike `OffloadPlan::max_lead`).
+    pub fn max_lead(&self) -> u32 {
+        self.entries.iter().map(|e| e.lead).max().unwrap_or(0)
+    }
+
+    fn finish_prefetch(&mut self, idx: usize, pool: &MemoryPool, at_eo: Option<u32>) -> Result<()> {
         if self.restored[idx] {
             return Ok(());
         }
         if !self.evicted[idx] {
-            // the gap never opened this iteration — data is still in the
-            // pool region, nothing to copy
+            // Barrier reached before this entry's eviction ran: with a
+            // sane schedule that only happens when the gap never opens
+            // this iteration (partial forward pass, end-of-iteration
+            // sweep) — the data is still in the pool region and there is
+            // nothing to copy. But if the eviction is still *ahead* of
+            // the current step, marking the entry restored would let the
+            // eviction strand it in the store and the next iteration
+            // would silently train on the gap tenant's leftovers; fail
+            // loudly instead (regression: schedule-head gap-1 edge).
+            if let Some(eo) = at_eo {
+                if self.entries[idx].evict_after >= eo {
+                    let e = &self.entries[idx];
+                    return Err(Error::Runtime(format!(
+                        "swap schedule inconsistent: prefetch barrier for `{}` fired at \
+                         EO {eo} before its eviction at EO {} — lead {} swallows the \
+                         gap ({}, {})",
+                        e.name, e.evict_after, e.lead, e.evict_after, e.prefetch_before
+                    )));
+                }
+            }
             self.restored[idx] = true;
             return Ok(());
         }
@@ -401,12 +585,12 @@ impl SwapExec {
         }
     }
 
-    /// Issue background fetches in deadline (`prefetch_before`) order, up
-    /// to [`PREFETCH_DEPTH`] in flight. An entry not yet evicted blocks
-    /// the queue — issuing later-deadline entries first would let a slow
+    /// Issue background fetches in barrier-deadline (`due`) order, up to
+    /// the current depth in flight. An entry not yet evicted blocks the
+    /// queue — issuing later-deadline entries first would let a slow
     /// fetch starve an earlier barrier.
     fn pump_issues(&mut self) {
-        while self.outstanding < PREFETCH_DEPTH && self.issue_cursor < self.by_prefetch.len() {
+        while self.outstanding < self.depth && self.issue_cursor < self.by_prefetch.len() {
             let idx = self.by_prefetch[self.issue_cursor];
             if self.restored[idx] || self.issued[idx] {
                 self.issue_cursor += 1;
@@ -426,17 +610,26 @@ impl SwapExec {
     }
 
     /// Test hook: move one entry's prefetch deadline, desynchronizing the
-    /// schedule from the plan — the residency guard must then trip.
+    /// schedule from the plan — the residency guard (or the barrier
+    /// inconsistency check) must then trip.
     #[doc(hidden)]
     pub fn delay_prefetch_for_test(&mut self, entry: usize, new_prefetch_before: u32) {
-        self.entries[entry].prefetch_before = new_prefetch_before;
+        let e = &mut self.entries[entry];
+        e.prefetch_before = new_prefetch_before;
+        e.due = new_prefetch_before.saturating_sub(e.lead);
         self.by_prefetch
-            .sort_by_key(|&i| (self.entries[i].prefetch_before, i));
+            .sort_by_key(|&i| (self.entries[i].due, self.entries[i].prefetch_before, i));
     }
 
     /// Name of an entry's tensor (diagnostics, tests).
     pub fn entry_tensor_name(&self, entry: usize) -> &str {
         &self.entries[entry].name
+    }
+
+    /// An entry's `(evict_after, prefetch_before)` gap (diagnostics,
+    /// tests).
+    pub fn entry_gap(&self, entry: usize) -> (u32, u32) {
+        (self.entries[entry].evict_after, self.entries[entry].prefetch_before)
     }
 }
 
@@ -446,5 +639,100 @@ impl Drop for SwapExec {
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::offload::{OffloadEntry, PREFETCH_LEAD};
+    use crate::runtime::store::HostStore;
+    use crate::tensor::{CreateMode, Initializer, Lifespan, TensorDim, TensorRole, TensorTable};
+
+    fn table_one(eos: &[u32], len: usize) -> TensorTable {
+        let mut t = TensorTable::new();
+        let id = t
+            .request("a", TensorDim::vec(1, len), TensorRole::Activation, CreateMode::Create, Initializer::None)
+            .unwrap();
+        for &e in eos {
+            t.add_eo(id, e, Lifespan::FORWARD);
+        }
+        t.finish_orders();
+        t.get_mut(id).region = Some(Region { offset: 0, len });
+        t
+    }
+
+    fn plan_one(evict_after: u32, prefetch_before: u32, lead: u32, bytes: usize) -> OffloadPlan {
+        OffloadPlan {
+            entries: vec![OffloadEntry {
+                tensor: 0,
+                name: "a".into(),
+                bytes,
+                evict_after,
+                prefetch_before,
+                lead,
+            }],
+            primary_peak_bytes: bytes,
+            swap_bytes_per_iter: 2 * bytes,
+            fits: true,
+            prefetch_depth: PREFETCH_DEPTH,
+        }
+    }
+
+    /// Regression (schedule-head edge): a lead that swallows the gap
+    /// would fire the completion barrier before the eviction — the
+    /// entry would be judged resident while its fetch was never issued
+    /// and the next iteration would silently train on garbage. The
+    /// constructor must reject it for any lead, including the fixed
+    /// default on a (corrupted) 1-EO gap.
+    #[test]
+    fn lead_swallowing_gap_is_rejected() {
+        // gap of exactly 1 EO with the default lead 1
+        let t = table_one(&[0, 1, 2], 16);
+        let err = SwapExec::new(&t, &plan_one(0, 1, PREFETCH_LEAD, 64), Box::new(HostStore::new()), None)
+            .err()
+            .expect("gap-1 entry must be rejected");
+        assert!(err.to_string().contains("swallowing"), "{err}");
+
+        // calibrated-style wide lead on a wide gap
+        let t = table_one(&[0, 10], 16);
+        let err = SwapExec::new(&t, &plan_one(0, 10, 10, 64), Box::new(HostStore::new()), None)
+            .err()
+            .expect("gap-swallowing lead must be rejected");
+        assert!(err.to_string().contains("swallowing"), "{err}");
+
+        // the widest admissible lead still builds
+        assert!(SwapExec::new(&t, &plan_one(0, 10, 9, 64), Box::new(HostStore::new()), None).is_ok());
+    }
+
+    /// The barrier order follows per-entry due EOs, not raw
+    /// `prefetch_before`: a big entry with a wide lead must complete
+    /// before a small entry whose deadline is nominally earlier.
+    #[test]
+    fn barrier_order_uses_due_not_prefetch_before() {
+        let mut t = TensorTable::new();
+        for (name, eos) in [("a", vec![0u32, 20]), ("b", vec![1u32, 12])] {
+            let id = t
+                .request(name, TensorDim::vec(1, 8), TensorRole::Activation, CreateMode::Create, Initializer::None)
+                .unwrap();
+            for e in eos {
+                t.add_eo(id, e, Lifespan::FORWARD);
+            }
+        }
+        t.finish_orders();
+        t.get_mut(0).region = Some(Region { offset: 0, len: 8 });
+        t.get_mut(1).region = Some(Region { offset: 8, len: 8 });
+        let mut plan = plan_one(0, 20, 12, 32); // a: due at EO 8
+        plan.entries.push(OffloadEntry {
+            tensor: 1,
+            name: "b".into(),
+            bytes: 32,
+            evict_after: 1,
+            prefetch_before: 12, // due at EO 11 — later than a's despite earlier deadline
+            lead: 1,
+        });
+        let sw = SwapExec::new(&t, &plan, Box::new(HostStore::new()), None).unwrap();
+        assert_eq!(sw.entry_tensor_name(sw.by_prefetch[0]), "a");
+        assert_eq!(sw.entry_tensor_name(sw.by_prefetch[1]), "b");
     }
 }

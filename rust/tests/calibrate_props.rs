@@ -1,0 +1,168 @@
+//! Calibration property tests: the lead/depth derivation is pure
+//! arithmetic over a measured store speed and a per-EO cost model, so
+//! its invariants can be hammered with synthetic calibrations and
+//! seeded random offload plans — no wall clock involved:
+//!
+//! * leads are monotone in tensor size (more bytes ⇒ never a shorter
+//!   lead) and inversely monotone in bandwidth (a faster store ⇒ never
+//!   a longer lead)
+//! * a lead never swallows its idle gap and never drops below the
+//!   fixed default
+//! * depth is clamped to `[2, entries]` and inversely monotone in
+//!   bandwidth
+//! * calibrated plans still place and validate through the gap-aware
+//!   planner (the planner, validator and runtime share the per-entry
+//!   lead model), and their advised peak accounts for the widened
+//!   residency (never below the fixed-lead peak)
+
+use nntrainer::planner::offload::{advise, peak_of_plan, OffloadPlan, PREFETCH_LEAD};
+use nntrainer::planner::validate::validate_gap_plan;
+use nntrainer::planner::{GapFitPlanner, Planner};
+use nntrainer::rng::Rng;
+use nntrainer::runtime::calibrate::{derive_depth, derive_leads, lead_for};
+use nntrainer::runtime::{EoCostModel, StoreCalibration};
+use nntrainer::tensor::{
+    CreateMode, Initializer, Lifespan, TensorDim, TensorRole, TensorTable,
+};
+
+const EO_SPAN: u32 = 48;
+
+/// Random activation-heavy table (the advisor's candidate population).
+fn random_table(rng: &mut Rng) -> TensorTable {
+    let mut t = TensorTable::new();
+    let n = 3 + rng.below(14);
+    for i in 0..n {
+        let role = match rng.below(4) {
+            0 => TensorRole::Temp,
+            1 => TensorRole::Derivative,
+            _ => TensorRole::Activation,
+        };
+        let len = 1 + rng.below(2048);
+        let id = t
+            .request(
+                format!("t{i}"),
+                TensorDim::vec(1, len),
+                role,
+                CreateMode::Create,
+                Initializer::None,
+            )
+            .unwrap();
+        let uses = 2 + rng.below(4);
+        for _ in 0..uses {
+            t.add_eo(id, rng.below(EO_SPAN as usize) as u32, Lifespan::FORWARD);
+        }
+    }
+    t.finish_orders();
+    t
+}
+
+#[test]
+fn leads_monotone_in_size_and_inverse_in_bandwidth() {
+    let cost = EoCostModel::uniform(EO_SPAN as usize, 1_000.0);
+    let bandwidths = [1.0, 10.0, 100.0, 1000.0]; // MB/s
+    let sizes = [64usize, 1 << 10, 1 << 14, 1 << 18, 1 << 22]; // bytes
+    for (evict, prefetch) in [(0u32, 40u32), (3, 20), (10, 46)] {
+        for &mbps in &bandwidths {
+            let store = StoreCalibration::synthetic(mbps);
+            let mut prev = 0u32;
+            for &bytes in &sizes {
+                let lead = lead_for(bytes, evict, prefetch, &store, &cost);
+                assert!(
+                    lead >= prev,
+                    "lead shrank as size grew: {bytes}B @ {mbps}MB/s → {lead} < {prev}"
+                );
+                assert!(lead >= PREFETCH_LEAD, "lead below the fixed default");
+                assert!(
+                    evict + lead < prefetch,
+                    "lead {lead} swallows gap ({evict}, {prefetch})"
+                );
+                prev = lead;
+            }
+        }
+        for &bytes in &sizes {
+            let mut prev = u32::MAX;
+            for &mbps in &bandwidths {
+                let store = StoreCalibration::synthetic(mbps);
+                let lead = lead_for(bytes, evict, prefetch, &store, &cost);
+                assert!(
+                    lead <= prev,
+                    "lead grew as bandwidth grew: {bytes}B @ {mbps}MB/s → {lead} > {prev}"
+                );
+                prev = lead;
+            }
+        }
+    }
+}
+
+#[test]
+fn depth_clamped_and_inverse_in_bandwidth() {
+    let mut rng = Rng::new(20260731);
+    for case in 0..100 {
+        let t = random_table(&mut rng);
+        let full = advise(&t, usize::MAX).primary_peak_bytes;
+        let plan = advise(&t, full / 2);
+        if plan.entries.is_empty() {
+            continue;
+        }
+        let cost = EoCostModel::uniform(EO_SPAN as usize, 1_000.0);
+        let mut prev = usize::MAX;
+        for mbps in [0.1, 1.0, 100.0, 1e6] {
+            let d = derive_depth(&plan, &StoreCalibration::synthetic(mbps), &cost);
+            assert!(
+                (2..=plan.entries.len().max(2)).contains(&d),
+                "case {case}: depth {d} outside [2, {}]",
+                plan.entries.len()
+            );
+            assert!(d <= prev, "case {case}: depth grew with bandwidth");
+            prev = d;
+        }
+    }
+}
+
+/// Calibrated leads feed the same liveness model as the planner and the
+/// validator: every derived plan must still realize into a validated
+/// layout, and the refreshed peak must cover the widened residency.
+#[test]
+fn calibrated_plans_place_and_validate() {
+    let mut rng = Rng::new(777);
+    let cost = EoCostModel::uniform(EO_SPAN as usize, 1_000.0);
+    for case in 0..100 {
+        let mut t = random_table(&mut rng);
+        let full = advise(&t, usize::MAX).primary_peak_bytes;
+        let budget = match case % 3 {
+            0 => full / 2,
+            1 => full / 4,
+            _ => 1,
+        };
+        let mut plan: OffloadPlan = advise(&t, budget);
+        let fixed_peak = plan.primary_peak_bytes;
+        // a store slow enough to stretch most leads to their caps
+        let store = StoreCalibration::synthetic(0.05 + (case % 7) as f64);
+        derive_leads(&mut plan, &t, budget, &store, &cost);
+        for e in &plan.entries {
+            assert!(e.lead >= PREFETCH_LEAD);
+            assert!(
+                e.evict_after + e.lead < e.prefetch_before,
+                "case {case}: `{}` lead {} swallows gap ({}, {})",
+                e.name,
+                e.lead,
+                e.evict_after,
+                e.prefetch_before
+            );
+        }
+        assert!(
+            plan.primary_peak_bytes >= fixed_peak,
+            "case {case}: widened leads shrank the advised peak"
+        );
+        assert_eq!(plan.primary_peak_bytes, peak_of_plan(&t, &plan));
+        assert_eq!(plan.fits, plan.primary_peak_bytes <= budget);
+        assert!(plan.prefetch_depth >= 2);
+
+        let pool_len = GapFitPlanner { plan: &plan }.plan(&mut t).unwrap();
+        validate_gap_plan(&t, &plan, pool_len).unwrap();
+        assert!(
+            pool_len * 4 >= plan.primary_peak_bytes,
+            "case {case}: pool below the analytic bound"
+        );
+    }
+}

@@ -1,0 +1,259 @@
+//! Checkpoint-format suite: the NNTR v2 manifest, the strict
+//! name/shape-diff load, the `personalize()` head-swap allow-list, and
+//! clean failure on truncated/corrupted files (the `read_u32`-trusting
+//! loader used to attempt whatever allocation a corrupted length field
+//! asked for, and silently skipped unknown layer names).
+
+use std::fs::File;
+use std::io::Write;
+
+use nntrainer::dataset::{DataProducer, RandomProducer};
+use nntrainer::model::checkpoint;
+use nntrainer::model::session::{DeviceProfile, PersonalizeOpts, Session, TrainSpec};
+use nntrainer::model::ModelBuilder;
+use nntrainer::Error;
+
+fn mlp(head_unit: usize, head_name: &str) -> Session {
+    Session::builder()
+        .add("in", "input", &[("input_shape", "1:1:16")])
+        .add("h0", "fully_connected", &[("unit", "24"), ("activation", "relu")])
+        .add(head_name, "fully_connected", &[("unit", &head_unit.to_string())])
+        .add("loss", "mse", &[])
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+}
+
+fn compiled(head_unit: usize, head_name: &str) -> nntrainer::model::session::CompiledSession {
+    mlp(head_unit, head_name)
+        .configure(TrainSpec { batch: Some(4), ..Default::default() })
+        .compile_for(DeviceProfile::unconstrained())
+        .unwrap()
+}
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("ckpt_format_{}_{}", std::process::id(), name))
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn v2_roundtrip_with_manifest() {
+    let a = compiled(8, "out");
+    let path = tmp("roundtrip");
+    a.save(&path).unwrap();
+
+    // the manifest names every weight with its shape, before any data
+    let manifest = checkpoint::read_manifest(&path).unwrap();
+    let mut names: Vec<String> = manifest.iter().map(|m| m.name.clone()).collect();
+    let mut expect = a.model.exec.weight_names();
+    names.sort();
+    expect.sort();
+    assert_eq!(names, expect);
+    for m in &manifest {
+        assert_eq!(m.dim.len(), m.len, "manifest dims disagree with data length");
+    }
+
+    // bitwise round trip into a freshly initialized twin
+    let mut b = compiled(8, "out");
+    let restored = b.load(&path).unwrap();
+    assert_eq!(restored, manifest.len());
+    for w in a.model.exec.weight_names() {
+        let x = a.model.exec.read_weight(&w).unwrap();
+        let y = b.model.exec.read_weight(&w).unwrap();
+        assert_eq!(x.len(), y.len());
+        for (p, q) in x.iter().zip(y.iter()) {
+            assert_eq!(p.to_bits(), q.to_bits(), "{w} diverged");
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn mismatched_head_fails_with_shape_diff() {
+    let a = compiled(8, "out");
+    let path = tmp("shape_diff");
+    a.save(&path).unwrap();
+
+    // same names, different head width: strict load must diff, not skip
+    let mut b = compiled(4, "out");
+    let err = b.load(&path).unwrap_err().to_string();
+    assert!(err.contains("out:"), "diff does not name the tensor: {err}");
+    assert!(err.contains("expects"), "diff does not show the model side: {err}");
+
+    // renamed head: the checkpoint tensor is unknown to the model
+    let mut c = compiled(8, "head");
+    let err = c.load(&path).unwrap_err().to_string();
+    assert!(err.contains("no such weight"), "unknown name not diffed: {err}");
+
+    // the old behaviour (silently restoring only what matches) is now
+    // opt-in via the allow-list — backbone restores, head stays local
+    let restored =
+        checkpoint::load_matching(&c.model.exec, &path, &["out".into()]).unwrap();
+    assert!(restored > 0);
+    for w in a.model.exec.weight_names() {
+        if w.starts_with("h0") {
+            let x = a.model.exec.read_weight(&w).unwrap();
+            let y = c.model.exec.read_weight(&w).unwrap();
+            for (p, q) in x.iter().zip(y.iter()) {
+                assert_eq!(p.to_bits(), q.to_bits(), "backbone {w} not restored");
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The paper's §5 flow with a swapped head of a *different shape*: the
+/// reinit prefixes double as the load allow-list, so the head-swap
+/// works while an unexpected mismatch (no reinit declared) fails with
+/// the diff instead of silently fine-tuning from random init.
+#[test]
+fn personalize_head_swap_uses_allow_list() {
+    let vendor = compiled(8, "out");
+    let path = tmp("personalize");
+    vendor.save(&path).unwrap();
+
+    let make = || -> Box<dyn DataProducer> { Box::new(RandomProducer::new(16, 16, 4, 7)) };
+
+    // head widened 8 → 4: personalize declares the swap, so the
+    // backbone restores and training proceeds
+    let mut user = compiled(4, "out");
+    let report = user
+        .personalize(
+            &PersonalizeOpts {
+                checkpoint: Some(path.clone()),
+                reinit: vec!["out".into()],
+                ..Default::default()
+            },
+            make,
+            &mut [],
+        )
+        .unwrap();
+    assert!(report.restored > 0, "backbone not restored");
+    assert!(report.reinitialized > 0, "head not reinitialized");
+
+    // no reinit declared: the mismatch must fail loudly with the diff
+    let mut user2 = compiled(4, "out");
+    let err = user2
+        .personalize(
+            &PersonalizeOpts { checkpoint: Some(path.clone()), ..Default::default() },
+            make,
+            &mut [],
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("does not match"), "no diff in: {err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupted_lengths_error_cleanly() {
+    let a = compiled(8, "out");
+    let path = tmp("corrupt");
+    a.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // truncate mid-data: load must report truncation, not garbage
+    let cut = tmp("truncated");
+    std::fs::write(&cut, &bytes[..bytes.len() - 7]).unwrap();
+    let b = compiled(8, "out");
+    let err = checkpoint::load(&b.model.exec, &cut).unwrap_err().to_string();
+    assert!(
+        err.contains("truncated") || err.contains("remain") || err.contains("claims"),
+        "truncation not detected: {err}"
+    );
+
+    // corrupt a manifest length field to u32::MAX: the claimed size
+    // exceeds the file, so the loader must refuse *before* allocating
+    let huge = tmp("huge_len");
+    let mut doctored = bytes.clone();
+    // first manifest entry: magic(4) + version(4) + count(4) = offset 12,
+    // then name-len at 12; dims at 12 + 4 + nlen; dlen 16 bytes later
+    let nlen = u32::from_le_bytes([bytes[12], bytes[13], bytes[14], bytes[15]]) as usize;
+    let dlen_off = 12 + 4 + nlen + 16;
+    doctored[dlen_off..dlen_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    std::fs::write(&huge, &doctored).unwrap();
+    let err = checkpoint::load(&b.model.exec, &huge).unwrap_err().to_string();
+    assert!(
+        err.contains("claims") || err.contains("remain"),
+        "oversized length not rejected: {err}"
+    );
+
+    for p in [path, cut, huge] {
+        let _ = std::fs::remove_file(&p);
+    }
+}
+
+/// Legacy v1 files (no manifest) still load, with lengths validated and
+/// mismatches now failing instead of skipping.
+#[test]
+fn v1_files_still_load() {
+    let a = compiled(8, "out");
+    let path = tmp("v1");
+    // hand-write a v1 checkpoint for one real weight
+    let name = "h0:weight";
+    let data = a.model.exec.read_weight(name).unwrap();
+    {
+        let mut f = File::create(&path).unwrap();
+        f.write_all(b"NNTR").unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&(name.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(name.as_bytes()).unwrap();
+        f.write_all(&(data.len() as u32).to_le_bytes()).unwrap();
+        for v in &data {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+    }
+    let mut b = compiled(8, "out");
+    // scramble the target first so the restore is observable
+    b.model
+        .exec
+        .write_weight(name, &vec![0.25f32; data.len()])
+        .unwrap();
+    assert_eq!(b.load(&path).unwrap(), 1);
+    let y = b.model.exec.read_weight(name).unwrap();
+    for (p, q) in data.iter().zip(y.iter()) {
+        assert_eq!(p.to_bits(), q.to_bits());
+    }
+
+    // a v1 entry the model does not know must now error, not skip
+    let unk = tmp("v1_unknown");
+    {
+        let mut f = File::create(&unk).unwrap();
+        f.write_all(b"NNTR").unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        let bad = "ghost:weight";
+        f.write_all(&(bad.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(bad.as_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&1.0f32.to_le_bytes()).unwrap();
+        f.write_all(&2.0f32.to_le_bytes()).unwrap();
+    }
+    let err = checkpoint::load(&b.model.exec, &unk).unwrap_err().to_string();
+    assert!(err.contains("no such weight"), "v1 unknown name skipped: {err}");
+
+    for p in [path, unk] {
+        let _ = std::fs::remove_file(&p);
+    }
+}
+
+/// `Error::Checkpoint` is what all of the above surface as — make the
+/// variant's path explicit so a refactor cannot quietly reroute these
+/// failures through a generic error.
+#[test]
+fn checkpoint_errors_use_checkpoint_variant() {
+    let path = tmp("not_a_checkpoint");
+    std::fs::write(&path, b"not a checkpoint at all").unwrap();
+    let m = ModelBuilder::new()
+        .add("in", "input", &[("input_shape", "1:1:4")])
+        .add("fc", "fully_connected", &[("unit", "2")])
+        .add("loss", "mse", &[])
+        .compile(&Default::default())
+        .unwrap();
+    match checkpoint::load(&m.exec, &path) {
+        Err(Error::Checkpoint(_)) => {}
+        other => panic!("expected Error::Checkpoint, got {other:?}"),
+    }
+    let _ = std::fs::remove_file(&path);
+}

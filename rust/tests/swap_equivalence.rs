@@ -16,7 +16,7 @@ use nntrainer::layers::Props;
 use nntrainer::model::{zoo, Model, ModelBuilder};
 use nntrainer::planner::offload::advise;
 use nntrainer::rng::Rng;
-use nntrainer::runtime::StoreKind;
+use nntrainer::runtime::{StoreKind, SwapTuning};
 
 fn node(name: &str, ltype: &str, pairs: &[(&str, &str)]) -> NodeDesc {
     NodeDesc::new(name, ltype, Props::from_pairs(pairs.iter().copied()))
@@ -80,6 +80,7 @@ fn assert_swap_equivalence(
     budget_pct: usize,
     iters: usize,
     store: StoreKind,
+    tuning: SwapTuning,
 ) {
     let base_opts = CompileOpts { batch, ..Default::default() };
     let mut base = compile(nodes(), &base_opts);
@@ -92,6 +93,7 @@ fn assert_swap_equivalence(
             batch,
             memory_budget_bytes: Some(budget),
             swap_store: store,
+            swap_tuning: tuning,
             ..Default::default()
         },
     );
@@ -146,17 +148,31 @@ fn assert_swap_equivalence(
 
 #[test]
 fn conv_stack_equivalence_host_store() {
-    assert_swap_equivalence(conv_stack, 8, 75, 4, StoreKind::Host);
+    assert_swap_equivalence(conv_stack, 8, 75, 4, StoreKind::Host, SwapTuning::Fixed);
 }
 
 #[test]
 fn mlp_equivalence_host_store() {
-    assert_swap_equivalence(mlp, 16, 85, 4, StoreKind::Host);
+    assert_swap_equivalence(mlp, 16, 85, 4, StoreKind::Host, SwapTuning::Fixed);
 }
 
 #[test]
 fn lenet_equivalence_file_store() {
-    assert_swap_equivalence(zoo::lenet5, 8, 85, 2, StoreKind::File);
+    assert_swap_equivalence(zoo::lenet5, 8, 85, 2, StoreKind::File, SwapTuning::Fixed);
+}
+
+/// Calibrated tuning moves *when* the background copies happen (derived
+/// leads/depth, warmup re-derivation after 2 iterations) — never what
+/// they contain. Training must stay bitwise identical to unswapped on
+/// both store kinds, across the warmup→recalibrated transition.
+#[test]
+fn conv_stack_equivalence_calibrated_host_store() {
+    assert_swap_equivalence(conv_stack, 8, 75, 4, StoreKind::Host, SwapTuning::Calibrated);
+}
+
+#[test]
+fn lenet_equivalence_calibrated_file_store() {
+    assert_swap_equivalence(zoo::lenet5, 8, 85, 4, StoreKind::File, SwapTuning::Calibrated);
 }
 
 /// End-to-end acceptance: the unswapped peak exceeds the budget, the
@@ -247,5 +263,53 @@ fn corrupted_plan_trips_residency_guard() {
     assert!(
         msg.contains("residency violation"),
         "expected a residency violation, got: {msg}"
+    );
+}
+
+/// Regression for the schedule-head saturation edge: shrink one entry's
+/// gap to a single EO so its completion barrier fires at (or before)
+/// its own eviction step. The old runtime marked the entry restored in
+/// that pre-step ("gap never opened"), the eviction then stranded the
+/// data in the store, and from iteration 2 on training silently read
+/// whatever the gap tenant left in the region. The runtime must instead
+/// fail the iteration loudly.
+#[test]
+fn barrier_before_eviction_fails_loudly() {
+    let batch = 8usize;
+    let base = compile(conv_stack(), &CompileOpts { batch, ..Default::default() });
+    let full = advise(&base.exec.graph.table, usize::MAX).primary_peak_bytes;
+
+    let mut m = compile(
+        conv_stack(),
+        &CompileOpts {
+            batch,
+            memory_budget_bytes: Some(full * 75 / 100),
+            ..Default::default()
+        },
+    );
+    let sw = m.exec.swap_mut().unwrap();
+    assert!(sw.n_entries() > 0);
+    // corrupt entry 0 into a 1-EO gap: barrier EO == eviction EO
+    let (evict_after, _) = sw.entry_gap(0);
+    sw.delay_prefetch_for_test(0, evict_after + 1);
+
+    let (in_len, lb_len) = feat_lens(&m);
+    let input = vec![0.5f32; in_len * batch];
+    let label = vec![0.5f32; lb_len * batch];
+    let mut failed = None;
+    // the old code failed *silently*: iteration 1 "succeeded" with the
+    // tensor stranded in the store — so run a few and require a loud
+    // error before any poisoned result escapes
+    for _ in 0..3 {
+        m.bind_batch(&input, &label).unwrap();
+        if let Err(e) = m.exec.try_train_iteration() {
+            failed = Some(e);
+            break;
+        }
+    }
+    let msg = failed.expect("1-EO gap must fail loudly, not train on garbage").to_string();
+    assert!(
+        msg.contains("before its eviction") || msg.contains("residency violation"),
+        "unexpected error: {msg}"
     );
 }
