@@ -10,17 +10,25 @@
 //!   on (placer column: `gapfit` = first-fit, `gapfit-bestfit`)
 //! * `tuning`/`lead`/`depth` — swap tuning: `fixed` keeps the global
 //!   1-EO lead and depth 2; `calibrated` micro-benchmarks the store and
-//!   derives per-entry leads (`lead` = widest) plus the in-flight depth
-//! * `stall`    — wall time per iteration the training thread spent
-//!   waiting on swap-ins (background prefetching hides the rest). The
-//!   acceptance row: on the file-spill store, `calibrated` stalls must
-//!   undercut `fixed` (ideally ~zero) with bitwise-identical training.
+//!   derives per-entry leads (`lead` = widest) plus the in-flight depth,
+//!   then keeps refining both from observed per-entry fetch times
+//! * `evict`    — eviction mode: `sync` puts every evicted tensor to the
+//!   store on the training thread (the pre-full-duplex baseline);
+//!   `async` ships write tickets to the background evict worker and
+//!   only blocks at a reclaim barrier
+//! * `rstall`   — wall time per iteration the training thread waited on
+//!   swap-ins (read barriers + inline fetches)
+//! * `wstall`   — wall time per iteration the training thread waited on
+//!   eviction writes. The acceptance row: on the file-spill store the
+//!   calibrated `async` row's write stall must undercut the
+//!   synchronous-eviction baseline row — eviction leaves the critical
+//!   path — with bitwise-identical training either way.
 //!
 //! Run: `cargo bench --bench swap_runtime` (dataset size via
 //! `NNTRAINER_BENCH_DATASET`).
 
 use nntrainer::bench_util::{
-    bench_dataset, budget_profile, fmt_mib, nntrainer_profile, train_random, Table,
+    bench_dataset, budget_profile, fmt_mib, nntrainer_profile, train_random_swap, Table,
 };
 use nntrainer::compiler::plan_only;
 use nntrainer::graph::NodeDesc;
@@ -37,6 +45,7 @@ fn run_case(
     store: StoreKind,
     placer: PlannerKind,
     tuning: SwapTuning,
+    sync_evict: bool,
 ) {
     let base = plan_only(nodes.clone(), &nntrainer_profile(batch)).expect("plan");
     let target = base.pool_bytes * 70 / 100;
@@ -45,7 +54,8 @@ fn run_case(
     opts.swap_store = store;
     opts.planner = placer;
     let dataset = bench_dataset();
-    let (model, secs, iters) = train_random(nodes, &opts, dataset, 1, 0.01).expect("train");
+    let (model, secs, iters) =
+        train_random_swap(nodes, &opts, dataset, 1, 0.01, sync_evict).expect("train");
     let plan = model.exec.swap_plan().expect("swap plan").clone();
     let stats = model.exec.swap_stats().expect("swap stats");
     let depth = model.exec.swap_depth().unwrap_or(0);
@@ -63,6 +73,7 @@ fn run_case(
         model.report.planner.to_string(),
         format!("{:?}", store).to_lowercase(),
         format!("{:?}", tuning).to_lowercase(),
+        (if sync_evict { "sync" } else { "async" }).into(),
         fmt_mib(base.pool_bytes),
         fmt_mib(target),
         fmt_mib(plan.primary_peak_bytes),
@@ -72,7 +83,8 @@ fn run_case(
         fmt_mib(plan.swap_bytes_per_iter),
         format!("{lead}"),
         format!("{depth}"),
-        format!("{:.3}", stats.stall_ms() / iters as f64),
+        format!("{:.3}", stats.read_stall_ms() / iters as f64),
+        format!("{:.3}", stats.write_stall_ms() / iters as f64),
         format!("{:.1}", stats.sync_fetches as f64 / iters as f64),
         format!("{:.1}", secs * 1e3 / iters as f64),
     ]);
@@ -85,6 +97,7 @@ fn main() {
         "placer",
         "store",
         "tuning",
+        "evict",
         "unswapped",
         "target",
         "advised",
@@ -94,32 +107,42 @@ fn main() {
         "swap MiB/it",
         "lead",
         "depth",
-        "stall ms/it",
+        "rstall ms/it",
+        "wstall ms/it",
         "sync/it",
         "iter ms",
     ]);
     for placer in [PlannerKind::Sorting, PlannerKind::BestFit] {
-        run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, placer, SwapTuning::Fixed);
-        run_case(&mut table, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed);
-        run_case(&mut table, "Model B (Conv)", zoo::model_b_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed);
+        run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, placer, SwapTuning::Fixed, false);
+        run_case(&mut table, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed, false);
+        run_case(&mut table, "Model B (Conv)", zoo::model_b_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed, false);
     }
-    // the acceptance comparison: fixed vs calibrated tuning on the
-    // file-spill store (the slow path where fixed constants stall)
+    // the acceptance comparison: fixed vs calibrated tuning and sync vs
+    // full-duplex (async) eviction on the file-spill store — the slow
+    // path where fixed constants stall and synchronous writes sit on
+    // the training thread
     for tuning in [SwapTuning::Fixed, SwapTuning::Calibrated] {
-        run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::File, PlannerKind::Sorting, tuning);
-        run_case(&mut table, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::File, PlannerKind::Sorting, tuning);
+        for sync_evict in [true, false] {
+            run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::File, PlannerKind::Sorting, tuning, sync_evict);
+        }
     }
-    run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, PlannerKind::Sorting, SwapTuning::Calibrated);
+    for sync_evict in [true, false] {
+        run_case(&mut table, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::File, PlannerKind::Sorting, SwapTuning::Calibrated, sync_evict);
+    }
+    run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, PlannerKind::Sorting, SwapTuning::Calibrated, false);
     table.print();
     println!(
         "\nachieved = gap-aware planner pool (what training actually allocates); \
          advised = live-set bound under the plan; frag% = achieved overhead \
          over the advised bound (first-fit `gapfit` vs `gapfit-bestfit` placement).\n\
          tuning: fixed = global 1-EO lead / depth 2; calibrated = per-entry leads \
-         and depth derived from the measured store bandwidth (lead column = widest \
-         lead in effect after warmup recalibration, depth = in-flight fetches \
-         after epoch-boundary adaptation).\n\
-         stall = training-thread wait on swap-ins; the rest of the traffic is \
-         hidden by the background prefetcher."
+         and depth derived from measured store bandwidth, then re-derived every \
+         iteration from observed per-entry fetch times (lead column = widest lead \
+         in effect, depth = in-flight fetches after adaptation).\n\
+         evict: sync = store puts on the training thread (baseline); async = \
+         background write tickets with reclaim barriers (full-duplex engine).\n\
+         rstall = training-thread wait on swap-ins; wstall = training-thread wait \
+         on eviction writes — the number async eviction takes off the critical \
+         path; the rest of the traffic is hidden by the background workers."
     );
 }

@@ -65,10 +65,30 @@ pub fn train_random(
     epochs: usize,
     lr: f32,
 ) -> Result<(Model, f64, usize)> {
+    train_random_swap(nodes, opts, dataset, epochs, lr, false)
+}
+
+/// [`train_random`] with the swap runtime's eviction mode pinned:
+/// `sync_evictions = true` restores the synchronous-eviction (PR-1)
+/// write path, the baseline the full-duplex write-stall columns of
+/// `benches/swap_runtime.rs` compare against.
+pub fn train_random_swap(
+    nodes: Vec<NodeDesc>,
+    opts: &CompileOpts,
+    dataset: usize,
+    epochs: usize,
+    lr: f32,
+    sync_evictions: bool,
+) -> Result<(Model, f64, usize)> {
     let mut model = ModelBuilder::new()
         .add_nodes(nodes)
         .optimizer("sgd", &[("learning_rate", &format!("{lr}"))])
         .compile(opts)?;
+    if sync_evictions {
+        if let Some(sw) = model.exec.swap_mut() {
+            sw.set_sync_evictions(true);
+        }
+    }
     let in_len: usize = model
         .exec
         .graph

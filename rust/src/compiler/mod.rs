@@ -7,7 +7,7 @@ pub mod unroll;
 use std::collections::HashMap;
 
 use crate::error::Result;
-use crate::exec::{init_graph, Executor, InitOptions};
+use crate::exec::{init_graph, probe_init_graph, Executor, InitOptions, ShapeTemplate};
 use crate::graph::{Graph, NodeDesc};
 use crate::layers::{builtin_factories, LayerFactory};
 use crate::metrics::PlanReport;
@@ -139,6 +139,24 @@ pub fn compile(
     compile_with(nodes, optimizer, opts, &builtin_factories())
 }
 
+/// Realize + wire once — the batch-independent half of compilation,
+/// shared by every auto-batch probe and the final compile
+/// ([`plan_graph`] / [`compile_graph`] consume the result).
+pub fn analyze(nodes: Vec<NodeDesc>) -> Result<Graph> {
+    Graph::wire(realizer::realize_all(nodes)?)
+}
+
+fn init_opts_of(opts: &CompileOpts, opt_slots: usize) -> InitOptions {
+    InitOptions {
+        batch: opts.batch,
+        training: opts.training,
+        inplace: opts.inplace && !opts.conventional,
+        conventional: opts.conventional,
+        deferred_apply: opts.clip_norm.is_some(),
+        opt_slots,
+    }
+}
+
 /// Plan without allocating: run the full pipeline up to and including
 /// memory planning and validation, but skip pool allocation and weight
 /// init. Used by the memory benches (a conventional-profile VGG16 plan
@@ -158,17 +176,25 @@ pub fn plan_with(
     factories: &HashMap<&'static str, LayerFactory>,
     opt_slots: usize,
 ) -> Result<PlanReport> {
-    let nodes = realizer::realize_all(nodes)?;
-    let graph = Graph::wire(nodes)?;
-    let init_opts = InitOptions {
-        batch: opts.batch,
-        training: opts.training,
-        inplace: opts.inplace && !opts.conventional,
-        conventional: opts.conventional,
-        deferred_apply: opts.clip_norm.is_some(),
-        opt_slots,
+    let graph = analyze(nodes)?;
+    plan_graph(&graph, opts, factories, opt_slots, None)
+}
+
+/// [`plan_with`] over a pre-wired graph, optionally through a memoized
+/// [`ShapeTemplate`]: the auto-batch search realizes/wires/finalizes
+/// once and probes candidate batches by dim substitution.
+pub fn plan_graph(
+    graph: &Graph,
+    opts: &CompileOpts,
+    factories: &HashMap<&'static str, LayerFactory>,
+    opt_slots: usize,
+    template: Option<&ShapeTemplate>,
+) -> Result<PlanReport> {
+    let init_opts = init_opts_of(opts, opt_slots);
+    let mut ig = match template {
+        Some(t) => probe_init_graph(graph, t, &init_opts)?,
+        None => init_graph(graph, factories, &init_opts)?,
     };
-    let mut ig = init_graph(&graph, factories, &init_opts)?;
     let (pool_len, planner_name, _plan, _cal) = plan_memory(&mut ig.table, opts, None)?;
     Ok(PlanReport::from_table(&ig.table, pool_len, planner_name))
 }
@@ -180,17 +206,20 @@ pub fn compile_with(
     opts: &CompileOpts,
     factories: &HashMap<&'static str, LayerFactory>,
 ) -> Result<(Executor, PlanReport)> {
-    let nodes = realizer::realize_all(nodes)?;
-    let graph = Graph::wire(nodes)?;
-    let init_opts = InitOptions {
-        batch: opts.batch,
-        training: opts.training,
-        inplace: opts.inplace && !opts.conventional,
-        conventional: opts.conventional,
-        deferred_apply: opts.clip_norm.is_some(),
-        opt_slots: optimizer.state_slots(),
-    };
-    let mut ig = init_graph(&graph, factories, &init_opts)?;
+    let graph = analyze(nodes)?;
+    compile_graph(&graph, optimizer, opts, factories)
+}
+
+/// [`compile_with`] over a pre-wired graph (the session's auto-batch
+/// path compiles the same graph it probed).
+pub fn compile_graph(
+    graph: &Graph,
+    optimizer: Box<dyn Optimizer>,
+    opts: &CompileOpts,
+    factories: &HashMap<&'static str, LayerFactory>,
+) -> Result<(Executor, PlanReport)> {
+    let init_opts = init_opts_of(opts, optimizer.state_slots());
+    let mut ig = init_graph(graph, factories, &init_opts)?;
     // the store is created before planning so Calibrated tuning can
     // probe the very instance the runtime will swap through
     let mut store = match opts.memory_budget_bytes {

@@ -32,6 +32,15 @@ pub enum StepOp {
 /// A compiled, planned, pool-backed model execution.
 pub struct Executor {
     pub graph: InitGraph,
+    /// Proactive swap runtime, present when the model was compiled under
+    /// a primary-memory budget. Engaged around every training step and
+    /// around forward steps in forward-only passes (the budgeted pool
+    /// aliases regions across idle gaps, so eviction must run there
+    /// too). Declared **before** `pool`: its drop joins the background
+    /// evict worker, which may still hold raw spans into the pool —
+    /// fields drop in declaration order, so the join must run while the
+    /// pool is alive.
+    swap: Option<SwapExec>,
     pub pool: MemoryPool,
     steps: Vec<(u32, StepOp)>,
     /// Gradient roots to zero right before the step at this EO (their
@@ -43,11 +52,6 @@ pub struct Executor {
     pub deferred_apply: bool,
     pub iter: u64,
     apply_count: u64,
-    /// Proactive swap runtime, present when the model was compiled under
-    /// a primary-memory budget. Engaged around every training step and
-    /// around forward steps in forward-only passes (the budgeted pool
-    /// aliases regions across idle gaps, so eviction must run there too).
-    swap: Option<SwapExec>,
     /// Loss captured at the loss layers' forward steps. The loss output
     /// tensor is only live at its forward EO — its pool region is
     /// (correctly) reused during backward, so it must be read *at* that
@@ -96,6 +100,7 @@ impl Executor {
         let pool = MemoryPool::new(pool_len);
         let mut exec = Executor {
             graph,
+            swap,
             pool,
             steps,
             zero_before,
@@ -104,7 +109,6 @@ impl Executor {
             deferred_apply: deferred,
             iter: 0,
             apply_count: 0,
-            swap,
             last_loss: 0.0,
         };
         exec.init_weights(seed);
@@ -285,7 +289,21 @@ impl Executor {
     /// forward). Entries whose prefetch EO lies in the (skipped) backward
     /// half are restored in the end-of-pass sweep.
     pub fn try_forward_pass(&mut self) -> Result<()> {
+        self.forward_only(false).map(|_| ())
+    }
+
+    /// Forward-only pass that evaluates the loss on the bound batch
+    /// without touching weights — the validation half of a train/val
+    /// split. Runs in inference mode (dropout off) under the same swap
+    /// protocol as [`Executor::try_forward_pass`]; the loss is captured
+    /// at the loss layers' forward steps exactly as in training.
+    pub fn try_eval_loss(&mut self) -> Result<f32> {
+        self.forward_only(true).map(|l| l.unwrap_or(0.0))
+    }
+
+    fn forward_only(&mut self, capture_loss: bool) -> Result<Option<f32>> {
         self.iter += 1;
+        let mut loss = 0f32;
         if let Some(sw) = self.swap.as_mut() {
             sw.begin_iteration(false)?;
         }
@@ -297,6 +315,17 @@ impl Executor {
                 }
                 let ctx = self.ctx_infer(i);
                 self.graph.nodes[i].layer.forward(&ctx);
+                if capture_loss && self.graph.nodes[i].is_loss {
+                    // capture now: this region may be reused later on
+                    let id = self.graph.nodes[i].io.outputs[0];
+                    let r = self
+                        .graph
+                        .table
+                        .get(self.graph.table.resolve(id))
+                        .region
+                        .unwrap();
+                    loss += self.pool.view(r)[0];
+                }
                 if let Some(sw) = self.swap.as_mut() {
                     sw.post_step(eo, &self.pool)?;
                 }
@@ -305,7 +334,7 @@ impl Executor {
         if let Some(sw) = self.swap.as_mut() {
             sw.end_iteration(&self.pool)?;
         }
-        Ok(())
+        Ok(capture_loss.then_some(loss))
     }
 
     fn apply_node(&mut self, i: usize) {

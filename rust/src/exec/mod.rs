@@ -5,4 +5,7 @@ pub mod executor;
 pub mod order;
 
 pub use executor::{Executor, StepOp};
-pub use order::{eo_of, ideal_peak_bytes, init_graph, EoTriple, InitGraph, InitNode, InitOptions};
+pub use order::{
+    eo_of, ideal_peak_bytes, init_graph, probe_init_graph, shape_analysis_count, EoTriple,
+    InitGraph, InitNode, InitOptions, ShapeTemplate,
+};

@@ -15,13 +15,28 @@
 //! when the target tensor's integrity is preserved.
 
 use crate::error::{Error, Result};
-use crate::layers::{loss::is_loss_kind, FinalizeOut, Layer, LayerFactory, LayerIo};
+use crate::layers::{loss::is_loss_kind, FinalizeOut, Layer, LayerFactory, LayerIo, Props};
 use crate::graph::Graph;
 use crate::tensor::{
     CreateMode, Initializer, Lifespan, TensorDim, TensorId, TensorRole, TensorTable,
 };
 
+use std::cell::Cell;
 use std::collections::HashMap;
+
+thread_local! {
+    /// Per-thread count of per-layer shape analyses (factory + finalize)
+    /// — the metric the auto-batch memoization test asserts on. Thread-
+    /// local so parallel test threads cannot pollute each other's
+    /// deltas.
+    static SHAPE_ANALYSES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// How many per-layer shape analyses this thread has run (monotone; take
+/// deltas around the operation under test).
+pub fn shape_analysis_count() -> u64 {
+    SHAPE_ANALYSES.with(|c| c.get())
+}
 
 /// Options controlling initialization (the Fig 9 baseline and the
 /// ablations toggle these).
@@ -101,6 +116,61 @@ pub fn eo_of(i: usize, n: usize) -> EoTriple {
     }
 }
 
+/// Per-node result of pass 1 (instantiate + finalize), minus the layer
+/// instance: everything the tensor-table passes consume. Cached by
+/// [`ShapeTemplate`] so auto-batch probes can substitute batch-scaled
+/// dims instead of re-running every layer's shape analysis.
+#[derive(Clone)]
+pub struct NodeShapes {
+    pub fin: FinalizeOut,
+    pub in_dims: Vec<TensorDim>,
+    pub out_dims: Vec<TensorDim>,
+    pub trainable: bool,
+}
+
+/// Pass 1: instantiate + finalize every layer in topological order —
+/// the per-layer shape analysis ([`shape_analysis_count`] ticks once
+/// per node).
+fn pass1(
+    graph: &Graph,
+    factories: &HashMap<&'static str, LayerFactory>,
+    batch: usize,
+) -> Result<(Vec<Box<dyn Layer>>, Vec<NodeShapes>)> {
+    let n = graph.nodes.len();
+    let mut layers: Vec<Box<dyn Layer>> = Vec::with_capacity(n);
+    let mut shapes: Vec<NodeShapes> = Vec::with_capacity(n);
+    for (i, nd) in graph.nodes.iter().enumerate() {
+        SHAPE_ANALYSES.with(|c| c.set(c.get() + 1));
+        let factory = factories
+            .get(nd.ltype.as_str())
+            .ok_or_else(|| Error::model(format!("unknown layer type `{}`", nd.ltype)))?;
+        let mut layer = factory(&nd.props)?;
+        let in_dims: Vec<TensorDim> = graph.inputs[i]
+            .iter()
+            .map(|ep| shapes[ep.node].out_dims[ep.slot])
+            .collect();
+        let mut fin = layer.finalize(&in_dims)?;
+        // apply batch
+        for d in fin.out_dims.iter_mut() {
+            if nd.ltype == "input" {
+                *d = d.with_batch(batch);
+            } else if !is_loss_kind(&nd.ltype) {
+                // keep the batch the layer derived from its input
+                debug_assert!(d.b == batch || in_dims.is_empty() || d.b == in_dims[0].b);
+            }
+        }
+        let out_dims = fin.out_dims.clone();
+        shapes.push(NodeShapes {
+            fin,
+            in_dims,
+            out_dims,
+            trainable: nd.props.bool_or("trainable", true)?,
+        });
+        layers.push(layer);
+    }
+    Ok((layers, shapes))
+}
+
 /// Initialize a wired graph: instantiate layers, finalize shapes, create
 /// every tensor spec with lifespans + create modes, run Algorithm 1.
 pub fn init_graph(
@@ -108,50 +178,30 @@ pub fn init_graph(
     factories: &HashMap<&'static str, LayerFactory>,
     opts: &InitOptions,
 ) -> Result<InitGraph> {
-    let n = graph.nodes.len();
-    if n == 0 {
+    if graph.nodes.is_empty() {
         return Err(Error::graph("empty model"));
     }
-    let mut table = TensorTable::new();
+    let (layers, shapes) = pass1(graph, factories, opts.batch)?;
+    assemble(graph, layers, &shapes, opts)
+}
 
-    // ---- pass 1: instantiate + finalize in topological order ------------
-    let mut layers: Vec<Box<dyn Layer>> = Vec::with_capacity(n);
-    let mut fins: Vec<FinalizeOut> = Vec::with_capacity(n);
-    let mut out_dims_all: Vec<Vec<TensorDim>> = Vec::with_capacity(n);
-    let mut in_dims_all: Vec<Vec<TensorDim>> = Vec::with_capacity(n);
-    let mut trainable: Vec<bool> = Vec::with_capacity(n);
-    for (i, nd) in graph.nodes.iter().enumerate() {
-        let factory = factories
-            .get(nd.ltype.as_str())
-            .ok_or_else(|| Error::model(format!("unknown layer type `{}`", nd.ltype)))?;
-        let mut layer = factory(&nd.props)?;
-        let in_dims: Vec<TensorDim> = graph.inputs[i]
-            .iter()
-            .map(|ep| out_dims_all[ep.node][ep.slot])
-            .collect();
-        let mut fin = layer.finalize(&in_dims)?;
-        // apply batch
-        for d in fin.out_dims.iter_mut() {
-            if nd.ltype == "input" {
-                *d = d.with_batch(opts.batch);
-            } else if !is_loss_kind(&nd.ltype) {
-                // keep the batch the layer derived from its input
-                debug_assert!(d.b == opts.batch || in_dims.is_empty() || d.b == in_dims[0].b);
-            }
-        }
-        trainable.push(nd.props.bool_or("trainable", true)?);
-        in_dims_all.push(in_dims);
-        out_dims_all.push(fin.out_dims.clone());
-        fins.push(fin);
-        layers.push(layer);
-    }
+/// Passes 2–3: derivative-need analysis, tensor creation, EO assignment
+/// (Algorithm 1) and view merging, over precomputed pass-1 shapes.
+fn assemble(
+    graph: &Graph,
+    mut layers: Vec<Box<dyn Layer>>,
+    shapes: &[NodeShapes],
+    opts: &InitOptions,
+) -> Result<InitGraph> {
+    let n = graph.nodes.len();
+    let mut table = TensorTable::new();
 
     // ---- pass 2: derivative-need analysis (frozen-backbone pruning) -----
     // wants_deriv[i]: node i's output derivative will exist & be consumed.
     let mut wants_deriv = vec![false; n];
     let mut has_grads = vec![false; n];
     for i in 0..n {
-        has_grads[i] = opts.training && trainable[i] && !fins[i].weights.is_empty();
+        has_grads[i] = opts.training && shapes[i].trainable && !shapes[i].fin.weights.is_empty();
         let upstream = graph.inputs[i]
             .iter()
             .any(|ep| wants_deriv[ep.node] || has_grads[ep.node]);
@@ -181,7 +231,7 @@ pub fn init_graph(
 
     for i in 0..n {
         let nd = &graph.nodes[i];
-        let fin = &fins[i];
+        let fin = &shapes[i].fin;
         let eo = eo_of(i, n);
         let is_input = nd.ltype == "input";
         let is_loss = is_loss_kind(&nd.ltype);
@@ -213,7 +263,7 @@ pub fn init_graph(
 
         // -- outputs + their derivative buffers
         let single_in_act = io.inputs.first().copied();
-        for (k, od) in out_dims_all[i].iter().enumerate() {
+        for (k, od) in shapes[i].out_dims.iter().enumerate() {
             let mode = if is_input {
                 CreateMode::Placeholder
             } else {
@@ -275,7 +325,7 @@ pub fn init_graph(
         // sanity: every non-multiout output must have <= 1 consumer
         if nd.ltype != "multiout" {
             for (slot_consumers, _) in [(consumers[i].iter().filter(|c| c.2 == 0).count(), 0)] {
-                if out_dims_all[i].len() == 1 && slot_consumers > 1 {
+                if shapes[i].out_dims.len() == 1 && slot_consumers > 1 {
                     return Err(Error::graph(format!(
                         "output of `{}` consumed {} times; the MultiOut realizer must fan it out",
                         nd.name, slot_consumers
@@ -337,7 +387,7 @@ pub fn init_graph(
             )?;
             table.add_eo(wid, 0, Lifespan::MAX);
             table.add_eo(wid, eo_apply, Lifespan::MAX);
-            table.get_mut(wid).trainable = trainable[i];
+            table.get_mut(wid).trainable = shapes[i].trainable;
             io.weights.push(wid);
 
             if has_grads[i] {
@@ -422,7 +472,7 @@ pub fn init_graph(
 
         // -- loss label placeholder
         if is_loss {
-            let dim = in_dims_all[i][0];
+            let dim = shapes[i].in_dims[0];
             let lid = table.request(
                 format!("{}:label", nd.name),
                 dim,
@@ -449,10 +499,10 @@ pub fn init_graph(
                 )]))?,
             ),
             io,
-            in_dims: in_dims_all[i].clone(),
-            out_dims: out_dims_all[i].clone(),
+            in_dims: shapes[i].in_dims.clone(),
+            out_dims: shapes[i].out_dims.clone(),
             fused_backward: fused,
-            trainable: trainable[i],
+            trainable: shapes[i].trainable,
             is_loss,
             is_input,
             has_grads: has_grads[i],
@@ -491,6 +541,187 @@ pub fn init_graph(
         loss_nodes,
         input_nodes,
     })
+}
+
+/// Batch-scaling rule for one dim field, inferred from two reference
+/// batches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum DimRule {
+    /// The field is batch-independent.
+    Const(usize),
+    /// The field is `k × batch`.
+    PerBatch(usize),
+}
+
+impl DimRule {
+    fn infer(va: usize, vb: usize, batch_a: usize, batch_b: usize) -> Option<DimRule> {
+        if va == vb {
+            Some(DimRule::Const(va))
+        } else if va % batch_a == 0 && vb % batch_b == 0 && va / batch_a == vb / batch_b {
+            Some(DimRule::PerBatch(va / batch_a))
+        } else {
+            None
+        }
+    }
+
+    fn apply(&self, batch: usize) -> usize {
+        match *self {
+            DimRule::Const(v) => v,
+            DimRule::PerBatch(k) => k * batch,
+        }
+    }
+}
+
+/// Reference batches the template is inferred from — coprime so a
+/// `k × batch` field can never masquerade as a constant.
+const TEMPLATE_REF_A: usize = 2;
+const TEMPLATE_REF_B: usize = 3;
+
+/// Memoized pass-1 shape analysis for auto-batch probes (ROADMAP:
+/// "auto-batch currently re-plans per probe"). Per-layer finalize runs
+/// at two reference batches; when every dim of every request differs
+/// between them by at most a linear batch factor, further probe batches
+/// are *substituted* ([`ShapeTemplate::instantiate`]) instead of
+/// re-analyzed — the whole binary search costs two shape analyses
+/// total. [`ShapeTemplate::build`] returns `None` when some layer's
+/// shapes are not batch-linear; callers then fall back to a full
+/// analysis per probe. (Two-point inference assumes dims are at most
+/// linear in batch — true of every layer in this crate, where batch
+/// never mixes into feature dims. A hypothetical layer crafted to
+/// interpolate linearly at exactly batches 2 and 3 could fool the
+/// template; the real compile at the selected batch and
+/// `fits_budget()` still report the honest pool.)
+pub struct ShapeTemplate {
+    base: Vec<NodeShapes>,
+    /// Per node, per collected dim (see [`collect_dims`] order), the
+    /// four field rules `[b, c, h, w]`.
+    rules: Vec<Vec<[DimRule; 4]>>,
+}
+
+/// Every TensorDim a `NodeShapes` carries, in a fixed order shared by
+/// inference and substitution.
+fn collect_dims(s: &NodeShapes) -> Vec<TensorDim> {
+    let mut dims = Vec::new();
+    dims.extend(s.in_dims.iter().copied());
+    dims.extend(s.out_dims.iter().copied());
+    dims.extend(s.fin.out_dims.iter().copied());
+    dims.extend(s.fin.weights.iter().map(|w| w.dim));
+    dims.extend(s.fin.temps.iter().map(|t| t.dim));
+    dims
+}
+
+/// Write substituted dims back in [`collect_dims`] order.
+fn apply_dims(s: &mut NodeShapes, dims: &[TensorDim]) {
+    let mut it = dims.iter();
+    for d in s.in_dims.iter_mut() {
+        *d = *it.next().unwrap();
+    }
+    for d in s.out_dims.iter_mut() {
+        *d = *it.next().unwrap();
+    }
+    for d in s.fin.out_dims.iter_mut() {
+        *d = *it.next().unwrap();
+    }
+    for w in s.fin.weights.iter_mut() {
+        w.dim = *it.next().unwrap();
+    }
+    for t in s.fin.temps.iter_mut() {
+        t.dim = *it.next().unwrap();
+    }
+}
+
+impl ShapeTemplate {
+    /// Infer a template from two reference-batch analyses; `None` when
+    /// any dim is not batch-linear **or** some layer cannot finalize at
+    /// a reference batch at all (a custom layer rejecting, say, odd
+    /// batches) — in both cases the honest fallback is a full analysis
+    /// per probed batch, which only ever evaluates the batches actually
+    /// probed.
+    pub fn build(
+        graph: &Graph,
+        factories: &HashMap<&'static str, LayerFactory>,
+    ) -> Option<ShapeTemplate> {
+        let a = match pass1(graph, factories, TEMPLATE_REF_A) {
+            Ok((_, shapes)) => shapes,
+            Err(_) => return None,
+        };
+        let b = match pass1(graph, factories, TEMPLATE_REF_B) {
+            Ok((_, shapes)) => shapes,
+            Err(_) => return None,
+        };
+        let mut rules = Vec::with_capacity(a.len());
+        for (sa, sb) in a.iter().zip(b.iter()) {
+            let da = collect_dims(sa);
+            let db = collect_dims(sb);
+            if da.len() != db.len() || sa.trainable != sb.trainable {
+                return None;
+            }
+            let mut node_rules = Vec::with_capacity(da.len());
+            for (x, y) in da.iter().zip(db.iter()) {
+                let r = [
+                    DimRule::infer(x.b, y.b, TEMPLATE_REF_A, TEMPLATE_REF_B),
+                    DimRule::infer(x.c, y.c, TEMPLATE_REF_A, TEMPLATE_REF_B),
+                    DimRule::infer(x.h, y.h, TEMPLATE_REF_A, TEMPLATE_REF_B),
+                    DimRule::infer(x.w, y.w, TEMPLATE_REF_A, TEMPLATE_REF_B),
+                ];
+                match r {
+                    [Some(b_), Some(c), Some(h), Some(w)] => node_rules.push([b_, c, h, w]),
+                    _ => return None,
+                }
+            }
+            rules.push(node_rules);
+        }
+        Some(ShapeTemplate { base: a, rules })
+    }
+
+    /// Pass-1 shapes for `batch`, by rule substitution (no layer code
+    /// runs).
+    pub fn instantiate(&self, batch: usize) -> Vec<NodeShapes> {
+        self.base
+            .iter()
+            .zip(self.rules.iter())
+            .map(|(s, rules)| {
+                let mut s = s.clone();
+                let dims: Vec<TensorDim> = rules
+                    .iter()
+                    .map(|r| {
+                        TensorDim::new(
+                            r[0].apply(batch),
+                            r[1].apply(batch),
+                            r[2].apply(batch),
+                            r[3].apply(batch),
+                        )
+                    })
+                    .collect();
+                apply_dims(&mut s, &dims);
+                s
+            })
+            .collect()
+    }
+}
+
+/// Probe-only initialization: assemble the tensor table for
+/// `opts.batch` from a memoized shape template, with inert placeholder
+/// layers standing in for the real ones — the result is planned, never
+/// executed. The per-layer shape analysis count does not move.
+pub fn probe_init_graph(
+    graph: &Graph,
+    template: &ShapeTemplate,
+    opts: &InitOptions,
+) -> Result<InitGraph> {
+    if graph.nodes.is_empty() {
+        return Err(Error::graph("empty model"));
+    }
+    let shapes = template.instantiate(opts.batch);
+    let layers: Vec<Box<dyn Layer>> = (0..graph.nodes.len())
+        .map(|_| {
+            crate::layers::input::InputLayer::create(&Props::from_pairs([(
+                "input_shape",
+                "1:1:1",
+            )]))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    assemble(graph, layers, &shapes, opts)
 }
 
 /// Algorithm 1, lines 13–23: resolve create modes in ascending-min-EO

@@ -8,6 +8,7 @@
 //!                 [--calibrated] [--save ckpt.bin] [--data digits|random]
 //! nntrainer zoo                              # list built-in evaluation models
 //! nntrainer artifacts [--dir artifacts]      # check + smoke the PJRT artifact catalog
+//! nntrainer checkpoint diff <a.bin> <b.bin>  # manifest diff of two checkpoints (v1/v2)
 //! ```
 //!
 //! With `--budget-mib` and no `--batch`, the largest batch whose planned
@@ -29,8 +30,8 @@ use nntrainer::runtime::{SwapTuning, XlaRuntime};
 fn usage() -> ExitCode {
     eprintln!(
         "usage:\n  nntrainer plan  <model.ini> [--batch N] [--budget-mib M] [--planner P] [--conventional] [--no-swap] [--calibrated] [--table]\n  \
-         nntrainer train <model.ini> [--batch N] [--budget-mib M] [--epochs N] [--early-stop P] [--calibrated] [--save F] [--data digits|random]\n  \
-         nntrainer zoo\n  nntrainer artifacts [--dir D]"
+         nntrainer train <model.ini> [--batch N] [--budget-mib M] [--epochs N] [--early-stop P] [--val-split F] [--calibrated] [--save F] [--data digits|random]\n  \
+         nntrainer zoo\n  nntrainer artifacts [--dir D]\n  nntrainer checkpoint diff <a.bin> <b.bin>"
     );
     ExitCode::from(2)
 }
@@ -61,6 +62,7 @@ fn main() -> ExitCode {
         "train" => cmd_train(&args),
         "zoo" => cmd_zoo(),
         "artifacts" => cmd_artifacts(&args),
+        "checkpoint" => cmd_checkpoint(&args),
         _ => return usage(),
     };
     match r {
@@ -106,6 +108,9 @@ fn spec_and_profile(
     }
     if let Some(e) = parse_opt::<usize>(args, "--epochs")? {
         spec.epochs = e;
+    }
+    if let Some(v) = parse_opt::<f32>(args, "--val-split")? {
+        spec.val_split = v;
     }
     let profile = DeviceProfile {
         memory_budget_bytes: budget,
@@ -224,6 +229,30 @@ fn cmd_train(args: &Args) -> nntrainer::Result<()> {
         println!("checkpoint written to {save}");
     }
     Ok(())
+}
+
+/// `checkpoint diff <a> <b>`: manifest-level diff of two checkpoint
+/// files (v2 manifests read directly; v1 files are scanned). Exits
+/// successfully whether or not the files differ — the diff itself is
+/// the output.
+fn cmd_checkpoint(args: &Args) -> nntrainer::Result<()> {
+    match args.rest.first().map(|s| s.as_str()) {
+        Some("diff") => {
+            let a = args
+                .rest
+                .get(1)
+                .ok_or_else(|| nntrainer::Error::model("checkpoint diff: missing <a.bin>"))?;
+            let b = args
+                .rest
+                .get(2)
+                .ok_or_else(|| nntrainer::Error::model("checkpoint diff: missing <b.bin>"))?;
+            print!("{}", nntrainer::model::checkpoint::diff_files(a, b)?);
+            Ok(())
+        }
+        _ => Err(nntrainer::Error::model(
+            "usage: nntrainer checkpoint diff <a.bin> <b.bin>",
+        )),
+    }
 }
 
 fn cmd_zoo() -> nntrainer::Result<()> {

@@ -125,6 +125,31 @@ impl<R: Read> CheckedReader<R> {
         let nbuf = self.take(nlen, what)?;
         String::from_utf8(nbuf).map_err(|e| Error::Checkpoint(format!("bad name utf8: {e}")))
     }
+
+    /// Largest sane entry count given the bytes actually remaining —
+    /// pre-allocation bound, so a corrupted count field cannot demand a
+    /// multi-gigabyte `Vec` before the first entry read fails cleanly
+    /// (`min_entry_bytes`: smallest on-disk footprint of one entry).
+    fn capacity_for(&self, count: usize, min_entry_bytes: u64) -> usize {
+        count.min((self.remaining / min_entry_bytes.max(1)) as usize + 1)
+    }
+}
+
+impl CheckedReader<BufReader<File>> {
+    /// Consume `n` bytes without reading them: the manifest scan over a
+    /// v1 file skips each tensor's weight data in O(1) (`seek_relative`
+    /// keeps the buffer when the jump stays inside it).
+    fn skip(&mut self, n: usize, what: &str) -> Result<()> {
+        if (n as u64) > self.remaining {
+            return Err(Error::Checkpoint(format!(
+                "truncated checkpoint: {what} needs {n} bytes but only {} remain",
+                self.remaining
+            )));
+        }
+        self.inner.seek_relative(n as i64)?;
+        self.remaining -= n as u64;
+        Ok(())
+    }
 }
 
 fn open_checked(path: &str) -> Result<(CheckedReader<BufReader<File>>, u32, usize)> {
@@ -147,7 +172,8 @@ fn read_manifest_from(
     r: &mut CheckedReader<BufReader<File>>,
     count: usize,
 ) -> Result<Vec<ManifestEntry>> {
-    let mut manifest = Vec::with_capacity(count);
+    // one v2 manifest row is at least name-len + 4 dims + data-len
+    let mut manifest = Vec::with_capacity(r.capacity_for(count, 24));
     for i in 0..count {
         let name = r.name(&format!("manifest entry {i}"))?;
         let mut d = [0usize; 4];
@@ -182,6 +208,90 @@ pub fn read_manifest(path: &str) -> Result<Vec<ManifestEntry>> {
         )));
     }
     read_manifest_from(&mut r, count)
+}
+
+/// Any checkpoint's manifest, with the version it came from: v2 files
+/// carry one up front; for v1 files the entries are reconstructed by
+/// scanning the whole file (name + element count — v1 stored no dims,
+/// so each entry reports the flat `1:1:1:len` shape). Lengths are
+/// validated against the remaining bytes exactly like the load paths.
+pub fn manifest_of(path: &str) -> Result<(u32, Vec<ManifestEntry>)> {
+    let (mut r, version, count) = open_checked(path)?;
+    if version == VERSION {
+        return Ok((version, read_manifest_from(&mut r, count)?));
+    }
+    // one v1 entry is at least name-len + data-len
+    let mut manifest = Vec::with_capacity(r.capacity_for(count, 8));
+    for i in 0..count {
+        let name = r.name(&format!("entry {i}"))?;
+        let len = r.u32(&format!("data length of `{name}`"))? as usize;
+        r.skip(len * 4, &format!("data of `{name}`"))?;
+        manifest.push(ManifestEntry { name, dim: TensorDim::vec(1, len), len });
+    }
+    Ok((version, manifest))
+}
+
+/// Render a deterministic, name-sorted diff of two manifests (the
+/// `checkpoint diff` CLI): entries only in `a` print as `-`, only in
+/// `b` as `+`, shape/length changes as `~`; identical entries are
+/// counted. An empty-difference diff is exactly the trailing count
+/// line. `compare_dims` is false when either side is a v1 file whose
+/// dims are reconstructed flat — then only element counts can honestly
+/// differ.
+pub fn diff_manifests(
+    label_a: &str,
+    a: &[ManifestEntry],
+    label_b: &str,
+    b: &[ManifestEntry],
+    compare_dims: bool,
+) -> String {
+    use std::collections::BTreeMap;
+    let ma: BTreeMap<&str, &ManifestEntry> = a.iter().map(|m| (m.name.as_str(), m)).collect();
+    let mb: BTreeMap<&str, &ManifestEntry> = b.iter().map(|m| (m.name.as_str(), m)).collect();
+    let mut out = String::new();
+    let mut same = 0usize;
+    for (name, ea) in &ma {
+        match mb.get(name) {
+            None => {
+                out.push_str(&format!(
+                    "- `{name}` {} ({} f32) only in {label_a}\n",
+                    ea.dim, ea.len
+                ));
+            }
+            Some(eb) if ea.len != eb.len || (compare_dims && ea.dim != eb.dim) => {
+                out.push_str(&format!(
+                    "~ `{name}` {} ({} f32) -> {} ({} f32)\n",
+                    ea.dim, ea.len, eb.dim, eb.len
+                ));
+            }
+            Some(_) => same += 1,
+        }
+    }
+    for (name, eb) in &mb {
+        if !ma.contains_key(name) {
+            out.push_str(&format!(
+                "+ `{name}` {} ({} f32) only in {label_b}\n",
+                eb.dim, eb.len
+            ));
+        }
+    }
+    out.push_str(&format!("{same} tensor(s) identical\n"));
+    out
+}
+
+/// Diff two checkpoint files by manifest (v1 and v2 both accepted) —
+/// the `nntrainer checkpoint diff` subcommand. Dims take part in the
+/// comparison only when both files carry a real manifest (v2).
+pub fn diff_files(path_a: &str, path_b: &str) -> Result<String> {
+    let (va, ma) = manifest_of(path_a)?;
+    let (vb, mb) = manifest_of(path_b)?;
+    let mut out = format!(
+        "a: {path_a} (v{va}, {} tensors)\nb: {path_b} (v{vb}, {} tensors)\n",
+        ma.len(),
+        mb.len()
+    );
+    out.push_str(&diff_manifests("a", &ma, "b", &mb, va == VERSION && vb == VERSION));
+    Ok(out)
 }
 
 /// Load weights by name, strictly: any checkpoint tensor the model
@@ -261,7 +371,7 @@ fn load_v1(
     count: usize,
     skip_prefixes: &[String],
 ) -> Result<usize> {
-    let mut pending: Vec<(String, Vec<f32>)> = Vec::with_capacity(count);
+    let mut pending: Vec<(String, Vec<f32>)> = Vec::with_capacity(r.capacity_for(count, 8));
     let mut diffs = Vec::new();
     for i in 0..count {
         let name = r.name(&format!("entry {i}"))?;

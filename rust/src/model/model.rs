@@ -103,11 +103,14 @@ pub struct TrainConfig {
     pub queue_depth: usize,
     /// Print per-epoch summaries.
     pub verbose: bool,
+    /// Fraction of each epoch's batches held out for forward-only loss
+    /// evaluation (see `TrainSpec::val_split`). `0.0` = none.
+    pub val_split: f32,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig { epochs: 1, queue_depth: 2, verbose: false }
+        TrainConfig { epochs: 1, queue_depth: 2, verbose: false, val_split: 0.0 }
     }
 }
 
@@ -118,6 +121,9 @@ pub struct TrainSummary {
     pub iterations: usize,
     pub final_loss: f32,
     pub losses_per_epoch: Vec<f32>,
+    /// Held-out loss per epoch (empty unless a validation split was
+    /// configured).
+    pub val_losses_per_epoch: Vec<f32>,
     pub wall_s: f64,
 }
 

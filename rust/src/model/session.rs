@@ -15,7 +15,7 @@
 //! to be hand-assembled as `CompileOpts`. `compile_for` implements the
 //! ROADMAP's budget-aware batch scheduler: with no explicit batch and a
 //! memory budget, it binary-searches the largest batch whose *planned*
-//! pool fits — pure analysis via [`crate::compiler::plan_with`], no pool
+//! pool fits — pure analysis via [`crate::compiler::plan_graph`], no pool
 //! is allocated during the search.
 //!
 //! [`CompiledSession::personalize`] makes the paper's §5 scenario
@@ -30,10 +30,11 @@
 
 use std::collections::HashMap;
 
-use crate::compiler::{compile_with, plan_with, CompileOpts};
+use crate::compiler::{analyze, compile_graph, plan_graph, CompileOpts};
 use crate::dataset::{BatchQueue, DataProducer};
 use crate::error::{Error, Result};
-use crate::graph::NodeDesc;
+use crate::exec::ShapeTemplate;
+use crate::graph::{Graph, NodeDesc};
 use crate::layers::{LayerFactory, Props};
 use crate::metrics::{PlanReport, Timer, MIB};
 use crate::model::appctx::AppContext;
@@ -76,6 +77,13 @@ pub struct TrainSpec {
     /// paper's fine-tune-a-frozen-backbone contract as an API instead of
     /// per-layer string props.
     pub freeze: Vec<String>,
+    /// Fraction of each epoch's batches held out for validation
+    /// (`0.0` = none, clamped to `0.5`). Held-out batches run a
+    /// forward-only loss evaluation (no weight update, inference mode);
+    /// their epoch mean lands in `TrainEvent::val_loss` and
+    /// `TrainSummary::val_losses_per_epoch`, and [`EarlyStop`] watches
+    /// it instead of the training loss whenever it exists.
+    pub val_split: f32,
 }
 
 impl Default for TrainSpec {
@@ -89,6 +97,7 @@ impl Default for TrainSpec {
             verbose: false,
             training: true,
             freeze: vec![],
+            val_split: 0.0,
         }
     }
 }
@@ -199,6 +208,9 @@ pub struct TrainEvent {
     /// Global iteration count so far (1-based).
     pub iteration: usize,
     pub loss: f32,
+    /// Held-out loss (epoch mean), present at `on_epoch_end` when
+    /// [`TrainSpec::val_split`] held batches out this epoch.
+    pub val_loss: Option<f32>,
 }
 
 /// Training-loop hooks. Both methods default to `Continue`, so a
@@ -230,8 +242,12 @@ impl<F: FnMut(&TrainEvent) -> CallbackAction> TrainCallback for OnEpochEnd<F> {
     }
 }
 
-/// Stop when the epoch-mean loss has not improved by at least
-/// `min_delta` for `patience` consecutive epochs.
+/// Stop when the monitored epoch-mean loss has not improved by at least
+/// `min_delta` for `patience` consecutive epochs. Monitors the held-out
+/// loss whenever the training loop provides one
+/// ([`TrainSpec::val_split`]), else the training loss — overfitting on
+/// a personalization-sized dataset shows up on the held-out split while
+/// the training loss still falls.
 pub struct EarlyStop {
     pub patience: usize,
     pub min_delta: f32,
@@ -252,8 +268,9 @@ impl EarlyStop {
 
 impl TrainCallback for EarlyStop {
     fn on_epoch_end(&mut self, ev: &TrainEvent) -> CallbackAction {
-        if ev.loss < self.best - self.min_delta {
-            self.best = ev.loss;
+        let monitored = ev.val_loss.unwrap_or(ev.loss);
+        if monitored < self.best - self.min_delta {
+            self.best = monitored;
             self.bad = 0;
             CallbackAction::Continue
         } else {
@@ -381,9 +398,11 @@ impl ConfiguredSession {
         &self.spec
     }
 
-    /// *Compile* + *Initialize* for a device: apply the freeze set, pick
-    /// the batch (auto under a budget), run realizers / Algorithm 1 /
-    /// planning / validation, allocate the pool, init weights.
+    /// *Compile* + *Initialize* for a device: apply the freeze set,
+    /// realize + wire once, pick the batch (auto under a budget, probing
+    /// the shared graph through a memoized shape template), run
+    /// Algorithm 1 / planning / validation, allocate the pool, init
+    /// weights.
     pub fn compile_for(self, profile: DeviceProfile) -> Result<CompiledSession> {
         let ConfiguredSession { session, spec } = self;
         let mut nodes = session.nodes;
@@ -391,15 +410,16 @@ impl ConfiguredSession {
         let optimizer: Box<dyn Optimizer> =
             optimizer::create(&session.optimizer_kind, &session.optimizer_props)?;
         let factories = session.appctx.factories();
+        let graph = analyze(nodes)?;
         let batch = match (spec.batch, profile.memory_budget_bytes) {
             (Some(b), _) => b,
             (None, Some(budget)) => {
-                auto_batch(&nodes, &spec, &profile, optimizer.state_slots(), &factories, budget)?
+                auto_batch(&graph, &spec, &profile, optimizer.state_slots(), &factories, budget)?
             }
             (None, None) => DEFAULT_BATCH,
         };
         let opts = resolve_opts(batch, &spec, &profile);
-        let (exec, report) = compile_with(nodes, optimizer, &opts, &factories)?;
+        let (exec, report) = compile_graph(&graph, optimizer, &opts, &factories)?;
         Ok(CompiledSession { model: Model { exec, report, opts }, spec, profile })
     }
 }
@@ -444,21 +464,33 @@ fn resolve_opts(batch: usize, spec: &TrainSpec, profile: &DeviceProfile) -> Comp
 /// Budget-aware batch scheduler (ROADMAP): largest batch whose *planned*
 /// pool fits `budget`, found by exponential growth + binary search over
 /// the monotone batch→pool curve. Probes run through
-/// [`crate::compiler::plan_with`] — full planning and validation, no pool
-/// allocation. When the swap runtime is engaged the probe pool is the
-/// advised (gap-aware) peak, so swapping buys larger batches. If even
-/// batch 1 misses the budget, 1 is returned (the budget is a target; the
-/// caller can inspect [`CompiledSession::fits_budget`]).
+/// [`crate::compiler::plan_graph`] — full planning and validation, no
+/// pool allocation — over the one wired graph, and per-layer shape
+/// analysis is memoized across probes: an [`ShapeTemplate`] inferred
+/// from two reference batches substitutes batch-scaled dims instead of
+/// re-finalizing every layer per probe (models whose shapes are not
+/// batch-linear fall back to full analysis). When the swap runtime is
+/// engaged the probe pool is the advised (gap-aware) peak, so swapping
+/// buys larger batches. If even batch 1 misses the budget, 1 is
+/// returned (the budget is a target; the caller can inspect
+/// [`CompiledSession::fits_budget`]).
 fn auto_batch(
-    nodes: &[NodeDesc],
+    graph: &Graph,
     spec: &TrainSpec,
     profile: &DeviceProfile,
     opt_slots: usize,
     factories: &HashMap<&'static str, LayerFactory>,
     budget: usize,
 ) -> Result<usize> {
+    let template = ShapeTemplate::build(graph, factories);
     let fits = |b: usize| -> Result<bool> {
-        let report = plan_with(nodes.to_vec(), &resolve_opts(b, spec, profile), factories, opt_slots)?;
+        let report = plan_graph(
+            graph,
+            &resolve_opts(b, spec, profile),
+            factories,
+            opt_slots,
+            template.as_ref(),
+        )?;
         Ok(report.pool_bytes <= budget)
     };
     if !fits(1)? {
@@ -664,6 +696,7 @@ impl CompiledSession {
             epochs: self.spec.epochs,
             queue_depth: self.spec.queue_depth,
             verbose: self.spec.verbose,
+            val_split: self.spec.val_split,
         }
     }
 }
@@ -676,6 +709,14 @@ impl CompiledSession {
 /// the current iteration's bookkeeping; a partial epoch still contributes
 /// its mean to `losses_per_epoch`, and `summary.epochs` reports the
 /// epochs actually entered.
+///
+/// With `cfg.val_split > 0`, every `round(1/split)`-th batch of an
+/// epoch is held out: bound like a training batch but run through a
+/// forward-only loss evaluation (`Executor::try_eval_loss` — no weight
+/// update, inference mode). Held-out batches do not count as iterations
+/// and fire no `on_iteration`; their epoch mean reaches
+/// `on_epoch_end` as [`TrainEvent::val_loss`] (which [`EarlyStop`]
+/// monitors when present) and `summary.val_losses_per_epoch`.
 pub(crate) fn run_training<F>(
     model: &mut Model,
     make_producer: &F,
@@ -688,16 +729,37 @@ where
     let timer = Timer::start();
     let mut summary = TrainSummary { epochs: cfg.epochs, ..Default::default() };
     let mut stopped = false;
+    // every period-th batch is validation; period >= 2 keeps at least
+    // half of every epoch training
+    let period = if cfg.val_split > 0.0 {
+        (1.0 / f64::from(cfg.val_split.clamp(0.0, 0.5))).round().max(2.0) as usize
+    } else {
+        0
+    };
     for epoch in 0..cfg.epochs {
         let queue = BatchQueue::spawn(make_producer(), model.opts.batch, cfg.queue_depth);
         let mut epoch_loss = 0f64;
         let mut batches = 0usize;
+        let mut val_loss = 0f64;
+        let mut val_batches = 0usize;
+        let mut in_epoch = 0usize;
         while let Some(b) = queue.next() {
             model.bind_batch(&b.input, &b.label)?;
+            in_epoch += 1;
+            if period > 0 && in_epoch % period == 0 {
+                val_loss += model.exec.try_eval_loss()? as f64;
+                val_batches += 1;
+                continue;
+            }
             let loss = model.exec.try_train_iteration()?;
             epoch_loss += loss as f64;
             batches += 1;
-            let ev = TrainEvent { epoch, iteration: summary.iterations + batches, loss };
+            let ev = TrainEvent {
+                epoch,
+                iteration: summary.iterations + batches,
+                loss,
+                val_loss: None,
+            };
             for cb in callbacks.iter_mut() {
                 if cb.on_iteration(&ev) == CallbackAction::Stop {
                     stopped = true;
@@ -710,12 +772,40 @@ where
         if batches == 0 {
             return Err(Error::Dataset("no full batch produced".into()));
         }
+        // a configured split that held out nothing must not silently
+        // degrade EarlyStop to the training loss (a callback Stop can
+        // legitimately cut an epoch short of its first held-out batch)
+        if period > 0 && val_batches == 0 && !stopped {
+            return Err(Error::Dataset(format!(
+                "val_split {} held out no batch in an epoch of {} batches \
+                 (every {period}-th batch is held out) — lower val_split or \
+                 provide at least {period} batches per epoch",
+                cfg.val_split, in_epoch
+            )));
+        }
         let mean = (epoch_loss / batches as f64) as f32;
+        let val_mean = if val_batches > 0 {
+            Some((val_loss / val_batches as f64) as f32)
+        } else {
+            None
+        };
         summary.losses_per_epoch.push(mean);
+        if let Some(v) = val_mean {
+            summary.val_losses_per_epoch.push(v);
+        }
         summary.iterations += batches;
         summary.final_loss = mean;
         if cfg.verbose {
-            println!("epoch {:>3}: loss {:.6} ({} iters)", epoch + 1, mean, batches);
+            match val_mean {
+                Some(v) => println!(
+                    "epoch {:>3}: loss {:.6} val {:.6} ({} iters)",
+                    epoch + 1,
+                    mean,
+                    v,
+                    batches
+                ),
+                None => println!("epoch {:>3}: loss {:.6} ({} iters)", epoch + 1, mean, batches),
+            }
         }
         // epoch boundary: let calibrated swap tuning react to the stall
         // telemetry this epoch accrued (no-op under Fixed / no swap)
@@ -723,7 +813,12 @@ where
             sw.adapt_depth();
         }
         if !stopped {
-            let ev = TrainEvent { epoch, iteration: summary.iterations, loss: mean };
+            let ev = TrainEvent {
+                epoch,
+                iteration: summary.iterations,
+                loss: mean,
+                val_loss: val_mean,
+            };
             for cb in callbacks.iter_mut() {
                 if cb.on_epoch_end(&ev) == CallbackAction::Stop {
                     stopped = true;
@@ -746,7 +841,7 @@ mod tests {
     #[test]
     fn early_stop_counts_plateaus() {
         let mut es = EarlyStop::new(2, 0.01);
-        let ev = |loss| TrainEvent { epoch: 0, iteration: 1, loss };
+        let ev = |loss| TrainEvent { epoch: 0, iteration: 1, loss, val_loss: None };
         assert_eq!(es.on_epoch_end(&ev(1.0)), CallbackAction::Continue);
         assert_eq!(es.on_epoch_end(&ev(0.5)), CallbackAction::Continue); // improves
         assert_eq!(es.on_epoch_end(&ev(0.499)), CallbackAction::Continue); // < min_delta
@@ -757,12 +852,22 @@ mod tests {
     #[test]
     fn early_stop_resets_on_improvement() {
         let mut es = EarlyStop::new(2, 0.0);
-        let ev = |loss| TrainEvent { epoch: 0, iteration: 1, loss };
+        let ev = |loss| TrainEvent { epoch: 0, iteration: 1, loss, val_loss: None };
         assert_eq!(es.on_epoch_end(&ev(1.0)), CallbackAction::Continue);
         assert_eq!(es.on_epoch_end(&ev(1.0)), CallbackAction::Continue); // plateau 1
         assert_eq!(es.on_epoch_end(&ev(0.9)), CallbackAction::Continue); // reset
         assert_eq!(es.on_epoch_end(&ev(0.9)), CallbackAction::Continue); // plateau 1
         assert_eq!(es.on_epoch_end(&ev(0.9)), CallbackAction::Stop); // plateau 2
+    }
+
+    #[test]
+    fn early_stop_monitors_val_loss_when_present() {
+        let mut es = EarlyStop::new(1, 0.0);
+        let ev = |loss, val| TrainEvent { epoch: 0, iteration: 1, loss, val_loss: Some(val) };
+        assert_eq!(es.on_epoch_end(&ev(1.0, 1.0)), CallbackAction::Continue);
+        // train loss improves but the held-out loss plateaus → stop
+        assert_eq!(es.on_epoch_end(&ev(0.5, 1.0)), CallbackAction::Stop);
+        assert_eq!(es.best(), 1.0, "best tracks the monitored (val) loss");
     }
 
     #[test]

@@ -3,12 +3,14 @@
 //! The plain planners treat every tensor as live over one contiguous EO
 //! interval `[min EO, max EO]`. Under an offload plan, an offloaded
 //! tensor's region is *released* during each idle gap (the data lives in
-//! the secondary store) and *reacquired* one EO before the next use, so
-//! its primary footprint is the union of its live segments instead. This
-//! planner places tensors so that two tensors may share pool space
-//! whenever none of their live intervals overlap in time — which is what
-//! lets the pool actually shrink to the advisor's `primary_peak_bytes`
-//! instead of merely reporting it.
+//! the secondary store) and *reacquired* `lead` EOs before the next use
+//! — and stays reserved `write_lead` EOs past the eviction while the
+//! background write ticket drains — so its primary footprint is the
+//! union of its lead-widened live segments instead. This planner places
+//! tensors so that two tensors may share pool space whenever none of
+//! their live intervals overlap in time — which is what lets the pool
+//! actually shrink to the advisor's `primary_peak_bytes` instead of
+//! merely reporting it.
 //!
 //! Placement: for each tensor, collect the address ranges of every
 //! already-placed, time-overlapping tensor, then pick a hole by one of

@@ -30,12 +30,27 @@ pub const PREFETCH_LEAD: u32 = 1;
 /// the pipeline cannot keep up at depth 2.
 pub const PREFETCH_DEPTH: usize = 2;
 
+/// Default number of EOs after `evict_after` that an evicted region
+/// stays reserved while the background write ticket drains. Zero keeps
+/// fixed-tuning pool layouts identical to the synchronous-eviction era:
+/// a gap tenant may be placed right after the eviction EO, and the swap
+/// runtime's reclaim barrier blocks (correctly, counted as write stall)
+/// if the copy has not landed by the tenant's first use. Calibrated
+/// tuning widens the reservation (`runtime/calibrate.rs`) so the write
+/// usually lands inside it and the barrier never fires.
+pub const WRITE_LEAD: u32 = 0;
+
 /// One swap decision: evict after `evict_after`, prefetch back before
 /// `prefetch_before` (both EOs; the gap in between is spent in secondary
 /// memory). `lead` is how many EOs before `prefetch_before` the region
 /// is reserved again and the prefetch barrier completes — the per-entry
 /// value the calibrator derives from store bandwidth vs. compute time
-/// (fixed tuning leaves it at [`PREFETCH_LEAD`]).
+/// (fixed tuning leaves it at [`PREFETCH_LEAD`]). `write_lead` mirrors
+/// it on the eviction side: how many EOs past `evict_after` the region
+/// stays reserved for the in-flight background write (fixed tuning:
+/// [`WRITE_LEAD`]). The two may never meet: `lead + write_lead` must be
+/// strictly less than the gap, which the swap runtime rejects at
+/// construction.
 #[derive(Clone, Debug)]
 pub struct OffloadEntry {
     pub tensor: TensorId,
@@ -44,20 +59,32 @@ pub struct OffloadEntry {
     pub evict_after: u32,
     pub prefetch_before: u32,
     pub lead: u32,
+    pub write_lead: u32,
 }
 
-/// Per-gap prefetch leads, keyed by `(tensor, segment-start EO)` — the
-/// lookup shared by the advisor's peak accounting, the gap-aware planner
-/// and the plan validator, so all three widen exactly the intervals the
-/// swap runtime will reacquire early.
+/// Per-gap transfer leads — the lookup shared by the advisor's peak
+/// accounting, the gap-aware planner and the plan validator, so all
+/// three reserve exactly the intervals the swap runtime will occupy.
+/// Read leads are keyed by `(tensor, segment-start EO)` (the gap's
+/// `prefetch_before`); write leads by `(tensor, segment-end EO)` (the
+/// gap's `evict_after`).
 #[derive(Clone, Debug, Default)]
-pub struct LeadMap(HashMap<(TensorId, u32), u32>);
+pub struct LeadMap {
+    read: HashMap<(TensorId, u32), u32>,
+    write: HashMap<(TensorId, u32), u32>,
+}
 
 impl LeadMap {
-    /// Lead for the segment of `tensor` starting at `seg_start`
+    /// Prefetch lead for the segment of `tensor` starting at `seg_start`
     /// (a segment without an entry keeps the default lead).
     pub fn lead(&self, tensor: TensorId, seg_start: u32) -> u32 {
-        self.0.get(&(tensor, seg_start)).copied().unwrap_or(PREFETCH_LEAD)
+        self.read.get(&(tensor, seg_start)).copied().unwrap_or(PREFETCH_LEAD)
+    }
+
+    /// Eviction-write lead for the segment of `tensor` ending at
+    /// `seg_end`.
+    pub fn write_lead(&self, tensor: TensorId, seg_end: u32) -> u32 {
+        self.write.get(&(tensor, seg_end)).copied().unwrap_or(WRITE_LEAD)
     }
 }
 
@@ -81,12 +108,18 @@ pub struct OffloadPlan {
 impl OffloadPlan {
     /// Per-gap lead lookup for planners/validators.
     pub fn lead_map(&self) -> LeadMap {
-        LeadMap(
-            self.entries
+        LeadMap {
+            read: self
+                .entries
                 .iter()
                 .map(|e| ((e.tensor, e.prefetch_before), e.lead))
                 .collect(),
-        )
+            write: self
+                .entries
+                .iter()
+                .map(|e| ((e.tensor, e.evict_after), e.write_lead))
+                .collect(),
+        }
     }
 
     /// Largest per-entry lead (diagnostics, benches).
@@ -118,15 +151,20 @@ pub fn segments(eos: &[u32]) -> Vec<(u32, u32)> {
 /// EO intervals (inclusive) during which a tensor occupies its primary
 /// region. Not offloaded (`leads = None`): one interval spanning its
 /// whole life. Offloaded: one interval per live segment; every segment
-/// except the first is widened at the front by its gap's lead from the
-/// [`LeadMap`] (the prefetch copy lands before the segment's first use —
-/// the first segment instead *starts* with the tensor's first write, so
-/// widening it would grow the footprint beyond the unswapped life and
-/// break peak monotonicity). The lead never reaches back to the previous
-/// segment's end: a lead that swallowed the gap would merge the
-/// intervals and the swap runtime rejects such entries outright. This is
-/// the liveness model shared by the advisor's peak accounting, the
-/// gap-aware planner and the plan validator.
+/// except the first is widened at the front by its gap's *read* lead
+/// from the [`LeadMap`] (the prefetch copy lands before the segment's
+/// first use — the first segment instead *starts* with the tensor's
+/// first write, so widening it would grow the footprint beyond the
+/// unswapped life and break peak monotonicity), and every segment
+/// except the last is extended at the back by its gap's *write* lead
+/// (the eviction copy drains in the background while the region stays
+/// reserved). The two extensions never meet inside a gap: a lead pair
+/// that swallowed the gap would merge the intervals and the swap
+/// runtime rejects such entries outright; for arbitrary maps the write
+/// extension is clipped below the next use and the front widening is
+/// floored above the previous extended end. This is the liveness model
+/// shared by the advisor's peak accounting, the gap-aware planner and
+/// the plan validator.
 pub fn live_intervals(s: &TensorSpec, leads: Option<&LeadMap>) -> Vec<(u32, u32)> {
     match leads {
         None => match (s.min_eo(), s.max_eo()) {
@@ -135,19 +173,26 @@ pub fn live_intervals(s: &TensorSpec, leads: Option<&LeadMap>) -> Vec<(u32, u32)
         },
         Some(leads) => {
             let segs = segments(&s.eos);
-            segs.iter()
-                .enumerate()
-                .map(|(k, &(a, z))| {
-                    if k == 0 {
-                        (a, z)
-                    } else {
-                        let lead = leads.lead(s.id, a);
-                        // never widen past the previous segment's end
-                        let floor = segs[k - 1].1 + 1;
-                        (a.saturating_sub(lead).max(floor), z)
-                    }
-                })
-                .collect()
+            let last = segs.len().saturating_sub(1);
+            let mut out = Vec::with_capacity(segs.len());
+            let mut prev_end = 0u32;
+            for (k, &(a, z)) in segs.iter().enumerate() {
+                let end = if k == last {
+                    z
+                } else {
+                    let w = leads.write_lead(s.id, z);
+                    z.saturating_add(w).min(segs[k + 1].0 - 1)
+                };
+                let start = if k == 0 {
+                    a
+                } else {
+                    let lead = leads.lead(s.id, a);
+                    a.saturating_sub(lead).max(prev_end + 1)
+                };
+                out.push((start, end));
+                prev_end = end;
+            }
+            out
         }
     }
 }
@@ -243,6 +288,7 @@ pub fn advise(table: &TensorTable, budget_bytes: usize) -> OffloadPlan {
                     evict_after: w[0].1,
                     prefetch_before: w[1].0,
                     lead: PREFETCH_LEAD,
+                    write_lead: WRITE_LEAD,
                 });
                 swap += 2 * s.dim.bytes(); // out + back in, per iteration
             }
@@ -281,6 +327,49 @@ mod tests {
         assert_eq!(segments(&[0, 1, 2, 7, 8]), vec![(0, 2), (7, 8)]);
         assert_eq!(segments(&[3]), vec![(3, 3)]);
         assert_eq!(segments(&[0, 9]), vec![(0, 0), (9, 9)]);
+    }
+
+    #[test]
+    fn live_intervals_widen_both_ends() {
+        let t = table_with(&[("a", 8, &[0, 1, 10, 11, 20], TensorRole::Activation)]);
+        let s = t.get(0);
+        // default leads: read 1, write 0 — the synchronous-era intervals
+        let plan = OffloadPlan {
+            entries: vec![
+                OffloadEntry {
+                    tensor: 0,
+                    name: "a".into(),
+                    bytes: 32,
+                    evict_after: 1,
+                    prefetch_before: 10,
+                    lead: 3,
+                    write_lead: 2,
+                },
+                OffloadEntry {
+                    tensor: 0,
+                    name: "a".into(),
+                    bytes: 32,
+                    evict_after: 11,
+                    prefetch_before: 20,
+                    lead: PREFETCH_LEAD,
+                    write_lead: WRITE_LEAD,
+                },
+            ],
+            ..Default::default()
+        };
+        let leads = plan.lead_map();
+        // first segment end-extended by write lead 2, second segment
+        // front-widened by read lead 3 and end-extended by the default
+        // write lead 0, last segment front-widened by the default read
+        // lead 1
+        assert_eq!(
+            live_intervals(s, Some(&leads)),
+            vec![(0, 3), (7, 11), (19, 20)]
+        );
+        // a write lead that would reach the next use is clipped below it
+        let mut wide = plan.clone();
+        wide.entries[0].write_lead = 100;
+        assert_eq!(live_intervals(s, Some(&wide.lead_map()))[0], (0, 9));
     }
 
     #[test]

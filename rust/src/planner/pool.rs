@@ -16,7 +16,20 @@ use crate::tensor::Region;
 /// Memory Planner guarantees (and `planner::validate` checks) that any two
 /// distinct live tensors occupy disjoint regions; tensors that *do* share a
 /// region (MV/RV/E merges) are only accessed through layers written for
-/// in-place semantics. The pool is single-threaded (`!Sync`).
+/// in-place semantics. The pool itself is `!Sync` and every view is
+/// created on the training thread.
+///
+/// One sanctioned cross-thread exception: the swap runtime's evict
+/// worker *reads* an evicted region's bytes through a raw span
+/// (`runtime/swap.rs::PoolSpan`) while training continues. The
+/// contract making that sound: (a) the training thread never writes
+/// that range until the ticket's completion is observed (reclaim
+/// barrier + reacquire overlap-wait), so the disjointness invariant
+/// extends across threads; (b) views here derive region pointers from
+/// the buffer's data pointer — the transient `&mut Vec` below asserts
+/// uniqueness over the Vec *header* only, never over the heap bytes a
+/// raw span is reading; and (c) `SwapExec` joins the worker before the
+/// pool can drop (`Executor` declares `swap` before `pool`).
 pub struct MemoryPool {
     buf: UnsafeCell<Vec<f32>>,
 }

@@ -18,23 +18,28 @@
 //!    "bytes touched at an EO" (known exactly from the planner table)
 //!    into estimated nanoseconds of compute ([`EoCostModel`]).
 //! 3. **Lead derivation** ([`derive_leads`]) — for each offload entry,
-//!    widen the lead until the estimated fetch time
+//!    widen the read lead until the estimated fetch time
 //!    (`latency + bytes / read bandwidth`) fits inside the compute time
 //!    of the EO window `[prefetch_before − lead, prefetch_before)`,
-//!    capped so the lead never swallows the idle gap. The widened leads
-//!    feed straight into the gap-aware planner's reservation model
-//!    (`OffloadPlan::lead_map`), so the pool layout and the runtime
-//!    barrier agree by construction.
+//!    capped so the lead never swallows the idle gap; then derive the
+//!    *write* lead the same way on the eviction side
+//!    ([`write_lead_for_ns`]: extend the region reservation past
+//!    `evict_after` until the estimated store write fits, capped so the
+//!    two extensions never meet). Both feed straight into the gap-aware
+//!    planner's reservation model (`OffloadPlan::lead_map`), so the
+//!    pool layout and the runtime barriers agree by construction.
 //! 4. **Depth derivation** ([`derive_depth`]) — total fetch time over
 //!    total compute time, clamped to `[2, entries]`: if the store needs
 //!    3× the compute time to move one iteration's traffic, three
 //!    fetches must overlap to hide it.
 //!
 //! The cost model is an *estimate* until training starts; the swap
-//! runtime re-times whole iterations during warmup and rescales the
-//! model (relative per-EO shape from analysis, absolute scale from
-//! measurement), then re-derives leads within each entry's safe bound.
-//! Depth keeps adapting from stall telemetry at epoch boundaries
+//! runtime re-times whole iterations (warmup rescale, then a running
+//! EWMA) and records per-entry *observed* fetch/evict wall times from
+//! the background workers, re-deriving leads within each entry's safe
+//! bound every iteration — the model keeps tracking the store as it
+//! behaves under real load, not just the compile-time probe. Depth
+//! also keeps adapting from stall telemetry at epoch boundaries
 //! (`SwapExec::adapt_depth`). Selected via `SwapTuning::Calibrated` on
 //! `DeviceProfile`/`CompileOpts`; `Fixed` preserves the PR-1 constants.
 
@@ -78,6 +83,13 @@ impl StoreCalibration {
         self.per_op_ns + bytes as f64 / self.read_bps.max(1.0) * 1e9
     }
 
+    /// Estimated time to evict `bytes` to the store, ns (the write-side
+    /// twin of [`StoreCalibration::fetch_ns`], feeding the write-lead
+    /// model).
+    pub fn evict_ns(&self, bytes: usize) -> f64 {
+        self.per_op_ns + bytes as f64 / self.write_bps.max(1.0) * 1e9
+    }
+
     /// A synthetic calibration for tests: `mbps` both ways, no latency.
     pub fn synthetic(mbps: f64) -> Self {
         StoreCalibration {
@@ -94,12 +106,12 @@ const PROBE_KEY_BULK: usize = usize::MAX;
 const PROBE_KEY_TINY: usize = usize::MAX - 1;
 const PROBE_REPS: u32 = 4;
 
-/// Micro-benchmark a store: one timed slot write (the write path only
-/// matters for eviction overlap, a ROADMAP follow-up), a few timed
-/// reads of a `probe_len`-f32 buffer for the fetch bandwidth the lead
-/// model runs on, and a tiny-buffer round trip for per-op latency.
-/// `probe_len` should be representative of the plan's entry sizes (the
-/// caller passes the largest entry, clamped to keep the probe cheap).
+/// Micro-benchmark a store: timed slot writes for the eviction-overlap
+/// (write-lead) model, a few timed reads of a `probe_len`-f32 buffer
+/// for the fetch bandwidth the read-lead model runs on, and a
+/// tiny-buffer round trip for per-op latency. `probe_len` should be
+/// representative of the plan's entry sizes (the caller passes the
+/// largest entry, clamped to keep the probe cheap).
 pub fn probe_store(
     store: &mut dyn SecondaryStore,
     probe_len: usize,
@@ -107,10 +119,14 @@ pub fn probe_store(
     let len = probe_len.clamp(1 << 10, 1 << 18);
     let buf = vec![1.0f32; len];
     let mut out = vec![0f32; len];
-    // the slot-allocating write doubles as the (single-shot) write probe
-    let t0 = Instant::now();
+    // allocate the slot first, then time steady-state overwrites — the
+    // write path the eviction pipeline runs every iteration
     store.put(PROBE_KEY_BULK, &buf)?;
-    let w_ns = (t0.elapsed().as_nanos() as f64).max(1.0);
+    let t0 = Instant::now();
+    for _ in 0..PROBE_REPS {
+        store.put(PROBE_KEY_BULK, &buf)?;
+    }
+    let w_ns = (t0.elapsed().as_nanos() as f64 / PROBE_REPS as f64).max(1.0);
     // warm one read, then time steady-state reps — reads are what the
     // prefetch lead model is calibrated against
     store.get(PROBE_KEY_BULK, &mut out)?;
@@ -177,6 +193,23 @@ pub fn probe_compute() -> ComputeCalibration {
 #[derive(Clone, Debug)]
 pub struct EoCostModel {
     cost_ns: Vec<f64>,
+    /// `prefix[i] = Σ cost_ns[..i]`, kept in sync with `cost_ns` so
+    /// window sums are O(1) — lead derivation sweeps a window per
+    /// candidate lead per entry, every iteration under observed
+    /// feedback, so per-EO summation would cost O(gap²) per entry on
+    /// the training thread.
+    prefix: Vec<f64>,
+}
+
+fn prefix_of(cost_ns: &[f64]) -> Vec<f64> {
+    let mut prefix = Vec::with_capacity(cost_ns.len() + 1);
+    let mut acc = 0.0;
+    prefix.push(0.0);
+    for &c in cost_ns {
+        acc += c;
+        prefix.push(acc);
+    }
+    prefix
 }
 
 impl EoCostModel {
@@ -203,31 +236,36 @@ impl EoCostModel {
         }
         let floor = 64.0; // bytes; keeps empty EOs from being "free"
         let scale = 1.0 / compute.bytes_per_ns.max(f64::MIN_POSITIVE);
-        EoCostModel {
-            cost_ns: bytes.iter().map(|b| b.max(floor) * scale).collect(),
-        }
+        let cost_ns: Vec<f64> = bytes.iter().map(|b| b.max(floor) * scale).collect();
+        let prefix = prefix_of(&cost_ns);
+        EoCostModel { cost_ns, prefix }
     }
 
     /// A uniform model for tests: `n_eos` EOs of `ns_per_eo` each.
     pub fn uniform(n_eos: usize, ns_per_eo: f64) -> Self {
-        EoCostModel { cost_ns: vec![ns_per_eo; n_eos] }
+        let cost_ns = vec![ns_per_eo; n_eos];
+        let prefix = prefix_of(&cost_ns);
+        EoCostModel { cost_ns, prefix }
     }
 
-    /// Σ estimated cost over EOs `[from, to]` inclusive. EOs beyond the
-    /// model (e.g. a deferred apply step) cost the model's mean.
+    /// Σ estimated cost over EOs `[from, to]` inclusive, in O(1). EOs
+    /// beyond the model (e.g. a deferred apply step) cost the model's
+    /// mean.
     pub fn window_ns(&self, from: u32, to: u32) -> f64 {
         if to < from || self.cost_ns.is_empty() {
             return 0.0;
         }
-        let mean = self.total_ns() / self.cost_ns.len() as f64;
-        (from..=to)
-            .map(|e| self.cost_ns.get(e as usize).copied().unwrap_or(mean))
-            .sum()
+        let n = self.cost_ns.len();
+        let lo = (from as usize).min(n);
+        let hi = (to as usize + 1).min(n);
+        let inside = self.prefix[hi] - self.prefix[lo];
+        let overhang = (to - from + 1) as usize - (hi - lo);
+        inside + self.total_ns() / n as f64 * overhang as f64
     }
 
     /// Whole-schedule estimated cost, ns.
     pub fn total_ns(&self) -> f64 {
-        self.cost_ns.iter().sum()
+        *self.prefix.last().unwrap_or(&0.0)
     }
 
     /// Replace the absolute scale with a measured per-iteration wall
@@ -240,6 +278,9 @@ impl EoCostModel {
         let k = measured_iter_ns / total;
         for c in &mut self.cost_ns {
             *c *= k;
+        }
+        for p in &mut self.prefix {
+            *p *= k;
         }
     }
 }
@@ -254,6 +295,29 @@ pub fn lead_cap(evict_after: u32, prefetch_before: u32) -> u32 {
         .max(1)
 }
 
+/// Derive one entry's lead from an estimated (or *observed*) fetch
+/// time: widen from 1 EO until the fetch fits in the compute window
+/// before the use EO, capped by the gap. The runtime's observed-fetch
+/// feedback calls this directly with per-entry EWMA wall times.
+pub fn lead_for_ns(
+    fetch_ns: f64,
+    evict_after: u32,
+    prefetch_before: u32,
+    cost: &EoCostModel,
+) -> u32 {
+    if prefetch_before == 0 {
+        return PREFETCH_LEAD; // degenerate entry; the runtime rejects it
+    }
+    let cap = lead_cap(evict_after, prefetch_before);
+    let mut lead = PREFETCH_LEAD;
+    while lead < cap
+        && cost.window_ns(prefetch_before.saturating_sub(lead), prefetch_before - 1) < fetch_ns
+    {
+        lead += 1;
+    }
+    lead
+}
+
 /// Derive one entry's lead: widen from 1 EO until the fetch fits in the
 /// compute window before the use EO, capped by the gap.
 pub fn lead_for(
@@ -263,22 +327,43 @@ pub fn lead_for(
     store: &StoreCalibration,
     cost: &EoCostModel,
 ) -> u32 {
-    if prefetch_before == 0 {
-        return PREFETCH_LEAD; // degenerate entry; the runtime rejects it
-    }
-    let fetch = store.fetch_ns(entry_bytes);
-    let cap = lead_cap(evict_after, prefetch_before);
-    let mut lead = PREFETCH_LEAD;
-    while lead < cap
-        && cost.window_ns(prefetch_before.saturating_sub(lead), prefetch_before - 1) < fetch
-    {
-        lead += 1;
-    }
-    lead
+    lead_for_ns(store.fetch_ns(entry_bytes), evict_after, prefetch_before, cost)
 }
 
-/// Write calibrated per-entry leads and the initial depth into the
-/// plan, then refresh its peak/fits for the widened residency.
+/// Widest admissible write lead for an entry: the write extension and
+/// the next segment's read widening must never meet inside the gap
+/// (`evict_after + write_lead < prefetch_before − read_lead`).
+pub fn write_lead_cap(evict_after: u32, prefetch_before: u32, read_lead: u32) -> u32 {
+    prefetch_before
+        .saturating_sub(evict_after)
+        .saturating_sub(read_lead)
+        .saturating_sub(1)
+}
+
+/// Derive one entry's write lead from an estimated (or observed) evict
+/// time: extend the reservation past the eviction until the copy fits
+/// in the covered compute window (`(evict_after, evict_after + w]`),
+/// within the gap budget left by the read lead. Zero only when the gap
+/// leaves no room at all (cap 0) — any in-flight write wants at least
+/// one EO of guaranteed cover before a tenant may reclaim the range.
+pub fn write_lead_for_ns(
+    evict_ns: f64,
+    evict_after: u32,
+    prefetch_before: u32,
+    read_lead: u32,
+    cost: &EoCostModel,
+) -> u32 {
+    let cap = write_lead_cap(evict_after, prefetch_before, read_lead);
+    let mut w = 0u32;
+    while w < cap && cost.window_ns(evict_after + 1, evict_after + w) < evict_ns {
+        w += 1;
+    }
+    w
+}
+
+/// Write calibrated per-entry read *and* write leads and the initial
+/// depth into the plan, then refresh its peak/fits for the widened
+/// residency (both ends of every gap).
 pub fn derive_leads(
     plan: &mut OffloadPlan,
     table: &TensorTable,
@@ -288,6 +373,13 @@ pub fn derive_leads(
 ) {
     for e in &mut plan.entries {
         e.lead = lead_for(e.bytes, e.evict_after, e.prefetch_before, store, cost);
+        e.write_lead = write_lead_for_ns(
+            store.evict_ns(e.bytes),
+            e.evict_after,
+            e.prefetch_before,
+            e.lead,
+            cost,
+        );
     }
     plan.prefetch_depth = derive_depth(plan, store, cost);
     plan.primary_peak_bytes = peak_of_plan(table, plan);
@@ -312,20 +404,27 @@ pub fn derive_depth(
 }
 
 /// Everything the swap runtime needs to keep calibrating after compile:
-/// the store speeds, the (rescalable) cost model, and how many warmup
-/// iterations to time before re-deriving leads.
+/// the store speeds, the (rescalable) cost model, how many warmup
+/// iterations to time before the first lead re-derivation, and the
+/// smoothing factor for the per-entry observed fetch/evict wall times
+/// the runtime records every iteration thereafter.
 #[derive(Clone, Debug)]
 pub struct SwapCalibration {
     pub store: StoreCalibration,
     pub cost: EoCostModel,
-    /// Iterations to time before rescaling the cost model and
-    /// re-deriving leads.
+    /// Iterations to time before the first cost-model rescale and lead
+    /// re-derivation; after warmup both keep updating every iteration
+    /// from observed-EWMA feedback.
     pub warmup_iters: u64,
+    /// EWMA smoothing factor for observed per-entry transfer times and
+    /// the per-iteration compute estimate, in `(0, 1]` (1 = use only
+    /// the latest sample).
+    pub ewma_alpha: f64,
 }
 
 impl SwapCalibration {
     pub fn new(store: StoreCalibration, cost: EoCostModel) -> Self {
-        SwapCalibration { store, cost, warmup_iters: 2 }
+        SwapCalibration { store, cost, warmup_iters: 2, ewma_alpha: 0.25 }
     }
 }
 
@@ -371,5 +470,20 @@ mod tests {
         assert_eq!(lead_for(1000, 0, 40, &fast, &cost), 1);
         // cap: the lead never swallows the gap
         assert_eq!(lead_for(1_000_000, 30, 40, &store, &cost), 9);
+    }
+
+    #[test]
+    fn write_lead_widens_until_evict_fits() {
+        let cost = EoCostModel::uniform(64, 100.0);
+        let store = StoreCalibration { write_bps: 1e9, read_bps: 1e9, per_op_ns: 0.0 };
+        // 1000-byte eviction at 1 byte/ns needs 1000 ns = 10 EOs of cover
+        assert_eq!(write_lead_for_ns(store.evict_ns(1000), 0, 40, 1, &cost), 10);
+        // a write covered by one EO of compute needs exactly that one
+        assert_eq!(write_lead_for_ns(store.evict_ns(50), 0, 40, 1, &cost), 1);
+        // cap: write extension + read widening never meet inside the gap
+        assert_eq!(write_lead_cap(30, 40, 3), 6);
+        assert_eq!(write_lead_for_ns(store.evict_ns(1 << 20), 30, 40, 3, &cost), 6);
+        // degenerate gap: no room at all
+        assert_eq!(write_lead_cap(0, 2, 1), 0);
     }
 }

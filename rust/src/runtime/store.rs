@@ -32,6 +32,12 @@ pub trait SecondaryStore: Send {
     /// session-long store never pins dead probe data). Freeing an
     /// absent key is a no-op.
     fn free(&mut self, _key: usize) {}
+    /// Number of live slots — the teardown audit metric: the swap
+    /// runtime frees every entry slot on drop, so a store must count 0
+    /// after its engine is gone (no leaked eviction data).
+    fn slot_count(&self) -> usize {
+        0
+    }
 }
 
 /// Which secondary store a memory-budgeted compile should use.
@@ -96,6 +102,10 @@ impl SecondaryStore for HostStore {
 
     fn free(&mut self, key: usize) {
         self.slots.remove(&key);
+    }
+
+    fn slot_count(&self) -> usize {
+        self.slots.len()
     }
 }
 
@@ -180,6 +190,10 @@ impl SecondaryStore for FileStore {
         }
     }
 
+    fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
     fn get(&mut self, key: usize, out: &mut [f32]) -> Result<()> {
         let &(offset, len) = self
             .slots
@@ -235,9 +249,13 @@ mod tests {
         assert!(store.get(0, &mut wrong).is_err());
         assert!(store.get(99, &mut out).is_err());
         // freed slots are gone; freeing an absent key is a no-op
+        assert_eq!(store.slot_count(), 2);
         store.free(1);
         store.free(1);
         assert!(store.get(1, &mut out_b).is_err());
+        assert_eq!(store.slot_count(), 1);
+        store.free(0);
+        assert_eq!(store.slot_count(), 0);
     }
 
     #[test]

@@ -3,41 +3,60 @@
 //! The paper's stated future work — "we can swap in and out proactively
 //! in background" — falls out of Algorithm 1's execution orders: every
 //! tensor access point is known before training starts, so eviction and
-//! prefetch are *scheduled*, not demand-paged. The protocol, per training
-//! step at execution order `e`:
+//! prefetch are *scheduled*, not demand-paged. The engine is
+//! **full-duplex**: a background fetch worker streams prefetches in
+//! while a background evict worker streams write tickets out, and the
+//! training thread only ever waits at a *barrier* — the point where the
+//! schedule actually needs a transfer to have finished. The protocol,
+//! per training step at execution order `e`:
 //!
-//! 1. **pre-step** — complete every prefetch whose barrier EO
-//!    (`prefetch_before − lead`, per entry) has arrived: copy the staged
-//!    bytes back into the tensor's pool region
+//! 1. **pre-step, write barriers** — every eviction whose region is
+//!    *reclaimed* at or before `e` (a gap tenant placed on an
+//!    overlapping address range makes its first CPU write, or an early
+//!    reacquire lands there) must have completed its store copy; if the
+//!    ticket is still in flight, block (counted as **write stall**). A
+//!    write whose gap is never reclaimed never blocks compute at all.
+//! 2. **pre-step, read barriers** — complete every prefetch whose
+//!    barrier EO (`prefetch_before − lead`, per entry) has arrived:
+//!    copy the staged bytes back into the tensor's pool region
 //!    ([`MemoryPool::reacquire`]). If the background fetch has not
-//!    finished, block (counted as swap stall); if it was never issued
-//!    (gap shorter than the issue horizon), fetch inline.
-//! 2. **residency guard** — no offloaded tensor may be `Evicted` or
+//!    finished, block (counted as **read stall**); if it was never
+//!    issued (gap shorter than the issue horizon), fetch inline.
+//! 3. **residency guard** — no offloaded tensor may be `Evicted` or
 //!    `Fetching` at one of its own use EOs. Any violation means the plan
 //!    and the runtime have drifted; the step fails loudly instead of
 //!    computing on poisoned data.
-//! 3. **execute the layer phase** (the executor's job).
-//! 4. **post-step** — evict every entry with `evict_after == e`: copy the
-//!    region to the [`SecondaryStore`], release it
-//!    ([`MemoryPool::release_gap`]), then top up the background prefetch
-//!    queue (deadline-ordered, up to the current depth in flight).
+//! 4. **execute the layer phase** (the executor's job).
+//! 5. **post-step** — every entry with `evict_after == e` becomes a
+//!    write ticket: the evict worker copies the region to the
+//!    [`SecondaryStore`] while training continues; the region is
+//!    released ([`MemoryPool::release_gap`]) when the completion is
+//!    observed. Then the background prefetch queue is topped up
+//!    (deadline-ordered, up to the current depth in flight).
 //!
-//! Leads and depth come from the offload plan: the PR-1 constants under
-//! `SwapTuning::Fixed` (1-EO lead, depth [`PREFETCH_DEPTH`]), or
-//! per-entry values derived from measured store bandwidth under
-//! `SwapTuning::Calibrated` (`runtime/calibrate.rs`). Calibrated runs
-//! keep refining at runtime: warmup iterations are timed to rescale the
-//! per-EO cost model (leads then re-derive within each entry's safe
-//! bound), and [`SwapExec::adapt_depth`] grows the in-flight window at
-//! epoch boundaries while stall telemetry is non-zero. None of this
+//! Leads come from the offload plan and are shared with the gap-aware
+//! planner/validator through `OffloadPlan::lead_map`, on **both** sides
+//! of each gap: the read lead front-widens the next segment's
+//! reservation, the write lead end-extends the previous segment's, so
+//! the pool layout and the runtime barriers cannot disagree. Under
+//! `SwapTuning::Calibrated` the runtime additionally records *observed*
+//! per-entry fetch/evict wall times (EWMA) every iteration and keeps
+//! re-deriving read leads and the in-flight depth within each entry's
+//! safe bound — not just during the warmup iterations. None of this
 //! affects results: tuning only moves *when* copies happen, and every
-//! copy stays on the training thread at a deterministic step boundary.
+//! pool copy stays on the training thread at a deterministic step
+//! boundary.
 //!
-//! The background thread only ever touches the store and its own staging
-//! buffers — never the pool — so the pool stays single-threaded; the main
-//! thread performs every region copy at a deterministic point in the step
-//! order, which is what keeps swapped and unswapped training bitwise
-//! identical (see `rust/tests/swap_equivalence.rs`).
+//! The fetch worker touches only the store and its own staging buffers.
+//! The evict worker additionally *reads* the evicted pool region
+//! through a raw span — safe because the training thread never writes
+//! that range before the ticket's completion is observed (the reclaim
+//! barrier), and [`SwapExec`]'s drop joins both workers before the pool
+//! can die (`Executor` declares its swap field before its pool). Every
+//! pool *write* still happens on the training thread at a deterministic
+//! point in the step order, which is what keeps swapped and unswapped
+//! training bitwise identical (see `rust/tests/swap_equivalence.rs` and
+//! `rust/tests/swap_stress.rs`).
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -50,10 +69,14 @@ use crate::planner::offload::{live_intervals, OffloadPlan};
 use crate::planner::pool::MemoryPool;
 use crate::tensor::{Region, Residency, TensorId, TensorTable};
 
-use super::calibrate::{lead_for, SwapCalibration};
+use super::calibrate::{lead_for_ns, SwapCalibration};
 use super::store::SecondaryStore;
 
 pub use crate::planner::offload::PREFETCH_DEPTH;
+
+/// EWMA factor for observed transfer/compute times under `Fixed` tuning
+/// (telemetry only; `Calibrated` carries its own in `SwapCalibration`).
+const DEFAULT_EWMA_ALPHA: f64 = 0.25;
 
 /// One scheduled gap of one tensor (a tensor with several idle gaps per
 /// iteration has one entry per gap).
@@ -72,6 +95,15 @@ struct SwapEntry {
     /// tensor placed on an overlapping address range — the bound for
     /// runtime re-derivation (plan leads are ≤ this by validation).
     max_lead: u32,
+    /// Plan-side write lead (EOs past `evict_after` the region stays
+    /// reserved for the in-flight eviction write).
+    write_lead: u32,
+    /// Write-completion barrier EO: the first EO at which another
+    /// placed tensor's reserved interval touches this entry's address
+    /// range after the eviction (`u32::MAX` when the gap is never
+    /// reclaimed — such a write never blocks compute). The plan's write
+    /// lead guarantees `reclaim_eo > evict_after + write_lead`.
+    reclaim_eo: u32,
 }
 
 /// Use points of an offloaded root tensor, for the residency guard.
@@ -80,9 +112,33 @@ struct RootInfo {
     eos: Vec<u32>,
 }
 
+/// Raw view of a pool region, shipped to the evict worker with a write
+/// ticket.
+///
+/// # Safety contract
+/// The training thread must not write the spanned range until the
+/// ticket's completion is observed (the reclaim barrier enforces this;
+/// the planner's write-lead reservation keeps tenants away), and the
+/// pool must outlive the worker ([`SwapExec`]'s drop joins the workers;
+/// `Executor` declares `swap` before `pool` so the join runs first).
+struct PoolSpan {
+    ptr: *const f32,
+    len: usize,
+}
+
+unsafe impl Send for PoolSpan {}
+
 enum Req {
     Fetch(usize),
+    Write(usize, PoolSpan),
     Stop,
+}
+
+enum Done {
+    /// `(entry, staged data, wall ns)` — from the fetch worker.
+    Fetch(usize, Result<Vec<f32>>, u64),
+    /// `(entry, store-put result, wall ns)` — from the evict worker.
+    Write(usize, Result<()>, u64),
 }
 
 /// Cumulative swap-runtime counters (whole run, not per iteration).
@@ -95,14 +151,36 @@ pub struct SwapStats {
     pub sync_fetches: u64,
     pub bytes_out: u64,
     pub bytes_in: u64,
-    /// Wall time the training thread spent waiting on swap-ins.
-    pub stall_ns: u64,
+    /// Wall time the training thread spent waiting on swap-ins (read
+    /// barriers and inline fetches).
+    pub read_stall_ns: u64,
+    /// Wall time the training thread spent waiting on eviction writes
+    /// (reclaim barriers; under synchronous evictions, the writes
+    /// themselves).
+    pub write_stall_ns: u64,
 }
 
 impl SwapStats {
-    pub fn stall_ms(&self) -> f64 {
-        self.stall_ns as f64 / 1e6
+    /// Total training-thread wait on swap traffic, ns.
+    pub fn stall_ns(&self) -> u64 {
+        self.read_stall_ns + self.write_stall_ns
     }
+
+    pub fn stall_ms(&self) -> f64 {
+        self.stall_ns() as f64 / 1e6
+    }
+
+    pub fn read_stall_ms(&self) -> f64 {
+        self.read_stall_ns as f64 / 1e6
+    }
+
+    pub fn write_stall_ms(&self) -> f64 {
+        self.write_stall_ns as f64 / 1e6
+    }
+}
+
+fn ewma_update(slot: &mut f64, sample: f64, alpha: f64) {
+    *slot = if *slot > 0.0 { *slot + alpha * (sample - *slot) } else { sample };
 }
 
 /// Executable swap schedule bound to one compiled model's pool layout.
@@ -114,38 +192,66 @@ pub struct SwapExec {
     /// Entry indices sorted by barrier EO (`due`) — both the completion
     /// barrier order and the background issue order.
     by_prefetch: Vec<usize>,
+    /// Entry indices sorted by write-completion barrier EO
+    /// (`reclaim_eo`).
+    by_reclaim: Vec<usize>,
+    /// Per entry, the other entries whose regions share addresses with
+    /// it. A reacquire writes the entry's range, and observed-feedback
+    /// lead widening can move it ahead of the other entry's reclaim
+    /// barrier EO — so the reacquire itself waits out their in-flight
+    /// eviction writes.
+    overlaps: Vec<Vec<usize>>,
     roots: HashMap<TensorId, RootInfo>,
     residency: HashMap<TensorId, Residency>,
     // per-iteration entry state
     evicted: Vec<bool>,
+    /// Eviction write landed in the store (ticket completed, or the
+    /// synchronous put returned).
+    evict_done: Vec<bool>,
     issued: Vec<bool>,
     restored: Vec<bool>,
     staged: HashMap<usize, Vec<f32>>,
     failed: HashMap<usize, Error>,
+    write_failed: HashMap<usize, Error>,
     next_due: usize,
+    next_reclaim: usize,
     issue_cursor: usize,
     outstanding: usize,
+    outstanding_writes: usize,
     store: Arc<Mutex<Box<dyn SecondaryStore>>>,
     store_kind: &'static str,
-    req_tx: Sender<Req>,
-    done_rx: Receiver<(usize, Result<Vec<f32>>)>,
-    /// Staging buffers handed back to the worker for reuse, keeping the
-    /// steady-state prefetch path allocation-free.
+    fetch_tx: Sender<Req>,
+    evict_tx: Sender<Req>,
+    done_rx: Receiver<Done>,
+    /// Staging buffers handed back to the fetch worker for reuse,
+    /// keeping the steady-state prefetch path allocation-free.
     recycle_tx: Sender<Vec<f32>>,
-    worker: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
     /// Current in-flight fetch budget (plan's initial depth; grows via
-    /// [`SwapExec::adapt_depth`] under calibrated tuning).
+    /// observed-feedback re-derivation and [`SwapExec::adapt_depth`]).
     depth: usize,
+    /// Run evictions synchronously on the training thread (the PR-1
+    /// behaviour) instead of as background write tickets. Bitwise
+    /// identical either way; exists so benches can measure what the
+    /// write pipeline takes off the critical path.
+    sync_evictions: bool,
     /// Calibration state for runtime refinement (None under Fixed).
     calibration: Option<SwapCalibration>,
-    /// Warmup timing: iterations measured so far, their total wall ns,
-    /// and the stall ns accrued *inside* them (untimed forward passes
-    /// also accrue stalls, which must not skew the compute estimate).
+    ewma_alpha: f64,
+    /// Observed per-entry fetch wall times, EWMA ns (0 = no sample).
+    fetch_observed_ns: Vec<f64>,
+    /// Observed per-entry evict wall times, EWMA ns (0 = no sample).
+    evict_observed_ns: Vec<f64>,
+    /// Observed compute time per full iteration (wall minus stalls),
+    /// EWMA ns.
+    compute_observed_ns: f64,
+    /// Warmup timing: iterations measured so far and their accumulated
+    /// compute ns (stalls excluded — untimed forward passes also accrue
+    /// stalls, which must not skew the compute estimate).
     warmup_done: u64,
-    warmup_ns: u64,
-    warmup_stall_ns: u64,
-    /// Wall-clock start and `stats.stall_ns` snapshot of a timed
-    /// (warmup) iteration.
+    warmup_compute_ns: u64,
+    /// Wall-clock start and total-stall snapshot of a timed (full
+    /// training) iteration.
     iter_start: Option<(Instant, u64)>,
     /// Stall counter snapshot at the last `adapt_depth` call.
     last_stall_ns: u64,
@@ -154,15 +260,20 @@ pub struct SwapExec {
 
 impl SwapExec {
     /// Build the schedule from a planned table (regions assigned by the
-    /// gap-aware planner) and spawn the background prefetcher.
+    /// gap-aware planner) and spawn the background fetch + evict
+    /// workers.
     ///
-    /// Every entry's lead must leave the completion barrier strictly
-    /// after the eviction (`prefetch_before > evict_after + lead`). A
-    /// lead that swallows the gap would fire the barrier before the gap
-    /// opens: the entry would be judged "still resident" while its fetch
-    /// was never issued, and from the *next* iteration on training would
-    /// silently read whatever the gap tenant left in the region — the
-    /// schedule-head edge this constructor now rejects loudly.
+    /// Every entry's leads must leave room inside the gap: the read
+    /// barrier strictly after the eviction
+    /// (`prefetch_before > evict_after + lead`) and the write extension
+    /// strictly before the read widening
+    /// (`prefetch_before > evict_after + lead + write_lead`). A lead
+    /// pair that swallows the gap would fire the prefetch barrier
+    /// before the gap opens: the entry would be judged "still resident"
+    /// while its fetch was never issued, and from the *next* iteration
+    /// on training would silently read whatever the gap tenant left in
+    /// the region — the schedule-head edge this constructor rejects
+    /// loudly.
     pub fn new(
         table: &TensorTable,
         plan: &OffloadPlan,
@@ -187,6 +298,16 @@ impl SwapExec {
                     s.name, e.lead, e.evict_after, e.prefetch_before
                 )));
             }
+            if e.prefetch_before
+                <= e.evict_after.saturating_add(e.lead).saturating_add(e.write_lead)
+            {
+                return Err(Error::planner(format!(
+                    "offload entry for `{}` has write lead {} (with read lead {}) \
+                     swallowing its gap ({}, {}): the write extension would meet the \
+                     prefetch reservation",
+                    s.name, e.write_lead, e.lead, e.evict_after, e.prefetch_before
+                )));
+            }
             let region = s.region.ok_or_else(|| {
                 Error::planner(format!("offloaded tensor `{}` has no region", s.name))
             })?;
@@ -199,22 +320,32 @@ impl SwapExec {
                 lead: e.lead,
                 due: e.prefetch_before.saturating_sub(e.lead),
                 max_lead: e.lead, // widened below from the placed table
+                write_lead: e.write_lead,
+                reclaim_eo: u32::MAX, // narrowed below from the placed table
             });
             roots
                 .entry(e.tensor)
                 .or_insert_with(|| RootInfo { name: s.name.clone(), eos: s.eos.clone() });
             residency.insert(e.tensor, Residency::Resident);
         }
-        // Per-entry safe widening bound: the earliest EO at which the
-        // entry's region is free of every *other* tensor placed on an
-        // overlapping address range (their reserved intervals under the
-        // plan's own leads). Runtime re-derivation may widen a lead up
-        // to this without colliding with a gap tenant.
+        // Per-entry bounds from the placed table. For every *other*
+        // tensor placed on an overlapping address range, its reserved
+        // intervals under the plan's own leads give:
+        // * `max_lead` — the earliest EO at which the entry's region is
+        //   free of everyone before its next use; runtime re-derivation
+        //   may widen a read lead up to this without colliding with a
+        //   gap tenant.
+        // * `reclaim_eo` — the first EO at which anyone touches the
+        //   range after the eviction: the write ticket's completion
+        //   barrier. (A tenant's plan-widened interval start is its
+        //   first CPU write — an early reacquire copies into the range
+        //   at exactly that EO.)
         let leads = plan.lead_map();
         let offloaded: std::collections::HashSet<TensorId> =
             plan.entries.iter().map(|e| e.tensor).collect();
         for entry in &mut entries {
             let mut earliest = entry.evict_after + 1;
+            let mut reclaim = u32::MAX;
             for s in table.iter() {
                 if s.merged_into.is_some() || s.eos.is_empty() || s.id == entry.tensor {
                     continue;
@@ -224,33 +355,53 @@ impl SwapExec {
                 if !overlap {
                     continue;
                 }
-                for (_, z) in live_intervals(s, offloaded.contains(&s.id).then_some(&leads)) {
+                for (a, z) in live_intervals(s, offloaded.contains(&s.id).then_some(&leads)) {
                     if z < entry.prefetch_before {
                         earliest = earliest.max(z + 1);
+                    }
+                    if a > entry.evict_after {
+                        reclaim = reclaim.min(a);
                     }
                 }
             }
             entry.max_lead = (entry.prefetch_before - earliest).max(entry.lead);
+            entry.reclaim_eo = reclaim;
         }
         let n = entries.len();
+        let mut overlaps: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for i in 0..n {
+            for j in 0..n {
+                if i != j
+                    && entries[i].region.offset < entries[j].region.end()
+                    && entries[j].region.offset < entries[i].region.end()
+                {
+                    overlaps[i].push(j);
+                }
+            }
+        }
         let mut evict_at: HashMap<u32, Vec<usize>> = HashMap::new();
         for (i, e) in entries.iter().enumerate() {
             evict_at.entry(e.evict_after).or_default().push(i);
         }
         let mut by_prefetch: Vec<usize> = (0..n).collect();
         by_prefetch.sort_by_key(|&i| (entries[i].due, entries[i].prefetch_before, i));
+        let mut by_reclaim: Vec<usize> = (0..n).collect();
+        by_reclaim.sort_by_key(|&i| (entries[i].reclaim_eo, i));
 
         let store_kind = store.kind();
         let store = Arc::new(Mutex::new(store));
-        let (req_tx, req_rx) = channel::<Req>();
-        let (done_tx, done_rx) = channel::<(usize, Result<Vec<f32>>)>();
+        let (fetch_tx, fetch_rx) = channel::<Req>();
+        let (evict_tx, evict_rx) = channel::<Req>();
+        let (done_tx, done_rx) = channel::<Done>();
         let (recycle_tx, recycle_rx) = channel::<Vec<f32>>();
         let lens: Vec<usize> = entries.iter().map(|e| e.region.len).collect();
-        let wstore = Arc::clone(&store);
-        let worker = std::thread::Builder::new()
+
+        let fstore = Arc::clone(&store);
+        let fetch_done = done_tx.clone();
+        let fetch_worker = std::thread::Builder::new()
             .name("nntrainer-prefetch".into())
             .spawn(move || {
-                while let Ok(req) = req_rx.recv() {
+                while let Ok(req) = fetch_rx.recv() {
                     match req {
                         Req::Fetch(i) => {
                             // reuse a returned staging buffer when one is
@@ -259,43 +410,86 @@ impl SwapExec {
                             if buf.len() != lens[i] {
                                 buf.resize(lens[i], 0.0);
                             }
-                            let res = wstore.lock().unwrap().get(i, &mut buf).map(|()| buf);
-                            if done_tx.send((i, res)).is_err() {
+                            let t0 = Instant::now();
+                            let res = fstore.lock().unwrap().get(i, &mut buf).map(|()| buf);
+                            let ns = t0.elapsed().as_nanos() as u64;
+                            if fetch_done.send(Done::Fetch(i, res, ns)).is_err() {
                                 break;
                             }
                         }
-                        Req::Stop => break,
+                        _ => break,
                     }
                 }
             })
             .map_err(|e| Error::Runtime(format!("spawn prefetch thread: {e}")))?;
 
+        let wstore = Arc::clone(&store);
+        let evict_worker = std::thread::Builder::new()
+            .name("nntrainer-evict".into())
+            .spawn(move || {
+                while let Ok(req) = evict_rx.recv() {
+                    match req {
+                        Req::Write(i, span) => {
+                            // Safety: see `PoolSpan` — the range stays
+                            // immutable until this ticket's completion
+                            // is observed, and the pool outlives the
+                            // join in SwapExec::drop.
+                            let data =
+                                unsafe { std::slice::from_raw_parts(span.ptr, span.len) };
+                            let t0 = Instant::now();
+                            let res = wstore.lock().unwrap().put(i, data);
+                            let ns = t0.elapsed().as_nanos() as u64;
+                            if done_tx.send(Done::Write(i, res, ns)).is_err() {
+                                break;
+                            }
+                        }
+                        _ => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn evict thread: {e}")))?;
+
+        let ewma_alpha = calibration
+            .as_ref()
+            .map(|c| c.ewma_alpha)
+            .unwrap_or(DEFAULT_EWMA_ALPHA);
         Ok(SwapExec {
             entries,
             plan: plan.clone(),
             evict_at,
             by_prefetch,
+            by_reclaim,
+            overlaps,
             roots,
             residency,
             evicted: vec![false; n],
+            evict_done: vec![false; n],
             issued: vec![false; n],
             restored: vec![false; n],
             staged: HashMap::new(),
             failed: HashMap::new(),
+            write_failed: HashMap::new(),
             next_due: 0,
+            next_reclaim: 0,
             issue_cursor: 0,
             outstanding: 0,
+            outstanding_writes: 0,
             store,
             store_kind,
-            req_tx,
+            fetch_tx,
+            evict_tx,
             done_rx,
             recycle_tx,
-            worker: Some(worker),
+            workers: vec![fetch_worker, evict_worker],
             depth: plan.prefetch_depth.max(PREFETCH_DEPTH),
+            sync_evictions: false,
             calibration,
+            ewma_alpha,
+            fetch_observed_ns: vec![0.0; n],
+            evict_observed_ns: vec![0.0; n],
+            compute_observed_ns: 0.0,
             warmup_done: 0,
-            warmup_ns: 0,
-            warmup_stall_ns: 0,
+            warmup_compute_ns: 0,
             iter_start: None,
             last_stall_ns: 0,
             stats: SwapStats::default(),
@@ -310,6 +504,13 @@ impl SwapExec {
         self.store_kind
     }
 
+    /// Shared handle to the secondary store (teardown slot audits,
+    /// tests). Lock only between iterations — the workers take the same
+    /// lock on every transfer.
+    pub fn store_handle(&self) -> Arc<Mutex<Box<dyn SecondaryStore>>> {
+        Arc::clone(&self.store)
+    }
+
     pub fn n_entries(&self) -> usize {
         self.entries.len()
     }
@@ -318,36 +519,64 @@ impl SwapExec {
         self.residency.get(&root).copied()
     }
 
+    /// Run evictions synchronously on the training thread (the PR-1
+    /// behaviour) instead of as background write tickets. Flip only
+    /// between iterations. Results are bitwise identical either way —
+    /// the switch exists so benches can show what the write pipeline
+    /// takes off the critical path (write stall accrues for the full
+    /// store put under `true`).
+    pub fn set_sync_evictions(&mut self, on: bool) {
+        self.sync_evictions = on;
+    }
+
     /// Reset per-iteration state. Every entry must have been restored by
     /// the previous iteration's `end_iteration`. `full_schedule` is true
-    /// for training iterations (every EO runs): only those are timed as
-    /// calibration warmup — a forward-only pass covers a fraction of the
-    /// schedule and would rescale the cost model to nonsense.
+    /// for training iterations (every EO runs): only those are timed for
+    /// the observed-feedback loop — a forward-only pass covers a
+    /// fraction of the schedule and would skew the compute estimate.
     pub fn begin_iteration(&mut self, full_schedule: bool) -> Result<()> {
-        if self.outstanding != 0 || !self.staged.is_empty() {
+        if self.outstanding != 0 || self.outstanding_writes != 0 || !self.staged.is_empty() {
             return Err(Error::Runtime(
-                "swap runtime: stale prefetches at iteration start".into(),
+                "swap runtime: stale transfers at iteration start".into(),
             ));
         }
         self.evicted.iter_mut().for_each(|v| *v = false);
+        self.evict_done.iter_mut().for_each(|v| *v = false);
         self.issued.iter_mut().for_each(|v| *v = false);
         self.restored.iter_mut().for_each(|v| *v = false);
         self.residency.values_mut().for_each(|r| *r = Residency::Resident);
         self.failed.clear();
+        self.write_failed.clear();
         self.next_due = 0;
+        self.next_reclaim = 0;
         self.issue_cursor = 0;
-        // warmup iterations are timed to rescale the calibrated cost model
+        // full iterations are timed so the calibrated cost model keeps
+        // tracking reality (warmup rescale, then per-iteration EWMA)
         self.iter_start = match &self.calibration {
-            Some(cal) if full_schedule && self.warmup_done < cal.warmup_iters => {
-                Some((Instant::now(), self.stats.stall_ns))
-            }
+            Some(_) if full_schedule => Some((Instant::now(), self.stats.stall_ns())),
             _ => None,
         };
         Ok(())
     }
 
-    /// Complete every prefetch whose barrier EO is at or before `eo`.
+    /// Run the write barriers, then complete every prefetch whose
+    /// barrier EO is at or before `eo`. Write barriers go first: a
+    /// tenant's early reacquire at this EO is itself a CPU write into a
+    /// possibly still-draining range.
     pub fn pre_step(&mut self, eo: u32, pool: &MemoryPool) -> Result<()> {
+        while self.next_reclaim < self.by_reclaim.len() {
+            let idx = self.by_reclaim[self.next_reclaim];
+            if self.entries[idx].reclaim_eo > eo {
+                break;
+            }
+            if self.evicted[idx] && !self.evict_done[idx] {
+                self.wait_write(idx, pool)?;
+            }
+            if let Some(err) = self.write_failed.remove(&idx) {
+                return Err(err);
+            }
+            self.next_reclaim += 1;
+        }
         while self.next_due < self.by_prefetch.len() {
             let idx = self.by_prefetch[self.next_due];
             if self.entries[idx].due > eo {
@@ -376,28 +605,45 @@ impl SwapExec {
         Ok(())
     }
 
-    /// Evict entries whose gap starts after the step at `eo`, then top up
-    /// the background prefetch queue.
+    /// Evict entries whose gap starts after the step at `eo` (as
+    /// background write tickets, unless synchronous evictions are on),
+    /// then top up the background prefetch queue.
     pub fn post_step(&mut self, eo: u32, pool: &MemoryPool) -> Result<()> {
+        let alpha = self.ewma_alpha;
+        let sync = self.sync_evictions;
         if let Some(idxs) = self.evict_at.get(&eo) {
             for &idx in idxs {
                 let e = &self.entries[idx];
-                self.store.lock().unwrap().put(idx, pool.view(e.region))?;
-                pool.release_gap(e.region);
+                if sync {
+                    let t0 = Instant::now();
+                    self.store.lock().unwrap().put(idx, pool.view(e.region))?;
+                    let ns = t0.elapsed().as_nanos() as u64;
+                    self.stats.write_stall_ns += ns;
+                    ewma_update(&mut self.evict_observed_ns[idx], ns as f64, alpha);
+                    pool.release_gap(e.region);
+                    self.evict_done[idx] = true;
+                } else {
+                    let span = PoolSpan { ptr: pool.view(e.region).as_ptr(), len: e.region.len };
+                    if self.evict_tx.send(Req::Write(idx, span)).is_err() {
+                        return Err(Error::Runtime("swap evict thread died".into()));
+                    }
+                    self.outstanding_writes += 1;
+                }
                 self.evicted[idx] = true;
                 self.residency.insert(e.tensor, Residency::Evicted);
                 self.stats.evictions += 1;
                 self.stats.bytes_out += (e.region.len * 4) as u64;
             }
         }
-        self.drain_completions();
+        self.drain_completions(pool);
         self.pump_issues();
         Ok(())
     }
 
     /// Restore everything still out (e.g. a final gap whose prefetch EO
-    /// has no step in this schedule) so weights/outputs can be read and
-    /// the next iteration starts clean.
+    /// has no step in this schedule), then drain every in-flight
+    /// transfer so weights/outputs can be read and the next iteration
+    /// starts clean.
     pub fn end_iteration(&mut self, pool: &MemoryPool) -> Result<()> {
         for k in 0..self.by_prefetch.len() {
             let idx = self.by_prefetch[k];
@@ -406,56 +652,93 @@ impl SwapExec {
             }
         }
         self.next_due = self.by_prefetch.len();
-        while self.outstanding > 0 {
+        self.next_reclaim = self.by_reclaim.len();
+        while self.outstanding > 0 || self.outstanding_writes > 0 {
             match self.done_rx.recv() {
-                Ok((i, res)) => {
-                    self.outstanding -= 1;
-                    if let Ok(data) = res {
-                        self.staged.insert(i, data);
-                    }
-                }
-                Err(_) => return Err(Error::Runtime("swap prefetch thread died".into())),
+                Ok(done) => self.apply_done(done, pool),
+                Err(_) => return Err(Error::Runtime("swap worker thread died".into())),
             }
         }
         self.staged.clear();
+        if let Some(&idx) = self.write_failed.keys().next() {
+            return Err(self.write_failed.remove(&idx).unwrap());
+        }
         if let Some((t0, stall0)) = self.iter_start.take() {
-            self.warmup_ns += t0.elapsed().as_nanos() as u64;
-            self.warmup_stall_ns += self.stats.stall_ns - stall0;
-            self.warmup_done += 1;
-            if self
-                .calibration
-                .as_ref()
-                .is_some_and(|c| self.warmup_done >= c.warmup_iters)
-            {
-                self.recalibrate_leads();
+            let iter_ns = t0.elapsed().as_nanos() as u64;
+            let stall_in_iter = self.stats.stall_ns() - stall0;
+            let compute_ns = iter_ns.saturating_sub(stall_in_iter);
+            let (warmup_iters, alpha) = match &self.calibration {
+                Some(c) => (c.warmup_iters, c.ewma_alpha),
+                None => return Ok(()),
+            };
+            if self.warmup_done < warmup_iters {
+                // warmup: average, then anchor the EWMA on the mean
+                self.warmup_compute_ns += compute_ns;
+                self.warmup_done += 1;
+                if self.warmup_done >= warmup_iters {
+                    self.compute_observed_ns =
+                        self.warmup_compute_ns as f64 / self.warmup_done.max(1) as f64;
+                    self.recalibrate();
+                }
+            } else {
+                ewma_update(&mut self.compute_observed_ns, compute_ns as f64, alpha);
+                self.recalibrate();
             }
         }
         Ok(())
     }
 
-    /// Warmup refinement (Calibrated): rescale the per-EO cost model so
-    /// the estimated schedule cost matches the measured iteration wall
-    /// time (minus counted stalls), then re-derive every entry's lead
-    /// within its safe bound and re-sort the barrier order. Runs between
-    /// iterations, when no per-iteration state is live.
-    fn recalibrate_leads(&mut self) {
+    /// Observed-feedback refinement (Calibrated), run after every full
+    /// iteration past warmup: rescale the per-EO cost model to the
+    /// observed compute time (relative shape from analysis, absolute
+    /// scale from measurement), re-derive every entry's read lead from
+    /// its *observed* fetch EWMA (falling back to the compile-time
+    /// probe until a sample exists) within its safe bound, re-sort the
+    /// barrier order when anything moved, and grow the in-flight depth
+    /// to the observed traffic-over-compute ratio — eviction traffic
+    /// included: both workers serialize on the store, so write time the
+    /// evict EWMAs measure delays fetches just like fetch time does.
+    /// (Write *leads* stay compile-time: the write barrier is
+    /// event-driven off the placed layout, so re-deriving them at
+    /// runtime would change nothing.) Runs between iterations, when no
+    /// per-iteration state is live.
+    fn recalibrate(&mut self) {
         let Some(cal) = self.calibration.as_mut() else { return };
-        let compute_ns = self.warmup_ns.saturating_sub(self.warmup_stall_ns) as f64
-            / self.warmup_done.max(1) as f64;
-        cal.cost.rescale_to_iteration_ns(compute_ns);
-        for e in &mut self.entries {
-            let derived = lead_for(
-                e.region.len * 4,
-                e.evict_after,
-                e.prefetch_before,
-                &cal.store,
-                &cal.cost,
-            );
-            e.lead = derived.clamp(1, e.max_lead);
-            e.due = e.prefetch_before.saturating_sub(e.lead);
+        if self.compute_observed_ns > 0.0 {
+            cal.cost.rescale_to_iteration_ns(self.compute_observed_ns);
         }
-        self.by_prefetch
-            .sort_by_key(|&i| (self.entries[i].due, self.entries[i].prefetch_before, i));
+        let mut transfer_total = 0.0f64;
+        let mut changed = false;
+        for (k, e) in self.entries.iter_mut().enumerate() {
+            let est = if self.fetch_observed_ns[k] > 0.0 {
+                self.fetch_observed_ns[k]
+            } else {
+                cal.store.fetch_ns(e.region.len * 4)
+            };
+            transfer_total += est;
+            transfer_total += if self.evict_observed_ns[k] > 0.0 {
+                self.evict_observed_ns[k]
+            } else {
+                cal.store.evict_ns(e.region.len * 4)
+            };
+            let derived = lead_for_ns(est, e.evict_after, e.prefetch_before, &cal.cost);
+            let derived = derived.clamp(1, e.max_lead);
+            if derived != e.lead {
+                e.lead = derived;
+                e.due = e.prefetch_before.saturating_sub(e.lead);
+                changed = true;
+            }
+        }
+        if changed {
+            self.by_prefetch
+                .sort_by_key(|&i| (self.entries[i].due, self.entries[i].prefetch_before, i));
+        }
+        // depth: observed transfer traffic over observed compute, grown
+        // only (adapt_depth owns the stall-reactive boosts; shrinking
+        // mid-epoch would fight it)
+        let derived = (transfer_total / cal.cost.total_ns().max(1.0)).ceil() as usize;
+        let derived = derived.clamp(PREFETCH_DEPTH, self.entries.len().max(PREFETCH_DEPTH));
+        self.depth = self.depth.max(derived);
     }
 
     /// Epoch-boundary depth adaptation (Calibrated): while stall time
@@ -465,10 +748,10 @@ impl SwapExec {
         if self.calibration.is_none() {
             return;
         }
-        if self.stats.stall_ns > self.last_stall_ns {
+        if self.stats.stall_ns() > self.last_stall_ns {
             self.depth = (self.depth * 2).min(self.entries.len().max(PREFETCH_DEPTH));
         }
-        self.last_stall_ns = self.stats.stall_ns;
+        self.last_stall_ns = self.stats.stall_ns();
     }
 
     /// Current in-flight fetch budget.
@@ -481,10 +764,78 @@ impl SwapExec {
         self.entries[entry].lead
     }
 
+    /// An entry's plan write lead (diagnostics, tests).
+    pub fn write_lead_of(&self, entry: usize) -> u32 {
+        self.entries[entry].write_lead
+    }
+
+    /// An entry's write-completion barrier EO — `u32::MAX` when its gap
+    /// is never reclaimed (diagnostics, tests).
+    pub fn reclaim_eo_of(&self, entry: usize) -> u32 {
+        self.entries[entry].reclaim_eo
+    }
+
+    /// An entry's observed fetch EWMA, ns (0 until a background fetch
+    /// completed; diagnostics, tests).
+    pub fn observed_fetch_ns(&self, entry: usize) -> f64 {
+        self.fetch_observed_ns[entry]
+    }
+
+    /// An entry's observed evict EWMA, ns (0 until a write ticket
+    /// completed; feeds the depth derivation — diagnostics, tests).
+    pub fn observed_evict_ns(&self, entry: usize) -> f64 {
+        self.evict_observed_ns[entry]
+    }
+
     /// Widest lead currently in effect (post-recalibration — the number
     /// the runtime is actually using, unlike `OffloadPlan::max_lead`).
     pub fn max_lead(&self) -> u32 {
         self.entries.iter().map(|e| e.lead).max().unwrap_or(0)
+    }
+
+    /// Apply one worker completion to the engine state. Write
+    /// completions release the region (NaN-poisoned in debug) — the
+    /// reclaim barrier guarantees no tenant has touched it yet.
+    fn apply_done(&mut self, done: Done, pool: &MemoryPool) {
+        match done {
+            Done::Fetch(i, res, ns) => {
+                self.outstanding -= 1;
+                ewma_update(&mut self.fetch_observed_ns[i], ns as f64, self.ewma_alpha);
+                match res {
+                    Ok(data) => {
+                        self.staged.insert(i, data);
+                    }
+                    Err(err) => {
+                        self.failed.insert(i, err);
+                    }
+                }
+            }
+            Done::Write(i, res, ns) => {
+                self.outstanding_writes -= 1;
+                ewma_update(&mut self.evict_observed_ns[i], ns as f64, self.ewma_alpha);
+                self.evict_done[i] = true;
+                match res {
+                    Ok(()) => pool.release_gap(self.entries[i].region),
+                    Err(err) => {
+                        self.write_failed.insert(i, err);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Block until entry `idx`'s write ticket completes (the write
+    /// stall).
+    fn wait_write(&mut self, idx: usize, pool: &MemoryPool) -> Result<()> {
+        let t0 = Instant::now();
+        while !self.evict_done[idx] {
+            match self.done_rx.recv() {
+                Ok(done) => self.apply_done(done, pool),
+                Err(_) => return Err(Error::Runtime("swap evict thread died".into())),
+            }
+        }
+        self.stats.write_stall_ns += t0.elapsed().as_nanos() as u64;
+        Ok(())
     }
 
     fn finish_prefetch(&mut self, idx: usize, pool: &MemoryPool, at_eo: Option<u32>) -> Result<()> {
@@ -515,53 +866,64 @@ impl SwapExec {
             self.restored[idx] = true;
             return Ok(());
         }
+        if let Some(err) = self.write_failed.remove(&idx) {
+            return Err(err);
+        }
         if let Some(err) = self.failed.remove(&idx) {
             return Err(err);
+        }
+        // The reacquire below writes this entry's address range: any
+        // in-flight eviction of an overlapping entry must land first.
+        // (The plan-level barriers already order this, but runtime lead
+        // widening — or the end-of-iteration sweep — can move a
+        // reacquire ahead of the other entry's reclaim EO.)
+        for k in 0..self.overlaps[idx].len() {
+            let j = self.overlaps[idx][k];
+            if self.evicted[j] && !self.evict_done[j] {
+                self.wait_write(j, pool)?;
+            }
         }
         if let Some(data) = self.staged.remove(&idx) {
             pool.reacquire(self.entries[idx].region, &data);
             let _ = self.recycle_tx.send(data);
         } else if self.issued[idx] {
-            // in flight — wait for the worker (this is the swap stall)
+            // in flight — wait for the fetch worker (the read stall)
             let t0 = Instant::now();
             loop {
+                if let Some(err) = self.failed.remove(&idx) {
+                    return Err(err);
+                }
+                if let Some(data) = self.staged.remove(&idx) {
+                    pool.reacquire(self.entries[idx].region, &data);
+                    let _ = self.recycle_tx.send(data);
+                    self.stats.read_stall_ns += t0.elapsed().as_nanos() as u64;
+                    break;
+                }
                 match self.done_rx.recv() {
-                    Ok((i, res)) => {
-                        self.outstanding -= 1;
-                        match res {
-                            Ok(data) => {
-                                if i == idx {
-                                    pool.reacquire(self.entries[idx].region, &data);
-                                    let _ = self.recycle_tx.send(data);
-                                    self.stats.stall_ns += t0.elapsed().as_nanos() as u64;
-                                    break;
-                                }
-                                self.staged.insert(i, data);
-                            }
-                            Err(err) => {
-                                if i == idx {
-                                    return Err(err);
-                                }
-                                // unrelated entry failed: record it there,
-                                // keep waiting for ours
-                                self.failed.insert(i, err);
-                            }
-                        }
-                    }
+                    Ok(done) => self.apply_done(done, pool),
                     Err(_) => {
                         return Err(Error::Runtime("swap prefetch thread died".into()))
                     }
                 }
             }
         } else {
-            // never issued (gap shorter than the issue horizon): inline
+            // never issued (gap shorter than the issue horizon): inline.
+            // The eviction write must have landed first — full-duplex
+            // fetches no longer queue behind writes, so the slot may not
+            // exist yet.
+            if !self.evict_done[idx] {
+                self.wait_write(idx, pool)?;
+                if let Some(err) = self.write_failed.remove(&idx) {
+                    return Err(err);
+                }
+            }
             let t0 = Instant::now();
             let region = self.entries[idx].region;
             let mut buf = vec![0f32; region.len];
             self.store.lock().unwrap().get(idx, &mut buf)?;
             pool.reacquire(region, &buf);
             self.stats.sync_fetches += 1;
-            self.stats.stall_ns += t0.elapsed().as_nanos() as u64;
+            self.stats.read_stall_ns += t0.elapsed().as_nanos() as u64;
         }
         self.restored[idx] = true;
         self.residency.insert(self.entries[idx].tensor, Residency::Resident);
@@ -571,24 +933,17 @@ impl SwapExec {
         Ok(())
     }
 
-    fn drain_completions(&mut self) {
-        while let Ok((i, res)) = self.done_rx.try_recv() {
-            self.outstanding -= 1;
-            match res {
-                Ok(data) => {
-                    self.staged.insert(i, data);
-                }
-                Err(err) => {
-                    self.failed.insert(i, err);
-                }
-            }
+    fn drain_completions(&mut self, pool: &MemoryPool) {
+        while let Ok(done) = self.done_rx.try_recv() {
+            self.apply_done(done, pool);
         }
     }
 
     /// Issue background fetches in barrier-deadline (`due`) order, up to
-    /// the current depth in flight. An entry not yet evicted blocks the
-    /// queue — issuing later-deadline entries first would let a slow
-    /// fetch starve an earlier barrier.
+    /// the current depth in flight. An entry whose eviction write has
+    /// not landed blocks the queue — its store slot may not exist yet,
+    /// and issuing later-deadline entries first would let a slow fetch
+    /// starve an earlier barrier.
     fn pump_issues(&mut self) {
         while self.outstanding < self.depth && self.issue_cursor < self.by_prefetch.len() {
             let idx = self.by_prefetch[self.issue_cursor];
@@ -596,10 +951,10 @@ impl SwapExec {
                 self.issue_cursor += 1;
                 continue;
             }
-            if !self.evicted[idx] {
+            if !self.evict_done[idx] || self.write_failed.contains_key(&idx) {
                 break;
             }
-            if self.req_tx.send(Req::Fetch(idx)).is_err() {
+            if self.fetch_tx.send(Req::Fetch(idx)).is_err() {
                 break; // worker gone; the sync fallback will surface it
             }
             self.issued[idx] = true;
@@ -635,9 +990,24 @@ impl SwapExec {
 
 impl Drop for SwapExec {
     fn drop(&mut self) {
-        let _ = self.req_tx.send(Req::Stop);
-        if let Some(h) = self.worker.take() {
+        // Stop lands behind any queued tickets (the channels are FIFO),
+        // so both workers drain their pending transfers — which may
+        // still read the pool — before exiting; the joins below are the
+        // teardown write barrier. `Executor` declares `swap` before
+        // `pool` and standalone users drop the engine before its pool,
+        // so the spans stay valid until here.
+        let _ = self.fetch_tx.send(Req::Stop);
+        let _ = self.evict_tx.send(Req::Stop);
+        for h in self.workers.drain(..) {
             let _ = h.join();
+        }
+        // Slot audit invariant: teardown leaves the store empty (the
+        // calibration probes already freed theirs). Newest-first so the
+        // FileStore rolls its end offset back.
+        if let Ok(mut store) = self.store.lock() {
+            for i in (0..self.entries.len()).rev() {
+                store.free(i);
+            }
         }
     }
 }
@@ -645,7 +1015,7 @@ impl Drop for SwapExec {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::planner::offload::{OffloadEntry, PREFETCH_LEAD};
+    use crate::planner::offload::{OffloadEntry, PREFETCH_LEAD, WRITE_LEAD};
     use crate::runtime::store::HostStore;
     use crate::tensor::{CreateMode, Initializer, Lifespan, TensorDim, TensorRole, TensorTable};
 
@@ -671,6 +1041,7 @@ mod tests {
                 evict_after,
                 prefetch_before,
                 lead,
+                write_lead: WRITE_LEAD,
             }],
             primary_peak_bytes: bytes,
             swap_bytes_per_iter: 2 * bytes,
@@ -705,6 +1076,26 @@ mod tests {
         assert!(SwapExec::new(&t, &plan_one(0, 10, 9, 64), Box::new(HostStore::new()), None).is_ok());
     }
 
+    /// The write-side twin: a write lead whose extension meets the read
+    /// reservation inside the gap must be rejected, and the widest
+    /// admissible pair must still build.
+    #[test]
+    fn write_lead_swallowing_gap_is_rejected() {
+        let t = table_one(&[0, 10], 16);
+        let mut plan = plan_one(0, 10, 4, 64);
+        plan.entries[0].write_lead = 6; // 0 + 4 + 6 >= 10
+        let err = SwapExec::new(&t, &plan, Box::new(HostStore::new()), None)
+            .err()
+            .expect("write lead swallowing the gap must be rejected");
+        assert!(err.to_string().contains("write lead"), "{err}");
+
+        plan.entries[0].write_lead = 5; // 0 + 4 + 5 < 10
+        let sw = SwapExec::new(&t, &plan, Box::new(HostStore::new()), None).unwrap();
+        assert_eq!(sw.write_lead_of(0), 5);
+        // a lone tensor's gap is never reclaimed
+        assert_eq!(sw.reclaim_eo_of(0), u32::MAX);
+    }
+
     /// The barrier order follows per-entry due EOs, not raw
     /// `prefetch_before`: a big entry with a wide lead must complete
     /// before a small entry whose deadline is nominally earlier.
@@ -730,9 +1121,37 @@ mod tests {
             evict_after: 1,
             prefetch_before: 12, // due at EO 11 — later than a's despite earlier deadline
             lead: 1,
+            write_lead: WRITE_LEAD,
         });
         let sw = SwapExec::new(&t, &plan, Box::new(HostStore::new()), None).unwrap();
         assert_eq!(sw.entry_tensor_name(sw.by_prefetch[0]), "a");
         assert_eq!(sw.entry_tensor_name(sw.by_prefetch[1]), "b");
+    }
+
+    /// The reclaim barrier EO comes from the placed table: a tenant
+    /// sharing the address range sets it to its first reserved EO; with
+    /// disjoint placement the gap is never reclaimed.
+    #[test]
+    fn reclaim_eo_follows_gap_tenant_placement() {
+        let mut t = TensorTable::new();
+        for (name, eos) in [("a", vec![0u32, 10]), ("b", vec![3u32, 5])] {
+            let id = t
+                .request(name, TensorDim::vec(1, 8), TensorRole::Activation, CreateMode::Create, Initializer::None)
+                .unwrap();
+            for e in eos {
+                t.add_eo(id, e, Lifespan::FORWARD);
+            }
+        }
+        t.finish_orders();
+        // b shares a's address range during a's gap
+        t.get_mut(0).region = Some(Region { offset: 0, len: 8 });
+        t.get_mut(1).region = Some(Region { offset: 0, len: 8 });
+        let sw = SwapExec::new(&t, &plan_one(0, 10, 1, 32), Box::new(HostStore::new()), None).unwrap();
+        assert_eq!(sw.reclaim_eo_of(0), 3, "tenant's first use is the write barrier");
+
+        // disjoint placement: never reclaimed
+        t.get_mut(1).region = Some(Region { offset: 8, len: 8 });
+        let sw = SwapExec::new(&t, &plan_one(0, 10, 1, 32), Box::new(HostStore::new()), None).unwrap();
+        assert_eq!(sw.reclaim_eo_of(0), u32::MAX);
     }
 }

@@ -166,3 +166,83 @@ fn calibrated_plans_place_and_validate() {
         );
     }
 }
+
+/// Write-lead derivation properties: monotone in size, inverse in
+/// bandwidth, always inside the cap left by the read lead, and the
+/// combined pair never swallows any gap `derive_leads` produces.
+#[test]
+fn write_leads_bounded_and_monotone() {
+    use nntrainer::runtime::calibrate::{write_lead_cap, write_lead_for_ns};
+
+    let cost = EoCostModel::uniform(EO_SPAN as usize, 1_000.0);
+    let bandwidths = [1.0, 10.0, 100.0, 1000.0]; // MB/s
+    let sizes = [64usize, 1 << 10, 1 << 14, 1 << 18, 1 << 22]; // bytes
+    for (evict, prefetch, rlead) in [(0u32, 40u32, 1u32), (3, 20, 4), (10, 46, 2)] {
+        for &mbps in &bandwidths {
+            let store = StoreCalibration::synthetic(mbps);
+            let mut prev = 0u32;
+            for &bytes in &sizes {
+                let w = write_lead_for_ns(store.evict_ns(bytes), evict, prefetch, rlead, &cost);
+                assert!(w >= prev, "write lead shrank as size grew: {bytes}B → {w} < {prev}");
+                assert!(
+                    w <= write_lead_cap(evict, prefetch, rlead),
+                    "write lead {w} past the cap for gap ({evict}, {prefetch}) rlead {rlead}"
+                );
+                assert!(
+                    evict + rlead + w < prefetch,
+                    "write lead {w} + read lead {rlead} swallow gap ({evict}, {prefetch})"
+                );
+                prev = w;
+            }
+        }
+        for &bytes in &sizes {
+            let mut prev = u32::MAX;
+            for &mbps in &bandwidths {
+                let store = StoreCalibration::synthetic(mbps);
+                let w = write_lead_for_ns(store.evict_ns(bytes), evict, prefetch, rlead, &cost);
+                assert!(w <= prev, "write lead grew as bandwidth grew");
+                prev = w;
+            }
+        }
+    }
+}
+
+/// `derive_leads` write side over random advisor plans: every entry's
+/// pair respects the gap, and the end-extended residency still places
+/// and validates through the gap-aware planner.
+#[test]
+fn derived_write_leads_place_and_validate() {
+    let mut rng = Rng::new(4242);
+    let cost = EoCostModel::uniform(EO_SPAN as usize, 1_000.0);
+    for case in 0..100 {
+        let mut t = random_table(&mut rng);
+        let full = advise(&t, usize::MAX).primary_peak_bytes;
+        let budget = if case % 2 == 0 { full / 3 } else { 1 };
+        let mut plan: OffloadPlan = advise(&t, budget);
+        if plan.entries.is_empty() {
+            continue;
+        }
+        // an asymmetric store: writes much slower than reads, so write
+        // leads stretch while read leads stay narrow
+        let store = StoreCalibration {
+            write_bps: 0.2e6,
+            read_bps: 500e6,
+            per_op_ns: 0.0,
+        };
+        derive_leads(&mut plan, &t, budget, &store, &cost);
+        for e in &plan.entries {
+            assert!(
+                e.evict_after + e.lead + e.write_lead < e.prefetch_before,
+                "case {case}: `{}` leads ({}, {}) swallow gap ({}, {})",
+                e.name,
+                e.lead,
+                e.write_lead,
+                e.evict_after,
+                e.prefetch_before
+            );
+        }
+        assert_eq!(plan.primary_peak_bytes, peak_of_plan(&t, &plan));
+        let pool_len = GapFitPlanner { plan: &plan }.plan(&mut t).unwrap();
+        validate_gap_plan(&t, &plan, pool_len).unwrap();
+    }
+}

@@ -257,3 +257,72 @@ fn checkpoint_errors_use_checkpoint_variant() {
     }
     let _ = std::fs::remove_file(&path);
 }
+
+/// `checkpoint diff` golden output: a hand-written v1 file against a
+/// saved v2 file. Classification (`-` only-in-a, `+` only-in-b, `~`
+/// changed, identical count), name ordering and line format are all
+/// pinned; v1 entries carry no dims, so the comparison is by element
+/// count with flat `1:1:1:len` shapes reported.
+#[test]
+fn checkpoint_diff_golden_v1_vs_v2() {
+    let a = compiled(8, "out");
+    let v2 = tmp("diff_v2");
+    a.save(&v2).unwrap();
+    let v2_manifest = checkpoint::read_manifest(&v2).unwrap();
+    let dim_of = |name: &str| {
+        v2_manifest
+            .iter()
+            .find(|m| m.name == name)
+            .map(|m| (m.dim, m.len))
+            .unwrap()
+    };
+    let (_, h0w_len) = dim_of("h0:weight");
+    let (_, h0b_len) = dim_of("h0:bias");
+    let (outw_dim, outw_len) = dim_of("out:weight");
+    let (outb_dim, outb_len) = dim_of("out:bias");
+
+    // hand-write the v1 side: h0 matches, `gone:weight` exists only
+    // here, `out:weight` has a wrong length, `out:bias` is missing
+    let v1 = tmp("diff_v1");
+    {
+        let mut f = File::create(&v1).unwrap();
+        f.write_all(b"NNTR").unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&4u32.to_le_bytes()).unwrap();
+        for (name, len) in [
+            ("h0:weight", h0w_len),
+            ("h0:bias", h0b_len),
+            ("gone:weight", 99usize),
+            ("out:weight", 100usize),
+        ] {
+            f.write_all(&(name.len() as u32).to_le_bytes()).unwrap();
+            f.write_all(name.as_bytes()).unwrap();
+            f.write_all(&(len as u32).to_le_bytes()).unwrap();
+            for _ in 0..len {
+                f.write_all(&0.5f32.to_le_bytes()).unwrap();
+            }
+        }
+    }
+
+    let out = checkpoint::diff_files(&v1, &v2).unwrap();
+    let expected = format!(
+        "a: {v1} (v1, 4 tensors)\n\
+         b: {v2} (v2, 4 tensors)\n\
+         - `gone:weight` 1:1:1:99 (99 f32) only in a\n\
+         ~ `out:weight` 1:1:1:100 (100 f32) -> {outw_dim} ({outw_len} f32)\n\
+         + `out:bias` {outb_dim} ({outb_len} f32) only in b\n\
+         2 tensor(s) identical\n"
+    );
+    assert_eq!(out, expected, "diff output drifted from the golden form");
+
+    // identical files: the diff is exactly the trailing count line
+    let self_diff = checkpoint::diff_files(&v2, &v2).unwrap();
+    assert!(
+        self_diff.ends_with("4 tensor(s) identical\n"),
+        "{self_diff}"
+    );
+    assert_eq!(self_diff.lines().count(), 3, "{self_diff}");
+
+    let _ = std::fs::remove_file(&v1);
+    let _ = std::fs::remove_file(&v2);
+}

@@ -520,3 +520,144 @@ fn gap_bestfit_is_bitwise_swap_equivalent() {
         assert_eq!(l0.to_bits(), l1.to_bits(), "iteration {it}: best-fit placement diverged");
     }
 }
+
+// --------------------------------------------- validation split / memoize
+
+/// Producer whose train and held-out batches disagree on purpose: with
+/// `val_split = 0.5` the loop holds out every 2nd batch, so odd batch
+/// indices (0-based) carry labels of the opposite sign. Training
+/// memorizes `+0.8`; the held-out loss against `-0.8` can only grow.
+struct SplitProducer {
+    n: usize,
+    in_len: usize,
+    lb_len: usize,
+    batch: usize,
+}
+
+impl DataProducer for SplitProducer {
+    fn input_len(&self) -> usize {
+        self.in_len
+    }
+    fn label_len(&self) -> usize {
+        self.lb_len
+    }
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn sample(&mut self, idx: usize) -> Sample {
+        let mut rng = Rng::new(1000 + idx as u64);
+        let mut input = vec![0f32; self.in_len];
+        rng.fill_uniform(&mut input, -1.0, 1.0);
+        let sign = if (idx / self.batch) % 2 == 1 { -1.0f32 } else { 1.0f32 };
+        Sample { input, label: vec![0.8 * sign; self.lb_len] }
+    }
+}
+
+/// `TrainSpec::val_split`: EarlyStop must fire on the held-out loss
+/// while the training loss is still falling.
+#[test]
+fn early_stop_fires_on_val_loss_while_train_falls() {
+    let batch = 4usize;
+    let mut cs = Session::describe(mlp())
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .configure(TrainSpec {
+            batch: Some(batch),
+            epochs: 10,
+            val_split: 0.5,
+            ..Default::default()
+        })
+        .compile_for(DeviceProfile::unconstrained())
+        .unwrap();
+    let (in_len, lb_len) = feat_lens(&cs);
+    let make = move || -> Box<dyn DataProducer> {
+        Box::new(SplitProducer { n: 32, in_len, lb_len, batch })
+    };
+    let mut es = EarlyStop::new(1, 0.0);
+    let summary = cs.train_with(&make, &mut [&mut es]).unwrap();
+    assert!(
+        summary.epochs < 10,
+        "early stop never fired on the held-out loss: {:?}",
+        summary.val_losses_per_epoch
+    );
+    assert_eq!(
+        summary.val_losses_per_epoch.len(),
+        summary.epochs,
+        "one held-out mean per epoch"
+    );
+    let tl = &summary.losses_per_epoch;
+    assert!(
+        tl.last().unwrap() < tl.first().unwrap(),
+        "training loss was not still falling: {tl:?}"
+    );
+    let vl = &summary.val_losses_per_epoch;
+    assert!(
+        vl.last().unwrap() >= vl.first().unwrap(),
+        "held-out loss should plateau or grow on disagreeing labels: {vl:?}"
+    );
+    // half the batches were held out: they are not training iterations
+    assert_eq!(summary.iterations, summary.epochs * 4, "4 train batches per epoch");
+}
+
+/// Auto-batch memoization: the whole budget search costs two reference
+/// shape analyses (the template) plus the final compile — probe count
+/// does not move the per-layer analysis counter, and the selected batch
+/// equals what per-probe full analysis selects.
+#[test]
+fn auto_batch_memoizes_shape_analysis() {
+    use nntrainer::compiler::plan_with;
+    use nntrainer::exec::shape_analysis_count;
+    use nntrainer::layers::builtin_factories;
+
+    // one full compile = one pass of per-layer analysis (the unit)
+    let before = shape_analysis_count();
+    let _fixed = Session::describe(mlp())
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .configure(TrainSpec { batch: Some(4), ..Default::default() })
+        .compile_for(DeviceProfile::unconstrained())
+        .unwrap();
+    let per_compile = shape_analysis_count() - before;
+    assert!(per_compile > 0);
+
+    let budget = probe_pool(mlp(), 12);
+    let max_batch = 32usize;
+
+    let before = shape_analysis_count();
+    let cs = Session::describe(mlp())
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .configure(TrainSpec { batch: None, ..Default::default() })
+        .compile_for(DeviceProfile {
+            memory_budget_bytes: Some(budget),
+            max_batch,
+            ..Default::default()
+        })
+        .unwrap();
+    let probe_analyses = shape_analysis_count() - before;
+    assert_eq!(
+        probe_analyses,
+        3 * per_compile,
+        "auto-batch must analyze shapes exactly 3x (2 template refs + final \
+         compile), independent of probe count"
+    );
+
+    // the memoized search selects the same batch as per-probe full
+    // analysis: largest b <= max_batch whose planned (budgeted) pool fits
+    let factories = builtin_factories();
+    let mut expected = 1usize;
+    for b in 1..=max_batch {
+        let rep = plan_with(
+            mlp(),
+            &CompileOpts {
+                batch: b,
+                memory_budget_bytes: Some(budget),
+                ..Default::default()
+            },
+            &factories,
+            0,
+        )
+        .unwrap();
+        if rep.pool_bytes <= budget {
+            expected = b;
+        }
+    }
+    assert_eq!(cs.batch(), expected, "memoization changed the selected batch");
+}

@@ -1,0 +1,279 @@
+//! Randomized-topology swap-equivalence stress suite: a seeded
+//! generator over model shapes (fc / conv / concat / multiout mixes),
+//! budgets, stores and tunings, asserting for every sample that
+//!
+//! * training under the budget through the full-duplex swap runtime is
+//!   **bitwise identical** to unswapped training (losses every
+//!   iteration, all weights at the end),
+//! * the realized layout still validates against the offload plan
+//!   (`validate_gap_plan` over the planned table and the allocated
+//!   pool), and
+//! * swap traffic is symmetric and matches the plan's accounting.
+//!
+//! Every assertion message carries the reproducing `seed=… sample=…`
+//! context so a CI failure pins the exact topology. The seed matrix and
+//! store set are environment-tunable for the CI stress job:
+//!
+//! * `NNTRAINER_STRESS_SEEDS`   — comma-separated u64 seeds
+//!   (default `20260731`)
+//! * `NNTRAINER_STRESS_STORE`   — `host`, `file` or `both`
+//!   (default `both`)
+//! * `NNTRAINER_STRESS_SAMPLES` — topologies per seed (default 6)
+
+use nntrainer::compiler::CompileOpts;
+use nntrainer::graph::NodeDesc;
+use nntrainer::layers::Props;
+use nntrainer::model::{Model, ModelBuilder};
+use nntrainer::planner::offload::advise;
+use nntrainer::planner::validate::validate_gap_plan;
+use nntrainer::rng::Rng;
+use nntrainer::runtime::{StoreKind, SwapTuning};
+
+fn node(name: &str, ltype: &str, pairs: &[(&str, String)]) -> NodeDesc {
+    NodeDesc::new(
+        name,
+        ltype,
+        Props::from_pairs(pairs.iter().map(|(k, v)| (*k, v.as_str()))),
+    )
+}
+
+/// One random topology out of the four families the paper's evaluation
+/// models span: plain fc stacks, conv stacks, a multiout→concat fork
+/// and a multiout→addition fork (model-D shape).
+fn gen_model(rng: &mut Rng) -> Vec<NodeDesc> {
+    match rng.below(4) {
+        0 => {
+            // fc stack
+            let feat = 32 + rng.below(128);
+            let depth = 2 + rng.below(3);
+            let mut nodes = vec![node(
+                "in",
+                "input",
+                &[("input_shape", format!("1:1:{feat}"))],
+            )];
+            for i in 0..depth {
+                let unit = 16 + rng.below(80);
+                nodes.push(node(
+                    &format!("h{i}"),
+                    "fully_connected",
+                    &[("unit", unit.to_string()), ("activation", "relu".into())],
+                ));
+            }
+            nodes.push(node("out", "fully_connected", &[("unit", "8".into())]));
+            nodes.push(node("loss", "mse", &[]));
+            nodes
+        }
+        1 => {
+            // conv stack
+            let c = 1 + rng.below(4);
+            let hw = [8, 12, 16][rng.below(3)];
+            let depth = 1 + rng.below(3);
+            let mut nodes = vec![node(
+                "in",
+                "input",
+                &[("input_shape", format!("{c}:{hw}:{hw}"))],
+            )];
+            for i in 0..depth {
+                let filters = 4 + rng.below(12);
+                nodes.push(node(
+                    &format!("c{i}"),
+                    "conv2d",
+                    &[
+                        ("filters", filters.to_string()),
+                        ("kernel_size", "3".into()),
+                        ("padding", "same".into()),
+                        ("activation", "relu".into()),
+                    ],
+                ));
+            }
+            nodes.push(node("flat", "flatten", &[]));
+            nodes.push(node("fc", "fully_connected", &[("unit", "10".into())]));
+            nodes.push(node("loss", "mse", &[]));
+            nodes
+        }
+        2 => {
+            // multiout fork joined by concat
+            let feat = 32 + rng.below(96);
+            let ua = 16 + rng.below(48);
+            let ub = 16 + rng.below(48);
+            vec![
+                node("in", "input", &[("input_shape", format!("1:1:{feat}"))]),
+                node("stem", "fully_connected", &[("unit", "48".into()), ("activation", "relu".into())]),
+                node("mo", "multiout", &[("outputs", "2".into())]),
+                node("ba", "fully_connected", &[("unit", ua.to_string()), ("activation", "relu".into()), ("input_layers", "mo(0)".into())]),
+                node("bb", "fully_connected", &[("unit", ub.to_string()), ("activation", "relu".into()), ("input_layers", "mo(1)".into())]),
+                node("cat", "concat", &[("input_layers", "ba,bb".into())]),
+                node("head", "fully_connected", &[("unit", "8".into())]),
+                node("loss", "mse", &[]),
+            ]
+        }
+        _ => {
+            // multiout fork joined by addition (model-D shape)
+            let feat = 64 + rng.below(128);
+            let unit = 24 + rng.below(64);
+            vec![
+                node("in", "input", &[("input_shape", format!("1:1:{feat}"))]),
+                node("stem", "fully_connected", &[("unit", unit.to_string()), ("bias", "false".into())]),
+                node("mo", "multiout", &[("outputs", "2".into())]),
+                node("act_a", "activation", &[("act", "sigmoid".into()), ("input_layers", "mo(0)".into())]),
+                node("act_b", "activation", &[("act", "relu".into()), ("input_layers", "mo(1)".into())]),
+                node("add", "addition", &[("input_layers", "act_a,act_b".into())]),
+                node("head", "fully_connected", &[("unit", "10".into()), ("bias", "false".into())]),
+                node("loss", "mse", &[]),
+            ]
+        }
+    }
+}
+
+fn compile(nodes: Vec<NodeDesc>, opts: &CompileOpts) -> Model {
+    ModelBuilder::new()
+        .add_nodes(nodes)
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .compile(opts)
+        .unwrap()
+}
+
+fn feat_lens(m: &Model) -> (usize, usize) {
+    let in_len = m
+        .exec
+        .graph
+        .input_nodes
+        .iter()
+        .map(|&n| m.exec.graph.nodes[n].out_dims[0].feature_len())
+        .sum();
+    let lb_len = m
+        .exec
+        .graph
+        .loss_nodes
+        .iter()
+        .map(|&n| m.exec.graph.nodes[n].in_dims[0].feature_len())
+        .sum();
+    (in_len, lb_len)
+}
+
+/// One stress sample: generate a topology, train it unswapped and under
+/// a random tight budget with identical data, and hold the bitwise +
+/// plan-validity contract.
+fn run_sample(seed: u64, sample: usize, store: StoreKind, tuning: SwapTuning) {
+    let ctx = format!("seed={seed} sample={sample} store={store:?} tuning={tuning:?}");
+    let mut rng = Rng::new(seed ^ (sample as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let nodes = gen_model(&mut rng);
+    let batch = [4usize, 8][rng.below(2)];
+    let budget_pct = 60 + rng.below(31); // 60..=90 %
+    let iters = 3; // past the calibrated warmup, into observed feedback
+
+    let base_opts = CompileOpts { batch, ..Default::default() };
+    let mut base = compile(nodes.clone(), &base_opts);
+    let full = advise(&base.exec.graph.table, usize::MAX).primary_peak_bytes;
+    let budget = (full * budget_pct / 100).max(1);
+
+    let mut swapped = compile(
+        nodes,
+        &CompileOpts {
+            batch,
+            memory_budget_bytes: Some(budget),
+            swap_store: store,
+            swap_tuning: tuning,
+            ..Default::default()
+        },
+    );
+    assert!(swapped.exec.swap_active(), "{ctx}: swap runtime not engaged");
+    let plan = swapped.exec.swap_plan().unwrap().clone();
+
+    // plan validity against the realized layout (the allocated pool)
+    let pool_len = swapped.exec.pool.len();
+    validate_gap_plan(&swapped.exec.graph.table, &plan, pool_len)
+        .unwrap_or_else(|e| panic!("{ctx}: realized plan invalid: {e}"));
+
+    let (in_len, lb_len) = feat_lens(&base);
+    let mut data_rng = Rng::new(0xC0FFEE ^ seed);
+    let mut input = vec![0f32; in_len * batch];
+    let mut label = vec![0f32; lb_len * batch];
+    for it in 0..iters {
+        data_rng.fill_uniform(&mut input, -1.0, 1.0);
+        data_rng.fill_uniform(&mut label, 0.0, 1.0);
+        base.bind_batch(&input, &label).unwrap();
+        swapped.bind_batch(&input, &label).unwrap();
+        let l0 = base.exec.try_train_iteration().unwrap();
+        let l1 = swapped
+            .exec
+            .try_train_iteration()
+            .unwrap_or_else(|e| panic!("{ctx}: swapped iteration {it} failed: {e}"));
+        assert_eq!(
+            l0.to_bits(),
+            l1.to_bits(),
+            "{ctx}: iteration {it} loss diverged ({l0} vs {l1})"
+        );
+    }
+
+    for w in base.exec.weight_names() {
+        let a = base.exec.read_weight(&w).unwrap();
+        let b = swapped.exec.read_weight(&w).unwrap();
+        assert_eq!(a.len(), b.len(), "{ctx}: {w}: length");
+        for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{ctx}: {w}[{k}]: {x} vs {y} after {iters} iterations"
+            );
+        }
+    }
+
+    // traffic accounting — only when the budget actually forced offloads
+    let stats = swapped.exec.swap_stats().unwrap();
+    if plan.entries.is_empty() {
+        assert_eq!(stats.bytes_out, 0, "{ctx}: traffic without entries");
+    } else {
+        assert!(stats.bytes_out > 0, "{ctx}: no eviction traffic: {stats:?}");
+        assert_eq!(
+            stats.bytes_out, stats.bytes_in,
+            "{ctx}: swap traffic asymmetric: {stats:?}"
+        );
+        assert_eq!(
+            stats.bytes_out,
+            iters as u64 * (plan.swap_bytes_per_iter / 2) as u64,
+            "{ctx}: traffic does not match the advised per-iteration swap bytes"
+        );
+    }
+}
+
+fn env_seeds() -> Vec<u64> {
+    std::env::var("NNTRAINER_STRESS_SEEDS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|p| p.trim().parse().ok())
+                .collect::<Vec<u64>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![20260731])
+}
+
+fn env_stores() -> Vec<StoreKind> {
+    match std::env::var("NNTRAINER_STRESS_STORE").as_deref() {
+        Ok("host") => vec![StoreKind::Host],
+        Ok("file") => vec![StoreKind::File],
+        _ => vec![StoreKind::Host, StoreKind::File],
+    }
+}
+
+fn env_samples() -> usize {
+    std::env::var("NNTRAINER_STRESS_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(6)
+}
+
+#[test]
+fn randomized_topology_swap_equivalence() {
+    let samples = env_samples();
+    for &seed in &env_seeds() {
+        for &store in &env_stores() {
+            for sample in 0..samples {
+                // alternate tunings so both engines cover every family
+                let tuning = if sample % 2 == 0 { SwapTuning::Fixed } else { SwapTuning::Calibrated };
+                run_sample(seed, sample, store, tuning);
+            }
+        }
+    }
+}

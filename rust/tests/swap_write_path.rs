@@ -1,0 +1,305 @@
+//! Write-path regression suite for the full-duplex swap engine:
+//!
+//! * a write ticket whose gap is reclaimed before the store copy lands
+//!   must **block** the training thread at the reclaim barrier (counted
+//!   as write stall) — never let the tenant corrupt the in-flight data;
+//! * dropping the engine mid-epoch (tickets still in flight) must not
+//!   deadlock, and teardown must leave the secondary store empty (slot
+//!   audit — no leaked eviction slots);
+//! * synchronous and asynchronous eviction modes are bitwise identical
+//!   (the switch the bench baseline rows use).
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use nntrainer::compiler::CompileOpts;
+use nntrainer::graph::NodeDesc;
+use nntrainer::layers::Props;
+use nntrainer::model::{Model, ModelBuilder};
+use nntrainer::planner::offload::{advise, OffloadEntry, OffloadPlan, PREFETCH_DEPTH};
+use nntrainer::planner::MemoryPool;
+use nntrainer::rng::Rng;
+use nntrainer::runtime::{HostStore, SecondaryStore, SwapExec};
+use nntrainer::tensor::{
+    CreateMode, Initializer, Lifespan, Region, TensorDim, TensorRole, TensorTable,
+};
+
+/// Host store whose writes take `put_delay` — long enough to guarantee
+/// a reclaim barrier finds the ticket still in flight.
+struct SlowStore {
+    inner: HostStore,
+    put_delay: Duration,
+}
+
+impl SlowStore {
+    fn new(put_delay: Duration) -> Self {
+        SlowStore { inner: HostStore::new(), put_delay }
+    }
+}
+
+impl SecondaryStore for SlowStore {
+    fn kind(&self) -> &'static str {
+        "slow-host"
+    }
+    fn put(&mut self, key: usize, data: &[f32]) -> nntrainer::Result<()> {
+        std::thread::sleep(self.put_delay);
+        self.inner.put(key, data)
+    }
+    fn get(&mut self, key: usize, out: &mut [f32]) -> nntrainer::Result<()> {
+        self.inner.get(key, out)
+    }
+    fn free(&mut self, key: usize) {
+        self.inner.free(key);
+    }
+    fn slot_count(&self) -> usize {
+        self.inner.slot_count()
+    }
+}
+
+/// Two tensors sharing one address range: `a` idles over EOs (0, 6) and
+/// is offloaded; tenant `b` lives at EOs 2..3 inside the gap.
+fn shared_range_setup() -> (TensorTable, OffloadPlan, Region) {
+    let len = 256usize;
+    let mut t = TensorTable::new();
+    let a = t
+        .request("a", TensorDim::vec(1, len), TensorRole::Activation, CreateMode::Create, Initializer::None)
+        .unwrap();
+    t.add_eo(a, 0, Lifespan::FORWARD);
+    t.add_eo(a, 6, Lifespan::FORWARD);
+    let b = t
+        .request("b", TensorDim::vec(1, len), TensorRole::Activation, CreateMode::Create, Initializer::None)
+        .unwrap();
+    t.add_eo(b, 2, Lifespan::FORWARD);
+    t.add_eo(b, 3, Lifespan::FORWARD);
+    t.finish_orders();
+    let region = Region { offset: 0, len };
+    t.get_mut(a).region = Some(region);
+    t.get_mut(b).region = Some(region);
+    let plan = OffloadPlan {
+        entries: vec![OffloadEntry {
+            tensor: a,
+            name: "a".into(),
+            bytes: len * 4,
+            evict_after: 0,
+            prefetch_before: 6,
+            lead: 1,
+            write_lead: 0,
+        }],
+        primary_peak_bytes: len * 4,
+        swap_bytes_per_iter: 2 * len * 4,
+        fits: true,
+        prefetch_depth: PREFETCH_DEPTH,
+    };
+    (t, plan, region)
+}
+
+/// The reclaim barrier: with a slow store, the tenant's first use EO
+/// arrives before the write ticket lands — the engine must block there
+/// (write stall accrues) and the evicted bytes must come back bitwise,
+/// untouched by the tenant's writes.
+#[test]
+fn reclaimed_gap_blocks_until_write_lands() {
+    let (t, plan, region) = shared_range_setup();
+    let pool = MemoryPool::new(region.len);
+    let mut sw = SwapExec::new(
+        &t,
+        &plan,
+        Box::new(SlowStore::new(Duration::from_millis(150))),
+        None,
+    )
+    .unwrap();
+    assert_eq!(sw.reclaim_eo_of(0), 2, "tenant placement sets the write barrier");
+
+    // a's live data: a recognizable bit pattern
+    let pattern: Vec<f32> = (0..region.len).map(|i| (i as f32) * 0.5 - 7.25).collect();
+    pool.view_mut(region).copy_from_slice(&pattern);
+
+    sw.begin_iteration(true).unwrap();
+    sw.pre_step(0, &pool).unwrap();
+    sw.check_residency(0).unwrap();
+    sw.post_step(0, &pool).unwrap(); // ticket issued, write in flight
+
+    sw.pre_step(1, &pool).unwrap();
+    sw.post_step(1, &pool).unwrap();
+
+    // tenant's first use: the barrier must wait out the slow write
+    sw.pre_step(2, &pool).unwrap();
+    assert!(
+        sw.stats.write_stall_ns > 0,
+        "reclaim before completion must block (write stall), got {:?}",
+        sw.stats
+    );
+    // now the tenant scribbles over the shared range
+    pool.view_mut(region).fill(-7.0);
+    sw.post_step(2, &pool).unwrap();
+    sw.pre_step(3, &pool).unwrap();
+    sw.post_step(3, &pool).unwrap();
+    sw.pre_step(4, &pool).unwrap();
+    sw.post_step(4, &pool).unwrap();
+
+    // a's read barrier (due = 6 - 1): the store copy comes back bitwise
+    sw.pre_step(5, &pool).unwrap();
+    sw.check_residency(6).unwrap();
+    let restored = pool.view(region);
+    for (k, (x, y)) in restored.iter().zip(pattern.iter()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "a[{k}]: {x} vs {y} — tenant writes corrupted the in-flight eviction"
+        );
+    }
+    sw.end_iteration(&pool).unwrap();
+    assert_eq!(sw.stats.evictions, 1);
+    assert_eq!(sw.stats.prefetches, 1);
+}
+
+/// Dropping the engine with a write ticket still in flight must join
+/// cleanly (no deadlock, the ticket drains first) and free every store
+/// slot — the audit that teardown leaks nothing.
+#[test]
+fn mid_iteration_drop_joins_and_frees_slots() {
+    let (t, plan, region) = shared_range_setup();
+    let pool = MemoryPool::new(region.len);
+    let sw = SwapExec::new(
+        &t,
+        &plan,
+        Box::new(SlowStore::new(Duration::from_millis(120))),
+        None,
+    )
+    .unwrap();
+    let store: Arc<Mutex<Box<dyn SecondaryStore>>> = sw.store_handle();
+    let mut sw = sw;
+    sw.begin_iteration(true).unwrap();
+    sw.pre_step(0, &pool).unwrap();
+    sw.post_step(0, &pool).unwrap(); // write in flight
+    drop(sw); // must not deadlock; joins both workers
+    assert_eq!(
+        store.lock().unwrap().slot_count(),
+        0,
+        "teardown leaked store slots"
+    );
+}
+
+fn conv_stack() -> Vec<NodeDesc> {
+    let node = |name: &str, ltype: &str, pairs: &[(&str, &str)]| {
+        NodeDesc::new(name, ltype, Props::from_pairs(pairs.iter().copied()))
+    };
+    vec![
+        node("in", "input", &[("input_shape", "4:16:16")]),
+        node("c0", "conv2d", &[("filters", "16"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("c1", "conv2d", &[("filters", "16"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("c2", "conv2d", &[("filters", "16"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("flat", "flatten", &[]),
+        node("fc", "fully_connected", &[("unit", "10")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+fn compile_budget(batch: usize) -> Model {
+    let nodes = conv_stack();
+    let base = ModelBuilder::new()
+        .add_nodes(nodes.clone())
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .compile(&CompileOpts { batch, ..Default::default() })
+        .unwrap();
+    let full = advise(&base.exec.graph.table, usize::MAX).primary_peak_bytes;
+    ModelBuilder::new()
+        .add_nodes(nodes)
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .compile(&CompileOpts {
+            batch,
+            memory_budget_bytes: Some(full * 75 / 100),
+            ..Default::default()
+        })
+        .unwrap()
+}
+
+/// Model-level teardown audit: after real budgeted training (store
+/// slots populated by a full epoch of evictions), dropping the model
+/// mid-epoch leaves the store empty.
+#[test]
+fn model_drop_after_training_frees_all_slots() {
+    let batch = 8usize;
+    let mut m = compile_budget(batch);
+    let sw = m.exec.swap_mut().expect("swap runtime engaged");
+    assert!(sw.n_entries() > 0);
+    let store = sw.store_handle();
+    let in_len: usize = m
+        .exec
+        .graph
+        .input_nodes
+        .iter()
+        .map(|&n| m.exec.graph.nodes[n].out_dims[0].feature_len())
+        .sum();
+    let lb_len: usize = m
+        .exec
+        .graph
+        .loss_nodes
+        .iter()
+        .map(|&n| m.exec.graph.nodes[n].in_dims[0].feature_len())
+        .sum();
+    let input = vec![0.25f32; in_len * batch];
+    let label = vec![0.5f32; lb_len * batch];
+    for _ in 0..2 {
+        m.bind_batch(&input, &label).unwrap();
+        m.exec.try_train_iteration().unwrap();
+    }
+    assert!(
+        store.lock().unwrap().slot_count() > 0,
+        "training under a budget should have populated store slots"
+    );
+    drop(m);
+    assert_eq!(
+        store.lock().unwrap().slot_count(),
+        0,
+        "model teardown leaked store slots"
+    );
+}
+
+/// The eviction mode only moves *when* the store copy happens:
+/// synchronous (training-thread) and asynchronous (write-ticket)
+/// evictions must train bitwise identically.
+#[test]
+fn sync_and_async_evictions_are_bitwise_identical() {
+    let batch = 8usize;
+    let mut sync = compile_budget(batch);
+    sync.exec
+        .swap_mut()
+        .unwrap()
+        .set_sync_evictions(true);
+    let mut async_ = compile_budget(batch);
+
+    let in_len: usize = sync
+        .exec
+        .graph
+        .input_nodes
+        .iter()
+        .map(|&n| sync.exec.graph.nodes[n].out_dims[0].feature_len())
+        .sum();
+    let lb_len: usize = sync
+        .exec
+        .graph
+        .loss_nodes
+        .iter()
+        .map(|&n| sync.exec.graph.nodes[n].in_dims[0].feature_len())
+        .sum();
+    let mut rng = Rng::new(0xFEED);
+    let mut input = vec![0f32; in_len * batch];
+    let mut label = vec![0f32; lb_len * batch];
+    for it in 0..3 {
+        rng.fill_uniform(&mut input, -1.0, 1.0);
+        rng.fill_uniform(&mut label, 0.0, 1.0);
+        sync.bind_batch(&input, &label).unwrap();
+        async_.bind_batch(&input, &label).unwrap();
+        let l0 = sync.exec.try_train_iteration().unwrap();
+        let l1 = async_.exec.try_train_iteration().unwrap();
+        assert_eq!(l0.to_bits(), l1.to_bits(), "iteration {it}: {l0} vs {l1}");
+    }
+    for w in sync.exec.weight_names() {
+        let a = sync.exec.read_weight(&w).unwrap();
+        let b = async_.exec.read_weight(&w).unwrap();
+        for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{w}[{k}]: {x} vs {y}");
+        }
+    }
+}
