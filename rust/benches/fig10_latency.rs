@@ -5,7 +5,12 @@
 //! The claim to reproduce: memory planning does NOT cost speed — the
 //! planned profile is as fast as (or faster than) the no-reuse profile,
 //! because the math is identical and the smaller working set helps cache.
+//!
+//! Machine-readable path: per-case step latency and throughput land in
+//! `BENCH_fig10.json` and gate against the committed baseline
+//! (EXPERIMENTS.md).
 
+use nntrainer::bench_report::{finish, BenchReport, Metric};
 use nntrainer::bench_util::{bench_dataset, conventional_profile, nntrainer_profile, train_random, Table};
 use nntrainer::model::zoo;
 
@@ -13,6 +18,7 @@ fn main() {
     let ds = bench_dataset();
     println!("\n== Fig 10: training latency, 1 epoch, dataset {ds}, batch 32 ==\n");
     let mut table = Table::new(&["case", "planned s", "conventional s", "speedup"]);
+    let mut report = BenchReport::new("fig10", ds);
     for (name, nodes, _) in zoo::table4_cases() {
         let (_, t_plan, it) =
             train_random(nodes.clone(), &nntrainer_profile(32), ds, 1, 1e-4).expect(name);
@@ -24,10 +30,22 @@ fn main() {
             format!("{t_conv:.3}"),
             format!("x{:.2} ({} iters)", t_conv / t_plan, it),
         ]);
+        let iters = it.max(1) as f64;
+        report.push(
+            name,
+            vec![
+                Metric::lower("planned_s", t_plan),
+                Metric::lower("step_latency_ms", t_plan * 1e3 / iters),
+                Metric::higher("iters_per_s", iters / t_plan.max(1e-9)),
+                Metric::info("conventional_s", t_conv),
+                Metric::info("speedup_x", t_conv / t_plan.max(1e-9)),
+            ],
+        );
     }
     table.print();
     println!(
         "\npaper: NNTrainer is faster than or equivalent to the conventional frameworks\n\
          in most cases while consuming a fraction of the memory."
     );
+    finish(&report);
 }

@@ -4,7 +4,12 @@
 //! 512 MiB embedded budget and processes a fixed amount of data fastest;
 //! the conventional profile blows the budget at small batches (TF from
 //! batch 16 with its 337.8 MiB baseline).
+//!
+//! Machine-readable path: per-batch planned MiB and samples/s land in
+//! `BENCH_fig11.json` and gate against the committed baseline
+//! (EXPERIMENTS.md).
 
+use nntrainer::bench_report::{finish, BenchReport, Metric};
 use nntrainer::bench_util::{bench_dataset, conventional_profile, nntrainer_profile, plan, train_random, Table};
 use nntrainer::metrics::{BASELINE_NNTRAINER_MIB, BASELINE_TENSORFLOW_MIB, MIB};
 use nntrainer::model::zoo;
@@ -22,6 +27,7 @@ fn main() {
         "time s",
         "samples/s",
     ]);
+    let mut report = BenchReport::new("fig11", ds);
     for &batch in &[1usize, 2, 4, 8, 16, 32, 64, 128] {
         let nn = plan(zoo::model_a_linear(), &nntrainer_profile(batch)).unwrap();
         let conv = plan(zoo::model_a_linear(), &conventional_profile(batch)).unwrap();
@@ -40,10 +46,21 @@ fn main() {
             format!("{secs:.3}"),
             format!("{:.0}", samples as f64 / secs),
         ]);
+        report.push(
+            &format!("batch{batch}"),
+            vec![
+                Metric::lower("planned_mib_incl_base", nn_tot),
+                Metric::info("conventional_mib_incl_base", conv_tot),
+                Metric::info("fits_512", if nn_tot <= 512.0 { 1.0 } else { 0.0 }),
+                Metric::lower("time_s", secs),
+                Metric::higher("samples_per_s", samples as f64 / secs.max(1e-9)),
+            ],
+        );
     }
     table.print();
     println!(
         "\npaper: NNTrainer stays under 512 MiB through batch 128 and gets faster with\n\
          batch (cache utilization); TensorFlow exceeds the budget from batch 16."
     );
+    finish(&report);
 }

@@ -4,7 +4,12 @@
 //! Paper's claim to reproduce in shape: conventional frameworks use
 //! x2.19–x6.47 more memory than NNTrainer on average (incl. baselines),
 //! and NNTrainer's peak is within noise of the ideal.
+//!
+//! Machine-readable path: every row also lands in `BENCH_fig9.json`
+//! (repo root) and diffs against the committed baseline — the pool and
+//! overhead columns are gated (EXPERIMENTS.md).
 
+use nntrainer::bench_report::{finish, BenchReport, Metric};
 use nntrainer::bench_util::{conventional_profile, fmt_mib, nntrainer_profile, plan, Table};
 use nntrainer::metrics::{BASELINE_NNTRAINER_MIB, BASELINE_PYTORCH_MIB, BASELINE_TENSORFLOW_MIB, MIB};
 use nntrainer::model::zoo;
@@ -21,6 +26,8 @@ fn main() {
         "x(+TF base)",
         "x(+PT base)",
     ]);
+    // plan-only: no dataset is ever touched (dataset 0 in the snapshot)
+    let mut report = BenchReport::new("fig9", 0);
     let mut ratios = Vec::new();
     for (name, nodes, _) in zoo::table4_cases() {
         let nn = plan(nodes.clone(), &nntrainer_profile(64)).expect(name);
@@ -42,6 +49,17 @@ fn main() {
             format!("x{x_tf:.2}"),
             format!("x{x_pt:.2}"),
         ]);
+        report.push(
+            name,
+            vec![
+                Metric::info("ideal_mib", nn.ideal_bytes as f64 / MIB),
+                Metric::lower("pool_mib", nn_mib),
+                Metric::lower("overhead_x", nn.overhead()),
+                Metric::info("conventional_mib", conv_mib),
+                Metric::info("ratio_incl_tf_x", x_tf),
+                Metric::info("ratio_incl_pt_x", x_pt),
+            ],
+        );
     }
     table.print();
     let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
@@ -52,4 +70,5 @@ fn main() {
         "\nconventional-vs-nntrainer ratio incl. baselines: x{lo:.2}..x{hi:.2} (mean x{mean:.2})\n\
          paper: x2.19..x6.47 on average; NNTrainer peak ~= ideal (overhead column)."
     );
+    finish(&report);
 }

@@ -26,12 +26,21 @@
 //!
 //! Run: `cargo bench --bench swap_runtime` (dataset size via
 //! `NNTRAINER_BENCH_DATASET`).
+//!
+//! Machine-readable path: every row also lands in
+//! `BENCH_swap_runtime.json` — peak/frag/stall/step-latency are gated
+//! against the committed baseline (EXPERIMENTS.md). The runtime also
+//! snapshots its counters at every epoch boundary
+//! (`Executor::swap_epoch_stats`, the `epochs_marked` metric), so
+//! multi-epoch runs keep a per-epoch trajectory, not just totals.
 
+use nntrainer::bench_report::{finish, BenchReport, Metric};
 use nntrainer::bench_util::{
     bench_dataset, budget_profile, fmt_mib, nntrainer_profile, train_random_swap, Table,
 };
 use nntrainer::compiler::plan_only;
 use nntrainer::graph::NodeDesc;
+use nntrainer::metrics::MIB;
 use nntrainer::model::zoo;
 use nntrainer::planner::PlannerKind;
 use nntrainer::runtime::{StoreKind, SwapTuning};
@@ -39,6 +48,7 @@ use nntrainer::runtime::{StoreKind, SwapTuning};
 #[allow(clippy::too_many_arguments)]
 fn run_case(
     table: &mut Table,
+    report: &mut BenchReport,
     name: &str,
     nodes: Vec<NodeDesc>,
     batch: usize,
@@ -88,6 +98,29 @@ fn run_case(
         format!("{:.1}", stats.sync_fetches as f64 / iters as f64),
         format!("{:.1}", secs * 1e3 / iters as f64),
     ]);
+    let epochs_marked = model.exec.swap_epoch_stats().map(|v| v.len()).unwrap_or(0);
+    let evict = if sync_evict { "sync" } else { "async" };
+    let store_s = format!("{store:?}").to_lowercase();
+    let tuning_s = format!("{tuning:?}").to_lowercase();
+    let id = format!("{name}/{}/{store_s}/{tuning_s}/{evict}", model.report.planner);
+    report.push(
+        &id,
+        vec![
+            Metric::lower("advised_mib", plan.primary_peak_bytes as f64 / MIB),
+            Metric::lower("achieved_mib", achieved as f64 / MIB),
+            Metric::lower("frag_pct", frag),
+            Metric::info("fits", if plan.fits { 1.0 } else { 0.0 }),
+            Metric::info("swap_mib_per_iter", plan.swap_bytes_per_iter as f64 / MIB),
+            Metric::info("lead", lead as f64),
+            Metric::info("depth", depth as f64),
+            Metric::lower("rstall_ms_per_iter", stats.read_stall_ms() / iters as f64),
+            Metric::lower("wstall_ms_per_iter", stats.write_stall_ms() / iters as f64),
+            Metric::info("sync_fetches_per_iter", stats.sync_fetches as f64 / iters as f64),
+            Metric::lower("step_latency_ms", secs * 1e3 / iters as f64),
+            Metric::higher("iters_per_s", iters as f64 / secs.max(1e-9)),
+            Metric::info("epochs_marked", epochs_marked as f64),
+        ],
+    );
 }
 
 fn main() {
@@ -112,10 +145,11 @@ fn main() {
         "sync/it",
         "iter ms",
     ]);
+    let mut report = BenchReport::new("swap_runtime", bench_dataset());
     for placer in [PlannerKind::Sorting, PlannerKind::BestFit] {
-        run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, placer, SwapTuning::Fixed, false);
-        run_case(&mut table, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed, false);
-        run_case(&mut table, "Model B (Conv)", zoo::model_b_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed, false);
+        run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, placer, SwapTuning::Fixed, false);
+        run_case(&mut table, &mut report, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed, false);
+        run_case(&mut table, &mut report, "Model B (Conv)", zoo::model_b_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed, false);
     }
     // the acceptance comparison: fixed vs calibrated tuning and sync vs
     // full-duplex (async) eviction on the file-spill store — the slow
@@ -123,13 +157,13 @@ fn main() {
     // the training thread
     for tuning in [SwapTuning::Fixed, SwapTuning::Calibrated] {
         for sync_evict in [true, false] {
-            run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::File, PlannerKind::Sorting, tuning, sync_evict);
+            run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::File, PlannerKind::Sorting, tuning, sync_evict);
         }
     }
     for sync_evict in [true, false] {
-        run_case(&mut table, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::File, PlannerKind::Sorting, SwapTuning::Calibrated, sync_evict);
+        run_case(&mut table, &mut report, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::File, PlannerKind::Sorting, SwapTuning::Calibrated, sync_evict);
     }
-    run_case(&mut table, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, PlannerKind::Sorting, SwapTuning::Calibrated, false);
+    run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, PlannerKind::Sorting, SwapTuning::Calibrated, false);
     table.print();
     println!(
         "\nachieved = gap-aware planner pool (what training actually allocates); \
@@ -145,4 +179,5 @@ fn main() {
          on eviction writes — the number async eviction takes off the critical \
          path; the rest of the traffic is hidden by the background workers."
     );
+    finish(&report);
 }

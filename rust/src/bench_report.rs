@@ -1,0 +1,755 @@
+//! Machine-readable perf snapshots and regression gates (EXPERIMENTS.md).
+//!
+//! The paper's headline claims are quantitative — memory down to 1/20,
+//! optimizations transparent to accuracy — so the benches must leave a
+//! *recorded trajectory*, not just a terminal table. Each paper-figure
+//! bench feeds its `Table` rows into a [`BenchReport`] and calls
+//! [`finish`], which:
+//!
+//! 1. reads the committed `BENCH_<name>.json` baseline at the repo root
+//!    (tolerating a missing one — the first run seeds it),
+//! 2. writes the fresh snapshot over it (commit to update the baseline,
+//!    `git checkout` to discard),
+//! 3. prints a delta table of every metric shared with the baseline, and
+//! 4. under `NNTRAINER_BENCH_GATE=1`, exits nonzero when any *gated*
+//!    metric regressed past `NNTRAINER_BENCH_GATE_PCT` percent
+//!    (default 10) — the CI `perf-gate` job.
+//!
+//! Gates only apply against a baseline whose `source` is `"measured"`
+//! and whose `dataset` matches the current run: a hand-seeded baseline
+//! or a differently-sized smoke run diffs informationally instead of
+//! failing on numbers that were never comparable.
+//!
+//! Everything here is hand-rolled (JSON emitter *and* parser) because
+//! the workspace builds with zero crates.io dependencies.
+
+use std::path::{Path, PathBuf};
+
+use crate::bench_util::Table;
+
+// --------------------------------------------------------------- model
+
+/// Regression-gate direction of one metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gate {
+    /// Lower is better (peak MiB, stall ms, step latency): gated, a
+    /// `+threshold%` increase over the baseline regresses.
+    Lower,
+    /// Higher is better (iters/s, samples/s): gated, a `-threshold%`
+    /// drop under the baseline regresses.
+    Higher,
+    /// Recorded for the trajectory but never gated (ratios against
+    /// emulated baselines, counters without a "better" direction).
+    Info,
+}
+
+impl Gate {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Gate::Lower => "lower",
+            Gate::Higher => "higher",
+            Gate::Info => "info",
+        }
+    }
+
+    fn from_str(s: &str) -> Result<Gate, String> {
+        match s {
+            "lower" => Ok(Gate::Lower),
+            "higher" => Ok(Gate::Higher),
+            "info" => Ok(Gate::Info),
+            other => Err(format!("unknown gate {other:?} (lower|higher|info)")),
+        }
+    }
+}
+
+/// One named measurement of a bench row.
+#[derive(Clone, Debug)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    pub gate: Gate,
+}
+
+impl Metric {
+    pub fn lower(name: &str, value: f64) -> Metric {
+        Metric { name: name.into(), value, gate: Gate::Lower }
+    }
+    pub fn higher(name: &str, value: f64) -> Metric {
+        Metric { name: name.into(), value, gate: Gate::Higher }
+    }
+    pub fn info(name: &str, value: f64) -> Metric {
+        Metric { name: name.into(), value, gate: Gate::Info }
+    }
+}
+
+/// One bench case (a `Table` row): a stable id plus its metrics.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub id: String,
+    pub metrics: Vec<Metric>,
+}
+
+/// Whether a snapshot's numbers were actually measured on a machine or
+/// hand-seeded to bootstrap the trajectory (seeded baselines never gate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    Seeded,
+    Measured,
+}
+
+impl Source {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Source::Seeded => "seeded",
+            Source::Measured => "measured",
+        }
+    }
+
+    fn from_str(s: &str) -> Result<Source, String> {
+        match s {
+            "seeded" => Ok(Source::Seeded),
+            "measured" => Ok(Source::Measured),
+            other => Err(format!("unknown source {other:?} (seeded|measured)")),
+        }
+    }
+}
+
+/// One bench binary's full snapshot — serialized as `BENCH_<name>.json`.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    /// Snapshot name: `fig9`, `fig10`, `fig11`, `swap_runtime`.
+    pub name: String,
+    /// The `NNTRAINER_BENCH_DATASET` the run used (0 for plan-only
+    /// benches that never touch data). Gates require an exact match.
+    pub dataset: usize,
+    pub source: Source,
+    pub rows: Vec<BenchRow>,
+}
+
+impl BenchReport {
+    /// A fresh measured report (what the benches emit).
+    pub fn new(name: &str, dataset: usize) -> BenchReport {
+        BenchReport { name: name.into(), dataset, source: Source::Measured, rows: vec![] }
+    }
+
+    pub fn push(&mut self, id: &str, metrics: Vec<Metric>) {
+        self.rows.push(BenchRow { id: id.into(), metrics });
+    }
+
+    // ------------------------------------------------------------ emit
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"name\": {},\n", json_str(&self.name)));
+        s.push_str(&format!("  \"dataset\": {},\n", self.dataset));
+        s.push_str(&format!("  \"source\": \"{}\",\n", self.source.as_str()));
+        s.push_str("  \"rows\": [\n");
+        for (ri, row) in self.rows.iter().enumerate() {
+            s.push_str(&format!("    {{ \"id\": {}, \"metrics\": [\n", json_str(&row.id)));
+            for (mi, m) in row.metrics.iter().enumerate() {
+                let comma = if mi + 1 < row.metrics.len() { "," } else { "" };
+                s.push_str(&format!(
+                    "      {{ \"name\": {}, \"value\": {}, \"gate\": \"{}\" }}{comma}\n",
+                    json_str(&m.name),
+                    json_num(m.value),
+                    m.gate.as_str()
+                ));
+            }
+            let comma = if ri + 1 < self.rows.len() { "," } else { "" };
+            s.push_str(&format!("    ] }}{comma}\n"));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    // ----------------------------------------------------------- parse
+
+    pub fn from_json(text: &str) -> Result<BenchReport, String> {
+        let root = parse_json(text)?;
+        let name = root
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("missing string field \"name\"")?
+            .to_string();
+        let dataset = root
+            .get("dataset")
+            .and_then(Json::as_usize)
+            .ok_or("missing integer field \"dataset\"")?;
+        let source = Source::from_str(
+            root.get("source").and_then(Json::as_str).ok_or("missing string field \"source\"")?,
+        )?;
+        let mut rows = Vec::new();
+        let jrows = root.get("rows").and_then(Json::as_arr).ok_or("missing array field \"rows\"")?;
+        for (ri, jrow) in jrows.iter().enumerate() {
+            let id = jrow
+                .get("id")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("rows[{ri}]: missing string field \"id\""))?
+                .to_string();
+            let mut metrics = Vec::new();
+            let jms = jrow
+                .get("metrics")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("rows[{ri}]: missing array field \"metrics\""))?;
+            for (mi, jm) in jms.iter().enumerate() {
+                let ctx = || format!("rows[{ri}].metrics[{mi}]");
+                let name = jm
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("{}: missing string field \"name\"", ctx()))?
+                    .to_string();
+                let value = jm
+                    .get("value")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("{}: missing numeric field \"value\"", ctx()))?;
+                let gate = Gate::from_str(
+                    jm.get("gate")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| format!("{}: missing string field \"gate\"", ctx()))?,
+                )
+                .map_err(|e| format!("{}: {e}", ctx()))?;
+                metrics.push(Metric { name, value, gate });
+            }
+            rows.push(BenchRow { id, metrics });
+        }
+        Ok(BenchReport { name, dataset, source, rows })
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Non-finite values have no JSON literal; they round-trip through
+/// `null` (parsed back as NaN, which the diff skips).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+// --------------------------------------------------- minimal JSON parse
+
+enum Json {
+    Null,
+    Bool(#[allow(dead_code)] bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            Json::Null => Some(f64::NAN),
+            _ => None,
+        }
+    }
+    fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
+            _ => None,
+        }
+    }
+    fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+}
+
+fn parse_json(text: &str) -> Result<Json, String> {
+    let mut p = P { s: text.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.s.len() {
+        return Err(p.err("trailing content after the JSON value"));
+    }
+    Ok(v)
+}
+
+struct P<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> P<'a> {
+    fn err(&self, msg: &str) -> String {
+        format!("{msg} at byte {}", self.i)
+    }
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.i += 1;
+        }
+        c
+    }
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+    fn expect(&mut self, want: u8) -> Result<(), String> {
+        if self.bump() == Some(want) {
+            Ok(())
+        } else {
+            self.i = self.i.saturating_sub(1);
+            Err(self.err(&format!("expected '{}'", want as char)))
+        }
+    }
+    fn lit(&mut self, word: &str) -> Result<(), String> {
+        if self.s[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => {
+                self.lit("true")?;
+                Ok(Json::Bool(true))
+            }
+            Some(b'f') => {
+                self.lit("false")?;
+                Ok(Json::Bool(false))
+            }
+            Some(b'n') => {
+                self.lit("null")?;
+                Ok(Json::Null)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            out.push((key, val));
+            self.ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(out)),
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            let val = self.value()?;
+            out.push(val);
+            self.ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(out)),
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.ws();
+        self.expect(b'"')?;
+        // bytes, not chars: multi-byte UTF-8 passes through untouched
+        let mut out: Vec<u8> = Vec::new();
+        let push_char = |out: &mut Vec<u8>, c: char| {
+            let mut buf = [0u8; 4];
+            out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+        };
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    return String::from_utf8(out).map_err(|_| self.err("invalid UTF-8 in string"))
+                }
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push(b'"'),
+                    Some(b'\\') => out.push(b'\\'),
+                    Some(b'/') => out.push(b'/'),
+                    Some(b'n') => out.push(b'\n'),
+                    Some(b't') => out.push(b'\t'),
+                    Some(b'r') => out.push(b'\r'),
+                    Some(b'b') => out.push(0x08),
+                    Some(b'f') => out.push(0x0C),
+                    Some(b'u') => {
+                        let mut cp: u32 = 0;
+                        for _ in 0..4 {
+                            let d = self.bump().ok_or_else(|| self.err("truncated \\u escape"))?;
+                            let digit = (d as char)
+                                .to_digit(16)
+                                .ok_or_else(|| self.err("bad \\u escape digit"))?;
+                            cp = cp * 16 + digit;
+                        }
+                        push_char(&mut out, char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                    }
+                    _ => return Err(self.err("bad escape")),
+                },
+                Some(c) => out.push(c),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let txt =
+            std::str::from_utf8(&self.s[start..self.i]).map_err(|_| self.err("bad number"))?;
+        txt.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
+    }
+}
+
+// ---------------------------------------------------------------- diff
+
+/// One metric compared between baseline and current run.
+#[derive(Clone, Debug)]
+pub struct MetricDelta {
+    pub row: String,
+    pub metric: String,
+    pub gate: Gate,
+    pub base: f64,
+    pub cur: f64,
+    /// Signed percent change relative to `|base|` (NaN when either side
+    /// is non-finite or the baseline is ~0 — such pairs never gate).
+    pub change_pct: f64,
+}
+
+impl MetricDelta {
+    pub fn regressed(&self, threshold_pct: f64) -> bool {
+        if !self.change_pct.is_finite() {
+            return false;
+        }
+        match self.gate {
+            Gate::Lower => self.change_pct > threshold_pct,
+            Gate::Higher => self.change_pct < -threshold_pct,
+            Gate::Info => false,
+        }
+    }
+
+    pub fn improved(&self, threshold_pct: f64) -> bool {
+        if !self.change_pct.is_finite() {
+            return false;
+        }
+        match self.gate {
+            Gate::Lower => self.change_pct < -threshold_pct,
+            Gate::Higher => self.change_pct > threshold_pct,
+            Gate::Info => false,
+        }
+    }
+}
+
+/// Full baseline-vs-current comparison.
+#[derive(Clone, Debug)]
+pub struct DiffReport {
+    pub deltas: Vec<MetricDelta>,
+    /// Baseline rows the current run no longer produces (warned, not
+    /// gated — the bench suite is allowed to evolve).
+    pub missing_rows: Vec<String>,
+    /// Current rows the baseline has never seen.
+    pub new_rows: Vec<String>,
+    /// Gates apply only to a measured baseline of the same dataset size.
+    pub gate_applies: bool,
+    pub gate_note: Option<String>,
+    pub threshold_pct: f64,
+}
+
+impl DiffReport {
+    /// The deltas that fail the gate (empty when gates don't apply).
+    pub fn regressions(&self) -> Vec<&MetricDelta> {
+        if !self.gate_applies {
+            return vec![];
+        }
+        self.deltas.iter().filter(|d| d.regressed(self.threshold_pct)).collect()
+    }
+
+    pub fn render(&self) -> String {
+        let fmt = |v: f64| {
+            if v.is_finite() {
+                format!("{v:.3}")
+            } else {
+                "-".into()
+            }
+        };
+        let mut t = Table::new(&["row", "metric", "gate", "baseline", "current", "delta%", "status"]);
+        for d in &self.deltas {
+            let status = if !d.change_pct.is_finite() {
+                "-"
+            } else if d.regressed(self.threshold_pct) {
+                "REGRESSED"
+            } else if d.improved(self.threshold_pct) {
+                "improved"
+            } else {
+                "ok"
+            };
+            let pct = if d.change_pct.is_finite() {
+                format!("{:+.1}", d.change_pct)
+            } else {
+                "-".into()
+            };
+            t.row(vec![
+                d.row.clone(),
+                d.metric.clone(),
+                d.gate.as_str().into(),
+                fmt(d.base),
+                fmt(d.cur),
+                pct,
+                status.into(),
+            ]);
+        }
+        let mut s = format!(
+            "\n== perf diff vs committed baseline (threshold {:.0}%) ==\n\n",
+            self.threshold_pct
+        );
+        s.push_str(&t.render());
+        if let Some(note) = &self.gate_note {
+            s.push_str(&format!("\ngate: informational only — {note}\n"));
+        }
+        for r in &self.missing_rows {
+            s.push_str(&format!("note: baseline row {r:?} not produced by this run\n"));
+        }
+        for r in &self.new_rows {
+            s.push_str(&format!("note: new row {r:?} (no baseline yet)\n"));
+        }
+        s
+    }
+}
+
+/// Compare `current` against `baseline`, metric by metric.
+pub fn diff(baseline: &BenchReport, current: &BenchReport, threshold_pct: f64) -> DiffReport {
+    let mut deltas = Vec::new();
+    let mut missing_rows = Vec::new();
+    for brow in &baseline.rows {
+        let Some(crow) = current.rows.iter().find(|r| r.id == brow.id) else {
+            missing_rows.push(brow.id.clone());
+            continue;
+        };
+        for bm in &brow.metrics {
+            let Some(cm) = crow.metrics.iter().find(|m| m.name == bm.name) else { continue };
+            let change_pct =
+                if bm.value.is_finite() && cm.value.is_finite() && bm.value.abs() > 1e-9 {
+                    (cm.value - bm.value) / bm.value.abs() * 100.0
+                } else {
+                    f64::NAN
+                };
+            deltas.push(MetricDelta {
+                row: brow.id.clone(),
+                metric: bm.name.clone(),
+                // the current code's gate class wins: a metric can be
+                // reclassified without resnapshotting the baseline
+                gate: cm.gate,
+                base: bm.value,
+                cur: cm.value,
+                change_pct,
+            });
+        }
+    }
+    let new_rows = current
+        .rows
+        .iter()
+        .filter(|r| !baseline.rows.iter().any(|b| b.id == r.id))
+        .map(|r| r.id.clone())
+        .collect();
+    let (gate_applies, gate_note) = if baseline.source != Source::Measured {
+        (false, Some("baseline is hand-seeded; re-run the bench and commit the snapshot to arm the gate".to_string()))
+    } else if baseline.dataset != current.dataset {
+        (
+            false,
+            Some(format!(
+                "baseline dataset {} != current dataset {} — numbers are not comparable",
+                baseline.dataset, current.dataset
+            )),
+        )
+    } else {
+        (true, None)
+    };
+    DiffReport { deltas, missing_rows, new_rows, gate_applies, gate_note, threshold_pct }
+}
+
+// --------------------------------------------------------------- driver
+
+/// Repo root: the workspace directory holding the committed
+/// `BENCH_*.json` baselines (the crate lives in `<root>/rust`).
+pub fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate directory has a parent")
+        .to_path_buf()
+}
+
+/// `"1"`/`"true"`/`"yes"` arm, `"0"`/`"false"`/`"no"`/unset/empty
+/// disarm; anything else is a loud error (no swallow-and-default).
+fn env_flag(name: &str) -> bool {
+    match std::env::var(name) {
+        Ok(v) => match v.trim() {
+            "1" | "true" | "yes" => true,
+            "0" | "false" | "no" | "" => false,
+            other => panic!("{name}={other:?} is not a boolean (use 1 or 0)"),
+        },
+        Err(std::env::VarError::NotPresent) => false,
+        Err(e) => panic!("{name} is set but unreadable: {e}"),
+    }
+}
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    match std::env::var(name) {
+        Ok(v) => {
+            let parsed: f64 = v
+                .trim()
+                .parse()
+                .unwrap_or_else(|e| panic!("{name}={v:?} is not a number: {e}"));
+            if !parsed.is_finite() || parsed < 0.0 {
+                panic!("{name}={v:?} must be a finite non-negative percent");
+            }
+            parsed
+        }
+        Err(std::env::VarError::NotPresent) => default,
+        Err(e) => panic!("{name} is set but unreadable: {e}"),
+    }
+}
+
+/// Snapshot + diff + gate against the repo-root baselines; every bench
+/// binary's last call. See the module docs for the exact contract.
+pub fn finish(report: &BenchReport) {
+    finish_in(report, &repo_root());
+}
+
+/// [`finish`] against an explicit baseline directory (tests).
+pub fn finish_in(report: &BenchReport, dir: &Path) {
+    let gate = env_flag("NNTRAINER_BENCH_GATE");
+    let threshold = env_f64("NNTRAINER_BENCH_GATE_PCT", 10.0);
+    let path = dir.join(format!("BENCH_{}.json", report.name));
+
+    let baseline = match std::fs::read_to_string(&path) {
+        Ok(text) => match BenchReport::from_json(&text) {
+            Ok(b) => Some(b),
+            Err(e) => {
+                eprintln!("perf-gate: baseline {} is unreadable: {e}", path.display());
+                if gate {
+                    std::process::exit(2);
+                }
+                None
+            }
+        },
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+        Err(e) => panic!("perf-gate: cannot read {}: {e}", path.display()),
+    };
+
+    // write the fresh snapshot first so it survives a gate failure
+    std::fs::write(&path, report.to_json())
+        .unwrap_or_else(|e| panic!("perf-gate: cannot write {}: {e}", path.display()));
+    // shape self-check: the emitted snapshot must round-trip
+    let back = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("perf-gate: cannot re-read {}: {e}", path.display()));
+    BenchReport::from_json(&back)
+        .unwrap_or_else(|e| panic!("perf-gate: snapshot {} does not round-trip: {e}", path.display()));
+    println!("\nsnapshot: {} ({} rows)", path.display(), report.rows.len());
+
+    match baseline {
+        None => println!(
+            "perf-gate: no baseline for {:?} — first run; commit the snapshot to start the trajectory",
+            report.name
+        ),
+        Some(base) => {
+            let d = diff(&base, report, threshold);
+            print!("{}", d.render());
+            let regs = d.regressions();
+            if regs.is_empty() {
+                if d.gate_applies {
+                    println!("perf-gate: ok — no gated metric regressed past {threshold:.0}%");
+                }
+            } else {
+                eprintln!("\nperf-gate: {} metric(s) regressed past {threshold:.0}%:", regs.len());
+                for r in &regs {
+                    eprintln!(
+                        "  {} / {}: {:.3} -> {:.3} ({:+.1}%)",
+                        r.row, r.metric, r.base, r.cur, r.change_pct
+                    );
+                }
+                if gate {
+                    std::process::exit(1);
+                }
+                println!("(informational — set NNTRAINER_BENCH_GATE=1 to fail on this)");
+            }
+        }
+    }
+}

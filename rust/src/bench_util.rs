@@ -2,8 +2,11 @@
 //! with `harness = false` — criterion is unavailable offline).
 //!
 //! Every bench regenerates one table/figure of the paper and prints the
-//! paper-reported values alongside, so `cargo bench | tee` *is* the
-//! reproduction record (EXPERIMENTS.md).
+//! paper-reported values alongside; the paper-figure benches additionally
+//! feed their rows into a [`crate::bench_report::BenchReport`] and write
+//! `BENCH_<name>.json` snapshots at the repo root, diffed against the
+//! committed baseline with regression gates. EXPERIMENTS.md documents
+//! how to run the harness, read the snapshots, and update a baseline.
 
 use crate::compiler::{plan_only, CompileOpts};
 use crate::dataset::{BatchQueue, DataProducer, RandomProducer};
@@ -16,11 +19,37 @@ use crate::planner::PlannerKind;
 /// Dataset size for latency benches; override with
 /// `NNTRAINER_BENCH_DATASET` (the paper used 512 on an RPi4 — the
 /// default here keeps a full `cargo bench` run in minutes on one core).
+///
+/// An unparseable override is a loud error: the CI perf-gate sizes its
+/// smoke runs with this variable, and silently falling back to the full
+/// default would both blow the job's time box and diff against a
+/// baseline of the wrong size.
 pub fn bench_dataset() -> usize {
-    std::env::var("NNTRAINER_BENCH_DATASET")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(128)
+    match std::env::var("NNTRAINER_BENCH_DATASET") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            Ok(_) => panic!("NNTRAINER_BENCH_DATASET must be > 0"),
+            Err(e) => panic!("NNTRAINER_BENCH_DATASET={v:?} is not a usize: {e}"),
+        },
+        Err(std::env::VarError::NotPresent) => 128,
+        Err(e) => panic!("NNTRAINER_BENCH_DATASET is set but unreadable: {e}"),
+    }
+}
+
+/// Per-iteration training-thread sleep, microseconds, from
+/// `NNTRAINER_BENCH_INJECT_STALL_US` (default 0). A deliberate
+/// regression-injection hook: run a gated bench with this set and the
+/// step-latency delta must trip the perf gate — the one-command proof
+/// that the gate is live (EXPERIMENTS.md §Injecting a regression).
+pub fn injected_stall_us() -> u64 {
+    match std::env::var("NNTRAINER_BENCH_INJECT_STALL_US") {
+        Ok(v) => v
+            .trim()
+            .parse()
+            .unwrap_or_else(|e| panic!("NNTRAINER_BENCH_INJECT_STALL_US={v:?} is not a u64: {e}")),
+        Err(std::env::VarError::NotPresent) => 0,
+        Err(e) => panic!("NNTRAINER_BENCH_INJECT_STALL_US is set but unreadable: {e}"),
+    }
 }
 
 /// Compile options for the two allocation profiles the evaluation
@@ -56,6 +85,17 @@ pub fn plan(nodes: Vec<NodeDesc>, opts: &CompileOpts) -> Result<PlanReport> {
     plan_only(nodes, opts)
 }
 
+/// Deterministic per-epoch data seed. Every epoch must train on a
+/// *different* batch sequence (the seed harness re-created the producer
+/// with a constant seed, so each epoch silently replayed epoch 0 — the
+/// regression `tests/bench_report.rs::epochs_see_distinct_batches`
+/// guards), while the same epoch of the same run stays reproducible.
+/// Epoch 0 keeps the historical seed 7, so single-epoch bench numbers
+/// are comparable across the fix.
+pub fn epoch_seed(epoch: usize) -> u64 {
+    7u64 ^ (epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
 /// Compile + train `epochs` epochs on random data; returns (model,
 /// wall-seconds, iterations).
 pub fn train_random(
@@ -80,6 +120,22 @@ pub fn train_random_swap(
     lr: f32,
     sync_evictions: bool,
 ) -> Result<(Model, f64, usize)> {
+    let (model, secs, iters, _) = train_random_run(nodes, opts, dataset, epochs, lr, sync_evictions)?;
+    Ok((model, secs, iters))
+}
+
+/// The full-fat runner behind [`train_random`]/[`train_random_swap`]:
+/// additionally returns the per-epoch mean losses. With a zero learning
+/// rate the weights never move, so equal epoch losses mean equal epoch
+/// data — the hook the epoch-seed regression test keys on.
+pub fn train_random_run(
+    nodes: Vec<NodeDesc>,
+    opts: &CompileOpts,
+    dataset: usize,
+    epochs: usize,
+    lr: f32,
+    sync_evictions: bool,
+) -> Result<(Model, f64, usize, Vec<f32>)> {
     let mut model = ModelBuilder::new()
         .add_nodes(nodes)
         .optimizer("sgd", &[("learning_rate", &format!("{lr}"))])
@@ -104,23 +160,35 @@ pub fn train_random_swap(
         .map(|&n| model.exec.graph.nodes[n].in_dims[0].feature_len())
         .sum();
     let batch = opts.batch;
+    let inject_us = injected_stall_us();
     let start = std::time::Instant::now();
     let mut iters = 0usize;
-    for _ in 0..epochs {
-        let make: Box<dyn DataProducer> = Box::new(RandomProducer::new(dataset, in_len, lb_len, 7));
+    let mut epoch_losses = Vec::with_capacity(epochs);
+    for epoch in 0..epochs {
+        let make: Box<dyn DataProducer> =
+            Box::new(RandomProducer::new(dataset, in_len, lb_len, epoch_seed(epoch)));
         let queue = BatchQueue::spawn(make, batch, 2);
+        let mut loss_sum = 0f64;
+        let mut in_epoch = 0usize;
         while let Some(b) = queue.next() {
             model.bind_batch(&b.input, &b.label)?;
-            model.exec.try_train_iteration()?;
-            iters += 1;
+            loss_sum += model.exec.try_train_iteration()? as f64;
+            in_epoch += 1;
+            if inject_us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(inject_us));
+            }
         }
-        // epoch boundary, as in session::run_training: calibrated swap
-        // tuning reacts to the stall telemetry this epoch accrued
+        iters += in_epoch;
+        epoch_losses.push(if in_epoch > 0 { (loss_sum / in_epoch as f64) as f32 } else { f32::NAN });
+        // epoch boundary, as in session::run_training: snapshot the swap
+        // counters for the per-epoch trajectory, then let calibrated
+        // tuning react to the stall telemetry this epoch accrued
         if let Some(sw) = model.exec.swap_mut() {
+            sw.mark_epoch();
             sw.adapt_depth();
         }
     }
-    Ok((model, start.elapsed().as_secs_f64(), iters))
+    Ok((model, start.elapsed().as_secs_f64(), iters, epoch_losses))
 }
 
 /// Markdown-ish table printer.
@@ -136,27 +204,49 @@ impl Table {
     pub fn row(&mut self, cells: Vec<String>) {
         self.rows.push(cells);
     }
-    pub fn print(&self) {
-        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+
+    /// Render to a string (tested directly; `print` is the thin shell).
+    /// Column widths cover the *widest* row, so a row longer than the
+    /// header list gets its own columns instead of silently reusing the
+    /// last header width, and an empty header list renders the rows
+    /// without a header rule rather than underflowing.
+    pub fn render(&self) -> String {
+        let ncols = self.rows.iter().map(|r| r.len()).fold(self.headers.len(), usize::max);
+        if ncols == 0 {
+            return String::new();
+        }
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.headers.iter().enumerate() {
+            widths[i] = h.len();
+        }
         for r in &self.rows {
             for (i, c) in r.iter().enumerate() {
-                if i < widths.len() {
-                    widths[i] = widths[i].max(c.len());
-                }
+                widths[i] = widths[i].max(c.len());
             }
         }
-        let line = |cells: &[String]| {
+        let line = |cells: &[String]| -> String {
             let mut s = String::new();
             for (i, c) in cells.iter().enumerate() {
-                s.push_str(&format!("{:>w$}  ", c, w = widths[i.min(widths.len() - 1)]));
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
             }
-            println!("{}", s.trim_end());
+            s.trim_end().to_string()
         };
-        line(&self.headers);
-        println!("{}", "-".repeat(widths.iter().sum::<usize>() + widths.len() * 2));
-        for r in &self.rows {
-            line(r);
+        let mut out = String::new();
+        if !self.headers.is_empty() {
+            out.push_str(&line(&self.headers));
+            out.push('\n');
+            out.push_str(&"-".repeat(widths.iter().sum::<usize>() + widths.len() * 2));
+            out.push('\n');
         }
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
     }
 }
 
@@ -166,4 +256,69 @@ pub fn fmt_mib(bytes: usize) -> String {
 
 pub fn fmt_kib(bytes: usize) -> String {
     format!("{:.0}", bytes as f64 / 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DataProducer;
+
+    #[test]
+    fn empty_table_renders_nothing() {
+        // regression: `widths.len() - 1` underflowed on an empty header
+        // list before rows were even considered
+        assert_eq!(Table::new(&[]).render(), "");
+    }
+
+    #[test]
+    fn headerless_rows_render_without_rule() {
+        let mut t = Table::new(&[]);
+        t.row(vec!["a".into(), "bb".into()]);
+        t.row(vec!["ccc".into(), "d".into()]);
+        let out = t.render();
+        assert_eq!(out, "  a  bb\nccc   d\n");
+    }
+
+    #[test]
+    fn overlong_row_gets_its_own_columns() {
+        // regression: cells past the last header silently shared the
+        // last header's width
+        let mut t = Table::new(&["h"]);
+        t.row(vec!["x".into(), "long-cell".into()]);
+        let out = t.render();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines[0], "h");
+        // separator sized for both columns, not just the header's
+        assert_eq!(lines[1].len(), 1 + "long-cell".len() + 2 * 2);
+        assert_eq!(lines[2], "x  long-cell");
+    }
+
+    #[test]
+    fn ragged_short_rows_render() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+        t.row(vec!["2".into(), "3".into()]);
+        let out = t.render();
+        assert!(out.lines().count() == 4, "{out:?}");
+    }
+
+    #[test]
+    fn epoch_seeds_are_distinct_and_anchored() {
+        // epoch 0 keeps the historical seed (bench-number continuity)
+        assert_eq!(epoch_seed(0), 7);
+        let seeds: Vec<u64> = (0..16).map(epoch_seed).collect();
+        for i in 0..seeds.len() {
+            for j in (i + 1)..seeds.len() {
+                assert_ne!(seeds[i], seeds[j], "epochs {i} and {j} share a data seed");
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_seeds_change_the_batch_stream() {
+        let mut e0 = RandomProducer::new(8, 16, 4, epoch_seed(0));
+        let mut e1 = RandomProducer::new(8, 16, 4, epoch_seed(1));
+        let same = (0..8).all(|i| e0.sample(i).input == e1.sample(i).input);
+        assert!(!same, "epoch 1 replays epoch 0's batches");
+    }
 }

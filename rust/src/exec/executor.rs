@@ -520,6 +520,14 @@ impl Executor {
         self.swap.as_ref().map(|s| s.stats)
     }
 
+    /// Per-epoch swap-stat deltas — one entry per epoch boundary the
+    /// training loop marked (None when no budget was set). The
+    /// cumulative whole-run counters stay in [`Executor::swap_stats`];
+    /// this is the trajectory view the perf harness records.
+    pub fn swap_epoch_stats(&self) -> Option<Vec<SwapStats>> {
+        self.swap.as_ref().map(|s| s.epoch_stats())
+    }
+
     /// Current in-flight prefetch depth (None when no budget was set).
     pub fn swap_depth(&self) -> Option<usize> {
         self.swap.as_ref().map(|s| s.depth())

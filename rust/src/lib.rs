@@ -37,6 +37,7 @@
 )]
 
 pub mod backend;
+pub mod bench_report;
 pub mod bench_util;
 pub mod dataset;
 pub mod compiler;

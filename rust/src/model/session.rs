@@ -807,9 +807,11 @@ where
                 None => println!("epoch {:>3}: loss {:.6} ({} iters)", epoch + 1, mean, batches),
             }
         }
-        // epoch boundary: let calibrated swap tuning react to the stall
+        // epoch boundary: snapshot the swap counters for the per-epoch
+        // trajectory, then let calibrated swap tuning react to the stall
         // telemetry this epoch accrued (no-op under Fixed / no swap)
         if let Some(sw) = model.exec.swap_mut() {
+            sw.mark_epoch();
             sw.adapt_depth();
         }
         if !stopped {

@@ -177,6 +177,21 @@ impl SwapStats {
     pub fn write_stall_ms(&self) -> f64 {
         self.write_stall_ns as f64 / 1e6
     }
+
+    /// Counter-wise difference against an earlier snapshot of the same
+    /// run — the per-epoch deltas behind [`SwapExec::epoch_stats`].
+    /// Saturating: a reset (new run) never underflows into garbage.
+    pub fn delta(&self, prev: &SwapStats) -> SwapStats {
+        SwapStats {
+            evictions: self.evictions.saturating_sub(prev.evictions),
+            prefetches: self.prefetches.saturating_sub(prev.prefetches),
+            sync_fetches: self.sync_fetches.saturating_sub(prev.sync_fetches),
+            bytes_out: self.bytes_out.saturating_sub(prev.bytes_out),
+            bytes_in: self.bytes_in.saturating_sub(prev.bytes_in),
+            read_stall_ns: self.read_stall_ns.saturating_sub(prev.read_stall_ns),
+            write_stall_ns: self.write_stall_ns.saturating_sub(prev.write_stall_ns),
+        }
+    }
 }
 
 fn ewma_update(slot: &mut f64, sample: f64, alpha: f64) {
@@ -256,6 +271,10 @@ pub struct SwapExec {
     /// Stall counter snapshot at the last `adapt_depth` call.
     last_stall_ns: u64,
     pub stats: SwapStats,
+    /// Cumulative-counter snapshots taken at each `mark_epoch` call —
+    /// the perf harness reads the trajectory as per-epoch deltas
+    /// (`epoch_stats`) instead of only whole-run totals.
+    epoch_marks: Vec<SwapStats>,
 }
 
 impl SwapExec {
@@ -493,6 +512,7 @@ impl SwapExec {
             iter_start: None,
             last_stall_ns: 0,
             stats: SwapStats::default(),
+            epoch_marks: Vec::new(),
         })
     }
 
@@ -752,6 +772,27 @@ impl SwapExec {
             self.depth = (self.depth * 2).min(self.entries.len().max(PREFETCH_DEPTH));
         }
         self.last_stall_ns = self.stats.stall_ns();
+    }
+
+    /// Record an epoch boundary: snapshot the cumulative counters so
+    /// per-epoch deltas stay recoverable. The shared training loop
+    /// (`session::run_training`) and the bench harness call this right
+    /// before `adapt_depth` at every epoch boundary.
+    pub fn mark_epoch(&mut self) {
+        self.epoch_marks.push(self.stats);
+    }
+
+    /// Per-epoch [`SwapStats`] deltas, one entry per `mark_epoch` call —
+    /// the trajectory view of the counters (a regression confined to a
+    /// late epoch is invisible in whole-run totals dominated by warmup).
+    pub fn epoch_stats(&self) -> Vec<SwapStats> {
+        let mut prev = SwapStats::default();
+        let mut out = Vec::with_capacity(self.epoch_marks.len());
+        for mark in &self.epoch_marks {
+            out.push(mark.delta(&prev));
+            prev = *mark;
+        }
+        out
     }
 
     /// Current in-flight fetch budget.

@@ -1,0 +1,305 @@
+//! Perf-harness suite: the hand-rolled JSON emitter must round-trip
+//! (golden snapshot included), the diff gate must fire on a synthetic
+//! regression and stay quiet inside the threshold, a missing baseline
+//! must not fail a first run, non-comparable baselines (hand-seeded or
+//! differently-sized) must stay informational — plus the two bench-path
+//! regressions the harness would have caught: every epoch must train on
+//! a fresh batch sequence, and the swap runtime must expose per-epoch
+//! stat snapshots that sum back to the cumulative counters.
+
+use std::path::PathBuf;
+
+use nntrainer::bench_report::{
+    diff, finish_in, BenchReport, Gate, Metric, Source,
+};
+use nntrainer::bench_util::{budget_profile, nntrainer_profile, plan, train_random_run};
+use nntrainer::graph::NodeDesc;
+use nntrainer::layers::Props;
+use nntrainer::runtime::SwapStats;
+
+fn node(name: &str, ltype: &str, pairs: &[(&str, &str)]) -> NodeDesc {
+    NodeDesc::new(name, ltype, Props::from_pairs(pairs.iter().copied()))
+}
+
+fn mlp() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "1:1:64")]),
+        node("h0", "fully_connected", &[("unit", "32"), ("activation", "relu")]),
+        node("out", "fully_connected", &[("unit", "4")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+/// Conv stack whose idle activations dominate — forces a swap plan at a
+/// 70% budget (the swap-equivalence suite's classic offload case).
+fn conv_stack() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "4:16:16")]),
+        node("c0", "conv2d", &[("filters", "16"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("c1", "conv2d", &[("filters", "16"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("c2", "conv2d", &[("filters", "16"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("flat", "flatten", &[]),
+        node("fc", "fully_connected", &[("unit", "10")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+fn sample_report() -> BenchReport {
+    let mut r = BenchReport::new("sample", 32);
+    r.push(
+        "LeNet-5/gapfit/host/fixed/async",
+        vec![
+            Metric::lower("step_latency_ms", 12.5),
+            Metric::higher("iters_per_s", 80.0),
+            Metric::lower("frag_pct", 0.0),
+            Metric::info("depth", 2.0),
+        ],
+    );
+    r.push(
+        "quoted \"name\" \\ with unicode Δ",
+        vec![Metric::lower("advised_mib", 3.75), Metric::info("nan_metric", f64::NAN)],
+    );
+    r
+}
+
+// ------------------------------------------------------------ emitter
+
+#[test]
+fn json_round_trips() {
+    let r = sample_report();
+    let text = r.to_json();
+    let back = BenchReport::from_json(&text).expect("round-trip parse");
+    assert_eq!(back.name, r.name);
+    assert_eq!(back.dataset, r.dataset);
+    assert_eq!(back.source, Source::Measured);
+    assert_eq!(back.rows.len(), r.rows.len());
+    for (a, b) in r.rows.iter().zip(back.rows.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.metrics.len(), b.metrics.len());
+        for (ma, mb) in a.metrics.iter().zip(b.metrics.iter()) {
+            assert_eq!(ma.name, mb.name);
+            assert_eq!(ma.gate, mb.gate);
+            if ma.value.is_finite() {
+                assert_eq!(ma.value, mb.value, "{}/{}", a.id, ma.name);
+            } else {
+                // non-finite values round-trip through JSON null
+                assert!(mb.value.is_nan());
+            }
+        }
+    }
+    // and a second emit is byte-identical (stable snapshots diff cleanly)
+    assert_eq!(text, back.to_json());
+}
+
+#[test]
+fn golden_snapshot_parses() {
+    // hand-written in the committed-baseline shape: whitespace quirks,
+    // escapes, a seeded source, an integer-valued metric and a null
+    let golden = r#"{
+        "name": "fig9", "dataset": 0, "source": "seeded",
+        "rows": [
+            { "id": "Model A (Linear)",
+              "metrics": [
+                { "name": "pool_mib", "value": 183, "gate": "lower" },
+                { "name": "ratio_incl_tf_x", "value": 3.25, "gate": "info" },
+                { "name": "quoteA\"esc\"", "value": null, "gate": "higher" }
+              ] }
+        ]
+    }"#;
+    let r = BenchReport::from_json(golden).expect("golden parses");
+    assert_eq!(r.name, "fig9");
+    assert_eq!(r.dataset, 0);
+    assert_eq!(r.source, Source::Seeded);
+    assert_eq!(r.rows.len(), 1);
+    let ms = &r.rows[0].metrics;
+    assert_eq!(ms[0].value, 183.0);
+    assert_eq!(ms[0].gate, Gate::Lower);
+    assert_eq!(ms[2].name, "quoteA\"esc\"");
+    assert!(ms[2].value.is_nan());
+}
+
+#[test]
+fn malformed_json_is_a_loud_error() {
+    for bad in [
+        "",
+        "{",
+        "{\"name\": \"x\"}",
+        "{\"name\": \"x\", \"dataset\": -1, \"source\": \"measured\", \"rows\": []}",
+        "{\"name\": \"x\", \"dataset\": 1, \"source\": \"banana\", \"rows\": []}",
+        "{\"name\": \"x\", \"dataset\": 1, \"source\": \"measured\", \"rows\": [{}]}",
+        "{\"name\": \"x\", \"dataset\": 1, \"source\": \"measured\", \"rows\": []} trailing",
+    ] {
+        assert!(BenchReport::from_json(bad).is_err(), "accepted: {bad:?}");
+    }
+}
+
+// --------------------------------------------------------------- gate
+
+#[test]
+fn gate_fires_on_synthetic_regression() {
+    let base = sample_report();
+    // +12% step latency on one row: past the 10% default threshold
+    let mut cur = sample_report();
+    cur.rows[0].metrics[0].value = 12.5 * 1.12;
+    let d = diff(&base, &cur, 10.0);
+    let regs = d.regressions();
+    assert_eq!(regs.len(), 1, "{:?}", d.deltas);
+    assert_eq!(regs[0].metric, "step_latency_ms");
+    assert!(regs[0].change_pct > 10.0 && regs[0].change_pct < 14.0);
+    // the rendered table marks it
+    assert!(d.render().contains("REGRESSED"), "{}", d.render());
+}
+
+#[test]
+fn gate_quiet_inside_threshold() {
+    let base = sample_report();
+    let mut cur = sample_report();
+    cur.rows[0].metrics[0].value = 12.5 * 1.09; // +9% < 10%
+    assert!(diff(&base, &cur, 10.0).regressions().is_empty());
+    // and an identical run never regresses
+    assert!(diff(&base, &base, 10.0).regressions().is_empty());
+}
+
+#[test]
+fn gate_fires_on_throughput_drop() {
+    // higher-is-better metrics regress downward
+    let base = sample_report();
+    let mut cur = sample_report();
+    cur.rows[0].metrics[1].value = 80.0 * 0.85; // -15% iters/s
+    let regs_metric = {
+        let d = diff(&base, &cur, 10.0);
+        let regs = d.regressions();
+        assert_eq!(regs.len(), 1);
+        regs[0].metric.clone()
+    };
+    assert_eq!(regs_metric, "iters_per_s");
+}
+
+#[test]
+fn info_metrics_and_zero_baselines_never_gate() {
+    let base = sample_report();
+    let mut cur = sample_report();
+    cur.rows[0].metrics[3].value = 1000.0; // info: depth exploded
+    cur.rows[0].metrics[2].value = 50.0; // gated, but baseline frag is 0.0
+    cur.rows[1].metrics[1].value = 1.0; // baseline is NaN
+    assert!(diff(&base, &cur, 10.0).regressions().is_empty());
+}
+
+#[test]
+fn seeded_or_mismatched_baselines_are_informational() {
+    let mut seeded = sample_report();
+    seeded.source = Source::Seeded;
+    let mut cur = sample_report();
+    cur.rows[0].metrics[0].value = 1e6; // wildly regressed
+    let d = diff(&seeded, &cur, 10.0);
+    assert!(!d.gate_applies);
+    assert!(d.regressions().is_empty());
+    assert!(d.gate_note.is_some());
+
+    let base = sample_report(); // dataset 32
+    let mut cur2 = sample_report();
+    cur2.dataset = 128;
+    cur2.rows[0].metrics[0].value = 1e6;
+    let d2 = diff(&base, &cur2, 10.0);
+    assert!(!d2.gate_applies);
+    assert!(d2.regressions().is_empty());
+}
+
+#[test]
+fn row_churn_is_noted_not_gated() {
+    let base = sample_report();
+    let mut cur = sample_report();
+    cur.rows[0].id = "renamed".into();
+    let d = diff(&base, &cur, 10.0);
+    assert_eq!(d.missing_rows, vec!["LeNet-5/gapfit/host/fixed/async".to_string()]);
+    assert_eq!(d.new_rows, vec!["renamed".to_string()]);
+    assert!(d.regressions().is_empty());
+}
+
+// -------------------------------------------------------------- driver
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("nntrainer_bench_report_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    dir
+}
+
+#[test]
+fn first_run_tolerates_missing_baseline_then_diffs() {
+    let dir = temp_dir("first_run");
+    let path = dir.join("BENCH_sample.json");
+    let _ = std::fs::remove_file(&path);
+    let r = sample_report();
+    // no baseline: must not panic/exit, and must leave a valid snapshot
+    finish_in(&r, &dir);
+    let written = std::fs::read_to_string(&path).expect("snapshot written");
+    let parsed = BenchReport::from_json(&written).expect("snapshot parses");
+    assert_eq!(parsed.rows.len(), r.rows.len());
+    // second run now diffs against it — identical numbers, still alive
+    finish_in(&r, &dir);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn snapshot_overwrites_keep_latest_run() {
+    let dir = temp_dir("overwrite");
+    let path = dir.join("BENCH_sample.json");
+    let _ = std::fs::remove_file(&path);
+    let r = sample_report();
+    finish_in(&r, &dir);
+    let mut faster = sample_report();
+    faster.rows[0].metrics[0].value = 10.0; // improved — never gates
+    finish_in(&faster, &dir);
+    let latest = BenchReport::from_json(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(latest.rows[0].metrics[0].value, 10.0);
+    let _ = std::fs::remove_file(&path);
+}
+
+// ------------------------------------------------- bench-path regressions
+
+#[test]
+fn epochs_see_distinct_batches() {
+    // lr = 0 keeps the weights frozen, so the per-epoch mean loss is a
+    // pure function of the epoch's data: equal losses == replayed
+    // batches (the silent bug: every epoch re-seeded the producer with
+    // the same constant, so every epoch trained on epoch 0's sequence)
+    let (_m, _s, iters, losses) =
+        train_random_run(mlp(), &nntrainer_profile(4), 16, 3, 0.0, false).expect("train");
+    assert_eq!(losses.len(), 3);
+    assert_eq!(iters, 12);
+    assert_ne!(losses[0], losses[1], "epoch 1 replayed epoch 0's batches");
+    assert_ne!(losses[1], losses[2], "epoch 2 replayed epoch 1's batches");
+}
+
+#[test]
+fn swap_epoch_stats_sum_to_cumulative() {
+    let base = plan(conv_stack(), &nntrainer_profile(8)).expect("plan");
+    let target = base.pool_bytes * 75 / 100;
+    let (model, _secs, iters, _losses) =
+        train_random_run(conv_stack(), &budget_profile(8, target), 16, 2, 0.01, false)
+            .expect("train under budget");
+    assert!(iters >= 4, "expected 2 epochs x 2 iters, got {iters}");
+    let cum = model.exec.swap_stats().expect("swap runtime active");
+    assert!(cum.evictions > 0, "budget did not engage the swap runtime");
+    let per = model.exec.swap_epoch_stats().expect("swap runtime active");
+    assert_eq!(per.len(), 2, "one snapshot per epoch boundary");
+    let fields: [(&str, fn(&SwapStats) -> u64); 7] = [
+        ("evictions", |s| s.evictions),
+        ("prefetches", |s| s.prefetches),
+        ("sync_fetches", |s| s.sync_fetches),
+        ("bytes_out", |s| s.bytes_out),
+        ("bytes_in", |s| s.bytes_in),
+        ("read_stall_ns", |s| s.read_stall_ns),
+        ("write_stall_ns", |s| s.write_stall_ns),
+    ];
+    for (label, field) in fields {
+        assert_eq!(
+            per.iter().map(|s| field(s)).sum::<u64>(),
+            field(&cum),
+            "{label}: per-epoch deltas must partition the cumulative counters"
+        );
+    }
+    // both epochs actually moved bytes — the trajectory is per-epoch
+    assert!(per.iter().all(|s| s.bytes_out > 0), "{per:?}");
+}

@@ -237,31 +237,55 @@ fn run_sample(seed: u64, sample: usize, store: StoreKind, tuning: SwapTuning) {
     }
 }
 
+// The overrides fail loudly on anything unparseable: a typo'd CI matrix
+// cell silently falling back to the defaults would *look* like coverage
+// (green job, wrong seeds) — the same swallow-and-default bug class the
+// bench harness had in `bench_dataset`.
+
 fn env_seeds() -> Vec<u64> {
-    std::env::var("NNTRAINER_STRESS_SEEDS")
-        .ok()
-        .map(|s| {
-            s.split(',')
-                .filter_map(|p| p.trim().parse().ok())
-                .collect::<Vec<u64>>()
-        })
-        .filter(|v| !v.is_empty())
-        .unwrap_or_else(|| vec![20260731])
+    match std::env::var("NNTRAINER_STRESS_SEEDS") {
+        Ok(s) => {
+            let seeds: Vec<u64> = s
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().unwrap_or_else(|e| {
+                        panic!("NNTRAINER_STRESS_SEEDS part {p:?} is not a u64: {e}")
+                    })
+                })
+                .collect();
+            if seeds.is_empty() {
+                panic!("NNTRAINER_STRESS_SEEDS={s:?} names no seeds");
+            }
+            seeds
+        }
+        Err(std::env::VarError::NotPresent) => vec![20260731],
+        Err(e) => panic!("NNTRAINER_STRESS_SEEDS is set but unreadable: {e}"),
+    }
 }
 
 fn env_stores() -> Vec<StoreKind> {
-    match std::env::var("NNTRAINER_STRESS_STORE").as_deref() {
-        Ok("host") => vec![StoreKind::Host],
-        Ok("file") => vec![StoreKind::File],
-        _ => vec![StoreKind::Host, StoreKind::File],
+    match std::env::var("NNTRAINER_STRESS_STORE") {
+        Ok(v) => match v.trim() {
+            "host" => vec![StoreKind::Host],
+            "file" => vec![StoreKind::File],
+            "both" => vec![StoreKind::Host, StoreKind::File],
+            other => panic!("NNTRAINER_STRESS_STORE={other:?} (use host|file|both)"),
+        },
+        Err(std::env::VarError::NotPresent) => vec![StoreKind::Host, StoreKind::File],
+        Err(e) => panic!("NNTRAINER_STRESS_STORE is set but unreadable: {e}"),
     }
 }
 
 fn env_samples() -> usize {
-    std::env::var("NNTRAINER_STRESS_SAMPLES")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(6)
+    match std::env::var("NNTRAINER_STRESS_SAMPLES") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            Ok(_) => panic!("NNTRAINER_STRESS_SAMPLES must be > 0"),
+            Err(e) => panic!("NNTRAINER_STRESS_SAMPLES={v:?} is not a usize: {e}"),
+        },
+        Err(std::env::VarError::NotPresent) => 6,
+        Err(e) => panic!("NNTRAINER_STRESS_SAMPLES is set but unreadable: {e}"),
+    }
 }
 
 #[test]
