@@ -1,0 +1,171 @@
+//! Fleet simulation: a dozen "users" personalizing one shared backbone
+//! through [`FleetService`], under a budget that holds only a couple of
+//! head-state copies in RAM — the rest park in a secondary store and
+//! come back via the swap-aware round-robin.
+//!
+//! The narrative version of `benches/fleet_scale.rs`:
+//!
+//! * a vendor model is trained once and checkpointed;
+//! * the fleet compiles ONE `CompiledSession` with the backbone frozen
+//!   and loads the checkpoint into it;
+//! * each tenant's entire identity is its head Weight+OptState vector
+//!   (plus two step counters), swapped in and out of the shared pool;
+//! * the admission plan prices everything up front: pool once, a
+//!   state-vector sliver per user — vs a full session per user naively.
+
+use nntrainer::dataset::producer::{CachedProducer, Sample};
+use nntrainer::dataset::DataProducer;
+use nntrainer::fleet::{FleetConfig, FleetService, TenantSpec};
+use nntrainer::graph::NodeDesc;
+use nntrainer::layers::Props;
+use nntrainer::model::{DeviceProfile, Session, TrainSpec};
+use nntrainer::rng::Rng;
+use nntrainer::runtime::StoreKind;
+
+fn node(name: &str, ltype: &str, pairs: &[(&str, &str)]) -> NodeDesc {
+    NodeDesc::new(name, ltype, Props::from_pairs(pairs.iter().copied()))
+}
+
+fn net() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "2:8:8")]),
+        node("c0", "conv2d", &[("filters", "4"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("c1", "conv2d", &[("filters", "4"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("flat", "flatten", &[]),
+        node("head", "fully_connected", &[("unit", "6")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+fn main() -> nntrainer::Result<()> {
+    let batch = 4usize;
+    let in_len = 2 * 8 * 8;
+    let lb_len = 6;
+    let users = 12usize;
+
+    // ---- vendor model, checkpointed once -------------------------------
+    let mut vendor = Session::describe(net())
+        .optimizer("sgd", &[("learning_rate", "0.05"), ("momentum", "0.9")])
+        .configure(TrainSpec { batch: Some(batch), epochs: 2, ..Default::default() })
+        .compile_for(DeviceProfile::unconstrained())?;
+    let mut vrng = Rng::new(7);
+    let corpus: Vec<Sample> = (0..32)
+        .map(|_| {
+            let mut input = vec![0f32; in_len];
+            let mut label = vec![0f32; lb_len];
+            vrng.fill_uniform(&mut input, -1.0, 1.0);
+            vrng.fill_uniform(&mut label, 0.0, 1.0);
+            Sample { input, label }
+        })
+        .collect();
+    let make = move || -> Box<dyn DataProducer> { Box::new(CachedProducer::new(corpus.clone())) };
+    vendor.train(&make)?;
+    let ckpt = std::env::temp_dir().join("fleet_sim_vendor.nntr");
+    let ckpt_path = ckpt.to_string_lossy().into_owned();
+    vendor.save(&ckpt_path)?;
+
+    // ---- size the fleet ------------------------------------------------
+    let spec = TrainSpec {
+        batch: Some(batch),
+        freeze: vec!["c0".into(), "c1".into()],
+        ..Default::default()
+    };
+    let probe = FleetService::build(
+        net(),
+        "sgd",
+        &[("learning_rate", "0.05"), ("momentum", "0.9")],
+        spec.clone(),
+        DeviceProfile::unconstrained(),
+        FleetConfig {
+            checkpoint: Some(ckpt_path.clone()),
+            ..FleetConfig::new(usize::MAX / 2, vec!["head".into()])
+        },
+    )?;
+    let (shared, state, naive) = (
+        probe.admission().shared_pool_bytes,
+        probe.admission().tenant_state_bytes,
+        probe.admission().naive_session_bytes,
+    );
+    drop(probe);
+    let mib = |b: usize| b as f64 / (1024.0 * 1024.0);
+    println!(
+        "admission plan: shared pool {:.2} MiB, per-tenant state {:.1} KiB \
+         ({}x cheaper than a naive {:.2} MiB session per user)",
+        mib(shared),
+        state as f64 / 1024.0,
+        naive / state.max(1),
+        mib(naive)
+    );
+
+    // budget: the pool + TWO resident state copies — 12 users will churn
+    let budget = shared + 2 * state;
+    let mut fleet = FleetService::build(
+        net(),
+        "sgd",
+        &[("learning_rate", "0.05"), ("momentum", "0.9")],
+        spec,
+        DeviceProfile::unconstrained(),
+        FleetConfig {
+            checkpoint: Some(ckpt_path.clone()),
+            park_store: StoreKind::Host,
+            quantum: 2,
+            ..FleetConfig::new(budget, vec!["head".into()])
+        },
+    )?;
+    println!(
+        "fleet budget {:.2} MiB -> max {} resident tenants; the other {} park in the {} store\n",
+        mib(budget),
+        fleet.admission().max_resident,
+        users - fleet.admission().max_resident,
+        "host",
+    );
+
+    // ---- admit 12 users, run to completion -----------------------------
+    let mut ids = Vec::new();
+    for u in 0..users {
+        let seed = 0x1000 + u as u64;
+        let data: Vec<Sample> = {
+            let mut rng = Rng::new(seed ^ 0xDA7A);
+            (0..16)
+                .map(|_| {
+                    let mut input = vec![0f32; in_len];
+                    let mut label = vec![0f32; lb_len];
+                    rng.fill_uniform(&mut input, -1.0, 1.0);
+                    rng.fill_uniform(&mut label, 0.0, 1.0);
+                    Sample { input, label }
+                })
+                .collect()
+        };
+        ids.push(fleet.admit(TenantSpec {
+            seed,
+            epochs: 2,
+            make_producer: Box::new(move || Box::new(CachedProducer::new(data.clone()))),
+        }));
+    }
+    let stats = fleet.run()?;
+
+    println!("user   final loss");
+    for &id in &ids {
+        println!("  #{id:<3} {:.4}", fleet.tenant_loss(id).unwrap());
+    }
+    println!(
+        "\n{} tenants trained through one session: {} steps, {} context switches, \
+         {} parks / {} unparks ({} stalled), peak resident {:.2} MiB \
+         (naive for {} concurrent users: {:.2} MiB)",
+        stats.completed,
+        stats.steps,
+        stats.context_switches,
+        stats.parks,
+        stats.unparks,
+        stats.stalled_unparks,
+        mib(stats.peak_resident_bytes),
+        stats.peak_live_tenants,
+        mib(naive * stats.peak_live_tenants),
+    );
+    assert_eq!(stats.completed, users);
+    assert!(stats.parks > 0, "tight budget must park tenants");
+
+    let _ = std::fs::remove_file(&ckpt_path);
+    println!("FLEET SIM OK");
+    Ok(())
+}

@@ -1,0 +1,281 @@
+//! Fleet-scale stress bench: thousands of simulated tenants sharing one
+//! compiled backbone under a single global memory budget, with
+//! Poisson-ish arrival and churn, against the analytic cost of the
+//! naive one-session-per-user design.
+//!
+//! Scenario per store backend (host / file):
+//!
+//! * `NNTRAINER_FLEET_TENANTS` tenants (default 1000) arrive on an
+//!   exponential-gap clock (seeded, deterministic), each training its
+//!   own head for 1–3 epochs of `NNTRAINER_BENCH_DATASET` samples.
+//! * The fleet budget holds the shared pool plus a handful of resident
+//!   state copies — a small fraction of what the naive design would
+//!   need for the *peak concurrent* population — so tenants park and
+//!   unpark through the store constantly.
+//! * A seeded slice of finished tenants departs, freeing store slots
+//!   (churn), while new arrivals keep the run queue full.
+//!
+//! Reported per backend: step-latency p50/p99, steps/s, peak resident
+//! bytes vs the naive design's peak (exact planner numbers on both
+//! sides: measured pool + state buffers vs `peak-concurrent x
+//! naive_session_bytes`), and the park/unpark/stall telemetry.
+
+use std::time::Instant;
+
+use nntrainer::bench_report::{finish, BenchReport, Metric};
+use nntrainer::bench_util::{bench_dataset, Table};
+use nntrainer::dataset::producer::{CachedProducer, Sample};
+use nntrainer::dataset::DataProducer;
+use nntrainer::fleet::{FleetConfig, FleetService, TenantSpec, Tick};
+use nntrainer::graph::NodeDesc;
+use nntrainer::layers::Props;
+use nntrainer::model::{DeviceProfile, Session, TrainSpec};
+use nntrainer::rng::Rng;
+use nntrainer::runtime::StoreKind;
+
+fn node(name: &str, ltype: &str, pairs: &[(&str, &str)]) -> NodeDesc {
+    NodeDesc::new(name, ltype, Props::from_pairs(pairs.iter().copied()))
+}
+
+/// Small conv backbone + fc head — the personalization shape, kept
+/// small so the bench is tenant-bound, not FLOP-bound.
+fn net() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "2:8:8")]),
+        node("c0", "conv2d", &[("filters", "4"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("c1", "conv2d", &[("filters", "4"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("flat", "flatten", &[]),
+        node("head", "fully_connected", &[("unit", "6")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+fn spec(batch: usize) -> TrainSpec {
+    TrainSpec {
+        batch: Some(batch),
+        freeze: vec!["c0".into(), "c1".into()],
+        ..Default::default()
+    }
+}
+
+fn tenants_target() -> usize {
+    match std::env::var("NNTRAINER_FLEET_TENANTS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            Ok(_) => panic!("NNTRAINER_FLEET_TENANTS must be > 0"),
+            Err(e) => panic!("NNTRAINER_FLEET_TENANTS={v:?} is not a usize: {e}"),
+        },
+        Err(_) => 1000,
+    }
+}
+
+struct CaseResult {
+    tenants: usize,
+    steps: u64,
+    wall_s: f64,
+    p50_us: f64,
+    p99_us: f64,
+    peak_mib: f64,
+    naive_mib: f64,
+    parks: u64,
+    unparks: u64,
+    stalled: u64,
+    yields: u64,
+    read_stall_ms: f64,
+    departed: usize,
+}
+
+fn run_case(store: StoreKind, tenants: usize, samples_per_tenant: usize, seed: u64) -> CaseResult {
+    let batch = 4usize;
+    let in_len = 2 * 8 * 8;
+    let lb_len = 6;
+
+    // Budget: the shared pool + 8 resident state copies. Everything
+    // beyond that lives in the store — the point of the exercise.
+    let probe = FleetService::build(
+        net(),
+        "sgd",
+        &[("learning_rate", "0.05")],
+        spec(batch),
+        DeviceProfile::unconstrained(),
+        FleetConfig::new(usize::MAX / 2, vec!["head".into()]),
+    )
+    .unwrap();
+    let (shared, state) = (
+        probe.admission().shared_pool_bytes,
+        probe.admission().tenant_state_bytes,
+    );
+    drop(probe);
+
+    let mut fleet = FleetService::build(
+        net(),
+        "sgd",
+        &[("learning_rate", "0.05")],
+        spec(batch),
+        DeviceProfile::unconstrained(),
+        FleetConfig {
+            park_store: store,
+            quantum: 4,
+            max_active: Some(64),
+            ..FleetConfig::new(shared + 8 * state, vec!["head".into()])
+        },
+    )
+    .unwrap();
+
+    // Exponential-gap arrival ticks: tenant k arrives after
+    // sum of k draws of (-ln U) / lambda scheduler ticks.
+    let mut rng = Rng::new(seed);
+    let lambda = 0.5f64; // arrivals per tick
+    let mut arrivals: Vec<f64> = Vec::with_capacity(tenants);
+    let mut t = 0.0f64;
+    for _ in 0..tenants {
+        let u = f64::from(rng.next_f32()).max(1e-9);
+        t += -u.ln() / lambda;
+        arrivals.push(t);
+    }
+
+    let mk_tenant = |rng: &mut Rng| -> TenantSpec {
+        let seed = rng.next_u64();
+        let epochs = 1 + (rng.next_u64() % 3) as usize;
+        let n = samples_per_tenant;
+        TenantSpec {
+            seed,
+            epochs,
+            make_producer: Box::new(move || {
+                let mut drng = Rng::new(seed ^ 0xDA7A);
+                let data: Vec<Sample> = (0..n)
+                    .map(|_| {
+                        let mut input = vec![0f32; in_len];
+                        let mut label = vec![0f32; lb_len];
+                        drng.fill_uniform(&mut input, -1.0, 1.0);
+                        drng.fill_uniform(&mut label, 0.0, 1.0);
+                        Sample { input, label }
+                    })
+                    .collect();
+                Box::new(CachedProducer::new(data)) as Box<dyn DataProducer>
+            }),
+        }
+    };
+
+    let t0 = Instant::now();
+    let mut arrived = 0usize;
+    let mut ticks = 0f64;
+    let mut finished_pool: Vec<usize> = Vec::new();
+    let mut departed = 0usize;
+    loop {
+        while arrived < tenants && arrivals[arrived] <= ticks {
+            fleet.admit(mk_tenant(&mut rng));
+            arrived += 1;
+        }
+        match fleet.tick().unwrap() {
+            Tick::Stepped { tenant, finished, .. } => {
+                if finished {
+                    finished_pool.push(tenant);
+                    // churn: roughly half of finishers depart right
+                    // away, freeing their store slot
+                    if rng.next_u64() % 2 == 0 {
+                        let k = (rng.next_u64() as usize) % finished_pool.len();
+                        let victim = finished_pool.swap_remove(k);
+                        fleet.depart(victim).unwrap();
+                        departed += 1;
+                    }
+                }
+            }
+            Tick::Yielded { .. } => {}
+            Tick::Idle => {
+                if arrived >= tenants {
+                    break;
+                }
+                // quiet gap before the next arrival: advance the clock
+                ticks = arrivals[arrived];
+                continue;
+            }
+        }
+        ticks += 1.0;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let stats = fleet.stats().clone();
+    assert_eq!(stats.admitted, tenants);
+    assert_eq!(stats.completed, tenants, "every admitted tenant must finish");
+    let naive_bytes = fleet
+        .admission()
+        .naive_total(stats.peak_live_tenants);
+    CaseResult {
+        tenants,
+        steps: stats.steps,
+        wall_s,
+        p50_us: fleet.step_latency_percentile(50.0) as f64 / 1e3,
+        p99_us: fleet.step_latency_percentile(99.0) as f64 / 1e3,
+        peak_mib: stats.peak_resident_bytes as f64 / (1024.0 * 1024.0),
+        naive_mib: naive_bytes as f64 / (1024.0 * 1024.0),
+        parks: stats.parks,
+        unparks: stats.unparks,
+        stalled: stats.stalled_unparks,
+        yields: stats.yields,
+        read_stall_ms: stats.read_stall_ns as f64 / 1e6,
+        departed,
+    }
+}
+
+fn main() {
+    let dataset = bench_dataset();
+    let tenants = tenants_target();
+    println!(
+        "fleet_scale: {tenants} tenants x {dataset} samples/epoch \
+         (NNTRAINER_FLEET_TENANTS / NNTRAINER_BENCH_DATASET)\n"
+    );
+
+    let mut report = BenchReport::new("fleet_scale", dataset);
+    let mut table = Table::new(&[
+        "store", "tenants", "steps", "p50 us", "p99 us", "steps/s", "peak MiB", "naive MiB",
+        "parks", "unparks", "stalled", "stall ms",
+    ]);
+
+    for (store, id) in [(StoreKind::Host, "fleet/host"), (StoreKind::File, "fleet/file")] {
+        let r = run_case(store, tenants, dataset, 0xF1EE7);
+        let steps_per_s = r.steps as f64 / r.wall_s.max(1e-9);
+        table.row(vec![
+            id.into(),
+            r.tenants.to_string(),
+            r.steps.to_string(),
+            format!("{:.1}", r.p50_us),
+            format!("{:.1}", r.p99_us),
+            format!("{:.0}", steps_per_s),
+            format!("{:.1}", r.peak_mib),
+            format!("{:.1}", r.naive_mib),
+            r.parks.to_string(),
+            r.unparks.to_string(),
+            r.stalled.to_string(),
+            format!("{:.1}", r.read_stall_ms),
+        ]);
+        report.push(
+            id,
+            vec![
+                Metric::info("tenants", r.tenants as f64),
+                Metric::info("steps", r.steps as f64),
+                Metric::lower("p50_step_us", r.p50_us),
+                Metric::lower("p99_step_us", r.p99_us),
+                Metric::higher("steps_per_s", steps_per_s),
+                Metric::lower("peak_resident_mib", r.peak_mib),
+                Metric::info("naive_peak_mib", r.naive_mib),
+                Metric::info("rss_vs_naive_pct", 100.0 * r.peak_mib / r.naive_mib.max(1e-9)),
+                Metric::info("parks", r.parks as f64),
+                Metric::info("unparks", r.unparks as f64),
+                Metric::info("stalled_unparks", r.stalled as f64),
+                Metric::info("yields", r.yields as f64),
+                Metric::lower("read_stall_ms", r.read_stall_ms),
+                Metric::info("departed", r.departed as f64),
+            ],
+        );
+    }
+
+    table.print();
+    println!(
+        "\npeak MiB = shared pool + state buffers actually allocated; naive MiB = \
+         peak-concurrent tenants x one full session pool (exact planner numbers \
+         on both sides). The gap is the tentpole: per-user marginal cost collapses \
+         from a session to a head-state vector."
+    );
+    finish(&report);
+}

@@ -505,6 +505,101 @@ impl Executor {
         Ok(count)
     }
 
+    /// Pool layout of the *persistent trainable state* owned by the
+    /// layers matching `prefixes` (tensor names are `layer:weight`):
+    /// every root `Weight` and `OptState` region, in table order. This
+    /// is exactly the set `reinit_weights_matching` re-initializes and
+    /// the optimizer mutates across iterations — gradients are transient
+    /// (zeroed at their first-write EO every iteration), so exporting
+    /// these regions plus the step counters captures a complete training
+    /// identity that can later be re-imported bitwise. A prefix matching
+    /// no weight tensor is an error, checked before anything is returned.
+    pub fn state_layout_matching(
+        &self,
+        prefixes: &[String],
+    ) -> Result<Vec<(String, crate::tensor::Region)>> {
+        let eligible = |s: &crate::tensor::TensorSpec| {
+            s.merged_into.is_none()
+                && !s.eos.is_empty()
+                && matches!(s.role, TensorRole::Weight | TensorRole::OptState)
+        };
+        let layer_of = |name: &str| name.split(':').next().unwrap_or("").to_string();
+        for p in prefixes {
+            let hit = self
+                .graph
+                .table
+                .iter()
+                .any(|s| eligible(s) && layer_of(&s.name).starts_with(p.as_str()));
+            if !hit {
+                return Err(Error::graph(format!(
+                    "state prefix `{p}` matches no weight tensor"
+                )));
+            }
+        }
+        let mut layout = Vec::new();
+        for s in self.graph.table.iter() {
+            if !eligible(s) {
+                continue;
+            }
+            let layer = layer_of(&s.name);
+            if !prefixes.iter().any(|p| layer.starts_with(p.as_str())) {
+                continue;
+            }
+            if let Some(r) = s.region {
+                layout.push((s.name.clone(), r));
+            }
+        }
+        Ok(layout)
+    }
+
+    /// Concatenate the pool contents of `layout`'s regions into `out`
+    /// (cleared first; capacity is reused, so steady-state exports are
+    /// allocation-free once `out` has grown to the layout's size).
+    pub fn export_state(&self, layout: &[(String, crate::tensor::Region)], out: &mut Vec<f32>) {
+        out.clear();
+        for (_, r) in layout {
+            out.extend_from_slice(self.pool.view(*r));
+        }
+    }
+
+    /// Write a previously exported concatenation back into `layout`'s
+    /// regions. `data` must be exactly the layout's total length.
+    pub fn import_state(
+        &self,
+        layout: &[(String, crate::tensor::Region)],
+        data: &[f32],
+    ) -> Result<()> {
+        let total: usize = layout.iter().map(|(_, r)| r.len).sum();
+        if data.len() != total {
+            return Err(Error::shape(format!(
+                "state import: {} f32s for a layout of {total}",
+                data.len()
+            )));
+        }
+        let mut off = 0usize;
+        for (_, r) in layout {
+            self.pool.view_mut(*r).copy_from_slice(&data[off..off + r.len]);
+            off += r.len;
+        }
+        Ok(())
+    }
+
+    /// The training-step counters that feed the optimizer: iterations
+    /// run (`RunCtx::iter`) and per-tensor apply calls (the `count`
+    /// argument optimizers like Adam bias-correct on). Together with the
+    /// `state_layout_matching` regions these make a tenant's training
+    /// identity fully restorable.
+    pub fn step_counters(&self) -> (u64, u64) {
+        (self.iter, self.apply_count)
+    }
+
+    /// Restore previously captured step counters (see
+    /// [`Executor::step_counters`]).
+    pub fn set_step_counters(&mut self, iter: u64, apply_count: u64) {
+        self.iter = iter;
+        self.apply_count = apply_count;
+    }
+
     pub fn steps(&self) -> &[(u32, StepOp)] {
         &self.steps
     }

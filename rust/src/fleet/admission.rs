@@ -1,0 +1,212 @@
+//! Admission control and parked-state storage for the fleet.
+//!
+//! * [`AdmissionPlan`] prices a tenant *before* the fleet runs it, by
+//!   reusing the planner's probe path (`plan_with`) — the same exact
+//!   tensor population the auto-batch search uses. It answers two
+//!   questions: what would the naive one-session-per-user design cost
+//!   (the bench's comparison baseline), and how many tenant state
+//!   copies fit under the global budget alongside the shared pool.
+//! * [`ParkingLot`] is the fleet's slice of the
+//!   [`SecondaryStore`](crate::runtime::SecondaryStore) machinery:
+//!   named per-tenant slots (keyed by `TenantId`), synchronous park
+//!   (the training thread owns the export anyway), and a background
+//!   unpark worker mirroring the swap engine's fetch worker so the
+//!   scheduler can overlap a cold tenant's store read with other
+//!   tenants' compute.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::compiler::plan_with;
+use crate::error::{Error, Result};
+use crate::graph::NodeDesc;
+use crate::layers::{builtin_factories, Props};
+use crate::model::{DeviceProfile, TrainSpec};
+use crate::optimizer;
+use crate::runtime::store::{SecondaryStore, StoreKind};
+
+/// The fleet's memory arithmetic, derived once at build.
+#[derive(Clone, Debug)]
+pub struct AdmissionPlan {
+    /// The global budget the fleet was built with.
+    pub budget_bytes: usize,
+    /// Pool bytes of the one shared session (backbone + activations +
+    /// head gradients/optstate) — paid once regardless of tenant count.
+    pub shared_pool_bytes: usize,
+    /// Bytes one tenant adds while RAM-resident: its head Weight +
+    /// OptState regions.
+    pub tenant_state_bytes: usize,
+    /// Pool bytes ONE standalone session would plan for this model —
+    /// what every additional user costs in the naive design.
+    pub naive_session_bytes: usize,
+    /// How many tenants may hold RAM state at once (the active tenant's
+    /// pool copy plus `max_resident - 1` parked-in-RAM buffers).
+    pub max_resident: usize,
+}
+
+impl AdmissionPlan {
+    /// Probe the model's marginal footprint and size the fleet.
+    ///
+    /// `shared_pool_bytes` comes from the already-compiled shared
+    /// session; the probe independently re-plans the same node set to
+    /// price the naive design, so the two are directly comparable.
+    #[allow(clippy::too_many_arguments)]
+    pub fn probe(
+        mut nodes: Vec<NodeDesc>,
+        optimizer_kind: &str,
+        optimizer_pairs: &[(&str, &str)],
+        spec: &TrainSpec,
+        profile: &DeviceProfile,
+        batch: usize,
+        shared_pool_bytes: usize,
+        state_len: usize,
+        budget_bytes: usize,
+    ) -> Result<AdmissionPlan> {
+        crate::model::session::apply_freeze(&mut nodes, &spec.freeze)?;
+        let opt = optimizer::create(
+            optimizer_kind,
+            &Props::from_pairs(optimizer_pairs.iter().copied()),
+        )?;
+        let opts = crate::model::session::resolve_opts(batch, spec, profile);
+        let naive_session_bytes =
+            plan_with(nodes, &opts, &builtin_factories(), opt.state_slots())?.pool_bytes;
+
+        let tenant_state_bytes = state_len * std::mem::size_of::<f32>();
+        if budget_bytes < shared_pool_bytes + tenant_state_bytes {
+            return Err(Error::Runtime(format!(
+                "fleet budget {budget_bytes} B too small: shared pool is \
+                 {shared_pool_bytes} B + one tenant state is {tenant_state_bytes} B"
+            )));
+        }
+        // The active tenant's state lives inside the shared pool (it IS
+        // the head regions), so the first resident tenant is free; every
+        // further one costs a full state buffer.
+        let max_resident = 1 + (budget_bytes - shared_pool_bytes) / tenant_state_bytes;
+        Ok(AdmissionPlan {
+            budget_bytes,
+            shared_pool_bytes,
+            tenant_state_bytes,
+            naive_session_bytes,
+            max_resident,
+        })
+    }
+
+    /// What the naive one-session-per-user design would hold for
+    /// `users` concurrent users.
+    pub fn naive_total(&self, users: usize) -> usize {
+        self.naive_session_bytes.saturating_mul(users)
+    }
+}
+
+enum Req {
+    Fetch { id: usize, buf: Vec<f32> },
+    Stop,
+}
+
+/// A completed async unpark.
+pub struct UnparkDone {
+    pub id: usize,
+    /// The tenant's state vector, or the store error.
+    pub data: Result<Vec<f32>>,
+    /// Wall time the store read took, for the scheduler's lookahead EWMA.
+    pub ns: u64,
+}
+
+/// Per-tenant parked-state storage with an async unpark worker.
+pub struct ParkingLot {
+    store: Arc<Mutex<Box<dyn SecondaryStore>>>,
+    kind: &'static str,
+    state_len: usize,
+    req_tx: Sender<Req>,
+    done_rx: Receiver<UnparkDone>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl ParkingLot {
+    pub fn new(kind: StoreKind, state_len: usize) -> Result<ParkingLot> {
+        let store = Arc::new(Mutex::new(kind.instance()?));
+        let kind_name = store.lock().unwrap().kind();
+        let (req_tx, req_rx) = channel::<Req>();
+        let (done_tx, done_rx) = channel::<UnparkDone>();
+        let wstore = Arc::clone(&store);
+        let worker = std::thread::Builder::new()
+            .name("nntrainer-fleet-unpark".into())
+            .spawn(move || {
+                while let Ok(Req::Fetch { id, mut buf }) = req_rx.recv() {
+                    buf.resize(state_len, 0.0);
+                    let t0 = Instant::now();
+                    let data = wstore.lock().unwrap().get(id, &mut buf).map(|()| buf);
+                    let ns = t0.elapsed().as_nanos() as u64;
+                    if done_tx.send(UnparkDone { id, data, ns }).is_err() {
+                        break;
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn fleet unpark thread: {e}")))?;
+        Ok(ParkingLot {
+            store,
+            kind: kind_name,
+            state_len,
+            req_tx,
+            done_rx,
+            worker: Some(worker),
+        })
+    }
+
+    /// Synchronously write a tenant's state into its slot.
+    pub fn park(&self, id: usize, data: &[f32]) -> Result<()> {
+        debug_assert_eq!(data.len(), self.state_len);
+        self.store.lock().unwrap().put(id, data)
+    }
+
+    /// Synchronously read a tenant's slot (retrieval path, not hot).
+    pub fn fetch_sync(&self, id: usize, out: &mut [f32]) -> Result<()> {
+        self.store.lock().unwrap().get(id, out)
+    }
+
+    /// Hand `buf` to the worker to fill from `id`'s slot; the result
+    /// arrives via [`try_done`](Self::try_done)/[`wait_done`](Self::wait_done).
+    pub fn request_unpark(&self, id: usize, buf: Vec<f32>) -> Result<()> {
+        self.req_tx
+            .send(Req::Fetch { id, buf })
+            .map_err(|_| Error::Runtime("fleet unpark thread died".into()))
+    }
+
+    /// Non-blocking poll for a completed unpark.
+    pub fn try_done(&self) -> Option<UnparkDone> {
+        self.done_rx.try_recv().ok()
+    }
+
+    /// Block for the next completed unpark.
+    pub fn wait_done(&self) -> Result<UnparkDone> {
+        self.done_rx
+            .recv()
+            .map_err(|_| Error::Runtime("fleet unpark thread died".into()))
+    }
+
+    /// Release a tenant's slot (departure).
+    pub fn free(&self, id: usize) -> Result<()> {
+        self.store.lock().unwrap().free(id);
+        Ok(())
+    }
+
+    /// Live store slots — every parked or finished tenant holds one.
+    pub fn slot_count(&self) -> usize {
+        self.store.lock().unwrap().slot_count()
+    }
+
+    pub fn kind(&self) -> &'static str {
+        self.kind
+    }
+}
+
+impl Drop for ParkingLot {
+    fn drop(&mut self) {
+        let _ = self.req_tx.send(Req::Stop);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}

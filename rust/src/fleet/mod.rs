@@ -1,0 +1,768 @@
+//! Fleet: a multi-tenant personalization service over one
+//! [`CompiledSession`].
+//!
+//! The paper's personalization story is one device, one user. A fleet
+//! simulation (or an edge gateway serving many users) inverts that:
+//! thousands of tenants, each wanting to fine-tune the same frozen
+//! backbone with a private head, under one global memory budget. Naively
+//! that is one `CompiledSession` per user — the backbone weights, the
+//! activation pool, and the optimizer state replicated N times.
+//!
+//! `FleetService` exploits what the freeze/personalize machinery already
+//! guarantees: with the backbone frozen, the *only* state that
+//! distinguishes tenant A from tenant B is
+//!
+//! * the head's `Weight` regions,
+//! * the head's `OptState` regions,
+//! * the step counters (`iter`, optimizer apply count).
+//!
+//! Everything else — frozen weights, activations, gradients — is either
+//! shared read-only or scratch that each training step fully rewrites
+//! (gradients are zeroed at their first-write EO each iteration). So the
+//! service keeps ONE compiled session and context-switches tenants by
+//! swapping a contiguous per-tenant state vector in and out of the pool
+//! via [`CompiledSession::export_head_state`] /
+//! [`CompiledSession::import_head_state`]. Idle tenants park that vector
+//! into a [`SecondaryStore`](crate::runtime::SecondaryStore); a
+//! background worker unparks it ahead of the tenant's next turn
+//! (see `scheduler.rs` for the swap-aware round-robin).
+//!
+//! Admission control (`admission.rs`) prices a tenant before letting it
+//! run: the shared pool is a one-off cost, each resident tenant adds
+//! exactly `state_len * 4` bytes, and the budget caps how many state
+//! copies may be RAM-resident at once. Arrivals beyond that wait in a
+//! queue; tenants beyond the *resident* cap get parked LRU-first.
+//!
+//! Bitwise contract: a tenant trained through the fleet produces weights
+//! identical to the same seed trained via a standalone
+//! `CompiledSession::personalize` (proven by `rust/tests/fleet_service.rs`).
+//! The service replicates `personalize()`'s pipeline exactly — same
+//! checkpoint load, same `reinit_weights_matching(head, seed)`, same
+//! batch assembly semantics as `BatchQueue` (fresh producer per epoch,
+//! sequential full batches, tail dropped, sample-major packing) — and
+//! saves/restores `(iter, apply_count)` across context switches so
+//! iteration-indexed optimizers see an uninterrupted step sequence.
+//! One obligation falls on the caller: producers must be
+//! index-deterministic (`sample(idx)` a pure function of `idx`), because
+//! a tenant may be parked mid-epoch and its producer rebuilt later.
+
+mod admission;
+mod scheduler;
+
+pub use admission::{AdmissionPlan, ParkingLot, UnparkDone};
+pub use scheduler::Tick;
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::dataset::DataProducer;
+use crate::error::{Error, Result};
+use crate::graph::NodeDesc;
+use crate::model::{checkpoint, CompiledSession, DeviceProfile, Session, TrainSpec};
+use crate::runtime::store::StoreKind;
+use crate::runtime::swap::ewma_update;
+use crate::tensor::Region;
+
+/// Tenants are addressed by their admission index.
+pub type TenantId = usize;
+
+/// EWMA smoothing for step-time and unpark-time estimates, matching the
+/// calibration style in `runtime/swap.rs`.
+const FLEET_EWMA_ALPHA: f64 = 0.2;
+
+/// Upper bound on how many queue positions ahead the scheduler will
+/// issue speculative unparks for.
+const MAX_LOOKAHEAD: usize = 8;
+
+/// Global configuration for a fleet.
+pub struct FleetConfig {
+    /// Total RAM budget in bytes: shared pool + resident tenant states.
+    pub budget_bytes: usize,
+    /// Layer-name prefixes forming the per-tenant head. Must cover every
+    /// trainable layer (enforced at build).
+    pub head: Vec<String>,
+    /// Optional vendor checkpoint loaded once into the shared session
+    /// (head regions excluded, exactly as `personalize()` does).
+    pub checkpoint: Option<String>,
+    /// Where idle tenants' state vectors park.
+    pub park_store: StoreKind,
+    /// Training steps a tenant runs per scheduler slot.
+    pub quantum: usize,
+    /// Cap on tenants admitted into the run queue at once; the rest
+    /// wait. Defaults to `4 * max_resident`, at least 8.
+    pub max_active: Option<usize>,
+}
+
+impl FleetConfig {
+    pub fn new(budget_bytes: usize, head: Vec<String>) -> Self {
+        FleetConfig {
+            budget_bytes,
+            head,
+            checkpoint: None,
+            park_store: StoreKind::Host,
+            quantum: 4,
+            max_active: None,
+        }
+    }
+}
+
+/// Per-tenant training request.
+pub struct TenantSpec {
+    /// Head reinit seed — the tenant's identity for reproducibility.
+    pub seed: u64,
+    /// Epochs to train before the tenant is finished.
+    pub epochs: usize,
+    /// Builds the tenant's data producer. Called once per epoch (the
+    /// same lifecycle `run_training` gives `BatchQueue`), and again if
+    /// the tenant was parked mid-epoch — hence the
+    /// index-determinism requirement.
+    pub make_producer: Box<dyn Fn() -> Box<dyn DataProducer>>,
+}
+
+/// Where a tenant's state lives right now.
+pub(crate) enum Phase {
+    /// Admitted, never activated; state materializes lazily via head
+    /// reinit at first activation.
+    Fresh,
+    /// State is live in the shared session's pool.
+    Active,
+    /// State held in a RAM-resident buffer, ready to import.
+    Resident(Vec<f32>),
+    /// State lives only in the parking store.
+    Parked,
+    /// An async unpark is in flight for this tenant.
+    Unparking,
+    /// Trained to completion; final state parked for retrieval.
+    Finished,
+    /// Gone; store slot freed.
+    Departed,
+}
+
+/// Public snapshot of a tenant's lifecycle phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TenantState {
+    Fresh,
+    Active,
+    Resident,
+    Parked,
+    Unparking,
+    Finished,
+    Departed,
+}
+
+pub(crate) struct Tenant {
+    spec: TenantSpec,
+    phase: Phase,
+    /// Saved executor counters — restored on activation so the step
+    /// sequence is indistinguishable from an uninterrupted run.
+    iter: u64,
+    apply_count: u64,
+    epoch: usize,
+    /// Sample cursor within the current epoch.
+    cursor: usize,
+    /// Live producer for the current epoch (dropped at epoch end and
+    /// whenever the tenant is parked).
+    producer: Option<Box<dyn DataProducer>>,
+    steps_done: u64,
+    /// Logical clock of the tenant's last slot — LRU key for parking.
+    last_ran: u64,
+    last_loss: f32,
+}
+
+/// Aggregate fleet telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct FleetStats {
+    pub admitted: usize,
+    pub completed: usize,
+    pub departed: usize,
+    pub steps: u64,
+    pub parks: u64,
+    pub unparks: u64,
+    /// Unparks the scheduler had to block on (lookahead missed).
+    pub stalled_unparks: u64,
+    /// Compute slots yielded because the tenant's state wasn't resident.
+    pub yields: u64,
+    pub read_stall_ns: u64,
+    pub bytes_out: u64,
+    pub bytes_in: u64,
+    pub context_switches: u64,
+    /// Peak of shared pool + resident state copies, in bytes.
+    pub peak_resident_bytes: usize,
+    /// Peak tenants simultaneously admitted-and-not-departed.
+    pub peak_live_tenants: usize,
+}
+
+/// The multi-tenant personalization service. See the module docs for
+/// the design; see `scheduler.rs` for the step loop.
+pub struct FleetService {
+    pub(crate) session: CompiledSession,
+    pub(crate) head: Vec<String>,
+    pub(crate) layout: Vec<(String, Region)>,
+    /// Total f32 length of one tenant's state vector.
+    pub(crate) state_len: usize,
+    pub(crate) plan: AdmissionPlan,
+    pub(crate) parking: ParkingLot,
+    pub(crate) tenants: Vec<Tenant>,
+    /// Round-robin order of admitted tenants.
+    pub(crate) run_queue: VecDeque<usize>,
+    /// Admitted but beyond `max_active` — waiting to enter the queue.
+    pub(crate) waiting: VecDeque<usize>,
+    /// Tenant whose state currently occupies the pool's head regions.
+    pub(crate) active: Option<usize>,
+    /// Recycled state buffers (capacity `state_len`).
+    pub(crate) spare: Vec<Vec<f32>>,
+    /// `Resident` + `Unparking` state copies currently holding RAM.
+    pub(crate) ram_copies: usize,
+    pub(crate) unparks_in_flight: usize,
+    /// Distinct state buffers ever allocated — drives peak RSS.
+    pub(crate) allocated_bufs: usize,
+    /// Budget-derived cap on `ram_copies` (`max_resident - 1`: the
+    /// active tenant's copy lives in the pool, not in a buffer).
+    pub(crate) max_ram_copies: usize,
+    pub(crate) max_active: usize,
+    pub(crate) quantum: usize,
+    /// Logical clock, bumped once per slot.
+    pub(crate) clock: u64,
+    /// Admitted and not departed.
+    pub(crate) live: usize,
+    pub(crate) ewma_step_ns: f64,
+    pub(crate) ewma_unpark_ns: f64,
+    pub(crate) stats: FleetStats,
+    pub(crate) step_latencies: Vec<u64>,
+    /// Reused batch-assembly buffers.
+    pub(crate) in_buf: Vec<f32>,
+    pub(crate) lb_buf: Vec<f32>,
+}
+
+impl FleetService {
+    /// Compile the shared session and size the fleet against `cfg`.
+    ///
+    /// `nodes`/`optimizer_*`/`spec`/`profile` describe the model exactly
+    /// as a standalone `Session::describe(...).optimizer(...)
+    /// .configure(spec).compile_for(profile)` would; `spec.freeze` must
+    /// freeze the backbone and `cfg.head` must cover every remaining
+    /// trainable layer, or tenants would share mutable state.
+    pub fn build(
+        nodes: Vec<NodeDesc>,
+        optimizer_kind: &str,
+        optimizer_pairs: &[(&str, &str)],
+        spec: TrainSpec,
+        profile: DeviceProfile,
+        cfg: FleetConfig,
+    ) -> Result<FleetService> {
+        if cfg.head.is_empty() {
+            return Err(Error::graph("fleet: FleetConfig::head is empty"));
+        }
+        if spec.freeze.is_empty() {
+            return Err(Error::graph(
+                "fleet: TrainSpec::freeze is empty — without a frozen backbone every \
+                 weight is per-tenant state and sharing a session saves nothing",
+            ));
+        }
+        if cfg.quantum == 0 {
+            return Err(Error::graph("fleet: quantum must be >= 1"));
+        }
+
+        let session = Session::describe(nodes.clone())
+            .optimizer(optimizer_kind, optimizer_pairs)
+            .configure(spec.clone())
+            .compile_for(profile.clone())?;
+        if let Some(path) = &cfg.checkpoint {
+            // Same load as personalize(): backbone from the vendor
+            // checkpoint, head regions skipped (reinit owns them).
+            checkpoint::load_matching(&session.model.exec, path, &cfg.head)?;
+        }
+
+        let layout = session.head_state_layout(&cfg.head)?;
+
+        // Isolation invariant: every trainable root weight must be under
+        // a head prefix, otherwise its updates leak across tenants.
+        for s in session.model.exec.graph.table.iter() {
+            if s.merged_into.is_some() || s.eos.is_empty() || !s.trainable {
+                continue;
+            }
+            if !matches!(s.role, crate::tensor::TensorRole::Weight) {
+                continue;
+            }
+            let layer = s.name.split(':').next().unwrap_or(&s.name);
+            if !cfg.head.iter().any(|p| layer.starts_with(p.as_str())) {
+                return Err(Error::graph(format!(
+                    "fleet: trainable layer `{layer}` is outside the head set — \
+                     tenants would share mutable state; freeze it or add it to \
+                     FleetConfig::head"
+                )));
+            }
+        }
+
+        let state_len: usize = layout.iter().map(|(_, r)| r.len).sum();
+        let shared_pool_bytes = session.model.report.pool_bytes;
+        let plan = AdmissionPlan::probe(
+            nodes,
+            optimizer_kind,
+            optimizer_pairs,
+            &spec,
+            &profile,
+            session.batch(),
+            shared_pool_bytes,
+            state_len,
+            cfg.budget_bytes,
+        )?;
+        let parking = ParkingLot::new(cfg.park_store, state_len)?;
+
+        let max_ram_copies = plan.max_resident - 1;
+        let max_active = cfg
+            .max_active
+            .unwrap_or_else(|| plan.max_resident.saturating_mul(4).max(8));
+
+        let mut svc = FleetService {
+            session,
+            head: cfg.head,
+            layout,
+            state_len,
+            plan,
+            parking,
+            tenants: Vec::new(),
+            run_queue: VecDeque::new(),
+            waiting: VecDeque::new(),
+            active: None,
+            spare: Vec::new(),
+            ram_copies: 0,
+            unparks_in_flight: 0,
+            allocated_bufs: 0,
+            max_ram_copies,
+            max_active,
+            quantum: cfg.quantum,
+            clock: 0,
+            live: 0,
+            ewma_step_ns: 0.0,
+            ewma_unpark_ns: 0.0,
+            stats: FleetStats::default(),
+            step_latencies: Vec::new(),
+            in_buf: Vec::new(),
+            lb_buf: Vec::new(),
+        };
+        svc.stats.peak_resident_bytes = svc.plan.shared_pool_bytes;
+        Ok(svc)
+    }
+
+    /// Admit a tenant. It enters the waiting queue and will be pulled
+    /// into the run queue as slots free up.
+    pub fn admit(&mut self, spec: TenantSpec) -> TenantId {
+        let id = self.tenants.len();
+        self.tenants.push(Tenant {
+            spec,
+            phase: Phase::Fresh,
+            iter: 0,
+            apply_count: 0,
+            epoch: 0,
+            cursor: 0,
+            producer: None,
+            steps_done: 0,
+            last_ran: 0,
+            last_loss: f32::NAN,
+        });
+        self.waiting.push_back(id);
+        self.stats.admitted += 1;
+        self.live += 1;
+        if self.live > self.stats.peak_live_tenants {
+            self.stats.peak_live_tenants = self.live;
+        }
+        id
+    }
+
+    /// Remove a tenant, releasing whatever its state occupies. Safe in
+    /// any phase; in-flight unparks are discarded on completion.
+    pub fn depart(&mut self, id: TenantId) -> Result<()> {
+        if matches!(self.tenants[id].phase, Phase::Departed) {
+            return Ok(());
+        }
+        let was_finished = matches!(self.tenants[id].phase, Phase::Finished);
+        let prev = std::mem::replace(&mut self.tenants[id].phase, Phase::Departed);
+        match prev {
+            Phase::Fresh => {}
+            Phase::Active => {
+                // Pool contents are garbage to everyone else; next
+                // activation overwrites them.
+                self.active = None;
+            }
+            Phase::Resident(buf) => {
+                self.recycle_buf(buf);
+                self.ram_copies -= 1;
+            }
+            Phase::Parked | Phase::Finished => self.parking.free(id)?,
+            // handle_done sees Departed and cleans up.
+            Phase::Unparking => {}
+            Phase::Departed => unreachable!(),
+        }
+        if !was_finished {
+            self.live -= 1;
+        }
+        self.stats.departed += 1;
+        Ok(())
+    }
+
+    /// Public phase snapshot.
+    pub fn tenant_state(&self, id: TenantId) -> TenantState {
+        match self.tenants[id].phase {
+            Phase::Fresh => TenantState::Fresh,
+            Phase::Active => TenantState::Active,
+            Phase::Resident(_) => TenantState::Resident,
+            Phase::Parked => TenantState::Parked,
+            Phase::Unparking => TenantState::Unparking,
+            Phase::Finished => TenantState::Finished,
+            Phase::Departed => TenantState::Departed,
+        }
+    }
+
+    /// Make `id` the tenant whose state occupies the pool. Exports the
+    /// previous occupant to a resident buffer, then either reinitializes
+    /// (first activation — this IS `personalize()`'s head reinit) or
+    /// imports the tenant's saved state.
+    pub(crate) fn activate(&mut self, id: TenantId) -> Result<()> {
+        if self.active == Some(id) {
+            return Ok(());
+        }
+        if let Some(prev) = self.active.take() {
+            if !matches!(self.tenants[prev].phase, Phase::Departed) {
+                let mut buf = self.take_buf();
+                self.session.export_head_state(&self.layout, &mut buf);
+                let (iter, applies) = self.session.model.exec.step_counters();
+                self.tenants[prev].iter = iter;
+                self.tenants[prev].apply_count = applies;
+                self.tenants[prev].phase = Phase::Resident(buf);
+                self.ram_copies += 1;
+                self.stats.context_switches += 1;
+            }
+        }
+        let prev = std::mem::replace(&mut self.tenants[id].phase, Phase::Active);
+        match prev {
+            Phase::Fresh => {
+                let seed = self.tenants[id].spec.seed;
+                self.session
+                    .model
+                    .exec
+                    .reinit_weights_matching(&self.head, seed)?;
+                self.session.model.exec.set_step_counters(0, 0);
+            }
+            Phase::Resident(buf) => {
+                self.session.import_head_state(&self.layout, &buf)?;
+                let (iter, applies) = (self.tenants[id].iter, self.tenants[id].apply_count);
+                self.session.model.exec.set_step_counters(iter, applies);
+                self.recycle_buf(buf);
+                self.ram_copies -= 1;
+            }
+            other => {
+                self.tenants[id].phase = other;
+                return Err(Error::Runtime(format!(
+                    "fleet internal: activate({id}) on a non-runnable tenant"
+                )));
+            }
+        }
+        self.active = Some(id);
+        // Enforce the residency budget: evict coldest copies to store.
+        while self.ram_copies > self.max_ram_copies {
+            if !self.park_lru_resident()? {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Park the least-recently-run `Resident` tenant. Returns false if
+    /// none exists (remaining RAM copies are all mid-unpark).
+    pub(crate) fn park_lru_resident(&mut self) -> Result<bool> {
+        let mut victim: Option<(usize, u64)> = None;
+        for (i, t) in self.tenants.iter().enumerate() {
+            if matches!(t.phase, Phase::Resident(_)) {
+                match victim {
+                    Some((_, best)) if t.last_ran >= best => {}
+                    _ => victim = Some((i, t.last_ran)),
+                }
+            }
+        }
+        let Some((i, _)) = victim else {
+            return Ok(false);
+        };
+        // Write to the store while the buffer is still owned by the
+        // phase, so an I/O error leaves the tenant intact.
+        if let Phase::Resident(buf) = &self.tenants[i].phase {
+            self.parking.park(i, buf)?;
+        }
+        let prev = std::mem::replace(&mut self.tenants[i].phase, Phase::Parked);
+        if let Phase::Resident(buf) = prev {
+            self.stats.parks += 1;
+            self.stats.bytes_out += (buf.len() * 4) as u64;
+            self.recycle_buf(buf);
+            self.ram_copies -= 1;
+        }
+        // A parked tenant mustn't hold a live producer (it may be
+        // rebuilt after unpark; index-determinism makes that safe).
+        self.tenants[i].producer = None;
+        Ok(true)
+    }
+
+    /// Issue an async unpark for a `Parked` tenant if a RAM slot is
+    /// available (optionally making room by parking an LRU resident).
+    /// Returns whether the unpark was issued.
+    pub(crate) fn try_issue_unpark(&mut self, id: TenantId, allow_park: bool) -> Result<bool> {
+        if !matches!(self.tenants[id].phase, Phase::Parked) {
+            return Ok(false);
+        }
+        if self.ram_copies >= self.max_ram_copies {
+            if !(allow_park && self.park_lru_resident()?) {
+                return Ok(false);
+            }
+        }
+        let buf = self.take_buf();
+        self.parking.request_unpark(id, buf)?;
+        self.tenants[id].phase = Phase::Unparking;
+        self.ram_copies += 1;
+        self.unparks_in_flight += 1;
+        self.stats.unparks += 1;
+        self.stats.bytes_in += (self.state_len * 4) as u64;
+        Ok(true)
+    }
+
+    /// Fold a completed unpark back into tenant state.
+    pub(crate) fn handle_done(&mut self, done: UnparkDone) -> Result<()> {
+        self.unparks_in_flight -= 1;
+        let buf = done.data?;
+        ewma_update(&mut self.ewma_unpark_ns, done.ns as f64, FLEET_EWMA_ALPHA);
+        match self.tenants[done.id].phase {
+            Phase::Unparking => {
+                self.tenants[done.id].phase = Phase::Resident(buf);
+                Ok(())
+            }
+            Phase::Departed => {
+                // Departed mid-flight; the store slot still needs freeing.
+                self.recycle_buf(buf);
+                self.ram_copies -= 1;
+                self.parking.free(done.id)
+            }
+            _ => Err(Error::Runtime(format!(
+                "fleet internal: unpark completed for tenant {} in an unexpected phase",
+                done.id
+            ))),
+        }
+    }
+
+    /// Run one compute slot (up to `quantum` training steps) for `id`.
+    /// Returns `(steps_taken, finished)`.
+    pub(crate) fn run_slot(&mut self, id: TenantId) -> Result<(u32, bool)> {
+        self.activate(id)?;
+        let batch = self.session.batch();
+        let (in_len, lb_len) = {
+            let g = &self.session.model.exec.graph;
+            let in_len: usize = g
+                .input_nodes
+                .iter()
+                .map(|&n| g.nodes[n].out_dims[0].feature_len())
+                .sum();
+            let lb_len: usize = g
+                .loss_nodes
+                .iter()
+                .map(|&n| g.nodes[n].in_dims[0].feature_len())
+                .sum();
+            (in_len, lb_len)
+        };
+        let mut steps: u32 = 0;
+        let mut finished = false;
+        while (steps as usize) < self.quantum {
+            {
+                let t = &mut self.tenants[id];
+                if t.epoch >= t.spec.epochs {
+                    finished = true;
+                    break;
+                }
+                if t.producer.is_none() {
+                    // Fresh producer per epoch — the lifecycle
+                    // BatchQueue::spawn gives run_training. The cursor
+                    // is NOT reset here: parking drops the producer
+                    // mid-epoch, and the rebuilt one must resume at the
+                    // saved cursor (index-determinism makes that exact) —
+                    // resetting would replay the epoch's first batches,
+                    // breaking the bitwise contract and, under frequent
+                    // parking, never reaching the epoch boundary at all.
+                    t.producer = Some((t.spec.make_producer)());
+                }
+                let producer = t.producer.as_mut().unwrap();
+                let n = producer.len();
+                if n < batch {
+                    return Err(Error::Runtime(format!(
+                        "fleet tenant {id}: no full batch produced \
+                         (producer len {n} < batch {batch})"
+                    )));
+                }
+                if t.cursor + batch > n {
+                    // Epoch boundary: tail dropped, exactly as
+                    // BatchQueue's `while i + batch <= n` loop.
+                    t.epoch += 1;
+                    t.producer = None;
+                    t.cursor = 0;
+                    if t.epoch >= t.spec.epochs {
+                        finished = true;
+                        break;
+                    }
+                    continue;
+                }
+                self.in_buf.resize(batch * in_len, 0.0);
+                self.lb_buf.resize(batch * lb_len, 0.0);
+                for k in 0..batch {
+                    let s = producer.sample(t.cursor + k);
+                    self.in_buf[k * in_len..(k + 1) * in_len].copy_from_slice(&s.input);
+                    self.lb_buf[k * lb_len..(k + 1) * lb_len].copy_from_slice(&s.label);
+                }
+                t.cursor += batch;
+            }
+            let t0 = Instant::now();
+            self.session.model.bind_batch(&self.in_buf, &self.lb_buf)?;
+            let loss = self.session.model.exec.try_train_iteration()?;
+            let ns = t0.elapsed().as_nanos() as u64;
+            self.step_latencies.push(ns);
+            ewma_update(&mut self.ewma_step_ns, ns as f64, FLEET_EWMA_ALPHA);
+            self.stats.steps += 1;
+            let t = &mut self.tenants[id];
+            t.steps_done += 1;
+            t.last_loss = loss;
+            steps += 1;
+        }
+        self.clock += 1;
+        self.tenants[id].last_ran = self.clock;
+        if finished {
+            self.finish_tenant(id)?;
+        }
+        Ok((steps, finished))
+    }
+
+    /// Export a completed tenant's final state straight to the store
+    /// and free its compute slot.
+    fn finish_tenant(&mut self, id: TenantId) -> Result<()> {
+        let mut buf = self.take_buf();
+        self.session.export_head_state(&self.layout, &mut buf);
+        let (iter, applies) = self.session.model.exec.step_counters();
+        self.tenants[id].iter = iter;
+        self.tenants[id].apply_count = applies;
+        self.parking.park(id, &buf)?;
+        self.stats.parks += 1;
+        self.stats.bytes_out += (buf.len() * 4) as u64;
+        self.recycle_buf(buf);
+        self.tenants[id].phase = Phase::Finished;
+        self.tenants[id].producer = None;
+        // The pool no longer holds anyone's state worth exporting.
+        self.active = None;
+        self.stats.completed += 1;
+        self.live -= 1;
+        Ok(())
+    }
+
+    /// Fetch a tenant's current head-state vector (weights + optimizer
+    /// state, in layout order), wherever it lives. Blocks on an
+    /// in-flight unpark if necessary.
+    pub fn tenant_head_state(&mut self, id: TenantId) -> Result<Vec<f32>> {
+        loop {
+            match self.tenant_state(id) {
+                TenantState::Active => {
+                    let mut out = Vec::new();
+                    self.session.export_head_state(&self.layout, &mut out);
+                    return Ok(out);
+                }
+                TenantState::Resident => {
+                    if let Phase::Resident(buf) = &self.tenants[id].phase {
+                        return Ok(buf.clone());
+                    }
+                    unreachable!();
+                }
+                TenantState::Parked | TenantState::Finished => {
+                    let mut out = vec![0f32; self.state_len];
+                    self.parking.fetch_sync(id, &mut out)?;
+                    return Ok(out);
+                }
+                TenantState::Unparking => {
+                    let done = self.parking.wait_done()?;
+                    self.handle_done(done)?;
+                }
+                TenantState::Fresh => {
+                    return Err(Error::Runtime(format!(
+                        "fleet tenant {id}: no state yet (never activated)"
+                    )));
+                }
+                TenantState::Departed => {
+                    return Err(Error::Runtime(format!("fleet tenant {id}: departed")));
+                }
+            }
+        }
+    }
+
+    pub(crate) fn take_buf(&mut self) -> Vec<f32> {
+        self.spare.pop().unwrap_or_else(|| {
+            self.allocated_bufs += 1;
+            let peak =
+                self.plan.shared_pool_bytes + self.allocated_bufs * self.plan.tenant_state_bytes;
+            if peak > self.stats.peak_resident_bytes {
+                self.stats.peak_resident_bytes = peak;
+            }
+            Vec::with_capacity(self.state_len)
+        })
+    }
+
+    pub(crate) fn recycle_buf(&mut self, buf: Vec<f32>) {
+        self.spare.push(buf);
+    }
+
+    /// Is any queued tenant runnable right now (no store round-trip)?
+    pub(crate) fn queue_has_runnable(&self) -> bool {
+        self.run_queue.iter().any(|&i| {
+            matches!(
+                self.tenants[i].phase,
+                Phase::Fresh | Phase::Active | Phase::Resident(_)
+            )
+        })
+    }
+
+    // ---- accessors -----------------------------------------------------
+
+    pub fn session(&self) -> &CompiledSession {
+        &self.session
+    }
+
+    pub fn admission(&self) -> &AdmissionPlan {
+        &self.plan
+    }
+
+    pub fn stats(&self) -> &FleetStats {
+        &self.stats
+    }
+
+    pub fn step_latencies_ns(&self) -> &[u64] {
+        &self.step_latencies
+    }
+
+    /// Latency percentile (q in 0..=100) over all recorded steps.
+    pub fn step_latency_percentile(&self, q: f64) -> u64 {
+        if self.step_latencies.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.step_latencies.clone();
+        sorted.sort_unstable();
+        let idx = ((q / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+
+    /// Last observed training loss for a tenant, if it has stepped.
+    pub fn tenant_loss(&self, id: TenantId) -> Option<f32> {
+        let l = self.tenants[id].last_loss;
+        if l.is_nan() {
+            None
+        } else {
+            Some(l)
+        }
+    }
+
+    pub fn live_tenants(&self) -> usize {
+        self.live
+    }
+
+    pub fn parked_slot_count(&self) -> usize {
+        self.parking.slot_count()
+    }
+}

@@ -1,0 +1,154 @@
+//! Swap-aware round-robin scheduling for the fleet.
+//!
+//! The scheduler's job is to keep the compute slot busy while tenant
+//! state shuttles to and from the parking store. The core moves:
+//!
+//! * **Yield, don't stall.** A tenant at the queue head whose state is
+//!   parked (or mid-unpark) gives up its turn: the scheduler issues the
+//!   unpark, rotates the tenant to the back, and runs whoever is
+//!   resident instead. It only blocks when *nobody* in the queue is
+//!   runnable — and that block is accounted as a stalled unpark in
+//!   [`FleetStats`](super::FleetStats).
+//! * **Calibrated lookahead.** After every compute slot the scheduler
+//!   issues speculative unparks for parked tenants near the queue head.
+//!   How far ahead is the ratio of the unpark-time EWMA to the
+//!   slot-time EWMA (step EWMA × quantum) — the same
+//!   smoothing-and-ratio trick the swap engine uses to derive prefetch
+//!   lead from measured store bandwidth (`runtime/swap.rs`, shared via
+//!   [`ewma_update`](crate::runtime::swap::ewma_update)). A slow store
+//!   pulls more tenants forward; a fast one keeps speculation minimal.
+
+use crate::error::{Error, Result};
+
+use super::{FleetService, FleetStats, TenantId, MAX_LOOKAHEAD};
+
+/// What one scheduler tick did.
+#[derive(Debug)]
+pub enum Tick {
+    /// Ran a compute slot for `tenant`.
+    Stepped {
+        tenant: TenantId,
+        steps: u32,
+        finished: bool,
+    },
+    /// `tenant` was at the head but not resident; its unpark is in
+    /// flight and its turn was forfeited.
+    Yielded { tenant: TenantId },
+    /// Nothing left to run — every admitted tenant finished or departed.
+    Idle,
+}
+
+impl FleetService {
+    /// One scheduling decision: drain finished unparks, top up the run
+    /// queue from the waiting line, then give the queue head its turn
+    /// (or rotate past it if its state isn't here yet).
+    pub fn tick(&mut self) -> Result<Tick> {
+        while let Some(done) = self.parking.try_done() {
+            self.handle_done(done)?;
+        }
+        while self.run_queue.len() < self.max_active {
+            match self.waiting.pop_front() {
+                Some(id) => self.run_queue.push_back(id),
+                None => break,
+            }
+        }
+        loop {
+            let Some(id) = self.run_queue.pop_front() else {
+                return Ok(Tick::Idle);
+            };
+            match self.tenant_state(id) {
+                // Drop out of rotation silently.
+                super::TenantState::Finished | super::TenantState::Departed => continue,
+                super::TenantState::Fresh
+                | super::TenantState::Active
+                | super::TenantState::Resident => {
+                    let (steps, finished) = self.run_slot(id)?;
+                    if !finished {
+                        self.run_queue.push_back(id);
+                    }
+                    self.lookahead_unparks()?;
+                    return Ok(Tick::Stepped {
+                        tenant: id,
+                        steps,
+                        finished,
+                    });
+                }
+                super::TenantState::Parked => {
+                    // Evicting a resident to fetch the head is only safe
+                    // when nobody is runnable (then no resident exists —
+                    // residents always sit in this queue). With a
+                    // runnable tenant present it would LIVELOCK at
+                    // max_ram_copies == 1: two parked tenants would take
+                    // turns evicting each other's freshly-unparked state
+                    // without ever running a slot.
+                    let runnable = self.queue_has_runnable();
+                    self.try_issue_unpark(id, !runnable)?;
+                    self.run_queue.push_back(id);
+                    self.stats.yields += 1;
+                    if !runnable {
+                        self.block_on_unpark()?;
+                    }
+                    return Ok(Tick::Yielded { tenant: id });
+                }
+                super::TenantState::Unparking => {
+                    self.run_queue.push_back(id);
+                    self.stats.yields += 1;
+                    if !self.queue_has_runnable() {
+                        self.block_on_unpark()?;
+                    }
+                    return Ok(Tick::Yielded { tenant: id });
+                }
+            }
+        }
+    }
+
+    /// Drive the fleet until every admitted tenant has finished (or
+    /// departed). Returns a snapshot of the stats.
+    pub fn run(&mut self) -> Result<FleetStats> {
+        while !matches!(self.tick()?, Tick::Idle) {}
+        Ok(self.stats.clone())
+    }
+
+    /// Block for one in-flight unpark — the no-runnable-tenant path.
+    /// Safety: both callers guarantee an unpark is in flight (the
+    /// `Parked` branch either issued one or found RAM full of
+    /// `Unparking` buffers; the `Unparking` branch is one itself).
+    fn block_on_unpark(&mut self) -> Result<()> {
+        if self.unparks_in_flight == 0 {
+            return Err(Error::Runtime(
+                "fleet internal: blocking with no unpark in flight".into(),
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        let done = self.parking.wait_done()?;
+        self.stats.read_stall_ns += t0.elapsed().as_nanos() as u64;
+        self.stats.stalled_unparks += 1;
+        self.handle_done(done)
+    }
+
+    /// Issue speculative unparks for parked tenants within the
+    /// lookahead window at the front of the run queue. Never evicts a
+    /// resident tenant to make room (speculation must not thrash).
+    fn lookahead_unparks(&mut self) -> Result<()> {
+        let l = self.lookahead();
+        let ids: Vec<usize> = self.run_queue.iter().take(l).copied().collect();
+        for id in ids {
+            if matches!(self.tenant_state(id), super::TenantState::Parked)
+                && !self.try_issue_unpark(id, false)?
+            {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// How many queue positions a store read spans, per the EWMAs.
+    fn lookahead(&self) -> usize {
+        if self.ewma_step_ns <= 0.0 || self.ewma_unpark_ns <= 0.0 {
+            return 1;
+        }
+        let slot_ns = (self.ewma_step_ns * self.quantum as f64).max(1.0);
+        let l = (self.ewma_unpark_ns / slot_ns).ceil() as usize;
+        l.clamp(1, MAX_LOOKAHEAD)
+    }
+}

@@ -43,6 +43,7 @@ pub mod dataset;
 pub mod compiler;
 pub mod error;
 pub mod exec;
+pub mod fleet;
 pub mod graph;
 pub mod layers;
 pub mod metrics;

@@ -44,6 +44,7 @@ use crate::optimizer::{self, Optimizer};
 use crate::planner::PlannerKind;
 use crate::runtime::calibrate::SwapTuning;
 use crate::runtime::store::StoreKind;
+use crate::tensor::Region;
 
 /// Batch used when neither the caller nor a memory budget decides one.
 pub const DEFAULT_BATCH: usize = 32;
@@ -427,7 +428,7 @@ impl ConfiguredSession {
 /// Set `trainable = false` on every layer whose name starts with one of
 /// `prefixes`; a prefix matching nothing is an error (a silently inert
 /// freeze is how backbones end up trained by accident).
-fn apply_freeze(nodes: &mut [NodeDesc], prefixes: &[String]) -> Result<usize> {
+pub(crate) fn apply_freeze(nodes: &mut [NodeDesc], prefixes: &[String]) -> Result<usize> {
     let mut frozen = 0usize;
     for p in prefixes {
         let mut hit = false;
@@ -446,7 +447,7 @@ fn apply_freeze(nodes: &mut [NodeDesc], prefixes: &[String]) -> Result<usize> {
 }
 
 /// Lower the two contracts onto the executable `CompileOpts`.
-fn resolve_opts(batch: usize, spec: &TrainSpec, profile: &DeviceProfile) -> CompileOpts {
+pub(crate) fn resolve_opts(batch: usize, spec: &TrainSpec, profile: &DeviceProfile) -> CompileOpts {
     CompileOpts {
         batch,
         training: spec.training,
@@ -615,6 +616,34 @@ impl CompiledSession {
     /// training).
     pub fn frozen_weight_names(&self) -> Vec<String> {
         self.model.exec.frozen_weight_names()
+    }
+
+    // ------------------------------------------- head state extract/restore
+    //
+    // The multi-tenant surface (`fleet::FleetService`): one compiled
+    // session is time-shared between tenants that differ only in their
+    // re-initialized head. A tenant's whole persistent identity is the
+    // head layers' Weight + OptState pool regions plus the executor's
+    // step counters; everything below (frozen backbone, activations,
+    // gradients) is shared or transient.
+
+    /// Pool layout of the per-tenant head state: every root `Weight` and
+    /// `OptState` region of the layers matching `prefixes`, in table
+    /// order (`Executor::state_layout_matching`). Stable for the
+    /// lifetime of the compiled session.
+    pub fn head_state_layout(&self, prefixes: &[String]) -> Result<Vec<(String, Region)>> {
+        self.model.exec.state_layout_matching(prefixes)
+    }
+
+    /// Concatenate the head state described by `layout` into `out`
+    /// (cleared first; capacity reused).
+    pub fn export_head_state(&self, layout: &[(String, Region)], out: &mut Vec<f32>) {
+        self.model.exec.export_state(layout, out)
+    }
+
+    /// Restore a previously exported head state bitwise.
+    pub fn import_head_state(&mut self, layout: &[(String, Region)], data: &[f32]) -> Result<()> {
+        self.model.exec.import_state(layout, data)
     }
 
     /// Train for the spec's epochs.

@@ -1,0 +1,117 @@
+//! Steady-state allocation audit for the swap workers.
+//!
+//! The swap engine's contract (DESIGN.md §Swap runtime) is that
+//! steady-state swapping is allocation-free: staging buffers recycle
+//! through the fetch worker, store slots are reused across iterations,
+//! and the evict worker reads pool spans in place. This module makes
+//! that contract *testable* without taking a dependency: a counting
+//! [`std::alloc::GlobalAlloc`] wrapper that a test binary installs as
+//! its `#[global_allocator]`, plus a thread-local mark the swap workers
+//! set on themselves so the audit counts only their allocations.
+//!
+//! Two deliberate scope cuts keep the signal clean:
+//!
+//! * Only allocations of at least [`TRACK_MIN_BYTES`] are counted. The
+//!   std `mpsc` channels the engine communicates over allocate small
+//!   per-send packet nodes (tens of bytes, amortized blocks ~2 KiB) that
+//!   are outside the engine's control; tensor staging buffers are the
+//!   thing the contract is about, and any model worth auditing moves
+//!   tensors well past 4 KiB. An audit model must therefore size its
+//!   offloadable tensors above the threshold — a staging realloc then
+//!   cannot hide under it.
+//! * Only threads that called [`mark_thread_tracked`] are counted — the
+//!   training thread legitimately allocates (batch assembly, epoch
+//!   bookkeeping); the workers must not.
+//!
+//! The counter is process-global and armed explicitly ([`arm`] /
+//! [`disarm`]), so a test can warm the engine up first (first-touch
+//! buffer growth is expected) and pin the *post-warmup* window to zero.
+//! `rust/tests/swap_alloc_audit.rs` is the consumer, including a
+//! negative control proving the hook observes the warmup allocations.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Allocations below this size are not counted (std channel packet
+/// nodes and other harness noise); tensor staging traffic in any
+/// realistic audit model is far above it.
+pub const TRACK_MIN_BYTES: usize = 4096;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static TRACKED: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    // const-initialized: reading the flag inside the allocator cannot
+    // itself allocate (a lazily-initialized TLS would recurse).
+    static TRACKED_THREAD: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Opt the calling thread into the audit. The swap engine's fetch and
+/// evict workers call this unconditionally on startup; it is a
+/// thread-local store, free when no audit is armed.
+pub fn mark_thread_tracked() {
+    let _ = TRACKED_THREAD.try_with(|f| f.set(true));
+}
+
+/// Zero the counter and start counting tracked-thread allocations.
+pub fn arm() {
+    TRACKED.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Stop counting; returns the allocations observed while armed.
+pub fn disarm() -> u64 {
+    ARMED.store(false, Ordering::SeqCst);
+    TRACKED.load(Ordering::SeqCst)
+}
+
+/// Current count (armed or not).
+pub fn tracked_allocations() -> u64 {
+    TRACKED.load(Ordering::SeqCst)
+}
+
+#[inline]
+fn record(size: usize) {
+    if size >= TRACK_MIN_BYTES
+        && ARMED.load(Ordering::Relaxed)
+        && TRACKED_THREAD.try_with(|f| f.get()).unwrap_or(false)
+    {
+        TRACKED.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Counting wrapper over the [`System`] allocator. Install in an audit
+/// binary as:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: nntrainer::runtime::alloc_audit::CountingAlloc = CountingAlloc;
+/// ```
+pub struct CountingAlloc;
+
+// Safety: defers every operation to `System`; the bookkeeping around it
+// touches only atomics and a const-initialized thread-local.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // a grow is a fresh reservation from the audit's point of view
+        if new_size > layout.size() {
+            record(new_size);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}

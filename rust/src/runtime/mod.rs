@@ -13,6 +13,7 @@
 //!   needs the `xla` crate and is gated behind the `pjrt` feature; the
 //!   default (offline) build uses a stub that errors at construction.
 
+pub mod alloc_audit;
 pub mod calibrate;
 pub mod catalog;
 pub mod store;

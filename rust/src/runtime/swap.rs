@@ -194,7 +194,10 @@ impl SwapStats {
     }
 }
 
-fn ewma_update(slot: &mut f64, sample: f64, alpha: f64) {
+/// EWMA with first-sample snap: an empty slot takes the sample outright.
+/// `pub(crate)` — the fleet scheduler reuses it for its unpark/step
+/// latency models, keeping one smoothing semantic across the runtime.
+pub(crate) fn ewma_update(slot: &mut f64, sample: f64, alpha: f64) {
     *slot = if *slot > 0.0 { *slot + alpha * (sample - *slot) } else { sample };
 }
 
@@ -241,6 +244,10 @@ pub struct SwapExec {
     /// Staging buffers handed back to the fetch worker for reuse,
     /// keeping the steady-state prefetch path allocation-free.
     recycle_tx: Sender<Vec<f32>>,
+    /// Reusable staging buffer for inline (never-issued) fetches on the
+    /// training thread — sized to the widest entry at construction so
+    /// the sync-fallback path stays allocation-free too.
+    inline_buf: Vec<f32>,
     workers: Vec<JoinHandle<()>>,
     /// Current in-flight fetch budget (plan's initial depth; grows via
     /// observed-feedback re-derivation and [`SwapExec::adapt_depth`]).
@@ -414,18 +421,26 @@ impl SwapExec {
         let (done_tx, done_rx) = channel::<Done>();
         let (recycle_tx, recycle_rx) = channel::<Vec<f32>>();
         let lens: Vec<usize> = entries.iter().map(|e| e.region.len).collect();
+        // Widest entry: staging buffers are grown to this once so a small
+        // recycled buffer meeting a larger entry never reallocates on the
+        // steady-state path (pinned by tests/swap_alloc_audit.rs).
+        let max_len = lens.iter().copied().max().unwrap_or(0);
 
         let fstore = Arc::clone(&store);
         let fetch_done = done_tx.clone();
         let fetch_worker = std::thread::Builder::new()
             .name("nntrainer-prefetch".into())
             .spawn(move || {
+                crate::runtime::alloc_audit::mark_thread_tracked();
                 while let Ok(req) = fetch_rx.recv() {
                     match req {
                         Req::Fetch(i) => {
                             // reuse a returned staging buffer when one is
                             // available — steady state allocates nothing
                             let mut buf = recycle_rx.try_recv().unwrap_or_default();
+                            if buf.capacity() < max_len {
+                                buf.reserve_exact(max_len - buf.len());
+                            }
                             if buf.len() != lens[i] {
                                 buf.resize(lens[i], 0.0);
                             }
@@ -446,6 +461,7 @@ impl SwapExec {
         let evict_worker = std::thread::Builder::new()
             .name("nntrainer-evict".into())
             .spawn(move || {
+                crate::runtime::alloc_audit::mark_thread_tracked();
                 while let Ok(req) = evict_rx.recv() {
                     match req {
                         Req::Write(i, span) => {
@@ -499,6 +515,7 @@ impl SwapExec {
             evict_tx,
             done_rx,
             recycle_tx,
+            inline_buf: Vec::with_capacity(max_len),
             workers: vec![fetch_worker, evict_worker],
             depth: plan.prefetch_depth.max(PREFETCH_DEPTH),
             sync_evictions: false,
@@ -960,9 +977,9 @@ impl SwapExec {
             }
             let t0 = Instant::now();
             let region = self.entries[idx].region;
-            let mut buf = vec![0f32; region.len];
-            self.store.lock().unwrap().get(idx, &mut buf)?;
-            pool.reacquire(region, &buf);
+            self.inline_buf.resize(region.len, 0.0);
+            self.store.lock().unwrap().get(idx, &mut self.inline_buf)?;
+            pool.reacquire(region, &self.inline_buf);
             self.stats.sync_fetches += 1;
             self.stats.read_stall_ns += t0.elapsed().as_nanos() as u64;
         }

@@ -598,6 +598,76 @@ fn early_stop_fires_on_val_loss_while_train_falls() {
     assert_eq!(summary.iterations, summary.epochs * 4, "4 train batches per epoch");
 }
 
+/// The same guarantee on the `personalize()` path: a fine-tune with
+/// `val_split` must stop on a rising held-out loss, not train to the
+/// epoch cap — the fine-tuned head is exactly where overfit bites.
+#[test]
+fn early_stop_fires_on_val_loss_during_personalize() {
+    let batch = 4usize;
+    // vendor: full train, checkpoint
+    let mut vendor = Session::describe(conv_net())
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .configure(TrainSpec { batch: Some(batch), epochs: 2, ..Default::default() })
+        .compile_for(DeviceProfile::unconstrained())
+        .unwrap();
+    let samples = fixed_samples(&vendor, 16, 0x0DD);
+    let vmake =
+        move || -> Box<dyn DataProducer> { Box::new(CachedProducer::new(samples.clone())) };
+    vendor.train(&vmake).unwrap();
+    let ckpt = std::env::temp_dir()
+        .join(format!("session_api_es_personalize_{}.nntr", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    vendor.save(&ckpt).unwrap();
+
+    // user device: frozen backbone, held-out split, disagreeing labels
+    let mut personal = Session::describe(conv_net())
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .configure(TrainSpec {
+            batch: Some(batch),
+            epochs: 10,
+            val_split: 0.5,
+            freeze: vec!["c0".into(), "c1".into()],
+            ..Default::default()
+        })
+        .compile_for(DeviceProfile::unconstrained())
+        .unwrap();
+    let (in_len, lb_len) = feat_lens(&personal);
+    let make = move || -> Box<dyn DataProducer> {
+        Box::new(SplitProducer { n: 32, in_len, lb_len, batch })
+    };
+    let mut es = EarlyStop::new(1, 0.0);
+    let report = personal
+        .personalize(
+            &nntrainer::model::PersonalizeOpts {
+                checkpoint: Some(ckpt.clone()),
+                reinit: vec!["head".into()],
+                ..Default::default()
+            },
+            &make,
+            &mut [&mut es],
+        )
+        .unwrap();
+    let _ = std::fs::remove_file(&ckpt);
+
+    assert!(report.restored > 0);
+    assert_eq!(report.reinitialized, 2);
+    let summary = &report.summary;
+    assert!(
+        summary.epochs < 10,
+        "early stop never fired during personalize: {:?}",
+        summary.val_losses_per_epoch
+    );
+    assert_eq!(summary.val_losses_per_epoch.len(), summary.epochs);
+    let vl = &summary.val_losses_per_epoch;
+    assert!(
+        vl.last().unwrap() >= vl.first().unwrap(),
+        "held-out loss should plateau or grow on disagreeing labels: {vl:?}"
+    );
+    // half held out -> 4 training iterations per epoch
+    assert_eq!(summary.iterations, summary.epochs * 4);
+}
+
 /// Auto-batch memoization: the whole budget search costs two reference
 /// shape analyses (the template) plus the final compile — probe count
 /// does not move the per-layer analysis counter, and the selected batch

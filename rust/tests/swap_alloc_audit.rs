@@ -1,0 +1,124 @@
+//! Steady-state zero-allocation audit for the swap hot path.
+//!
+//! The swap engine's contract (DESIGN.md §Swap runtime) is that after
+//! warmup, the evict/fetch workers allocate *nothing*: staging buffers
+//! recycle through the channel, store slots are overwritten in place,
+//! and the training thread's inline sync-fetch fallback reuses one
+//! buffer. This binary installs the counting allocator from
+//! `runtime::alloc_audit` and pins the post-warmup worker allocation
+//! count to exactly zero — a single straggler (a `vec![0f32; n]` on a
+//! fetch, a growing store slot) fails the test, which is the point:
+//! this is how the PR that added it found the inline-fetch and
+//! staging-capacity stragglers it fixed.
+//!
+//! Worker threads only: the training thread legitimately allocates
+//! (batch binding, bookkeeping), so it never calls
+//! `mark_thread_tracked`. Allocations under `TRACK_MIN_BYTES` (std
+//! channel packet nodes) are below the audit's floor — the model is
+//! sized so every offloaded tensor is far above it.
+
+use nntrainer::graph::NodeDesc;
+use nntrainer::layers::Props;
+use nntrainer::model::{DeviceProfile, Session, TrainSpec};
+use nntrainer::rng::Rng;
+use nntrainer::runtime::alloc_audit::{arm, disarm, CountingAlloc, TRACK_MIN_BYTES};
+use nntrainer::runtime::StoreKind;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn node(name: &str, ltype: &str, pairs: &[(&str, &str)]) -> NodeDesc {
+    NodeDesc::new(name, ltype, Props::from_pairs(pairs.iter().copied()))
+}
+
+/// Conv net sized so offloadable activations are comfortably above the
+/// audit's 4 KiB floor (4 x 16 x 16 = 1024 f32 per sample, batch 8).
+fn audit_net() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "4:16:16")]),
+        node("c0", "conv2d", &[("filters", "4"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("c1", "conv2d", &[("filters", "4"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("flat", "flatten", &[]),
+        node("head", "fully_connected", &[("unit", "8")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+fn swap_session(store: StoreKind) -> nntrainer::model::CompiledSession {
+    let batch = 8usize;
+    let full = nntrainer::compiler::plan_only(
+        audit_net(),
+        &nntrainer::compiler::CompileOpts { batch, ..Default::default() },
+    )
+    .unwrap()
+    .pool_bytes;
+    let cs = Session::describe(audit_net())
+        .optimizer("sgd", &[("learning_rate", "0.01")])
+        .configure(TrainSpec { batch: Some(batch), ..Default::default() })
+        .compile_for(DeviceProfile {
+            memory_budget_bytes: Some(full * 70 / 100),
+            swap: true,
+            swap_store: store,
+            ..Default::default()
+        })
+        .unwrap();
+    assert!(cs.model.exec.swap_active(), "budget did not engage the swap runtime");
+    cs
+}
+
+fn run_iters(cs: &mut nntrainer::model::CompiledSession, n: usize, seed: u64) {
+    let batch = cs.batch();
+    let mut rng = Rng::new(seed);
+    let mut input = vec![0f32; 4 * 16 * 16 * batch];
+    let mut label = vec![0f32; 8 * batch];
+    for _ in 0..n {
+        rng.fill_uniform(&mut input, -1.0, 1.0);
+        rng.fill_uniform(&mut label, 0.0, 1.0);
+        cs.model.bind_batch(&input, &label).unwrap();
+        cs.model.exec.try_train_iteration().unwrap();
+    }
+}
+
+/// One test body for both halves of the audit — the counter is process
+/// global, so concurrently-running `#[test]`s would contaminate each
+/// other's armed windows.
+#[test]
+fn swap_worker_allocation_audit() {
+    // -- negative control first: armed across warmup, the hook MUST see
+    // the workers' first-touch staging allocations; otherwise the zero
+    // below would be vacuous.
+    {
+        let mut cs = swap_session(StoreKind::Host);
+        arm();
+        run_iters(&mut cs, 2, 0xC0DE);
+        let tracked = disarm();
+        assert!(
+            tracked > 0,
+            "counting hook saw no warmup allocations — the audit is blind"
+        );
+    }
+
+    // -- the contract: post-warmup, exactly zero tracked blocks — for
+    // both store backends, across many iterations.
+    for store in [StoreKind::Host, StoreKind::File] {
+        let mut cs = swap_session(store);
+        // warmup: staging buffers, store slots, and scratch all
+        // first-touch here (all iterations stay in one "epoch" — no
+        // mark_epoch — so the calibrated depth cannot move mid-audit)
+        run_iters(&mut cs, 6, 0xA0D1);
+        arm();
+        run_iters(&mut cs, 12, 0xA0D2);
+        let tracked = disarm();
+        let stats = cs.model.exec.swap_stats().unwrap();
+        assert!(
+            stats.prefetches + stats.sync_fetches > 0,
+            "audit exercised no swap traffic ({store:?})"
+        );
+        assert_eq!(
+            tracked, 0,
+            "swap workers allocated {tracked} block(s) >= {TRACK_MIN_BYTES} B \
+             post-warmup ({store:?}) — a staging buffer or store slot is not \
+             being reused"
+        );
+    }
+}
