@@ -1,0 +1,286 @@
+"""Behavioral sim for the tiered compute backend's bitwise contract
+(rust/src/backend/, DESIGN.md §Compute backend).
+
+The Rust suite proves naive == tiered with `to_bits()`; this file
+proves, in f32 via numpy, the *reasons* that equality is structural
+rather than lucky:
+
+1. a register accumulator seeded with +0.0 then added into C equals
+   accumulating directly into C (when C starts at the fill value),
+2. a +0.0-seeded ascending-p sum can never produce -0.0, so the
+   register round-trip cannot flip C's sign bit,
+3. naive matmul_at's zero-skip (`if av == 0.0: continue`) is exactly
+   neutral on every c except a -0.0 accumulator, where adding +0.0 is
+   observable — so the tiered port must replicate the skip, not the
+   "equivalent" unconditional add,
+4. but onto a NONZERO accumulator the two associations genuinely
+   diverge — which is why the tiered port replicates each naive
+   regime's chain verbatim (register regimes stay register, direct
+   regimes stay direct) instead of "equivalently" restructuring,
+5. any partition of the *output* elements leaves each element's chain
+   untouched (the threading invariant), for either chain style,
+6. matmul_bt's 4-way unrolled dot has a fixed association tree that a
+   plain left fold does NOT reproduce — the tiered port must copy the
+   tree,
+7. gathering im2col columns on the fly equals materializing the whole
+   matrix first (the implicit-GEMM identity).
+
+No jax here — these run wherever numpy does.
+"""
+
+import numpy as np
+
+F = np.float32
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def rand(r, *shape):
+    return r.uniform(-1.0, 1.0, size=shape).astype(F)
+
+
+# ------------------------------------------------------- chain helpers
+
+
+def chain_direct(c0, a_row, b_col):
+    """Naive in-place chain: c starts at c0, += a*b in ascending p."""
+    c = F(c0)
+    for av, bv in zip(a_row, b_col):
+        c = F(c + F(av * bv))
+    return c
+
+
+def chain_register(c0, a_row, b_col):
+    """Microkernel chain: accumulate from +0.0 in a register, then one
+    += into C."""
+    acc = F(0.0)
+    for av, bv in zip(a_row, b_col):
+        acc = F(acc + F(av * bv))
+    return F(F(c0) + acc)
+
+
+def test_register_accumulator_equals_direct_chain_from_zero_fill():
+    # when !accumulate, naive fills C with +0.0 then runs the direct
+    # chain; the microkernel runs the register chain onto the same
+    # +0.0. Identical adds in identical order -> identical bits.
+    r = rng(1)
+    for _ in range(200):
+        k = int(r.integers(1, 64))
+        a, b = rand(r, k), rand(r, k)
+        d = chain_direct(F(0.0), a, b)
+        g = chain_register(F(0.0), a, b)
+        assert d.tobytes() == g.tobytes(), (d, g)
+
+
+def test_plus_zero_seeded_sum_never_births_negative_zero():
+    # x + y == -0.0 in round-to-nearest only when x == y == -0.0 (or
+    # exact negative cancellation, which yields +0.0). Seeded from
+    # +0.0, no partial sum can be -0.0, so the register round-trip
+    # c0 + acc preserves even a -0.0 c0's fate exactly.
+    r = rng(2)
+    for _ in range(500):
+        k = int(r.integers(1, 32))
+        a, b = rand(r, k), rand(r, k)
+        # force plenty of exact cancellations too
+        if k >= 2 and r.random() < 0.5:
+            a[1], b[1] = a[0], F(-b[0])
+        acc = F(0.0)
+        for av, bv in zip(a, b):
+            acc = F(acc + F(av * bv))
+            assert not (acc == 0.0 and np.signbit(acc)), "acc became -0.0"
+
+
+def test_zero_skip_is_observable_only_on_negative_zero_c():
+    # matmul_at's general branch skips a == 0.0 (positive AND negative
+    # zero: `0.0 == -0.0` is true). For any c except -0.0 the skipped
+    # add (c += 0*b) is an identity; for c == -0.0 it would flip to
+    # +0.0. The tiered port replicates the skip bit-for-bit.
+    for c0 in [F(1.5), F(-2.25), F(0.0)]:
+        with_add = F(c0 + F(F(0.0) * F(3.0)))
+        assert with_add.tobytes() == F(c0).tobytes()
+    neg_zero = F(-0.0)
+    flipped = F(neg_zero + F(F(0.0) * F(3.0)))
+    assert flipped.tobytes() != neg_zero.tobytes(), "-0.0 + 0.0 must be +0.0"
+    # and the skip preserves it
+    assert np.signbit(neg_zero)
+
+
+def test_nonzero_accumulator_separates_the_two_chains():
+    # onto a random nonzero c0, ((c0+p0)+p1)+... and c0+((p0+p1)+...)
+    # are different f32 values for SOME inputs. This is why the tiered
+    # port copies each naive regime's chain style verbatim (matmul's
+    # blocked branch and matmul_bt stay register-then-+=, matmul_at
+    # stays direct in-place) — a "mathematically equivalent" rewrite
+    # would break to_bits() equality exactly on the accumulate paths.
+    r = rng(6)
+    diffs = 0
+    for _ in range(300):
+        k = int(r.integers(2, 24))
+        a, b, c0 = rand(r, k), rand(r, k), rand(r, 1)[0]
+        if chain_direct(c0, a, b).tobytes() != chain_register(c0, a, b).tobytes():
+            diffs += 1
+    assert diffs > 0, "chains never diverged? suspicious sweep"
+
+
+def matmul_ref(a, b, c, accumulate, chain):
+    """Unpartitioned reference kernel with a pluggable per-element
+    chain (the naive side)."""
+    m, _ = a.shape
+    _, n = b.shape
+    if not accumulate:
+        c[:] = F(0.0)
+    for i in range(m):
+        for j in range(n):
+            c[i, j] = chain(c[i, j], a[i, :], b[:, j])
+
+
+def matmul_tiled(a, b, c, accumulate, tiles, chain):
+    """Tiered sim: partition OUTPUT columns into bands (any partition),
+    same per-element chain. The k loop is never split."""
+    m, _ = a.shape
+    _, n = b.shape
+    if not accumulate:
+        c[:] = F(0.0)
+    for (j0, j1) in tiles:
+        for i in range(m):
+            for j in range(j0, j1):
+                c[i, j] = chain(c[i, j], a[i, :], b[:, j])
+
+
+def test_any_output_partition_is_bitwise_invariant():
+    # the threading invariant: partitioning disjoint output elements
+    # changes WHO computes an element, never its chain — so any tiling
+    # is bitwise identical, for register and direct regimes alike,
+    # with and without accumulation onto a nonzero C.
+    r = rng(3)
+    for trial in range(20):
+        m, k, n = (int(r.integers(1, 9)) for _ in range(3))
+        a, b = rand(r, m, k), rand(r, k, n)
+        c0 = rand(r, m, n)
+        for chain in (chain_register, chain_direct):
+            for accumulate in (False, True):
+                want = c0.copy()
+                matmul_ref(a, b, want, accumulate, chain)
+                # three partitions, incl. degenerate and ragged
+                cuts = sorted(
+                    {0, n, int(r.integers(0, n + 1)), int(r.integers(0, n + 1))}
+                )
+                parts = list(zip(cuts, cuts[1:]))
+                for tiles in ([(0, n)], parts, [(j, j + 1) for j in range(n)]):
+                    got = c0.copy()
+                    matmul_tiled(a, b, got, accumulate, tiles, chain)
+                    assert got.tobytes() == want.tobytes(), (
+                        trial,
+                        chain.__name__,
+                        accumulate,
+                        tiles,
+                    )
+
+
+def dot4(a, b):
+    """matmul_bt small-branch dot: 4 parallel partials over the
+    unrolled body, combined (acc0+acc1)+(acc2+acc3), then scalar tail."""
+    k = len(a)
+    acc = [F(0.0)] * 4
+    k4 = k - (k % 4)
+    for p in range(0, k4, 4):
+        for u in range(4):
+            acc[u] = F(acc[u] + F(a[p + u] * b[p + u]))
+    s = F(F(acc[0] + acc[1]) + F(acc[2] + acc[3]))
+    for p in range(k4, k):
+        s = F(s + F(a[p] * b[p]))
+    return s
+
+
+def test_four_way_unrolled_dot_is_its_own_association():
+    r = rng(4)
+    diffs = 0
+    for _ in range(300):
+        k = int(r.integers(4, 40))
+        a, b = rand(r, k), rand(r, k)
+        # the tiered port must reproduce dot4 exactly...
+        assert dot4(a, b).tobytes() == dot4(a, b).tobytes()
+        # ...and a plain left fold is NOT generally the same value
+        if dot4(a, b).tobytes() != chain_register(F(0.0), a, b).tobytes():
+            diffs += 1
+    assert diffs > 0, "association never mattered? suspicious sweep"
+
+
+# ----------------------------------------------------- implicit im2col
+
+
+def im2col(x, in_c, in_h, in_w, out_c, k_h, k_w, stride, pad_h, pad_w):
+    oh = (in_h + 2 * pad_h - k_h) // stride + 1
+    ow = (in_w + 2 * pad_w - k_w) // stride + 1
+    rows, cols = in_c * k_h * k_w, oh * ow
+    col = np.zeros((rows, cols), dtype=F)
+    for rr in range(rows):
+        c = rr // (k_h * k_w)
+        kh = (rr // k_w) % k_h
+        kw = rr % k_w
+        for j in range(cols):
+            y = (j // ow) * stride + kh - pad_h
+            xx = (j % ow) * stride + kw - pad_w
+            if 0 <= y < in_h and 0 <= xx < in_w:
+                col[rr, j] = x[c, y, xx]
+    return col
+
+
+def im2col_cols(x, geom, rr, j0, width):
+    """The on-the-fly gather (native::im2col_cols): row rr, cols
+    j0..j0+width of the im2col matrix, no materialization."""
+    in_c, in_h, in_w, out_c, k_h, k_w, stride, pad_h, pad_w = geom
+    oh = (in_h + 2 * pad_h - k_h) // stride + 1
+    ow = (in_w + 2 * pad_w - k_w) // stride + 1
+    out = np.zeros(width, dtype=F)
+    c = rr // (k_h * k_w)
+    kh = (rr // k_w) % k_h
+    kw = rr % k_w
+    for d in range(width):
+        j = j0 + d
+        y = (j // ow) * stride + kh - pad_h
+        xx = (j % ow) * stride + kw - pad_w
+        if 0 <= y < in_h and 0 <= xx < in_w:
+            out[d] = x[c, y, xx]
+    return out
+
+
+def test_implicit_gather_equals_materialized_im2col():
+    r = rng(5)
+    geoms = [
+        (3, 9, 9, 5, 3, 3, 1, 1, 1),
+        (2, 8, 7, 4, 3, 3, 2, 1, 0),
+        (2, 1, 16, 3, 1, 5, 1, 0, 2),  # conv1d-style
+    ]
+    for geom in geoms:
+        in_c, in_h, in_w, out_c, k_h, k_w, stride, pad_h, pad_w = geom
+        x = rand(r, in_c, in_h, in_w)
+        col = im2col(x, *geom)
+        rows, cols = col.shape
+        for rr in range(rows):
+            # full row and a ragged interior segment
+            full = im2col_cols(x, geom, rr, 0, cols)
+            assert full.tobytes() == col[rr].tobytes(), (geom, rr)
+            j0 = rr % max(1, cols - 1)
+            w = min(3, cols - j0)
+            seg = im2col_cols(x, geom, rr, j0, w)
+            assert seg.tobytes() == col[rr, j0:j0 + w].tobytes(), (geom, rr, j0)
+        # and conv-as-GEMM over gathered panels == GEMM over the
+        # materialized matrix, including accumulate onto nonzero gw
+        wgt = rand(r, out_c, rows)
+        want = np.zeros((out_c, cols), dtype=F)
+        matmul_ref(wgt, col, want, False, chain_register)
+        got = np.zeros((out_c, cols), dtype=F)
+        bcol = np.stack([im2col_cols(x, geom, rr, 0, cols) for rr in range(rows)])
+        matmul_tiled(wgt, bcol, got, False, [(0, 3), (3, cols)], chain_register)
+        assert got.tobytes() == want.tobytes(), geom
+
+
+if __name__ == "__main__":
+    for name, fn in sorted(globals().items()):
+        if name.startswith("test_") and callable(fn):
+            fn()
+            print(f"ok {name}")
+    print("all tiered-matmul sim checks passed")

@@ -11,24 +11,37 @@
 //! (EXPERIMENTS.md).
 
 use nntrainer::bench_report::{finish, BenchReport, Metric};
-use nntrainer::bench_util::{bench_dataset, conventional_profile, nntrainer_profile, train_random, Table};
+use nntrainer::bench_util::{
+    bench_dataset, conventional_profile, nntrainer_profile, train_random, with_naive_compute, Table,
+};
 use nntrainer::model::zoo;
 
 fn main() {
     let ds = bench_dataset();
     println!("\n== Fig 10: training latency, 1 epoch, dataset {ds}, batch 32 ==\n");
-    let mut table = Table::new(&["case", "planned s", "conventional s", "speedup"]);
+    let mut table =
+        Table::new(&["case", "planned s", "conventional s", "speedup", "GFLOP/s", "vs naive"]);
     let mut report = BenchReport::new("fig10", ds);
     for (name, nodes, _) in zoo::table4_cases() {
-        let (_, t_plan, it) =
+        let (model, t_plan, it) =
             train_random(nodes.clone(), &nntrainer_profile(32), ds, 1, 1e-4).expect(name);
+        let flops = model.exec.backend().flops() as f64;
         let (_, t_conv, _) =
-            train_random(nodes, &conventional_profile(32), ds, 1, 1e-4).expect(name);
+            train_random(nodes.clone(), &conventional_profile(32), ds, 1, 1e-4).expect(name);
+        // same planned profile on the single-threaded naive kernels —
+        // the denominator of the tiered-backend speedup column
+        let (_, t_naive, _) =
+            train_random(nodes, &with_naive_compute(nntrainer_profile(32)), ds, 1, 1e-4)
+                .expect(name);
+        let gflops = flops / t_plan.max(1e-9) / 1e9;
+        let tiered_speedup = t_naive / t_plan.max(1e-9);
         table.row(vec![
             name.to_string(),
             format!("{t_plan:.3}"),
             format!("{t_conv:.3}"),
             format!("x{:.2} ({} iters)", t_conv / t_plan, it),
+            format!("{gflops:.2}"),
+            format!("x{tiered_speedup:.2}"),
         ]);
         let iters = it.max(1) as f64;
         report.push(
@@ -37,6 +50,8 @@ fn main() {
                 Metric::lower("planned_s", t_plan),
                 Metric::lower("step_latency_ms", t_plan * 1e3 / iters),
                 Metric::higher("iters_per_s", iters / t_plan.max(1e-9)),
+                Metric::higher("gflops", gflops),
+                Metric::higher("tiered_speedup_x", tiered_speedup),
                 Metric::info("conventional_s", t_conv),
                 Metric::info("speedup_x", t_conv / t_plan.max(1e-9)),
             ],

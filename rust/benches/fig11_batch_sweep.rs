@@ -10,7 +10,10 @@
 //! (EXPERIMENTS.md).
 
 use nntrainer::bench_report::{finish, BenchReport, Metric};
-use nntrainer::bench_util::{bench_dataset, conventional_profile, nntrainer_profile, plan, train_random, Table};
+use nntrainer::bench_util::{
+    bench_dataset, conventional_profile, nntrainer_profile, plan, train_random,
+    with_naive_compute, Table,
+};
 use nntrainer::metrics::{BASELINE_NNTRAINER_MIB, BASELINE_TENSORFLOW_MIB, MIB};
 use nntrainer::model::zoo;
 
@@ -26,6 +29,8 @@ fn main() {
         "fits512",
         "time s",
         "samples/s",
+        "GFLOP/s",
+        "vs naive",
     ]);
     let mut report = BenchReport::new("fig11", ds);
     for &batch in &[1usize, 2, 4, 8, 16, 32, 64, 128] {
@@ -34,9 +39,20 @@ fn main() {
         let nn_tot = nn.pool_bytes as f64 / MIB + BASELINE_NNTRAINER_MIB;
         let conv_tot = conv.pool_bytes as f64 / MIB + BASELINE_TENSORFLOW_MIB;
         // time to process the fixed dataset at this batch (1 epoch)
-        let (_, secs, iters) =
+        let (model, secs, iters) =
             train_random(zoo::model_a_linear(), &nntrainer_profile(batch), ds, 1, 1e-4).unwrap();
+        let flops = model.exec.backend().flops() as f64;
+        let (_, secs_naive, _) = train_random(
+            zoo::model_a_linear(),
+            &with_naive_compute(nntrainer_profile(batch)),
+            ds,
+            1,
+            1e-4,
+        )
+        .unwrap();
         let samples = iters * batch;
+        let gflops = flops / secs.max(1e-9) / 1e9;
+        let tiered_speedup = secs_naive / secs.max(1e-9);
         table.row(vec![
             batch.to_string(),
             format!("{nn_tot:.1}"),
@@ -45,6 +61,8 @@ fn main() {
             (if conv_tot <= 512.0 { "yes" } else { "NO" }).into(),
             format!("{secs:.3}"),
             format!("{:.0}", samples as f64 / secs),
+            format!("{gflops:.2}"),
+            format!("x{tiered_speedup:.2}"),
         ]);
         report.push(
             &format!("batch{batch}"),
@@ -54,6 +72,8 @@ fn main() {
                 Metric::info("fits_512", if nn_tot <= 512.0 { 1.0 } else { 0.0 }),
                 Metric::lower("time_s", secs),
                 Metric::higher("samples_per_s", samples as f64 / secs.max(1e-9)),
+                Metric::higher("gflops", gflops),
+                Metric::higher("tiered_speedup_x", tiered_speedup),
             ],
         );
     }

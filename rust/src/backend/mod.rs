@@ -1,5 +1,235 @@
-//! Compute backends ("Delegates" in the paper). The native CPU backend is
-//! the default; the PJRT runtime (`crate::runtime`) is the AOT-compiled
-//! XLA path used by the end-to-end example and the numerics oracle tests.
+//! Compute backends ("Delegates" in the paper). The native CPU kernels
+//! are the numeric ground truth; the `Backend` trait is the seam every
+//! layer kernels through, selected per-model at `compile_for` time via
+//! `DeviceProfile::compute`. The PJRT runtime (`crate::runtime`) is the
+//! AOT-compiled XLA path used by the end-to-end example and the
+//! numerics oracle tests; a PJRT-backed delegate would implement this
+//! same trait and slot in without touching the executor or any layer.
 
 pub mod native;
+pub mod tiered;
+pub mod tiers;
+pub mod workers;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+pub use native::Conv2dGeom;
+pub use tiered::TieredBackend;
+pub use workers::WorkerPool;
+
+/// Which compute backend a compiled model runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ComputeKind {
+    /// Three-tier blocked kernels over the worker pool (default).
+    /// Bitwise identical to `Naive` at every pool width.
+    #[default]
+    Tiered,
+    /// The original single-threaded free-function kernels — kept as
+    /// the regression baseline and the planner's conservative profile
+    /// (it is the only backend that needs the materialized conv `col`
+    /// temp).
+    Naive,
+}
+
+impl ComputeKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ComputeKind::Tiered => "tiered",
+            ComputeKind::Naive => "naive",
+        }
+    }
+
+    /// Instantiate the backend. `Tiered` shares the process-global
+    /// worker pool (width from `NNTRAINER_THREADS`, else core count).
+    pub fn instance(self) -> Arc<dyn Backend> {
+        match self {
+            ComputeKind::Tiered => Arc::new(TieredBackend::new()),
+            ComputeKind::Naive => Arc::new(NaiveBackend::default()),
+        }
+    }
+}
+
+/// The compute seam. Implementations must be numerically
+/// interchangeable *bitwise* — the session equivalence suites train
+/// the same model under each kind and compare losses and weights with
+/// `to_bits()`.
+pub trait Backend: Send + Sync {
+    fn kind(&self) -> ComputeKind;
+
+    /// C[m,n] (+)= A[m,k] · B[k,n].
+    fn matmul(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        accumulate: bool,
+    );
+
+    /// C[m,n] (+)= Aᵀ · B (A stored [k,m]).
+    fn matmul_at(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        accumulate: bool,
+    );
+
+    /// C[m,n] (+)= A · Bᵀ (B stored [n,k]).
+    fn matmul_bt(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        accumulate: bool,
+    );
+
+    /// Batched conv forward: out[s] = W · im2col(x[s]) for each sample
+    /// (bias is the layer's business). `col` is scratch for one
+    /// sample's materialized im2col matrix; backends that gather
+    /// implicitly ignore it and accept `None`.
+    fn conv2d_forward(
+        &self,
+        x: &[f32],
+        w: &[f32],
+        out: &mut [f32],
+        g: &Conv2dGeom,
+        batch: usize,
+        col: Option<&mut [f32]>,
+    );
+
+    /// Conv weight gradient: gw (+)= Σ_s dout[s] · im2col(x[s])ᵀ,
+    /// accumulated in sample order.
+    fn conv2d_grad_w(
+        &self,
+        x: &[f32],
+        dout: &[f32],
+        gw: &mut [f32],
+        g: &Conv2dGeom,
+        batch: usize,
+        col: Option<&mut [f32]>,
+    );
+
+    /// FLOPs issued through this backend since construction / the last
+    /// `reset_flops` (2·m·k·n per matmul) — feeds the bench GFLOP/s
+    /// columns.
+    fn flops(&self) -> u64;
+    fn reset_flops(&self);
+}
+
+/// The original kernels behind the seam, verbatim.
+#[derive(Default)]
+pub struct NaiveBackend {
+    flops: AtomicU64,
+}
+
+impl NaiveBackend {
+    fn bump(&self, m: usize, k: usize, n: usize) {
+        self.flops.fetch_add(2 * (m * k * n) as u64, Ordering::Relaxed);
+    }
+}
+
+impl Backend for NaiveBackend {
+    fn kind(&self) -> ComputeKind {
+        ComputeKind::Naive
+    }
+
+    fn matmul(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        accumulate: bool,
+    ) {
+        self.bump(m, k, n);
+        native::matmul(a, b, c, m, k, n, accumulate);
+    }
+
+    fn matmul_at(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        accumulate: bool,
+    ) {
+        self.bump(m, k, n);
+        native::matmul_at(a, b, c, m, k, n, accumulate);
+    }
+
+    fn matmul_bt(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        accumulate: bool,
+    ) {
+        self.bump(m, k, n);
+        native::matmul_bt(a, b, c, m, k, n, accumulate);
+    }
+
+    fn conv2d_forward(
+        &self,
+        x: &[f32],
+        w: &[f32],
+        out: &mut [f32],
+        g: &Conv2dGeom,
+        batch: usize,
+        col: Option<&mut [f32]>,
+    ) {
+        let col = col.expect("naive compute backend needs the explicit conv `col` temp");
+        let in_sz = g.in_c * g.in_h * g.in_w;
+        let out_sz = g.out_c * g.col_cols();
+        for s in 0..batch {
+            native::im2col(&x[s * in_sz..(s + 1) * in_sz], g, col);
+            self.bump(g.out_c, g.col_rows(), g.col_cols());
+            let o = &mut out[s * out_sz..(s + 1) * out_sz];
+            native::matmul(w, col, o, g.out_c, g.col_rows(), g.col_cols(), false);
+        }
+    }
+
+    fn conv2d_grad_w(
+        &self,
+        x: &[f32],
+        dout: &[f32],
+        gw: &mut [f32],
+        g: &Conv2dGeom,
+        batch: usize,
+        col: Option<&mut [f32]>,
+    ) {
+        let col = col.expect("naive compute backend needs the explicit conv `col` temp");
+        let in_sz = g.in_c * g.in_h * g.in_w;
+        let out_sz = g.out_c * g.col_cols();
+        for s in 0..batch {
+            native::im2col(&x[s * in_sz..(s + 1) * in_sz], g, col);
+            self.bump(g.out_c, g.col_cols(), g.col_rows());
+            let d = &dout[s * out_sz..(s + 1) * out_sz];
+            native::matmul_bt(d, col, gw, g.out_c, g.col_cols(), g.col_rows(), true);
+        }
+    }
+
+    fn flops(&self) -> u64 {
+        self.flops.load(Ordering::Relaxed)
+    }
+
+    fn reset_flops(&self) {
+        self.flops.store(0, Ordering::Relaxed)
+    }
+}

@@ -7,6 +7,18 @@
 //! regions assigned by the Memory Planner), which keeps the training hot
 //! loop malloc-free.
 
+/// `k` at/above which `matmul` switches to the k-outer rank-1 path
+/// (when the output also fits in cache per `CACHE_BLOCK_ELEMS`).
+pub const TALL_K_MIN_K: usize = 2048;
+/// "Fits in cache" element-count cutoff shared by the three matmul
+/// regime switches. The regime choice fixes the FP accumulation chain
+/// per output element, so the tiered backend mirrors these exact
+/// conditions to stay bitwise identical.
+pub const CACHE_BLOCK_ELEMS: usize = 64 * 1024;
+/// Register microkernel tile shape (rows x cols).
+pub const MR: usize = 4;
+pub const NR: usize = 8;
+
 /// C[m,n] (+)= A[m,k] * B[k,n].
 ///
 /// Register-blocked (4x8 micro-kernel over a k-loop) single-threaded
@@ -24,7 +36,7 @@ pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize,
     // the tiled kernel would re-stream B per row-block. Switch to k-outer
     // rank-1 updates — A and B are each streamed exactly once and C stays
     // cache-resident. §Perf step 1: 2.7 -> ~6 GFLOP/s on 32x150528x128.
-    if k >= 2048 && m * n <= 64 * 1024 {
+    if k >= TALL_K_MIN_K && m * n <= CACHE_BLOCK_ELEMS {
         for p in 0..k {
             let brow = &b[p * n..(p + 1) * n];
             for i in 0..m {
@@ -37,8 +49,6 @@ pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize,
         }
         return;
     }
-    const MR: usize = 4;
-    const NR: usize = 8;
     let mut i = 0;
     while i + MR <= m {
         let mut j = 0;
@@ -100,7 +110,7 @@ pub fn matmul_at(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
     // B fits in cache, iterate output rows so the (often huge) C streams
     // exactly once instead of once per batch row. §Perf step 2:
     // 2.5 -> ~7 GFLOP/s on the fc0 gradient of Model A-Linear.
-    if k * n <= 64 * 1024 {
+    if k * n <= CACHE_BLOCK_ELEMS {
         // §Perf step 5: branchless inner loop (the zero-skip guard costs
         // more in mispredicts than it saves on dense gradients).
         for i in 0..m {
@@ -144,7 +154,7 @@ pub fn matmul_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
     // A fits in cache, iterate B rows outer so W streams exactly once
     // instead of once per output row. §Perf step 3: 1.9 -> ~5 GFLOP/s on
     // the fc derivative of Model B-Linear.
-    if m * k <= 64 * 1024 {
+    if m * k <= CACHE_BLOCK_ELEMS {
         for j in 0..n {
             let brow = &b[j * k..(j + 1) * k];
             for i in 0..m {
@@ -278,6 +288,33 @@ pub fn im2col(input: &[f32], g: &Conv2dGeom, col: &mut [f32]) {
                 r += 1;
             }
         }
+    }
+}
+
+/// Gather one row-segment of the im2col matrix without materializing
+/// it: row `r`, columns `j0..j0+out.len()`, for the given image. This
+/// is the implicit-GEMM primitive — the tiered backend packs conv
+/// panels straight from the input, so no `col` scratch tensor exists
+/// and the planner's peak shrinks by `col_rows * col_cols` floats.
+///
+/// Produces exactly the values `im2col` would place at
+/// `col[r * col_cols + j0 ..][..out.len()]`.
+pub fn im2col_cols(input: &[f32], g: &Conv2dGeom, r: usize, j0: usize, out: &mut [f32]) {
+    let ow = g.out_w();
+    let c = r / (g.k_h * g.k_w);
+    let kh = (r / g.k_w) % g.k_h;
+    let kw = r % g.k_w;
+    let plane = &input[c * g.in_h * g.in_w..(c + 1) * g.in_h * g.in_w];
+    for (d, o) in out.iter_mut().enumerate() {
+        let j = j0 + d;
+        let (y, x) = (j / ow, j % ow);
+        let iy = (y * g.stride + kh) as isize - g.pad_h as isize;
+        let ix = (x * g.stride + kw) as isize - g.pad_w as isize;
+        *o = if iy < 0 || ix < 0 || iy as usize >= g.in_h || ix as usize >= g.in_w {
+            0.0
+        } else {
+            plane[iy as usize * g.in_w + ix as usize]
+        };
     }
 }
 
@@ -530,6 +567,34 @@ mod tests {
                     }
                     let got = out[oc * oh * ow + y * ow + x];
                     assert!((got - acc).abs() < 1e-4, "{got} vs {acc}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_cols_matches_materialized() {
+        let mut rng = Rng::new(7);
+        for g in [
+            Conv2dGeom { in_c: 3, in_h: 5, in_w: 5, out_c: 2, k_h: 3, k_w: 3, stride: 1, pad_h: 1, pad_w: 1 },
+            Conv2dGeom { in_c: 2, in_h: 7, in_w: 6, out_c: 2, k_h: 3, k_w: 2, stride: 2, pad_h: 0, pad_w: 1 },
+            Conv2dGeom { in_c: 1, in_h: 1, in_w: 9, out_c: 2, k_h: 1, k_w: 3, stride: 1, pad_h: 0, pad_w: 1 },
+        ] {
+            let input = rand_vec(&mut rng, g.in_c * g.in_h * g.in_w);
+            let cols = g.col_cols();
+            let mut col = vec![0f32; g.col_rows() * cols];
+            im2col(&input, &g, &mut col);
+            for r in 0..g.col_rows() {
+                // full row
+                let mut got = vec![9f32; cols];
+                im2col_cols(&input, &g, r, 0, &mut got);
+                assert_eq!(got, col[r * cols..(r + 1) * cols].to_vec(), "row {r}");
+                // interior segment
+                if cols >= 4 {
+                    let (j0, w) = (1, cols - 2);
+                    let mut seg = vec![9f32; w];
+                    im2col_cols(&input, &g, r, j0, &mut seg);
+                    assert_eq!(seg, col[r * cols + j0..r * cols + j0 + w].to_vec());
                 }
             }
         }

@@ -1,0 +1,381 @@
+//! Tier 3: `TieredBackend` — partitions kernel output across the
+//! worker pool and dispatches bands into the packed-block tier.
+//!
+//! **Bitwise-threading invariant.** Every kernel here mirrors the
+//! exact regime branch (`native::TALL_K_MIN_K` / `CACHE_BLOCK_ELEMS`)
+//! and per-element accumulation chain of the naive kernel it shadows,
+//! and parallelizes only across *disjoint output elements* — each
+//! element's k-chain runs sequentially on exactly one thread. Thread
+//! count (and the task partition) therefore changes who computes an
+//! element, never how, so `Tiered` at any width is bitwise identical
+//! to `Naive`. The equivalence suites in `tests/compute_backend.rs`
+//! and the session-level suites hold this to `to_bits()` equality.
+//!
+//! Convolutions run as **implicit GEMM**: the packing tier gathers B
+//! panels straight from the input image via `native::im2col_cols`, so
+//! the forward/weight-gradient paths need no materialized `col` temp
+//! and the planner's peak drops accordingly.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::native::{Conv2dGeom, CACHE_BLOCK_ELEMS, TALL_K_MIN_K};
+use super::tiers::{
+    chunk_bounds, parts_for, BSource, BtSource, CPtr, Micro4x8, PackScratch, PackedBlock, NR,
+};
+use super::workers::{global_pool, WorkerPool};
+use super::{Backend, ComputeKind};
+
+pub struct TieredBackend {
+    pool: Arc<WorkerPool>,
+    /// One scratch set per worker index; uncontended in steady state
+    /// (the pool runs one job at a time and a worker index maps to one
+    /// thread), the Mutex just makes that locally provable.
+    scratch: Vec<Mutex<PackScratch>>,
+    block: PackedBlock<Micro4x8>,
+    flops: AtomicU64,
+}
+
+impl TieredBackend {
+    /// Backend over the process-global worker pool (width from
+    /// `NNTRAINER_THREADS` / available parallelism).
+    pub fn new() -> Self {
+        Self::with_pool(global_pool())
+    }
+
+    /// Backend over an explicit pool — the determinism suites use this
+    /// to compare widths side by side within one process.
+    pub fn with_pool(pool: Arc<WorkerPool>) -> Self {
+        let scratch = (0..pool.width()).map(|_| Mutex::new(PackScratch::default())).collect();
+        TieredBackend {
+            pool,
+            scratch,
+            block: PackedBlock { micro: Micro4x8 },
+            flops: AtomicU64::new(0),
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.pool.width()
+    }
+
+    fn bump(&self, m: usize, k: usize, n: usize) {
+        self.flops.fetch_add(2 * (m * k * n) as u64, Ordering::Relaxed);
+    }
+
+    /// C[m,n] (+)= A[m,k] · B[k,n], B supplied dense or as an implicit
+    /// im2col of a conv input.
+    pub fn matmul_src(
+        &self,
+        a: &[f32],
+        bsrc: &BSource,
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        accumulate: bool,
+    ) {
+        if !accumulate {
+            c.fill(0.0);
+        }
+        if m == 0 || n == 0 {
+            return;
+        }
+        self.bump(m, k, n);
+        let cp = CPtr(c.as_mut_ptr());
+        let width = self.pool.width();
+        if k >= TALL_K_MIN_K && m * n <= CACHE_BLOCK_ELEMS {
+            // Rank-1 regime: direct-into-C chains, p ascending —
+            // naive's exact chain. Partition the larger C axis.
+            if n >= m {
+                let parts = parts_for(n, width);
+                self.pool.run(parts, &|t, w| {
+                    let (j0, j1) = chunk_bounds(n, parts, t);
+                    let mut sc = self.scratch[w].lock().unwrap();
+                    for p in 0..k {
+                        let brow = bsrc.row(p, j0, j1 - j0, &mut sc.rowbuf);
+                        for i in 0..m {
+                            let av = a[i * k + p];
+                            // SAFETY: this task owns columns j0..j1 of
+                            // every row; tasks are column-disjoint.
+                            let crow = unsafe {
+                                std::slice::from_raw_parts_mut(cp.at(i * n + j0), j1 - j0)
+                            };
+                            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                                *cv += av * bv;
+                            }
+                        }
+                    }
+                });
+            } else {
+                let parts = parts_for(m, width);
+                self.pool.run(parts, &|t, w| {
+                    let (i0, i1) = chunk_bounds(m, parts, t);
+                    let mut sc = self.scratch[w].lock().unwrap();
+                    for p in 0..k {
+                        let brow = bsrc.row(p, 0, n, &mut sc.rowbuf);
+                        for i in i0..i1 {
+                            let av = a[i * k + p];
+                            // SAFETY: tasks are row-disjoint.
+                            let crow =
+                                unsafe { std::slice::from_raw_parts_mut(cp.at(i * n), n) };
+                            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                                *cv += av * bv;
+                            }
+                        }
+                    }
+                });
+            }
+            return;
+        }
+        // Blocked regime: register chains (acc from +0.0, p ascending,
+        // one += into C) — naive's exact chain for full and edge tiles
+        // alike. Bands are NR-aligned so tile boundaries (and thus
+        // packing) are identical for every partition.
+        let tiles = n.div_ceil(NR).max(1);
+        let parts = parts_for(tiles, width);
+        self.pool.run(parts, &|t, w| {
+            let (t0, t1) = chunk_bounds(tiles, parts, t);
+            if t0 == t1 {
+                return;
+            }
+            let (j0, j1) = (t0 * NR, (t1 * NR).min(n));
+            let mut sc = self.scratch[w].lock().unwrap();
+            // SAFETY: tasks own disjoint NR-aligned column bands.
+            unsafe { self.block.run_band(a, bsrc, cp, m, k, n, j0, j1, &mut sc) };
+        });
+    }
+
+    /// C[m,n] (+)= Aᵀ[k,m]·B[k,n] (A stored [k,m]). Partitioned by
+    /// output rows in both regimes; mirrors naive's branchless small
+    /// path and zero-skipping general path chain for chain.
+    pub fn matmul_at_impl(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        accumulate: bool,
+    ) {
+        if !accumulate {
+            c.fill(0.0);
+        }
+        if m == 0 || n == 0 {
+            return;
+        }
+        self.bump(m, k, n);
+        let cp = CPtr(c.as_mut_ptr());
+        let parts = parts_for(m, self.pool.width());
+        if k * n <= CACHE_BLOCK_ELEMS {
+            self.pool.run(parts, &|t, _w| {
+                let (i0, i1) = chunk_bounds(m, parts, t);
+                for i in i0..i1 {
+                    // SAFETY: tasks are row-disjoint.
+                    let crow = unsafe { std::slice::from_raw_parts_mut(cp.at(i * n), n) };
+                    for p in 0..k {
+                        let av = a[p * m + i];
+                        let brow = &b[p * n..(p + 1) * n];
+                        for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                            *cv += av * bv;
+                        }
+                    }
+                }
+            });
+        } else {
+            self.pool.run(parts, &|t, _w| {
+                let (i0, i1) = chunk_bounds(m, parts, t);
+                for p in 0..k {
+                    let arow = &a[p * m..(p + 1) * m];
+                    let brow = &b[p * n..(p + 1) * n];
+                    for (i, &av) in arow.iter().enumerate().take(i1).skip(i0) {
+                        // The zero-skip is part of the observable
+                        // chain (c0 = -0.0 would flip on += +0.0), so
+                        // it must match naive exactly.
+                        if av == 0.0 {
+                            continue;
+                        }
+                        // SAFETY: tasks are row-disjoint.
+                        let crow = unsafe { std::slice::from_raw_parts_mut(cp.at(i * n), n) };
+                        for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                            *cv += av * bv;
+                        }
+                    }
+                }
+            });
+        }
+    }
+
+    /// C[m,n] (+)= A[m,k]·Bᵀ (B stored [n,k], dense or implicit
+    /// im2col). Partitioned by output columns (= B rows) in both
+    /// regimes so the per-`j` row gather happens once per column.
+    pub fn matmul_bt_src(
+        &self,
+        a: &[f32],
+        bsrc: &BtSource,
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        accumulate: bool,
+    ) {
+        if !accumulate {
+            c.fill(0.0);
+        }
+        if m == 0 || n == 0 {
+            return;
+        }
+        self.bump(m, k, n);
+        let cp = CPtr(c.as_mut_ptr());
+        let parts = parts_for(n, self.pool.width());
+        if m * k <= CACHE_BLOCK_ELEMS {
+            self.pool.run(parts, &|t, w| {
+                let (j0, j1) = chunk_bounds(n, parts, t);
+                let mut sc = self.scratch[w].lock().unwrap();
+                for j in j0..j1 {
+                    let brow = bsrc.row(j, &mut sc.rowbuf);
+                    for i in 0..m {
+                        let arow = &a[i * k..(i + 1) * k];
+                        // Naive's 4-way unrolled dot, replicated
+                        // association for association.
+                        let mut acc = [0f32; 4];
+                        let chunks = k / 4;
+                        for t4 in 0..chunks {
+                            let o = t4 * 4;
+                            acc[0] += arow[o] * brow[o];
+                            acc[1] += arow[o + 1] * brow[o + 1];
+                            acc[2] += arow[o + 2] * brow[o + 2];
+                            acc[3] += arow[o + 3] * brow[o + 3];
+                        }
+                        let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+                        for t4 in chunks * 4..k {
+                            s += arow[t4] * brow[t4];
+                        }
+                        // SAFETY: tasks are column-disjoint.
+                        unsafe { *cp.at(i * n + j) += s };
+                    }
+                }
+            });
+        } else {
+            // Naive iterates i-outer here; per-element chains are
+            // single sequential dots, so element order is free and we
+            // keep j outer to gather each Bᵀ row exactly once.
+            self.pool.run(parts, &|t, w| {
+                let (j0, j1) = chunk_bounds(n, parts, t);
+                let mut sc = self.scratch[w].lock().unwrap();
+                for j in j0..j1 {
+                    let brow = bsrc.row(j, &mut sc.rowbuf);
+                    for i in 0..m {
+                        let arow = &a[i * k..(i + 1) * k];
+                        let mut acc = 0f32;
+                        for (&av, &bv) in arow.iter().zip(brow.iter()) {
+                            acc += av * bv;
+                        }
+                        // SAFETY: tasks are column-disjoint.
+                        unsafe { *cp.at(i * n + j) += acc };
+                    }
+                }
+            });
+        }
+    }
+}
+
+impl Default for TieredBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for TieredBackend {
+    fn kind(&self) -> ComputeKind {
+        ComputeKind::Tiered
+    }
+
+    fn matmul(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        accumulate: bool,
+    ) {
+        self.matmul_src(a, &BSource::Dense { b, n }, c, m, k, n, accumulate);
+    }
+
+    fn matmul_at(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        accumulate: bool,
+    ) {
+        self.matmul_at_impl(a, b, c, m, k, n, accumulate);
+    }
+
+    fn matmul_bt(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        accumulate: bool,
+    ) {
+        self.matmul_bt_src(a, &BtSource::Dense { b, k }, c, m, k, n, accumulate);
+    }
+
+    fn conv2d_forward(
+        &self,
+        x: &[f32],
+        w: &[f32],
+        out: &mut [f32],
+        g: &Conv2dGeom,
+        batch: usize,
+        _col: Option<&mut [f32]>,
+    ) {
+        let in_sz = g.in_c * g.in_h * g.in_w;
+        let out_sz = g.out_c * g.col_cols();
+        for s in 0..batch {
+            let image = &x[s * in_sz..(s + 1) * in_sz];
+            let o = &mut out[s * out_sz..(s + 1) * out_sz];
+            let bsrc = BSource::Im2col { image, geom: g };
+            self.matmul_src(w, &bsrc, o, g.out_c, g.col_rows(), g.col_cols(), false);
+        }
+    }
+
+    fn conv2d_grad_w(
+        &self,
+        x: &[f32],
+        dout: &[f32],
+        gw: &mut [f32],
+        g: &Conv2dGeom,
+        batch: usize,
+        _col: Option<&mut [f32]>,
+    ) {
+        let in_sz = g.in_c * g.in_h * g.in_w;
+        let out_sz = g.out_c * g.col_cols();
+        // Sequential over samples: gw accumulates in sample order, the
+        // same cross-sample chain as the naive path.
+        for s in 0..batch {
+            let image = &x[s * in_sz..(s + 1) * in_sz];
+            let d = &dout[s * out_sz..(s + 1) * out_sz];
+            let bsrc = BtSource::Im2col { image, geom: g };
+            self.matmul_bt_src(d, &bsrc, gw, g.out_c, g.col_cols(), g.col_rows(), true);
+        }
+    }
+
+    fn flops(&self) -> u64 {
+        self.flops.load(Ordering::Relaxed)
+    }
+
+    fn reset_flops(&self) {
+        self.flops.store(0, Ordering::Relaxed)
+    }
+}

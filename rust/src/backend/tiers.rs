@@ -1,0 +1,267 @@
+//! Tier 1 + 2 of the tiered matmul: the register microkernel
+//! (`MatmulInstruction`) and the cache-blocked packing layer
+//! (`BlockMatmul`, here `PackedBlock`). Tier 3 (`BatchMatmul` — output
+//! partitioning across the worker pool) lives in `tiered.rs`.
+//!
+//! The contract that makes threading safe to expose by default: for
+//! every output element, the floating-point accumulation chain is the
+//! *same chain, in the same order*, as the naive kernel's — packing
+//! relocates bytes, never reassociates. Tiles partition the output
+//! disjointly and each element's k-loop runs sequentially on exactly
+//! one thread, so results are bitwise identical at any pool width.
+
+use super::native::Conv2dGeom;
+pub use super::native::{MR, NR};
+
+/// Send+Sync wrapper for a raw output pointer. Tasks write disjoint
+/// index ranges of one `&mut [f32]`; handing each thread a raw pointer
+/// (instead of overlapping `&mut` slices) keeps that sound.
+#[derive(Clone, Copy)]
+pub struct CPtr(pub *mut f32);
+unsafe impl Send for CPtr {}
+unsafe impl Sync for CPtr {}
+
+impl CPtr {
+    /// # Safety
+    /// `i` must be in bounds of the underlying buffer and no other
+    /// thread may concurrently touch index `i`.
+    #[inline(always)]
+    pub unsafe fn at(self, i: usize) -> *mut f32 {
+        self.0.add(i)
+    }
+}
+
+/// `[len*t/parts, len*(t+1)/parts)` — contiguous near-equal chunks,
+/// computed arithmetically so the hot path never allocates a partition
+/// table.
+#[inline]
+pub fn chunk_bounds(len: usize, parts: usize, t: usize) -> (usize, usize) {
+    (len * t / parts, len * (t + 1) / parts)
+}
+
+/// Task count for a work axis of length `len` on a pool of `width`
+/// threads: ~4 tasks per thread for load balance, capped at `len`.
+/// Width ≤ 1 gets a single task — the inline path must not re-gather
+/// shared rows once per task for nothing.
+#[inline]
+pub fn parts_for(len: usize, width: usize) -> usize {
+    if width <= 1 {
+        1
+    } else {
+        (width * 4).min(len).max(1)
+    }
+}
+
+/// Grow-and-borrow: scratch vectors persist across calls per worker,
+/// so steady-state training does zero allocation in the kernels.
+#[inline]
+pub fn ensure(v: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+    &mut v[..len]
+}
+
+/// Per-worker packing scratch (A panel, B panel, single-row buffer).
+#[derive(Default)]
+pub struct PackScratch {
+    pub apack: Vec<f32>,
+    pub bpack: Vec<f32>,
+    pub rowbuf: Vec<f32>,
+}
+
+/// Where the B operand of a `C[m,n] += A[m,k] · B[k,n]` product comes
+/// from: a dense row-major matrix, or an im2col matrix materialized
+/// on the fly from a conv input (implicit GEMM — the planner never
+/// sees a `col` temp for this path).
+pub enum BSource<'a> {
+    Dense { b: &'a [f32], n: usize },
+    Im2col { image: &'a [f32], geom: &'a Conv2dGeom },
+}
+
+impl BSource<'_> {
+    /// Pack rows `0..k` × columns `j0..j0+w` into `out[p*w + s]`.
+    pub fn pack(&self, k: usize, j0: usize, w: usize, out: &mut [f32]) {
+        match *self {
+            BSource::Dense { b, n } => {
+                for p in 0..k {
+                    out[p * w..(p + 1) * w].copy_from_slice(&b[p * n + j0..p * n + j0 + w]);
+                }
+            }
+            BSource::Im2col { image, geom } => {
+                for p in 0..k {
+                    super::native::im2col_cols(image, geom, p, j0, &mut out[p * w..(p + 1) * w]);
+                }
+            }
+        }
+    }
+
+    /// Borrow row `p`, columns `j0..j0+w`. Dense sources return a
+    /// subslice; im2col sources gather into `buf`.
+    pub fn row<'s>(&'s self, p: usize, j0: usize, w: usize, buf: &'s mut Vec<f32>) -> &'s [f32] {
+        match *self {
+            BSource::Dense { b, n } => &b[p * n + j0..p * n + j0 + w],
+            BSource::Im2col { image, geom } => {
+                let out = ensure(buf, w);
+                super::native::im2col_cols(image, geom, p, j0, out);
+                out
+            }
+        }
+    }
+}
+
+/// B^T operand source for `matmul_bt` (B stored `[n, k]`, row `j` of
+/// B^T-as-stored is the length-`k` vector dotted against every A row).
+/// The im2col variant serves conv weight gradients: `dout · col^T`
+/// with `col` never materialized.
+pub enum BtSource<'a> {
+    Dense { b: &'a [f32], k: usize },
+    Im2col { image: &'a [f32], geom: &'a Conv2dGeom },
+}
+
+impl BtSource<'_> {
+    /// Borrow row `j` (length `k`).
+    pub fn row<'s>(&'s self, j: usize, buf: &'s mut Vec<f32>) -> &'s [f32] {
+        match *self {
+            BtSource::Dense { b, k } => &b[j * k..(j + 1) * k],
+            BtSource::Im2col { image, geom } => {
+                let cols = geom.col_cols();
+                let out = ensure(buf, cols);
+                super::native::im2col_cols(image, geom, j, 0, out);
+                out
+            }
+        }
+    }
+}
+
+/// Tier 1: the register microkernel. Computes an `rows×w` output tile
+/// (`rows ≤ MR`, `w ≤ NR`) from packed panels, accumulating into C.
+/// Panels are packed `apack[p*rows + r]`, `bpack[p*w + s]` — i.e. the
+/// k-index is the outer stride, so the p-loop walks both contiguously.
+pub trait MatmulInstruction: Send + Sync {
+    fn mr(&self) -> usize;
+    fn nr(&self) -> usize;
+    /// # Safety
+    /// `c` must be valid for writes at `r*ldc + s` for all
+    /// `r < rows, s < w`, with no concurrent access to those elements.
+    unsafe fn tile(
+        &self,
+        apack: &[f32],
+        bpack: &[f32],
+        k: usize,
+        rows: usize,
+        w: usize,
+        c: *mut f32,
+        ldc: usize,
+    );
+}
+
+/// 4×8 f32 microkernel — the same register shape as the naive kernel's
+/// tiled branch, so full tiles replicate its accumulation chain
+/// exactly: `acc[r][s]` starts at +0.0, sums p-ascending, then lands
+/// with one `+=` into C.
+pub struct Micro4x8;
+
+impl MatmulInstruction for Micro4x8 {
+    fn mr(&self) -> usize {
+        MR
+    }
+
+    fn nr(&self) -> usize {
+        NR
+    }
+
+    unsafe fn tile(
+        &self,
+        apack: &[f32],
+        bpack: &[f32],
+        k: usize,
+        rows: usize,
+        w: usize,
+        c: *mut f32,
+        ldc: usize,
+    ) {
+        if rows == MR && w == NR {
+            let mut acc = [[0f32; NR]; MR];
+            for p in 0..k {
+                let arow = &apack[p * MR..p * MR + MR];
+                let brow = &bpack[p * NR..p * NR + NR];
+                for (r, &av) in arow.iter().enumerate() {
+                    let accr = &mut acc[r];
+                    for (s, &bv) in brow.iter().enumerate() {
+                        accr[s] += av * bv;
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                for (s, &v) in accr.iter().enumerate() {
+                    *c.add(r * ldc + s) += v;
+                }
+            }
+        } else {
+            // Edge tile: one scalar chain per element, same shape as
+            // the naive kernel's remainder loops.
+            for r in 0..rows {
+                for s in 0..w {
+                    let mut acc = 0f32;
+                    for p in 0..k {
+                        acc += apack[p * rows + r] * bpack[p * w + s];
+                    }
+                    *c.add(r * ldc + s) += acc;
+                }
+            }
+        }
+    }
+}
+
+/// Tier 2: cache-blocked matmul over packed panels. Owns no scratch —
+/// the caller passes per-worker `PackScratch` so the pool's threads
+/// never contend and the hot loop stays malloc-free.
+pub struct PackedBlock<I: MatmulInstruction> {
+    pub micro: I,
+}
+
+impl<I: MatmulInstruction> PackedBlock<I> {
+    /// Compute the output band `C[0..m, j0..j1] += A · B[:, j0..j1]`.
+    /// B columns are packed once per NR-strip and reused across all
+    /// row tiles; A is packed per tile (`apack[p*rows + r]`).
+    ///
+    /// # Safety
+    /// `c` must cover an `m×n` row-major matrix and no concurrent
+    /// writer may touch columns `j0..j1`.
+    pub unsafe fn run_band(
+        &self,
+        a: &[f32],
+        bsrc: &BSource,
+        c: CPtr,
+        m: usize,
+        k: usize,
+        n: usize,
+        j0: usize,
+        j1: usize,
+        sc: &mut PackScratch,
+    ) {
+        let mr = self.micro.mr();
+        let nr = self.micro.nr();
+        let mut j = j0;
+        while j < j1 {
+            let w = nr.min(j1 - j);
+            let bpack = ensure(&mut sc.bpack, k * w);
+            bsrc.pack(k, j, w, bpack);
+            let mut i = 0;
+            while i < m {
+                let rows = mr.min(m - i);
+                let apack = ensure(&mut sc.apack, k * rows);
+                for p in 0..k {
+                    for r in 0..rows {
+                        apack[p * rows + r] = a[(i + r) * k + p];
+                    }
+                }
+                self.micro
+                    .tile(apack, &sc.bpack[..k * w], k, rows, w, c.at(i * n + j), n);
+                i += rows;
+            }
+            j += w;
+        }
+    }
+}

@@ -1,0 +1,338 @@
+//! Hand-rolled, zero-dependency worker pool for the tiered compute backend.
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Determinism.** The pool never decides *what* is computed — only
+//!    *who* computes it. Callers partition work into `tasks` disjoint
+//!    pieces and the pool guarantees each task index in `0..tasks` runs
+//!    exactly once. Task claiming is a shared atomic counter, so the
+//!    mapping of task → thread is racy, but the tiered kernels are built
+//!    so every task writes a disjoint output range with a fixed
+//!    reduction order — results are bitwise identical for any width.
+//! 2. **No allocation per job.** Submitting a job takes a lock and a
+//!    condvar broadcast; no boxing, no channels, no per-task allocation.
+//! 3. **Panic safety.** A panicking task (on any thread) propagates to
+//!    the submitting caller as a panic; the pool itself stays usable.
+//!
+//! Width resolution follows the PR 6 loud-failure convention:
+//! `NNTRAINER_THREADS` unset → `std::thread::available_parallelism()`;
+//! set but unparseable or zero → panic. Silent fallback on a typo'd
+//! override would quietly serialize every benchmark.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Parse a `NNTRAINER_THREADS` value. Pure so the panic paths are
+/// testable without touching process environment (env mutation is racy
+/// under the parallel test harness).
+pub fn parse_width(v: &str) -> usize {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n > 0 => n,
+        Ok(_) => panic!("NNTRAINER_THREADS must be > 0 (got {v:?})"),
+        Err(e) => panic!("NNTRAINER_THREADS={v:?} is not a usize: {e}"),
+    }
+}
+
+/// Worker-pool width from the environment: `NNTRAINER_THREADS` if set
+/// (loud panic on garbage), otherwise the machine's available
+/// parallelism, otherwise 1.
+pub fn configured_width() -> usize {
+    match std::env::var("NNTRAINER_THREADS") {
+        Ok(v) => parse_width(&v),
+        Err(std::env::VarError::NotPresent) => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        Err(e) => panic!("NNTRAINER_THREADS is set but unreadable: {e}"),
+    }
+}
+
+/// A published job: a borrowed task closure plus the task count. The
+/// pointer is only dereferenced between publication and the caller's
+/// completion wait, during which the closure is guaranteed alive.
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize, usize) + Sync),
+    tasks: usize,
+}
+// SAFETY: the closure behind `f` is `Sync` and outlives the job (the
+// submitting caller blocks until every worker has deregistered).
+unsafe impl Send for Job {}
+
+struct PoolState {
+    job: Option<Job>,
+    /// Bumped per job so a worker that wakes late never re-runs a
+    /// job it already participated in.
+    epoch: u64,
+    /// Workers currently registered on the published job.
+    active: usize,
+    shutdown: bool,
+    panicked: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work: Condvar,
+    done: Condvar,
+    /// Task-claim cursor for the current job.
+    next: AtomicUsize,
+    /// Serializes `run` callers (e.g. parallel tests sharing the
+    /// global pool); held for the whole duration of a job.
+    submit: Mutex<()>,
+}
+
+/// Fixed-width thread pool. Width 1 means "no threads": `run` executes
+/// inline on the caller.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    width: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(width: usize) -> Self {
+        let width = width.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                job: None,
+                epoch: 0,
+                active: 0,
+                shutdown: false,
+                panicked: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            next: AtomicUsize::new(0),
+            submit: Mutex::new(()),
+        });
+        // The caller itself acts as worker 0; spawn width-1 helpers.
+        let handles = (1..width)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("nnt-worker{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn worker thread")
+            })
+            .collect();
+        WorkerPool { shared, width, handles }
+    }
+
+    /// Pool width including the calling thread.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Run `f(task, worker)` for every `task` in `0..tasks`, spread
+    /// across the pool. Blocks until all tasks finish. `worker` is in
+    /// `0..width` and is stable within one task — kernels use it to
+    /// index per-worker scratch. Panics (from any task) propagate.
+    pub fn run(&self, tasks: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        if tasks == 0 {
+            return;
+        }
+        if self.width == 1 || tasks == 1 {
+            for t in 0..tasks {
+                f(t, 0);
+            }
+            return;
+        }
+        let _turn = self.shared.submit.lock().unwrap();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            self.shared.next.store(0, Ordering::Relaxed);
+            st.panicked = false;
+            st.epoch += 1;
+            st.job = Some(Job {
+                f: f as *const (dyn Fn(usize, usize) + Sync),
+                tasks,
+            });
+            self.shared.work.notify_all();
+        }
+        // The caller drains tasks as worker 0. Catch a local panic so
+        // we still wait for helpers before unwinding past `f`.
+        let local = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            loop {
+                let t = self.shared.next.fetch_add(1, Ordering::Relaxed);
+                if t >= tasks {
+                    break;
+                }
+                f(t, 0);
+            }
+        }));
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+        let panicked = st.panicked;
+        drop(st);
+        if let Err(p) = local {
+            std::panic::resume_unwind(p);
+        }
+        if panicked {
+            panic!("worker thread panicked during pooled job");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(job) = st.job {
+                    if st.epoch != seen {
+                        seen = st.epoch;
+                        st.active += 1;
+                        break job;
+                    }
+                }
+                st = sh.work.wait(st).unwrap();
+            }
+        };
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // SAFETY: the submitting caller keeps the closure alive
+            // until `active` drops to 0, which happens below.
+            let f = unsafe { &*job.f };
+            loop {
+                let t = sh.next.fetch_add(1, Ordering::Relaxed);
+                if t >= job.tasks {
+                    break;
+                }
+                f(t, worker_index());
+            }
+        }));
+        let mut st = sh.state.lock().unwrap();
+        if res.is_err() {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            sh.done.notify_all();
+        }
+    }
+}
+
+/// Worker index from the thread name ("nnt-worker{i}"); worker 0 is
+/// always the submitting caller.
+fn worker_index() -> usize {
+    std::thread::current()
+        .name()
+        .and_then(|n| n.strip_prefix("nnt-worker"))
+        .and_then(|i| i.parse().ok())
+        .unwrap_or(0)
+}
+
+/// Process-wide pool at the configured width. Built once on first use;
+/// never dropped (workers park on the condvar between jobs).
+pub fn global_pool() -> Arc<WorkerPool> {
+    static GLOBAL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+    Arc::clone(GLOBAL.get_or_init(|| Arc::new(WorkerPool::new(configured_width()))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let pool = WorkerPool::new(3);
+        let slots: Vec<AtomicU32> = (0..97).map(|_| AtomicU32::new(0)).collect();
+        pool.run(slots.len(), &|t, _w| {
+            slots[t].fetch_add(1, Ordering::Relaxed);
+        });
+        for (t, s) in slots.iter().enumerate() {
+            assert_eq!(s.load(Ordering::Relaxed), 1, "task {t}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = WorkerPool::new(2);
+        for round in 0..16 {
+            let hits = AtomicU32::new(0);
+            pool.run(round + 1, &|_t, _w| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed) as usize, round + 1);
+        }
+    }
+
+    #[test]
+    fn width_one_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let on_caller = AtomicU32::new(0);
+        let caller = std::thread::current().id();
+        pool.run(5, &|_t, w| {
+            assert_eq!(w, 0);
+            if std::thread::current().id() == caller {
+                on_caller.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(on_caller.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn worker_indices_stay_in_range() {
+        let pool = WorkerPool::new(4);
+        pool.run(64, &|_t, w| {
+            assert!(w < 4, "worker index {w} out of range");
+        });
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, &|t, _w| {
+                if t == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic should propagate to the caller");
+        // Pool remains usable after a panicked job.
+        let hits = AtomicU32::new(0);
+        pool.run(4, &|_t, _w| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn parse_width_accepts_positive() {
+        assert_eq!(parse_width("1"), 1);
+        assert_eq!(parse_width(" 8 "), 8);
+    }
+
+    #[test]
+    fn parse_width_panics_on_zero() {
+        let r = std::panic::catch_unwind(|| parse_width("0"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn parse_width_panics_on_garbage() {
+        let r = std::panic::catch_unwind(|| parse_width("many"));
+        assert!(r.is_err());
+    }
+}

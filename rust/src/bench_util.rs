@@ -69,6 +69,13 @@ pub fn conventional_profile(batch: usize) -> CompileOpts {
     }
 }
 
+/// Same options on the naive single-threaded compute backend — the
+/// baseline the fig10/fig11 `tiered_speedup_x` columns divide by.
+pub fn with_naive_compute(mut opts: CompileOpts) -> CompileOpts {
+    opts.compute = crate::backend::ComputeKind::Naive;
+    opts
+}
+
 /// NNTrainer profile under a primary-memory budget: the offload advisor
 /// plans idle-gap swaps and the executor runs the proactive swap runtime
 /// (`benches/swap_runtime.rs`).

@@ -6,6 +6,7 @@ pub mod unroll;
 
 use std::collections::HashMap;
 
+use crate::backend::ComputeKind;
 use crate::error::Result;
 use crate::exec::{init_graph, probe_init_graph, Executor, InitOptions, ShapeTemplate};
 use crate::graph::{Graph, NodeDesc};
@@ -54,6 +55,12 @@ pub struct CompileOpts {
     /// the store at compile time and derives per-entry leads
     /// (`runtime/calibrate.rs`). Only meaningful under a budget.
     pub swap_tuning: SwapTuning,
+    /// Which compute backend executes the layer math. `Tiered` (the
+    /// default) routes GEMMs through the cache-blocked, worker-pool
+    /// backend and drops conv2d's materialized im2col temp; `Naive`
+    /// keeps the original single-threaded free-function kernels as a
+    /// bitwise regression baseline.
+    pub compute: ComputeKind,
 }
 
 impl Default for CompileOpts {
@@ -69,6 +76,7 @@ impl Default for CompileOpts {
             memory_budget_bytes: None,
             swap_store: StoreKind::Host,
             swap_tuning: SwapTuning::Fixed,
+            compute: ComputeKind::default(),
         }
     }
 }
@@ -154,6 +162,7 @@ fn init_opts_of(opts: &CompileOpts, opt_slots: usize) -> InitOptions {
         conventional: opts.conventional,
         deferred_apply: opts.clip_norm.is_some(),
         opt_slots,
+        compute: opts.compute,
     }
 }
 
@@ -243,6 +252,7 @@ pub fn compile_graph(
         opts.training,
         opts.seed,
         swap,
+        opts.compute.instance(),
     )?;
     Ok((exec, report))
 }

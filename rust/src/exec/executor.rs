@@ -7,7 +7,9 @@
 //! planner-assigned pool region.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
+use crate::backend::Backend;
 use crate::error::{Error, Result};
 use crate::layers::RunCtx;
 use crate::optimizer::{clip_global_norm, Optimizer};
@@ -41,6 +43,9 @@ pub struct Executor {
     /// fields drop in declaration order, so the join must run while the
     /// pool is alive.
     swap: Option<SwapExec>,
+    /// Compute backend every layer kernels through (selected by
+    /// `CompileOpts::compute` / `DeviceProfile::compute`).
+    backend: Arc<dyn Backend>,
     pub pool: MemoryPool,
     steps: Vec<(u32, StepOp)>,
     /// Gradient roots to zero right before the step at this EO (their
@@ -70,6 +75,7 @@ impl Executor {
         training: bool,
         seed: u64,
         swap: Option<SwapExec>,
+        backend: Arc<dyn Backend>,
     ) -> Result<Executor> {
         let n = graph.nodes.len();
         let mut steps: Vec<(u32, StepOp)> = Vec::with_capacity(3 * n + 1);
@@ -101,6 +107,7 @@ impl Executor {
         let mut exec = Executor {
             graph,
             swap,
+            backend,
             pool,
             steps,
             zero_before,
@@ -140,7 +147,14 @@ impl Executor {
             out_dims: &nd.out_dims,
             training: true,
             iter: self.iter,
+            backend: self.backend.as_ref(),
         }
+    }
+
+    /// The compute backend this executor runs on (FLOP counters feed
+    /// the bench GFLOP/s columns).
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
     }
 
     fn ctx_infer<'a>(&'a self, node: usize) -> RunCtx<'a> {

@@ -14,6 +14,7 @@
 //! merge rules of Algorithm 1 (lines 13–23), collapsing in-place views
 //! when the target tensor's integrity is preserved.
 
+use crate::backend::ComputeKind;
 use crate::error::{Error, Result};
 use crate::layers::{loss::is_loss_kind, FinalizeOut, Layer, LayerFactory, LayerIo, Props};
 use crate::graph::Graph;
@@ -55,6 +56,13 @@ pub struct InitOptions {
     /// Optimizer state tensors per trainable weight (SGD-momentum: 1,
     /// Adam: 2).
     pub opt_slots: usize,
+    /// Compute backend the model will run on. Layers whose tensor
+    /// declarations depend on it (conv's `col` temp) see this before
+    /// finalize. Defaults to `Naive` here so raw `init_graph` callers
+    /// keep the paper's exact tensor population; the compile pipeline
+    /// threads the session's choice (default `Tiered`) through
+    /// explicitly.
+    pub compute: ComputeKind,
 }
 
 impl Default for InitOptions {
@@ -66,6 +74,7 @@ impl Default for InitOptions {
             conventional: false,
             deferred_apply: false,
             opt_slots: 0,
+            compute: ComputeKind::Naive,
         }
     }
 }
@@ -135,6 +144,7 @@ fn pass1(
     graph: &Graph,
     factories: &HashMap<&'static str, LayerFactory>,
     batch: usize,
+    compute: ComputeKind,
 ) -> Result<(Vec<Box<dyn Layer>>, Vec<NodeShapes>)> {
     let n = graph.nodes.len();
     let mut layers: Vec<Box<dyn Layer>> = Vec::with_capacity(n);
@@ -145,6 +155,7 @@ fn pass1(
             .get(nd.ltype.as_str())
             .ok_or_else(|| Error::model(format!("unknown layer type `{}`", nd.ltype)))?;
         let mut layer = factory(&nd.props)?;
+        layer.set_compute(compute);
         let in_dims: Vec<TensorDim> = graph.inputs[i]
             .iter()
             .map(|ep| shapes[ep.node].out_dims[ep.slot])
@@ -181,7 +192,7 @@ pub fn init_graph(
     if graph.nodes.is_empty() {
         return Err(Error::graph("empty model"));
     }
-    let (layers, shapes) = pass1(graph, factories, opts.batch)?;
+    let (layers, shapes) = pass1(graph, factories, opts.batch, opts.compute)?;
     assemble(graph, layers, &shapes, opts)
 }
 
@@ -640,12 +651,13 @@ impl ShapeTemplate {
     pub fn build(
         graph: &Graph,
         factories: &HashMap<&'static str, LayerFactory>,
+        compute: ComputeKind,
     ) -> Option<ShapeTemplate> {
-        let a = match pass1(graph, factories, TEMPLATE_REF_A) {
+        let a = match pass1(graph, factories, TEMPLATE_REF_A, compute) {
             Ok((_, shapes)) => shapes,
             Err(_) => return None,
         };
-        let b = match pass1(graph, factories, TEMPLATE_REF_B) {
+        let b = match pass1(graph, factories, TEMPLATE_REF_B, compute) {
             Ok((_, shapes)) => shapes,
             Err(_) => return None,
         };

@@ -1,8 +1,11 @@
 //! 1-D convolution over sequences (Tacotron2's Postnet). Input layout
 //! `b:c:1:t` (channels × time); implemented as a degenerate 2-D conv.
+//! Like conv2d, the materialized `col` temp exists only under the
+//! `Naive` compute backend — `Tiered` gathers columns implicitly.
 
 use crate::backend::native as nb;
 use crate::backend::native::Conv2dGeom;
+use crate::backend::ComputeKind;
 use crate::error::{Error, Result};
 use crate::tensor::{Initializer, Lifespan, TensorDim};
 
@@ -14,6 +17,7 @@ pub struct Conv1d {
     stride: usize,
     pad: usize,
     bias: bool,
+    compute: ComputeKind,
     geom: Option<Conv2dGeom>,
 }
 
@@ -34,14 +38,26 @@ impl Conv1d {
             stride: props.usize_or("stride", 1)?,
             pad,
             bias: props.bool_or("bias", true)?,
+            compute: ComputeKind::default(),
             geom: None,
         }))
+    }
+
+    fn colgrad_slot(&self) -> usize {
+        match self.compute {
+            ComputeKind::Naive => 1,
+            ComputeKind::Tiered => 0,
+        }
     }
 }
 
 impl Layer for Conv1d {
     fn kind(&self) -> &'static str {
         "conv1d"
+    }
+
+    fn set_compute(&mut self, kind: ComputeKind) {
+        self.compute = kind;
     }
 
     fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
@@ -79,13 +95,15 @@ impl Layer for Conv1d {
                 need_cd: false,
             });
         }
+        let mut temps = vec![];
+        if self.compute == ComputeKind::Naive {
+            temps.push(TempReq { name: "col", dim: TensorDim::vec(1, col_len), span: Lifespan::ITERATION });
+        }
+        temps.push(TempReq { name: "colgrad", dim: TensorDim::vec(1, col_len), span: Lifespan::CALC_DERIV });
         Ok(FinalizeOut {
             out_dims: vec![TensorDim::new(d.b, self.filters, 1, ow)],
             weights,
-            temps: vec![
-                TempReq { name: "col", dim: TensorDim::vec(1, col_len), span: Lifespan::ITERATION },
-                TempReq { name: "colgrad", dim: TensorDim::vec(1, col_len), span: Lifespan::CALC_DERIV },
-            ],
+            temps,
             need_input_cg: true,
             ..Default::default()
         })
@@ -97,21 +115,12 @@ impl Layer for Conv1d {
         let x = ctx.input(0);
         let w = ctx.weight(0);
         let out = ctx.output(0);
-        let col = ctx.temp(0);
-        let in_sz = g.in_c * g.in_w;
+        let col = match self.compute {
+            ComputeKind::Naive => Some(ctx.temp(0)),
+            ComputeKind::Tiered => None,
+        };
         let out_sz = g.out_c * g.col_cols();
-        for s in 0..b {
-            nb::im2col(&x[s * in_sz..(s + 1) * in_sz], g, col);
-            nb::matmul(
-                w,
-                col,
-                &mut out[s * out_sz..(s + 1) * out_sz],
-                g.out_c,
-                g.col_rows(),
-                g.col_cols(),
-                false,
-            );
-        }
+        ctx.backend.conv2d_forward(x, w, out, g, b, col);
         if self.bias {
             let bias = ctx.weight(1);
             let t = g.col_cols();
@@ -130,22 +139,13 @@ impl Layer for Conv1d {
         let b = ctx.batch();
         let x = ctx.input(0);
         let dout = ctx.out_deriv(0);
-        let col = ctx.temp(0);
-        let in_sz = g.in_c * g.in_w;
         let out_sz = g.out_c * g.col_cols();
         if let Some(gw) = ctx.grad(0) {
-            for s in 0..b {
-                nb::im2col(&x[s * in_sz..(s + 1) * in_sz], g, col);
-                nb::matmul_bt(
-                    &dout[s * out_sz..(s + 1) * out_sz],
-                    col,
-                    gw,
-                    g.out_c,
-                    g.col_cols(),
-                    g.col_rows(),
-                    true,
-                );
-            }
+            let col = match self.compute {
+                ComputeKind::Naive => Some(ctx.temp(0)),
+                ComputeKind::Tiered => None,
+            };
+            ctx.backend.conv2d_grad_w(x, dout, gw, g, b, col);
         }
         if self.bias {
             if let Some(gb) = ctx.grad(1) {
@@ -170,11 +170,11 @@ impl Layer for Conv1d {
         let w = ctx.weight(0);
         let dout = ctx.out_deriv(0);
         let din = ctx.in_deriv(0);
-        let colgrad = ctx.temp(1);
+        let colgrad = ctx.temp(self.colgrad_slot());
         let in_sz = g.in_c * g.in_w;
         let out_sz = g.out_c * g.col_cols();
         for s in 0..b {
-            nb::matmul_at(
+            ctx.backend.matmul_at(
                 w,
                 &dout[s * out_sz..(s + 1) * out_sz],
                 colgrad,

@@ -1,12 +1,17 @@
 //! 2-D convolution via im2col + matmul.
 //!
 //! The im2col buffer is the "additional heap" the paper attributes to
-//! NNTrainer's Conv2D (§5.1). We hold *one* per-image column buffer with
-//! iteration lifespan and re-im2col in the backward pass instead of
-//! caching per-image columns — memory over recompute, the paper's bias.
+//! NNTrainer's Conv2D (§5.1) — but only the `Naive` compute backend
+//! still materializes it. Under `Tiered` (the default) the forward and
+//! weight-gradient GEMMs gather their column panels implicitly from the
+//! input image, so the `col` temp is not even declared and the
+//! planner's peak drops by one `col_rows * col_cols` buffer. The
+//! backward `colgrad` scratch remains either way (col2im needs the
+//! materialized column-gradient).
 
 use crate::backend::native as nb;
 use crate::backend::native::Conv2dGeom;
+use crate::backend::ComputeKind;
 use crate::error::{Error, Result};
 use crate::tensor::{Initializer, Lifespan, TensorDim};
 
@@ -18,6 +23,7 @@ pub struct Conv2d {
     stride: usize,
     pad: usize,
     bias: bool,
+    compute: ComputeKind,
     geom: Option<Conv2dGeom>,
 }
 
@@ -39,6 +45,7 @@ impl Conv2d {
             stride: props.usize_or("stride", 1)?,
             pad,
             bias: props.bool_or("bias", true)?,
+            compute: ComputeKind::default(),
             geom: None,
         }))
     }
@@ -46,11 +53,24 @@ impl Conv2d {
     fn g(&self) -> &Conv2dGeom {
         self.geom.as_ref().expect("conv2d not finalized")
     }
+
+    /// The materialized-col temp exists only under `Naive`; `colgrad`
+    /// always exists. This maps "which temp slot is colgrad".
+    fn colgrad_slot(&self) -> usize {
+        match self.compute {
+            ComputeKind::Naive => 1,
+            ComputeKind::Tiered => 0,
+        }
+    }
 }
 
 impl Layer for Conv2d {
     fn kind(&self) -> &'static str {
         "conv2d"
+    }
+
+    fn set_compute(&mut self, kind: ComputeKind) {
+        self.compute = kind;
     }
 
     fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut> {
@@ -92,24 +112,27 @@ impl Layer for Conv2d {
                 need_cd: false,
             });
         }
+        let mut temps = vec![];
+        if self.compute == ComputeKind::Naive {
+            // one-image im2col buffer, reused across the batch and
+            // re-materialized in backward (recompute-over-store). The
+            // tiered backend gathers implicitly and never needs it.
+            temps.push(TempReq {
+                name: "col",
+                dim: TensorDim::vec(1, col_len),
+                span: Lifespan::ITERATION,
+            });
+        }
+        // backward column-gradient scratch (CD only).
+        temps.push(TempReq {
+            name: "colgrad",
+            dim: TensorDim::vec(1, col_len),
+            span: Lifespan::CALC_DERIV,
+        });
         Ok(FinalizeOut {
             out_dims: vec![TensorDim::new(d.b, self.filters, oh, ow)],
             weights,
-            temps: vec![
-                // one-image im2col buffer, reused across the batch and
-                // re-materialized in backward (recompute-over-store).
-                TempReq {
-                    name: "col",
-                    dim: TensorDim::vec(1, col_len),
-                    span: Lifespan::ITERATION,
-                },
-                // backward column-gradient scratch (CD only).
-                TempReq {
-                    name: "colgrad",
-                    dim: TensorDim::vec(1, col_len),
-                    span: Lifespan::CALC_DERIV,
-                },
-            ],
+            temps,
             need_input_cg: true,
             ..Default::default()
         })
@@ -121,21 +144,12 @@ impl Layer for Conv2d {
         let x = ctx.input(0);
         let w = ctx.weight(0);
         let out = ctx.output(0);
-        let col = ctx.temp(0);
-        let in_sz = g.in_c * g.in_h * g.in_w;
+        let col = match self.compute {
+            ComputeKind::Naive => Some(ctx.temp(0)),
+            ComputeKind::Tiered => None,
+        };
         let out_sz = g.out_c * g.col_cols();
-        for s in 0..b {
-            nb::im2col(&x[s * in_sz..(s + 1) * in_sz], g, col);
-            nb::matmul(
-                w,
-                col,
-                &mut out[s * out_sz..(s + 1) * out_sz],
-                g.out_c,
-                g.col_rows(),
-                g.col_cols(),
-                false,
-            );
-        }
+        ctx.backend.conv2d_forward(x, w, out, g, b, col);
         if self.bias {
             let bias = ctx.weight(1);
             let hw = g.col_cols();
@@ -155,23 +169,14 @@ impl Layer for Conv2d {
         let b = ctx.batch();
         let x = ctx.input(0);
         let dout = ctx.out_deriv(0);
-        let col = ctx.temp(0);
-        let in_sz = g.in_c * g.in_h * g.in_w;
         let out_sz = g.out_c * g.col_cols();
         if let Some(gw) = ctx.grad(0) {
-            for s in 0..b {
-                nb::im2col(&x[s * in_sz..(s + 1) * in_sz], g, col);
-                // ΔW[oc, R] += ΔD[oc, C] · colᵀ[C, R]
-                nb::matmul_bt(
-                    &dout[s * out_sz..(s + 1) * out_sz],
-                    col,
-                    gw,
-                    g.out_c,
-                    g.col_cols(),
-                    g.col_rows(),
-                    true,
-                );
-            }
+            let col = match self.compute {
+                ComputeKind::Naive => Some(ctx.temp(0)),
+                ComputeKind::Tiered => None,
+            };
+            // ΔW[oc, R] += Σ_s ΔD[oc, C] · colᵀ[C, R]
+            ctx.backend.conv2d_grad_w(x, dout, gw, g, b, col);
         }
         if self.bias {
             if let Some(gb) = ctx.grad(1) {
@@ -195,12 +200,12 @@ impl Layer for Conv2d {
         let w = ctx.weight(0);
         let dout = ctx.out_deriv(0);
         let din = ctx.in_deriv(0);
-        let colgrad = ctx.temp(1);
+        let colgrad = ctx.temp(self.colgrad_slot());
         let in_sz = g.in_c * g.in_h * g.in_w;
         let out_sz = g.out_c * g.col_cols();
         for s in 0..b {
             // colgrad[R, C] = Wᵀ[R, oc] · ΔD[oc, C]
-            nb::matmul_at(
+            ctx.backend.matmul_at(
                 w,
                 &dout[s * out_sz..(s + 1) * out_sz],
                 colgrad,
@@ -245,5 +250,23 @@ mod tests {
         let p = Props::from_pairs([("filters", "4"), ("kernel_size", "5")]);
         let mut l = Conv2d::create(&p).unwrap();
         assert!(l.finalize(&[TensorDim::new(1, 1, 3, 3)]).is_err());
+    }
+
+    #[test]
+    fn naive_compute_declares_col_temp_tiered_does_not() {
+        let p = Props::from_pairs([("filters", "4"), ("kernel_size", "3"), ("padding", "same")]);
+        let dims = [TensorDim::new(2, 2, 8, 8)];
+
+        let mut tiered = Conv2d::create(&p).unwrap();
+        tiered.set_compute(ComputeKind::Tiered);
+        let ft = tiered.finalize(&dims).unwrap();
+        assert_eq!(ft.temps.len(), 1);
+        assert_eq!(ft.temps[0].name, "colgrad");
+
+        let mut naive = Conv2d::create(&p).unwrap();
+        naive.set_compute(ComputeKind::Naive);
+        let fnv = naive.finalize(&dims).unwrap();
+        assert_eq!(fnv.temps.len(), 2);
+        assert_eq!(fnv.temps[0].name, "col");
     }
 }

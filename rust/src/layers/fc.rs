@@ -80,7 +80,7 @@ impl Layer for FullyConnected {
         let x = ctx.input(0);
         let w = ctx.weight(0);
         let out = ctx.output(0);
-        nb::matmul(x, w, out, b, self.feat, self.unit, false);
+        ctx.backend.matmul(x, w, out, b, self.feat, self.unit, false);
         if self.bias {
             nb::add_bias(out, ctx.weight(1), b, self.unit);
         }
@@ -91,7 +91,7 @@ impl Layer for FullyConnected {
         let d = ctx.out_deriv(0);
         if let Some(gw) = ctx.grad(0) {
             // ΔW[f,u] += Xᵀ[f,B] · ΔD[B,u]  (X stored [B,f])
-            nb::matmul_at(ctx.input(0), d, gw, self.feat, b, self.unit, true);
+            ctx.backend.matmul_at(ctx.input(0), d, gw, self.feat, b, self.unit, true);
         }
         if self.bias {
             if let Some(gb) = ctx.grad(1) {
@@ -106,7 +106,8 @@ impl Layer for FullyConnected {
         }
         let b = ctx.batch() * self.rows_per_sample;
         // ΔD'[B,f] = ΔD[B,u] · Wᵀ  (W stored [f,u] == Bᵀ layout for matmul_bt)
-        nb::matmul_bt(ctx.out_deriv(0), ctx.weight(0), ctx.in_deriv(0), b, self.unit, self.feat, false);
+        let (d, w, dx) = (ctx.out_deriv(0), ctx.weight(0), ctx.in_deriv(0));
+        ctx.backend.matmul_bt(d, w, dx, b, self.unit, self.feat, false);
     }
 }
 

@@ -139,9 +139,9 @@ impl Layer for Gru {
                     );
                 }
             }
-            nb::matmul(xt, wx, gx, b, f, 3 * h, false);
+            ctx.backend.matmul(xt, wx, gx, b, f, 3 * h, false);
             nb::add_bias(gx, bx, b, 3 * h);
-            nb::matmul(hbuf, wh, gh, b, h, 3 * h, false);
+            ctx.backend.matmul(hbuf, wh, gh, b, h, 3 * h, false);
             nb::add_bias(gh, bh, b, 3 * h);
             for s in 0..b {
                 let gxs = &gx[s * 3 * h..(s + 1) * 3 * h];
@@ -237,10 +237,10 @@ impl Layer for Gru {
                 }
             }
             if let Some(gwx) = ctx.grad(0) {
-                nb::matmul_at(xt, dgx, gwx, f, b, 3 * h, true);
+                ctx.backend.matmul_at(xt, dgx, gwx, f, b, 3 * h, true);
             }
             if let Some(gwh) = ctx.grad(1) {
-                nb::matmul_at(hbuf, dgh, gwh, h, b, 3 * h, true);
+                ctx.backend.matmul_at(hbuf, dgh, gwh, h, b, 3 * h, true);
             }
             if let Some(gbx) = ctx.grad(2) {
                 nb::bias_grad(dgx, gbx, b, 3 * h, true);
@@ -249,7 +249,7 @@ impl Layer for Gru {
                 nb::bias_grad(dgh, gbh, b, 3 * h, true);
             }
             if ctx.has_in_deriv(0) {
-                nb::matmul_bt(dgx, wx, dxbuf, b, 3 * h, f, false);
+                ctx.backend.matmul_bt(dgx, wx, dxbuf, b, 3 * h, f, false);
                 let din = ctx.in_deriv(0);
                 for s in 0..b {
                     din[s * t * f + step * f..s * t * f + (step + 1) * f]
@@ -258,7 +258,7 @@ impl Layer for Gru {
             }
             // dh_prev += dgh @ Wh^T  (on top of the z∘h_prev partial
             // already stored in dh above)
-            nb::matmul_bt(dgh, wh, dh, b, 3 * h, h, true);
+            ctx.backend.matmul_bt(dgh, wh, dh, b, 3 * h, h, true);
         }
     }
 

@@ -135,8 +135,8 @@ impl Layer for Lstm {
                     );
                 }
             }
-            nb::matmul(xt, wx, gbuf, b, f, 4 * h, false);
-            nb::matmul(hbuf, wh, gbuf, b, h, 4 * h, true);
+            ctx.backend.matmul(xt, wx, gbuf, b, f, 4 * h, false);
+            ctx.backend.matmul(hbuf, wh, gbuf, b, h, 4 * h, true);
             nb::add_bias(gbuf, bias, b, 4 * h);
             for s in 0..b {
                 let g = &mut gbuf[s * 4 * h..(s + 1) * 4 * h];
@@ -235,17 +235,17 @@ impl Layer for Lstm {
             }
             // weight gradients
             if let Some(gwx) = ctx.grad(0) {
-                nb::matmul_at(xt, dgates, gwx, f, b, 4 * h, true);
+                ctx.backend.matmul_at(xt, dgates, gwx, f, b, 4 * h, true);
             }
             if let Some(gwh) = ctx.grad(1) {
-                nb::matmul_at(hbuf, dgates, gwh, h, b, 4 * h, true);
+                ctx.backend.matmul_at(hbuf, dgates, gwh, h, b, 4 * h, true);
             }
             if let Some(gb) = ctx.grad(2) {
                 nb::bias_grad(dgates, gb, b, 4 * h, true);
             }
             // input derivative
             if ctx.has_in_deriv(0) {
-                nb::matmul_bt(dgates, wx, dxbuf, b, 4 * h, f, false);
+                ctx.backend.matmul_bt(dgates, wx, dxbuf, b, 4 * h, f, false);
                 let din = ctx.in_deriv(0);
                 for s in 0..b {
                     din[s * t * f + step * f..s * t * f + (step + 1) * f]
@@ -253,7 +253,7 @@ impl Layer for Lstm {
                 }
             }
             // dh for previous step
-            nb::matmul_bt(dgates, wh, dh, b, 4 * h, h, false);
+            ctx.backend.matmul_bt(dgates, wh, dh, b, 4 * h, h, false);
         }
     }
 

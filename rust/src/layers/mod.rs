@@ -29,6 +29,7 @@ pub mod props;
 
 use std::collections::HashMap;
 
+use crate::backend::{Backend, ComputeKind};
 use crate::error::Result;
 use crate::planner::pool::MemoryPool;
 use crate::tensor::{Initializer, Lifespan, TensorDim, TensorId, TensorTable};
@@ -140,6 +141,8 @@ pub struct RunCtx<'a> {
     pub training: bool,
     /// Iteration counter (dropout masks, schedules).
     pub iter: u64,
+    /// Compute backend every matmul-consuming phase kernels through.
+    pub backend: &'a dyn Backend,
 }
 
 impl<'a> RunCtx<'a> {
@@ -206,6 +209,13 @@ impl<'a> RunCtx<'a> {
 /// A neural-network layer, operating on pool tensors only.
 pub trait Layer: Send {
     fn kind(&self) -> &'static str;
+
+    /// Record which compute backend the model compiles for. Called once,
+    /// before `finalize`, so layers whose tensor declarations depend on
+    /// the backend (conv's `col` temp exists only for `Naive`) can adapt
+    /// them. Default: ignore — most layers' declarations are
+    /// backend-independent.
+    fn set_compute(&mut self, _kind: ComputeKind) {}
 
     /// Shape inference + tensor declaration. Called once at initialize.
     fn finalize(&mut self, in_dims: &[TensorDim]) -> Result<FinalizeOut>;

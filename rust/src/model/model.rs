@@ -89,6 +89,7 @@ impl ModelBuilder {
             planner: opts.planner,
             conventional: opts.conventional,
             inplace: opts.inplace,
+            compute: opts.compute,
             ..DeviceProfile::default()
         };
         Ok(Session::from_builder(self).configure(spec).compile_for(profile)?.into_model())

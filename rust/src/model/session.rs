@@ -30,6 +30,7 @@
 
 use std::collections::HashMap;
 
+use crate::backend::ComputeKind;
 use crate::compiler::{analyze, compile_graph, plan_graph, CompileOpts};
 use crate::dataset::{BatchQueue, DataProducer};
 use crate::error::{Error, Result};
@@ -137,6 +138,11 @@ pub struct DeviceProfile {
     pub inplace: bool,
     /// Upper bound for the automatic batch search.
     pub max_batch: usize,
+    /// Compute backend executing the layer math. `Tiered` (default)
+    /// runs the cache-blocked worker-pool GEMMs and drops conv's
+    /// materialized im2col temp; `Naive` keeps the original
+    /// single-threaded kernels as a bitwise regression baseline.
+    pub compute: ComputeKind,
 }
 
 impl Default for DeviceProfile {
@@ -150,6 +156,7 @@ impl Default for DeviceProfile {
             conventional: false,
             inplace: true,
             max_batch: 512,
+            compute: ComputeKind::default(),
         }
     }
 }
@@ -174,6 +181,13 @@ impl DeviceProfile {
     /// Same profile with bandwidth-calibrated swap tuning.
     pub fn calibrated(mut self) -> Self {
         self.swap_tuning = SwapTuning::Calibrated;
+        self
+    }
+
+    /// Same profile on the naive single-threaded compute backend —
+    /// the bitwise regression baseline for the tiered kernels.
+    pub fn naive_compute(mut self) -> Self {
+        self.compute = ComputeKind::Naive;
         self
     }
 
@@ -459,6 +473,7 @@ pub(crate) fn resolve_opts(batch: usize, spec: &TrainSpec, profile: &DeviceProfi
         memory_budget_bytes: if profile.swap { profile.memory_budget_bytes } else { None },
         swap_store: profile.swap_store,
         swap_tuning: profile.swap_tuning,
+        compute: profile.compute,
     }
 }
 
@@ -483,7 +498,7 @@ fn auto_batch(
     factories: &HashMap<&'static str, LayerFactory>,
     budget: usize,
 ) -> Result<usize> {
-    let template = ShapeTemplate::build(graph, factories);
+    let template = ShapeTemplate::build(graph, factories, profile.compute);
     let fits = |b: usize| -> Result<bool> {
         let report = plan_graph(
             graph,

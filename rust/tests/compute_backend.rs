@@ -1,0 +1,189 @@
+//! Bitwise-determinism suite for the tiered compute backend.
+//!
+//! The contract under test (DESIGN.md §Compute backend): for every
+//! operation and every shape, `Tiered` at ANY pool width produces
+//! results bitwise identical to the single-threaded `Naive` kernels.
+//! The backend earns this by construction — per output element the FP
+//! accumulation chain (ascending p) is the same in every regime, and
+//! threading only partitions *disjoint* output elements — so these
+//! tests compare with `to_bits()`, never with tolerances.
+
+use std::sync::Arc;
+
+use nntrainer::backend::{Backend, ComputeKind, Conv2dGeom, NaiveBackend, TieredBackend, WorkerPool};
+use nntrainer::rng::Rng;
+
+/// Pool widths every case runs at: inline (1), even split, and a width
+/// that leaves remainder bands on most of the shapes below.
+const WIDTHS: [usize; 3] = [1, 2, 4];
+
+fn tiered(width: usize) -> TieredBackend {
+    TieredBackend::with_pool(Arc::new(WorkerPool::new(width)))
+}
+
+fn fill(rng: &mut Rng, len: usize) -> Vec<f32> {
+    let mut v = vec![0f32; len];
+    rng.fill_uniform(&mut v, -1.0, 1.0);
+    v
+}
+
+fn assert_bits(expect: &[f32], got: &[f32], what: &str) {
+    assert_eq!(expect.len(), got.len(), "{what}: length mismatch");
+    for (i, (e, g)) in expect.iter().zip(got.iter()).enumerate() {
+        assert_eq!(
+            e.to_bits(),
+            g.to_bits(),
+            "{what}: element {i} differs: naive {e} vs tiered {g}"
+        );
+    }
+}
+
+/// Which of the three GEMM entry points a case exercises.
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Mm,
+    MmAt,
+    MmBt,
+}
+
+impl Op {
+    /// (len_a, len_b) for C[m,n]: `MmAt` stores A as [k,m], `MmBt`
+    /// stores B as [n,k].
+    fn lens(self, m: usize, k: usize, n: usize) -> (usize, usize) {
+        match self {
+            Op::Mm => (m * k, k * n),
+            Op::MmAt => (k * m, k * n),
+            Op::MmBt => (m * k, n * k),
+        }
+    }
+
+    fn run(self, be: &dyn Backend, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, acc: bool) {
+        match self {
+            Op::Mm => be.matmul(a, b, c, m, k, n, acc),
+            Op::MmAt => be.matmul_at(a, b, c, m, k, n, acc),
+            Op::MmBt => be.matmul_bt(a, b, c, m, k, n, acc),
+        }
+    }
+}
+
+/// One shape through naive and every tiered width, both accumulate
+/// modes. `accumulate = true` starts from a shared random C so the
+/// nonzero-c0 chain (the hard case) is what's compared.
+fn check_shape(rng: &mut Rng, op: Op, m: usize, k: usize, n: usize) {
+    let (la, lb) = op.lens(m, k, n);
+    let a = fill(rng, la);
+    let b = fill(rng, lb);
+    let c0 = fill(rng, m * n);
+    let naive = NaiveBackend::default();
+    for acc in [false, true] {
+        let mut want = if acc { c0.clone() } else { vec![0.123f32; m * n] };
+        op.run(&naive, &a, &b, &mut want, m, k, n, acc);
+        for width in WIDTHS {
+            let be = tiered(width);
+            let mut got = if acc { c0.clone() } else { vec![0.456f32; m * n] };
+            op.run(&be, &a, &b, &mut got, m, k, n, acc);
+            assert_bits(&want, &got, &format!("{op:?} m={m} k={k} n={n} acc={acc} width={width}"));
+        }
+    }
+}
+
+#[test]
+fn gemm_bitwise_at_microkernel_remainders() {
+    // m, n straddle the MR=4 / NR=8 tile edges (remainders 0..=3 rows,
+    // 0..=7 cols); k=1 is the degenerate chain.
+    let mut rng = Rng::new(0x7EED);
+    for op in [Op::Mm, Op::MmAt, Op::MmBt] {
+        for &m in &[3usize, 4, 5, 8, 9, 17] {
+            for &n in &[3usize, 4, 5, 8, 9, 17] {
+                for &k in &[1usize, 7, 64] {
+                    check_shape(&mut rng, op, m, k, n);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_bitwise_at_tall_k_regime_boundary() {
+    // matmul flips to the tall-K kernel at k >= 2048 (native::TALL_K_MIN_K)
+    // when m*n fits the cache block; straddle the switch so both sides
+    // of the branch — different accumulation chains — are compared
+    // against naive taking the *same* branch.
+    let mut rng = Rng::new(0x7A11);
+    for op in [Op::Mm, Op::MmAt, Op::MmBt] {
+        for &k in &[2047usize, 2048, 2049] {
+            check_shape(&mut rng, op, 5, k, 9);
+        }
+    }
+}
+
+#[test]
+fn gemm_bitwise_in_forced_regimes() {
+    let mut rng = Rng::new(0xF0_0D);
+    // forced tall-K: k >= 2048, m*n = 6400 <= CACHE_BLOCK_ELEMS
+    check_shape(&mut rng, Op::Mm, 64, 2048, 100);
+    // forced big-tile paths: m*n and k*n and m*k all above the cache
+    // block, so every op takes its "general" branch
+    for op in [Op::Mm, Op::MmAt, Op::MmBt] {
+        check_shape(&mut rng, op, 300, 96, 240);
+    }
+}
+
+#[test]
+fn conv_implicit_gemm_bitwise_matches_materialized_im2col() {
+    let geoms = [
+        // square, same-padding — the common conv2d shape
+        Conv2dGeom { in_c: 3, in_h: 9, in_w: 9, out_c: 5, k_h: 3, k_w: 3, stride: 1, pad_h: 1, pad_w: 1 },
+        // stride 2 with asymmetric padding
+        Conv2dGeom { in_c: 2, in_h: 8, in_w: 7, out_c: 4, k_h: 3, k_w: 3, stride: 2, pad_h: 1, pad_w: 0 },
+        // conv1d-style degenerate height
+        Conv2dGeom { in_c: 2, in_h: 1, in_w: 16, out_c: 3, k_h: 1, k_w: 5, stride: 1, pad_h: 0, pad_w: 2 },
+    ];
+    let mut rng = Rng::new(0xC0_4D);
+    for g in &geoms {
+        let batch = 3;
+        let in_sz = g.in_c * g.in_h * g.in_w;
+        let out_sz = g.out_c * g.col_cols();
+        let x = fill(&mut rng, batch * in_sz);
+        let w = fill(&mut rng, g.out_c * g.col_rows());
+        let dout = fill(&mut rng, batch * out_sz);
+        let gw0 = fill(&mut rng, g.out_c * g.col_rows());
+        let mut col = vec![0f32; g.col_rows() * g.col_cols()];
+
+        let naive = NaiveBackend::default();
+        let mut out_naive = vec![0f32; batch * out_sz];
+        naive.conv2d_forward(&x, &w, &mut out_naive, g, batch, Some(&mut col));
+        let mut gw_naive = gw0.clone();
+        naive.conv2d_grad_w(&x, &dout, &mut gw_naive, g, batch, Some(&mut col));
+
+        for width in WIDTHS {
+            let be = tiered(width);
+            let mut out = vec![0f32; batch * out_sz];
+            be.conv2d_forward(&x, &w, &mut out, g, batch, None);
+            assert_bits(&out_naive, &out, &format!("conv fwd {g:?} width={width}"));
+            let mut gw = gw0.clone();
+            be.conv2d_grad_w(&x, &dout, &mut gw, g, batch, None);
+            assert_bits(&gw_naive, &gw, &format!("conv grad_w {g:?} width={width}"));
+        }
+    }
+}
+
+#[test]
+fn backend_instances_report_their_kind() {
+    assert_eq!(ComputeKind::Tiered.instance().kind(), ComputeKind::Tiered);
+    assert_eq!(ComputeKind::Naive.instance().kind(), ComputeKind::Naive);
+    assert_eq!(ComputeKind::default(), ComputeKind::Tiered);
+    assert!(TieredBackend::new().width() >= 1);
+}
+
+#[test]
+fn flops_counter_tracks_issued_work() {
+    let be = tiered(2);
+    let a = vec![1f32; 6];
+    let b = vec![1f32; 12];
+    let mut c = vec![0f32; 8];
+    be.matmul(&a, &b, &mut c, 2, 3, 4, false);
+    assert_eq!(be.flops(), 2 * 2 * 3 * 4);
+    be.reset_flops();
+    assert_eq!(be.flops(), 0);
+}

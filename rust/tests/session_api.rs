@@ -731,3 +731,88 @@ fn auto_batch_memoizes_shape_analysis() {
     }
     assert_eq!(cs.batch(), expected, "memoization changed the selected batch");
 }
+
+// ------------------------------------------- compute-backend equivalence
+
+/// Small recurrent stack — routes every lstm/gru GEMM (including the
+/// accumulate-into-nonzero per-timestep chains) through the backend.
+fn recurrent_net() -> Vec<NodeDesc> {
+    vec![
+        node("in", "input", &[("input_shape", "1:5:8")]),
+        node("l0", "lstm", &[("unit", "6"), ("return_sequences", "true")]),
+        node("g0", "gru", &[("unit", "4")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+/// Train the same description under two device profiles differing ONLY
+/// in `compute`; per-iteration losses and final weights must be bitwise
+/// equal. The tiered backend partitions disjoint output elements across
+/// the worker pool and never reassociates an accumulation chain, so
+/// this holds exactly — `to_bits()`, not a tolerance (DESIGN.md
+/// §Compute backend).
+fn assert_compute_equivalence(nodes: fn() -> Vec<NodeDesc>, batch: usize, iters: usize) {
+    let build = |profile: DeviceProfile| {
+        Session::describe(nodes())
+            .optimizer("sgd", &[("learning_rate", "0.05")])
+            .configure(TrainSpec { batch: Some(batch), ..Default::default() })
+            .compile_for(profile)
+            .unwrap()
+    };
+    let mut naive = build(DeviceProfile::unconstrained().naive_compute());
+    let mut tiered = build(DeviceProfile::unconstrained());
+
+    let (in_len, lb_len) = feat_lens(&naive);
+    let mut rng = Rng::new(0x71E2ED);
+    let mut input = vec![0f32; in_len * batch];
+    let mut label = vec![0f32; lb_len * batch];
+    for it in 0..iters {
+        rng.fill_uniform(&mut input, -1.0, 1.0);
+        rng.fill_uniform(&mut label, 0.0, 1.0);
+        naive.model.bind_batch(&input, &label).unwrap();
+        tiered.model.bind_batch(&input, &label).unwrap();
+        let l0 = naive.model.exec.try_train_iteration().unwrap();
+        let l1 = tiered.model.exec.try_train_iteration().unwrap();
+        assert_eq!(l0.to_bits(), l1.to_bits(), "iteration {it}: loss diverged ({l0} vs {l1})");
+    }
+    for w in naive.model.exec.weight_names() {
+        let a = naive.model.exec.read_weight(&w).unwrap();
+        let b = tiered.model.exec.read_weight(&w).unwrap();
+        assert_eq!(a.len(), b.len(), "{w}: length");
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{w}[{i}]: {x} vs {y} after {iters} iterations");
+        }
+    }
+}
+
+#[test]
+fn naive_and_tiered_training_bitwise_equal_conv() {
+    assert_compute_equivalence(conv_net, 4, 4);
+}
+
+#[test]
+fn naive_and_tiered_training_bitwise_equal_recurrent() {
+    assert_compute_equivalence(recurrent_net, 4, 4);
+}
+
+/// Dropping conv's materialized im2col temp must show up in the planned
+/// pool: the tiered compile of a conv net plans a strictly smaller peak
+/// than the naive compile of the same description at the same batch.
+#[test]
+fn tiered_conv_plans_smaller_pool_than_naive() {
+    let build = |profile: DeviceProfile| {
+        Session::describe(conv_net())
+            .optimizer("sgd", &[("learning_rate", "0.05")])
+            .configure(TrainSpec { batch: Some(8), ..Default::default() })
+            .compile_for(profile)
+            .unwrap()
+    };
+    let naive = build(DeviceProfile::unconstrained().naive_compute());
+    let tiered = build(DeviceProfile::unconstrained());
+    assert!(
+        tiered.peak_pool_bytes() < naive.peak_pool_bytes(),
+        "implicit-GEMM conv did not shrink the planned peak: tiered {} vs naive {}",
+        tiered.peak_pool_bytes(),
+        naive.peak_pool_bytes()
+    );
+}

@@ -313,3 +313,51 @@ fn barrier_before_eviction_fails_loudly() {
         "unexpected error: {msg}"
     );
 }
+
+/// Cross both seams at once: a naive-compute *unswapped* model against
+/// the default tiered-compute model running the swap runtime under a
+/// tight budget. Neither the worker-pool kernels nor the swap engine
+/// may perturb a single bit of the training trajectory, so the two
+/// extremes of the configuration space must still agree exactly.
+#[test]
+fn tiered_swapped_matches_naive_unswapped_bitwise() {
+    use nntrainer::backend::ComputeKind;
+
+    let batch = 8usize;
+    // budget from the *tiered* unswapped peak, so the budgeted compile
+    // below is genuinely forced to offload
+    let probe = compile(conv_stack(), &CompileOpts { batch, ..Default::default() });
+    let full = advise(&probe.exec.graph.table, usize::MAX).primary_peak_bytes;
+
+    let mut naive = compile(
+        conv_stack(),
+        &CompileOpts { batch, compute: ComputeKind::Naive, ..Default::default() },
+    );
+    let mut swapped = compile(
+        conv_stack(),
+        &CompileOpts { batch, memory_budget_bytes: Some(full * 75 / 100), ..Default::default() },
+    );
+    assert!(swapped.exec.swap_active());
+    assert!(!swapped.exec.swap_plan().unwrap().entries.is_empty());
+
+    let (in_len, lb_len) = feat_lens(&naive);
+    let mut rng = Rng::new(0x5EAB17);
+    let mut input = vec![0f32; in_len * batch];
+    let mut label = vec![0f32; lb_len * batch];
+    for it in 0..4 {
+        rng.fill_uniform(&mut input, -1.0, 1.0);
+        rng.fill_uniform(&mut label, 0.0, 1.0);
+        naive.bind_batch(&input, &label).unwrap();
+        swapped.bind_batch(&input, &label).unwrap();
+        let l0 = naive.exec.try_train_iteration().unwrap();
+        let l1 = swapped.exec.try_train_iteration().unwrap();
+        assert_eq!(l0.to_bits(), l1.to_bits(), "iteration {it}: loss diverged ({l0} vs {l1})");
+    }
+    for w in naive.exec.weight_names() {
+        let a = naive.exec.read_weight(&w).unwrap();
+        let b = swapped.exec.read_weight(&w).unwrap();
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{w}[{i}]: {x} vs {y}");
+        }
+    }
+}
