@@ -1,0 +1,803 @@
+"""Behavioral simulation of the memory-pool & spill-store overhaul.
+
+The container has no Rust toolchain (see .claude/skills/verify/SKILL.md),
+so the pure algorithms added by the pool/store PR are ported line-by-line
+to Python and fuzzed here:
+
+* ``SkylineTree`` — the lazy-propagation chmax/range-max segment tree
+  (rust/src/planner/placer.rs) vs a brute-force array oracle.
+* The three placers (first-fit, best-fit, skyline with EO coordinate
+  compression) — layout validity (no two time-overlapping items overlap
+  in space) over randomized segmented-liveness topologies.
+* The portfolio tiers (rust/src/planner/gapfit.rs) — nested candidate
+  sets make the peak ordering skyline <= best-fit <= first-fit a
+  structural guarantee; asserted per random topology.
+* ``plan_compaction`` + ``frag_gauge`` (rust/src/planner/compact.rs) —
+  slide-down relocation maps over fragmented committed layouts:
+  downward monotone moves, relocated-layout validity, memmove safety
+  for persistent (every-EO-live) tensors under in-order application,
+  and the gauge vs a cell-counting oracle.
+* The byte-shuffle + PackBits codec (rust/src/runtime/store.rs) —
+  bitwise round-trip over random/adversarial payloads, run-length
+  boundaries at 128/129/130, and loud errors on truncation.
+* The ``FileStore`` extent/wear/coalescing state machine — ported over
+  a bytearray "file" and driven with random put/get/free sequences
+  against a naive dict oracle, plus directed wear-rotation and
+  write-coalescing cases.
+
+This checks the *logic*, not the Rust build — tier-1 (cargo build/test)
+runs driver/CI-side only.
+"""
+
+import random
+
+import pytest
+
+EO_MAX = 40
+
+# ---------------------------------------------------------------------
+# Ports: interval algebra + placers (placer.rs / gapfit.rs)
+# ---------------------------------------------------------------------
+
+
+def intervals_overlap(a, b):
+    i = j = 0
+    while i < len(a) and j < len(b):
+        a0, a1 = a[i]
+        b0, b1 = b[j]
+        if a0 <= b1 and b0 <= a1:
+            return True
+        if a1 < b1:
+            i += 1
+        else:
+            j += 1
+    return False
+
+
+def blocked_ranges(placed, intervals):
+    forbidden = [
+        (off, off + ln) for iv, off, ln in placed if intervals_overlap(iv, intervals)
+    ]
+    forbidden.sort()
+    return forbidden
+
+
+def first_fit_place(items):
+    placed, regions, pool_len = [], [], 0
+    for iid, need, intervals in items:
+        forbidden = blocked_ranges(placed, intervals)
+        offset = 0
+        for a, b in forbidden:
+            if offset + need <= a:
+                break
+            offset = max(offset, b)
+        regions.append((iid, offset, need))
+        pool_len = max(pool_len, offset + need)
+        placed.append((intervals, offset, need))
+    return pool_len, regions
+
+
+def best_fit_place(items):
+    placed, regions, pool_len = [], [], 0
+    for iid, need, intervals in items:
+        forbidden = blocked_ranges(placed, intervals)
+        best = None  # (offset, waste)
+        cursor = 0
+        for a, b in forbidden:
+            if a > cursor:
+                hole = a - cursor
+                if hole >= need:
+                    waste = hole - need
+                    if best is None or waste < best[1]:
+                        best = (cursor, waste)
+            cursor = max(cursor, b)
+        offset = best[0] if best is not None else cursor
+        regions.append((iid, offset, need))
+        pool_len = max(pool_len, offset + need)
+        placed.append((intervals, offset, need))
+    return pool_len, regions
+
+
+class SkylineTree:
+    def __init__(self, length):
+        n = max(length, 1)
+        self.len = n
+        self.max_v = [0] * (4 * n)
+        self.lazy = [0] * (4 * n)
+
+    def _push(self, node):
+        pend = self.lazy[node]
+        if pend > 0:
+            for child in (2 * node, 2 * node + 1):
+                self.max_v[child] = max(self.max_v[child], pend)
+                self.lazy[child] = max(self.lazy[child], pend)
+            self.lazy[node] = 0
+
+    def _raise_rec(self, node, l, r, a, b, h):
+        if b < l or r < a:
+            return
+        if a <= l and r <= b:
+            self.max_v[node] = max(self.max_v[node], h)
+            self.lazy[node] = max(self.lazy[node], h)
+            return
+        self._push(node)
+        mid = (l + r) // 2
+        self._raise_rec(2 * node, l, mid, a, b, h)
+        self._raise_rec(2 * node + 1, mid + 1, r, a, b, h)
+        self.max_v[node] = max(self.max_v[2 * node], self.max_v[2 * node + 1])
+
+    def _query_rec(self, node, l, r, a, b):
+        if b < l or r < a:
+            return 0
+        if a <= l and r <= b:
+            return self.max_v[node]
+        self._push(node)
+        mid = (l + r) // 2
+        return max(
+            self._query_rec(2 * node, l, mid, a, b),
+            self._query_rec(2 * node + 1, mid + 1, r, a, b),
+        )
+
+    def raise_(self, a, b, h):
+        b = min(b, self.len - 1)
+        self._raise_rec(1, 0, self.len - 1, a, b, h)
+
+    def query(self, a, b):
+        b = min(b, self.len - 1)
+        return self._query_rec(1, 0, self.len - 1, a, b)
+
+
+def skyline_place(items):
+    coords = sorted({e for _, _, ivs in items for a, z in ivs for e in (a, z)})
+    index = {e: i for i, e in enumerate(coords)}
+    tree = SkylineTree(len(coords))
+    regions, pool_len = [], 0
+    for iid, need, intervals in items:
+        offset = 0
+        for a, z in intervals:
+            offset = max(offset, tree.query(index[a], index[z]))
+        top = offset + need
+        for a, z in intervals:
+            tree.raise_(index[a], index[z], top)
+        regions.append((iid, offset, need))
+        pool_len = max(pool_len, top)
+    return pool_len, regions
+
+
+def ordered(items, order):
+    if order == "schedule":
+        key = lambda it: (it[2][0][0], -it[2][-1][1], it[0])
+    elif order == "size":
+        key = lambda it: (-it[1], it[2][0][0], it[0])
+    else:  # area
+        key = lambda it: (
+            -it[1] * sum(z - a + 1 for a, z in it[2]),
+            it[2][0][0],
+            it[0],
+        )
+    return sorted(items, key=key)
+
+
+FF_TIER = [(first_fit_place, o) for o in ("schedule", "size")]
+BF_TIER = [(best_fit_place, o) for o in ("schedule", "size")] + FF_TIER
+SKY_TIER = [
+    (p, o)
+    for p in (skyline_place, best_fit_place, first_fit_place)
+    for o in ("schedule", "size", "area")
+]
+
+
+def portfolio(items, candidates):
+    best = None
+    for placer, order in candidates:
+        length, regions = placer(ordered(items, order))
+        if best is None or length < best[0]:
+            best = (length, regions)
+    return best
+
+
+def assert_valid(items, regions):
+    by_id = {iid: (off, ln) for iid, off, ln in regions}
+    for i in range(len(items)):
+        for j in range(i + 1, len(items)):
+            if intervals_overlap(items[i][2], items[j][2]):
+                ao, al = by_id[items[i][0]]
+                bo, bl = by_id[items[j][0]]
+                assert ao + al <= bo or bo + bl <= ao, (
+                    f"items {items[i][0]} and {items[j][0]} overlap in "
+                    f"time and space: ({ao},{al}) vs ({bo},{bl})"
+                )
+
+
+def gen_items(rng, n):
+    """Random segmented-liveness items; ~25% persistent (live at every EO)."""
+    items = []
+    for i in range(n):
+        need = rng.randint(1, 50)
+        if rng.random() < 0.25:
+            intervals = [(0, EO_MAX)]
+            persistent = True
+        else:
+            k = rng.randint(1, 3)
+            pts = sorted(rng.sample(range(EO_MAX + 1), 2 * k))
+            intervals = [(pts[2 * s], pts[2 * s + 1]) for s in range(k)]
+            persistent = False
+        items.append((i, need, intervals, persistent))
+    return items
+
+
+# ---------------------------------------------------------------------
+# Segment tree vs brute force
+# ---------------------------------------------------------------------
+
+
+def test_skyline_tree_matches_brute_force():
+    for seed in range(40):
+        rng = random.Random(1000 + seed)
+        n = rng.randint(1, 60)
+        tree = SkylineTree(n)
+        brute = [0] * n
+        for _ in range(200):
+            a = rng.randrange(n)
+            b = rng.randrange(a, n)
+            if rng.random() < 0.5:
+                h = rng.randint(0, 1000)
+                tree.raise_(a, b, h)
+                for k in range(a, b + 1):
+                    brute[k] = max(brute[k], h)
+            else:
+                assert tree.query(a, b) == max(brute[a : b + 1]), (seed, a, b)
+
+
+# ---------------------------------------------------------------------
+# Placer validity + portfolio nesting
+# ---------------------------------------------------------------------
+
+
+def test_placers_valid_and_tier_peaks_nested():
+    for seed in range(400):
+        rng = random.Random(2000 + seed)
+        items = [(i, n, iv) for i, n, iv, _ in gen_items(rng, rng.randint(2, 14))]
+        for placer in (first_fit_place, best_fit_place, skyline_place):
+            length, regions = placer(items)
+            assert_valid(items, regions)
+            assert length == max(off + ln for _, off, ln in regions)
+        ff, ff_regions = portfolio(items, FF_TIER)
+        bf, bf_regions = portfolio(items, BF_TIER)
+        sky, sky_regions = portfolio(items, SKY_TIER)
+        assert sky <= bf <= ff, (seed, sky, bf, ff)
+        for regions in (ff_regions, bf_regions, sky_regions):
+            assert_valid(items, regions)
+
+
+def test_skyline_reuses_dead_time():
+    # b lives strictly inside a's idle gap -> same address (placer.rs
+    # unit fixture)
+    items = [(0, 100, [(0, 1), (8, 9)]), (1, 100, [(3, 5)])]
+    length, regions = skyline_place(items)
+    assert length == 100
+    assert regions[0][1] == 0 and regions[1][1] == 0
+
+
+# ---------------------------------------------------------------------
+# Compaction (compact.rs)
+# ---------------------------------------------------------------------
+
+
+def frag_gauge(regions, pool_len):
+    spans = sorted((off, off + ln) for _, off, ln in regions)
+    unused = largest = cursor = 0
+    for a, b in spans:
+        if a > cursor:
+            hole = a - cursor
+            unused += hole
+            largest = max(largest, hole)
+        cursor = max(cursor, b)
+    if pool_len > cursor:
+        tail = pool_len - cursor
+        unused += tail
+        largest = max(largest, tail)
+    return unused, largest
+
+
+def plan_compaction(items, committed, pool_len):
+    """Port of planner/compact.rs::plan_compaction.
+
+    ``items``: (id, need, intervals, persistent); ``committed``: id ->
+    offset. Returns (moves, new_len) or None; a move is
+    (id, from_off, to_off, need, persistent).
+    """
+    order = sorted(items, key=lambda it: (committed[it[0]], it[0]))
+    placed = []  # (intervals, offset, len)
+    moves = []
+    new_len = 0
+    for iid, need, intervals, persistent in order:
+        src = committed[iid]
+        forbidden = blocked_ranges(placed, intervals)
+        offset = 0
+        for a, b in forbidden:
+            if offset + need <= a:
+                break
+            offset = max(offset, b)
+        assert offset <= src, f"slide-down moved {iid} up: {src} -> {offset}"
+        if offset != src:
+            moves.append((iid, src, offset, need, persistent))
+        new_len = max(new_len, offset + need)
+        placed.append((intervals, offset, need))
+    if not moves and new_len >= pool_len:
+        return None
+    return moves, new_len
+
+
+def gen_fragmented_layout(rng, items):
+    """Commit a valid-but-holey layout: place with padded sizes, keep
+    the true sizes -- every hole is pure padding, validity preserved."""
+    padded = [(i, need + rng.randint(0, 20), iv) for i, need, iv, _ in items]
+    _, regions = first_fit_place(ordered(padded, rng.choice(["schedule", "size"])))
+    committed = {iid: off for iid, off, _ in regions}
+    top = max(committed[i] + need for i, need, _, _ in items)
+    return committed, top + rng.randint(0, 15)
+
+
+def test_compaction_is_valid_monotone_and_memmove_safe():
+    compacted = 0
+    for seed in range(300):
+        rng = random.Random(3000 + seed)
+        items = gen_items(rng, rng.randint(2, 12))
+        committed, pool_len = gen_fragmented_layout(rng, items)
+        plan = plan_compaction(items, committed, pool_len)
+        if plan is None:
+            # already compact: nothing can slide down
+            continue
+        compacted += 1
+        moves, new_len = plan
+        assert new_len <= pool_len
+
+        # moves ascend by source offset; every move is strictly downward
+        assert moves == sorted(moves, key=lambda m: (m[1], m[0]))
+        for _, src, dst, _, _ in moves:
+            assert dst < src
+
+        # a persistent move's destination never overlaps a *later*
+        # persistent move's source (the memmove-order property)
+        pmoves = [m for m in moves if m[4]]
+        for i, (_, _, dst_i, len_i, _) in enumerate(pmoves):
+            for _, src_j, _, len_j, _ in pmoves[i + 1 :]:
+                assert dst_i + len_i <= src_j or src_j + len_j <= dst_i
+
+        # relocated layout stays valid under the same liveness
+        relocated = dict(committed)
+        for iid, _, dst, _, _ in moves:
+            relocated[iid] = dst
+        assert_valid(
+            [(i, n, iv) for i, n, iv, _ in items],
+            [(i, relocated[i], n) for i, n, _, _ in items],
+        )
+
+        # simulate the epoch-barrier application: persistent tensors
+        # carry unique tags; in-order forward copies must preserve all
+        # of them (transients only get their table regions rewritten)
+        pool = [None] * pool_len
+        for iid, need, _, persistent in items:
+            if persistent:
+                off = committed[iid]
+                for k in range(need):
+                    pool[off + k] = (iid, k)
+        for iid, src, dst, need, persistent in moves:
+            if persistent:
+                for k in range(need):  # forward copy == memmove down
+                    pool[dst + k] = pool[src + k]
+        for iid, need, _, persistent in items:
+            if persistent:
+                off = relocated[iid]
+                assert all(pool[off + k] == (iid, k) for k in range(need)), iid
+    assert compacted > 100, "generator failed to produce fragmented layouts"
+
+
+def test_frag_gauge_matches_cell_oracle():
+    for seed in range(200):
+        rng = random.Random(4000 + seed)
+        items = gen_items(rng, rng.randint(1, 10))
+        committed, pool_len = gen_fragmented_layout(rng, items)
+        regions = [(i, committed[i], n) for i, n, _, _ in items]
+        unused, largest = frag_gauge(regions, pool_len)
+        covered = [False] * pool_len
+        for _, off, ln in regions:
+            for k in range(off, off + ln):
+                covered[k] = True
+        assert unused == covered.count(False)
+        run = best = 0
+        for c in covered:
+            run = 0 if c else run + 1
+            best = max(best, run)
+        assert largest == best
+
+
+def test_frag_gauge_hand_case():
+    # compact.rs::frag_gauge_counts_holes_and_tail (element units)
+    regions = [(0, 0, 10), (1, 14, 5)]
+    unused, largest = frag_gauge(regions, 25)
+    assert unused == 10  # hole of 4 + tail of 6
+    assert largest == 6
+
+
+# ---------------------------------------------------------------------
+# Byte-shuffle + PackBits codec (store.rs)
+# ---------------------------------------------------------------------
+
+
+def packbits(src):
+    out = bytearray()
+    i = 0
+    n = len(src)
+    while i < n:
+        b = src[i]
+        run = 1
+        while i + run < n and src[i + run] == b and run < 129:
+            run += 1
+        if run >= 3:
+            out.append(128 + run - 2)
+            out.append(b)
+            i += run
+        else:
+            start = i
+            i += run
+            while i < n and i - start < 128:
+                c = src[i]
+                r = 1
+                while i + r < n and src[i + r] == c and r < 3:
+                    r += 1
+                if r >= 3:
+                    break
+                i += r
+            length = i - start
+            if length > 128:
+                length = 128
+                i = start + length
+            out.append(length - 1)
+            out += src[start : start + length]
+    return bytes(out)
+
+
+def unpackbits(src):
+    out = bytearray()
+    i = 0
+    n = len(src)
+    while i < n:
+        c = src[i]
+        i += 1
+        if c < 128:
+            length = c + 1
+            if i + length > n:
+                raise ValueError("corrupt RLE literal run")
+            out += src[i : i + length]
+            i += length
+        else:
+            length = (c - 128) + 2
+            if i >= n:
+                raise ValueError("corrupt RLE repeat run")
+            out += bytes([src[i]]) * length
+            i += 1
+    return bytes(out)
+
+
+def shuffle_rle_encode(data):
+    """``data``: raw LE f32 bytes (len % 4 == 0)."""
+    n = len(data) // 4
+    out = bytearray()
+    for p in range(4):
+        plane = data[p::4]
+        coded = packbits(plane)
+        out += len(coded).to_bytes(4, "little")
+        out += coded
+    return bytes(out)
+
+
+def shuffle_rle_decode(enc, n):
+    planes = []
+    cur = 0
+    for p in range(4):
+        if cur + 4 > len(enc):
+            raise ValueError("truncated RLE plane header")
+        coded = int.from_bytes(enc[cur : cur + 4], "little")
+        cur += 4
+        if cur + coded > len(enc):
+            raise ValueError("truncated RLE plane stream")
+        plane = unpackbits(enc[cur : cur + coded])
+        cur += coded
+        if len(plane) != n:
+            raise ValueError(f"RLE plane {p} decoded {len(plane)} bytes, expected {n}")
+        planes.append(plane)
+    out = bytearray(4 * n)
+    for p in range(4):
+        out[p::4] = planes[p]
+    return bytes(out)
+
+
+def _payloads(rng):
+    n = rng.randint(1, 200)
+    kind = rng.randrange(5)
+    if kind == 0:  # pure random bytes (worst case, often incompressible)
+        return rng.randbytes(4 * n)
+    if kind == 1:  # constant f32 pattern (best case)
+        return bytes([rng.randrange(256)] * 4) * n
+    if kind == 2:  # run boundaries around the 127/128/129/130 edges
+        out = bytearray()
+        while len(out) < 4 * n:
+            out += bytes([rng.randrange(256)]) * rng.choice([126, 127, 128, 129, 130, 131])
+        return bytes(out[: 4 * n])
+    if kind == 3:  # alternating pair (defeats RLE, stresses literals)
+        return (bytes([rng.randrange(256), rng.randrange(256)]) * (2 * n))[: 4 * n]
+    # realistic activations: same exponent byte, noisy mantissa
+    exp = rng.randrange(256)
+    return b"".join(
+        bytes([rng.randrange(256), rng.randrange(256), rng.randrange(64), exp])
+        for _ in range(n)
+    )
+
+
+def test_codec_roundtrip_bitwise_exact():
+    for seed in range(500):
+        rng = random.Random(5000 + seed)
+        data = _payloads(rng)
+        enc = shuffle_rle_encode(data)
+        assert shuffle_rle_decode(enc, len(data) // 4) == data, seed
+
+
+def test_packbits_run_edges_roundtrip():
+    for run in (1, 2, 3, 127, 128, 129, 130, 257, 258, 259):
+        src = bytes([7] * run + [1, 2, 3])
+        assert unpackbits(packbits(src)) == src, run
+
+
+def test_codec_truncation_errors_loudly():
+    rng = random.Random(99)
+    data = _payloads(rng)
+    enc = shuffle_rle_encode(data)
+    n = len(data) // 4
+    for cut in range(0, len(enc), max(1, len(enc) // 37)):
+        if cut == len(enc):
+            continue
+        with pytest.raises(ValueError):
+            shuffle_rle_decode(enc[:cut], n)
+
+
+def test_constant_payload_compresses():
+    data = bytes([0x3F, 0x80, 0x00, 0x00]) * 1000  # 1000 x 1.0f
+    enc = shuffle_rle_encode(data)
+    assert len(enc) < len(data) // 10
+
+
+# ---------------------------------------------------------------------
+# FileStore extent / wear / coalescing state machine (store.rs)
+# ---------------------------------------------------------------------
+
+ROTATE_WRITES = 64
+COALESCE_MAX_GAP = 256
+COALESCE_MAX_PENDING = 4 << 20
+
+
+class FileStoreSim:
+    """Line-by-line port of FileStore over a bytearray file."""
+
+    def __init__(self, compress):
+        self.file = bytearray()
+        self.compress = compress
+        self.slots = {}  # key -> (extent, byte_len, enc, enc_len)
+        self.extents = []  # [off, cap, writes, free]
+        self.end = 0
+        self.pending = bytearray()
+        self.pending_off = 0
+        self.stats = dict.fromkeys(
+            "puts gets rewrites rotations coalesced_puts logical physical live peak".split(),
+            0,
+        )
+
+    def _encode(self, data):
+        if self.compress:
+            enc = shuffle_rle_encode(data)
+            if len(enc) < len(data):
+                return "rle", enc
+        return "raw", data
+
+    def _pick_free(self, need, cooler_than=None):
+        cands = [
+            (e[2], e[1], i)
+            for i, e in enumerate(self.extents)
+            if e[3] and e[1] >= need and (cooler_than is None or e[2] < cooler_than)
+        ]
+        return min(cands)[2] if cands else None
+
+    def _claim(self, idx):
+        assert self.extents[idx][3]
+        self.extents[idx][3] = False
+        self.stats["live"] += self.extents[idx][1]
+        self.stats["peak"] = max(self.stats["peak"], self.stats["live"])
+
+    def _alloc(self, cap):
+        i = self._pick_free(cap)
+        if i is not None:
+            self._claim(i)
+            return i
+        off = self.end
+        self.end += cap
+        self.extents.append([off, cap, 0, True])
+        i = len(self.extents) - 1
+        self._claim(i)
+        return i
+
+    def _release(self, idx):
+        self.extents[idx][3] = True
+        self.stats["live"] -= self.extents[idx][1]
+        while self.extents:
+            last = self.extents[-1]
+            if last[3] and last[0] + last[1] == self.end:
+                self.end = last[0]
+                self.extents.pop()
+            else:
+                break
+
+    def _queue_write(self, off, payload):
+        if not self.pending:
+            self.pending_off = off
+            self.pending = bytearray(payload)
+            return
+        pend_end = self.pending_off + len(self.pending)
+        mergeable = (
+            off >= self.pending_off
+            and off <= pend_end + COALESCE_MAX_GAP
+            and len(self.pending) + len(payload) <= COALESCE_MAX_PENDING
+        )
+        if mergeable:
+            if off + len(payload) <= pend_end:
+                s = off - self.pending_off
+                self.pending[s : s + len(payload)] = payload
+            elif off >= pend_end:
+                # bridge the hole with the file's current bytes (zeros
+                # past EOF) -- zero-filling would clobber a live extent
+                # inside the hole at flush time
+                hole = self.file[pend_end : off]
+                self.pending += hole + bytes(off - pend_end - len(hole))
+                self.pending += payload
+            else:
+                del self.pending[off - self.pending_off :]
+                self.pending += payload
+            self.stats["coalesced_puts"] += 1
+            return
+        self._flush()
+        self.pending_off = off
+        self.pending = bytearray(payload)
+
+    def _flush(self):
+        if not self.pending:
+            return
+        end = self.pending_off + len(self.pending)
+        if len(self.file) < end:
+            self.file += bytes(end - len(self.file))
+        self.file[self.pending_off : end] = self.pending
+        self.stats["physical"] += len(self.pending)
+        self.pending = bytearray()
+
+    def put(self, key, data):
+        raw_len = len(data)
+        enc, payload = self._encode(data)
+        slot = self.slots.get(key)
+        if slot is not None and slot[1] == raw_len:
+            ei = slot[0]
+            if self.extents[ei][2] >= ROTATE_WRITES:
+                ni = self._pick_free(raw_len, cooler_than=self.extents[ei][2])
+                if ni is not None:
+                    self._claim(ni)
+                    self._release(ei)
+                    self.stats["rotations"] += 1
+                    ei = ni
+            extent = ei
+        elif slot is not None:
+            self._release(slot[0])
+            extent = self._alloc(raw_len)
+        else:
+            extent = self._alloc(raw_len)
+        if self.extents[extent][2] > 0:
+            self.stats["rewrites"] += 1
+        self.extents[extent][2] += 1
+        off = self.extents[extent][0]
+        self.slots[key] = (extent, raw_len, enc, len(payload))
+        self._queue_write(off, payload)
+        self.stats["puts"] += 1
+        self.stats["logical"] += raw_len
+
+    def get(self, key):
+        self._flush()
+        extent, raw_len, enc, enc_len = self.slots[key]
+        off = self.extents[extent][0]
+        blob = bytes(self.file[off : off + enc_len])
+        assert len(blob) == enc_len, "read past file end"
+        if enc == "raw":
+            out = blob
+        else:
+            out = shuffle_rle_decode(blob, raw_len // 4)
+        self.stats["gets"] += 1
+        return out
+
+    def free(self, key):
+        slot = self.slots.pop(key, None)
+        if slot is not None:
+            self._release(slot[0])
+
+    def check_invariants(self):
+        claimed = [e for e in self.extents if not e[3]]
+        spans = sorted((e[0], e[0] + e[1]) for e in self.extents)
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert a1 <= b0, "extents overlap"
+        assert self.stats["live"] == sum(e[1] for e in claimed)
+        assert self.end == max((e[0] + e[1] for e in self.extents), default=0)
+        for extent, _, _, _ in self.slots.values():
+            assert extent < len(self.extents)
+            assert not self.extents[extent][3], "slot references a free extent"
+
+
+@pytest.mark.parametrize("compress", [False, True])
+def test_file_store_state_machine_vs_oracle(compress):
+    for seed in range(60):
+        rng = random.Random(6000 + seed)
+        store = FileStoreSim(compress)
+        oracle = {}
+        sizes = {k: 4 * rng.randint(1, 64) for k in range(8)}
+        for _ in range(200):
+            op = rng.random()
+            key = rng.randrange(8)
+            if op < 0.55:
+                if rng.random() < 0.05:  # occasional resize
+                    sizes[key] = 4 * rng.randint(1, 64)
+                data = (
+                    _payloads(rng)[: sizes[key]].ljust(sizes[key], b"\x42")
+                    if rng.random() < 0.5
+                    else rng.randbytes(sizes[key])
+                )
+                store.put(key, data)
+                oracle[key] = data
+            elif op < 0.85:
+                if key in oracle:
+                    assert store.get(key) == oracle[key], (seed, key)
+            else:
+                store.free(key)
+                oracle.pop(key, None)
+            store.check_invariants()
+        for key in list(oracle):
+            assert store.get(key) == oracle[key]
+            store.free(key)
+        store.check_invariants()
+        assert store.end == 0, "freeing every slot must roll the file back"
+        assert store.stats["puts"] >= store.stats["rewrites"]
+
+
+def test_wear_rotation_hands_hot_slot_to_cool_extent():
+    store = FileStoreSim(compress=False)
+    a = bytes(range(64))  # 64 bytes
+    store.put(0, a)
+    store.put(1, a)  # the future cool extent (middle of the file)
+    store.put(2, a)  # tail guard: keeps extent 1 off the rollback path
+    for _ in range(ROTATE_WRITES - 1):
+        store.put(0, a)
+    assert store.extents[store.slots[0][0]][2] == ROTATE_WRITES
+    assert store.stats["rotations"] == 0
+    store.free(1)  # middle extent goes free; tail rollback can't eat it
+    hot = store.slots[0][0]
+    store.put(0, a)
+    assert store.stats["rotations"] == 1
+    assert store.slots[0][0] != hot, "slot must rotate onto the cooler extent"
+    assert store.extents[hot][3], "the hot extent is released"
+    assert store.get(0) == a
+    assert store.get(2) == a
+    store.check_invariants()
+
+
+def test_adjacent_puts_coalesce():
+    store = FileStoreSim(compress=False)
+    store.put(0, bytes([1] * 32))
+    store.put(1, bytes([2] * 32))  # adjacent extent, no get between
+    assert store.stats["coalesced_puts"] == 1
+    assert store.stats["physical"] == 0, "nothing flushed yet"
+    assert store.get(0) == bytes([1] * 32)
+    assert store.get(1) == bytes([2] * 32)
+    assert store.stats["physical"] == 64, "one merged flush"

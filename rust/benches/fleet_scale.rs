@@ -3,7 +3,7 @@
 //! Poisson-ish arrival and churn, against the analytic cost of the
 //! naive one-session-per-user design.
 //!
-//! Scenario per store backend (host / file):
+//! Scenario per store backend (host / file / file-compressed):
 //!
 //! * `NNTRAINER_FLEET_TENANTS` tenants (default 1000) arrive on an
 //!   exponential-gap clock (seeded, deterministic), each training its
@@ -83,6 +83,8 @@ struct CaseResult {
     yields: u64,
     read_stall_ms: f64,
     departed: usize,
+    store_peak_mib: f64,
+    store_physical_mib: f64,
 }
 
 fn run_case(store: StoreKind, tenants: usize, samples_per_tenant: usize, seed: u64) -> CaseResult {
@@ -196,6 +198,7 @@ fn run_case(store: StoreKind, tenants: usize, samples_per_tenant: usize, seed: u
     let wall_s = t0.elapsed().as_secs_f64();
 
     let stats = fleet.stats().clone();
+    let store = fleet.park_store_stats();
     assert_eq!(stats.admitted, tenants);
     assert_eq!(stats.completed, tenants, "every admitted tenant must finish");
     let naive_bytes = fleet
@@ -215,6 +218,8 @@ fn run_case(store: StoreKind, tenants: usize, samples_per_tenant: usize, seed: u
         yields: stats.yields,
         read_stall_ms: stats.read_stall_ns as f64 / 1e6,
         departed,
+        store_peak_mib: store.peak_bytes as f64 / (1024.0 * 1024.0),
+        store_physical_mib: store.physical_bytes as f64 / (1024.0 * 1024.0),
     }
 }
 
@@ -229,10 +234,14 @@ fn main() {
     let mut report = BenchReport::new("fleet_scale", dataset);
     let mut table = Table::new(&[
         "store", "tenants", "steps", "p50 us", "p99 us", "steps/s", "peak MiB", "naive MiB",
-        "parks", "unparks", "stalled", "stall ms",
+        "store MiB", "parks", "unparks", "stalled", "stall ms",
     ]);
 
-    for (store, id) in [(StoreKind::Host, "fleet/host"), (StoreKind::File, "fleet/file")] {
+    for (store, id) in [
+        (StoreKind::Host, "fleet/host"),
+        (StoreKind::File, "fleet/file"),
+        (StoreKind::FileCompressed, "fleet/file-compressed"),
+    ] {
         let r = run_case(store, tenants, dataset, 0xF1EE7);
         let steps_per_s = r.steps as f64 / r.wall_s.max(1e-9);
         table.row(vec![
@@ -244,6 +253,7 @@ fn main() {
             format!("{:.0}", steps_per_s),
             format!("{:.1}", r.peak_mib),
             format!("{:.1}", r.naive_mib),
+            format!("{:.1}", r.store_peak_mib),
             r.parks.to_string(),
             r.unparks.to_string(),
             r.stalled.to_string(),
@@ -259,6 +269,8 @@ fn main() {
                 Metric::higher("steps_per_s", steps_per_s),
                 Metric::lower("peak_resident_mib", r.peak_mib),
                 Metric::info("naive_peak_mib", r.naive_mib),
+                Metric::lower("store_peak_mib", r.store_peak_mib),
+                Metric::info("store_physical_mib", r.store_physical_mib),
                 Metric::info("rss_vs_naive_pct", 100.0 * r.peak_mib / r.naive_mib.max(1e-9)),
                 Metric::info("parks", r.parks as f64),
                 Metric::info("unparks", r.unparks as f64),

@@ -68,6 +68,7 @@ fn run_case(
         train_random_swap(nodes, &opts, dataset, 1, 0.01, sync_evict).expect("train");
     let plan = model.exec.swap_plan().expect("swap plan").clone();
     let stats = model.exec.swap_stats().expect("swap stats");
+    let st = model.exec.swap_store_stats().expect("store stats");
     let depth = model.exec.swap_depth().unwrap_or(0);
     let lead = model.exec.swap_max_lead().unwrap_or(0);
     let iters = iters.max(1);
@@ -89,6 +90,8 @@ fn run_case(
         fmt_mib(plan.primary_peak_bytes),
         fmt_mib(achieved),
         format!("{frag:.1}"),
+        format!("{:.1}", stats.frag_pct()),
+        format!("{}", st.rewrites),
         (if plan.fits { "yes" } else { "no" }).into(),
         fmt_mib(plan.swap_bytes_per_iter),
         format!("{lead}"),
@@ -109,6 +112,10 @@ fn run_case(
             Metric::lower("advised_mib", plan.primary_peak_bytes as f64 / MIB),
             Metric::lower("achieved_mib", achieved as f64 / MIB),
             Metric::lower("frag_pct", frag),
+            Metric::lower("pool_frag_pct", stats.frag_pct()),
+            Metric::lower("store_rewrites", st.rewrites as f64),
+            Metric::info("store_peak_mib", st.peak_bytes as f64 / MIB),
+            Metric::info("store_physical_mib", st.physical_bytes as f64 / MIB),
             Metric::info("fits", if plan.fits { 1.0 } else { 0.0 }),
             Metric::info("swap_mib_per_iter", plan.swap_bytes_per_iter as f64 / MIB),
             Metric::info("lead", lead as f64),
@@ -136,6 +143,8 @@ fn main() {
         "advised",
         "achieved",
         "frag%",
+        "pool frag%",
+        "rewrites",
         "fits",
         "swap MiB/it",
         "lead",
@@ -146,7 +155,7 @@ fn main() {
         "iter ms",
     ]);
     let mut report = BenchReport::new("swap_runtime", bench_dataset());
-    for placer in [PlannerKind::Sorting, PlannerKind::BestFit] {
+    for placer in [PlannerKind::Sorting, PlannerKind::BestFit, PlannerKind::Skyline] {
         run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, placer, SwapTuning::Fixed, false);
         run_case(&mut table, &mut report, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed, false);
         run_case(&mut table, &mut report, "Model B (Conv)", zoo::model_b_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed, false);
@@ -164,6 +173,12 @@ fn main() {
         run_case(&mut table, &mut report, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::File, PlannerKind::Sorting, SwapTuning::Calibrated, sync_evict);
     }
     run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, PlannerKind::Sorting, SwapTuning::Calibrated, false);
+    // the compressed spill store: fewer physical bytes per put (the
+    // byte-shuffled RLE codec) at encode cost on the workers — run with
+    // the skyline placer too so the full new stack has a perf row
+    for placer in [PlannerKind::Sorting, PlannerKind::Skyline] {
+        run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::FileCompressed, placer, SwapTuning::Calibrated, false);
+    }
     table.print();
     println!(
         "\nachieved = gap-aware planner pool (what training actually allocates); \
@@ -177,7 +192,10 @@ fn main() {
          background write tickets with reclaim barriers (full-duplex engine).\n\
          rstall = training-thread wait on swap-ins; wstall = training-thread wait \
          on eviction writes — the number async eviction takes off the critical \
-         path; the rest of the traffic is hidden by the background workers."
+         path; the rest of the traffic is hidden by the background workers.\n\
+         pool frag% = internal fragmentation of the placed arena (bytes no \
+         tensor ever occupies); rewrites = store-slot overwrites (the wear \
+         number slot rotation spreads; see store_peak/physical in the JSON)."
     );
     finish(&report);
 }

@@ -187,9 +187,12 @@ pub fn train_random_run(
         }
         iters += in_epoch;
         epoch_losses.push(if in_epoch > 0 { (loss_sum / in_epoch as f64) as f32 } else { f32::NAN });
-        // epoch boundary, as in session::run_training: snapshot the swap
-        // counters for the per-epoch trajectory, then let calibrated
-        // tuning react to the stall telemetry this epoch accrued
+        // epoch boundary, as in session::run_training: apply any parked
+        // pool compaction at the swap-quiescent barrier, snapshot the
+        // swap counters for the per-epoch trajectory, then let
+        // calibrated tuning react to the stall telemetry this epoch
+        // accrued
+        model.exec.compact_pool()?;
         if let Some(sw) = model.exec.swap_mut() {
             sw.mark_epoch();
             sw.adapt_depth();

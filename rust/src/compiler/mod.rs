@@ -14,10 +14,10 @@ use crate::layers::{builtin_factories, LayerFactory};
 use crate::metrics::PlanReport;
 use crate::optimizer::Optimizer;
 use crate::planner::{
-    gapfit::{GapBestFitPlanner, GapFitPlanner},
-    offload,
+    gapfit::{GapBestFitPlanner, GapFitPlanner, GapSkylinePlanner},
+    offload, plan_compaction,
     validate::{validate_gap_plan, validate_merges, validate_plan},
-    PlannerKind,
+    Planner, PlannerKind,
 };
 use crate::runtime::calibrate::{self, SwapCalibration, SwapTuning};
 use crate::runtime::store::{SecondaryStore, StoreKind};
@@ -61,6 +61,13 @@ pub struct CompileOpts {
     /// keeps the original single-threaded free-function kernels as a
     /// bitwise regression baseline.
     pub compute: ComputeKind,
+    /// Plan a one-shot pool compaction applied at the first epoch
+    /// boundary (a swap-quiescent barrier): persistent tensors slide
+    /// down into layout holes and the arena truncates to the compacted
+    /// peak. Opt-in — callers that capture `Region` values at compile
+    /// time (e.g. the fleet's weight-layout snapshots) must leave this
+    /// off. Only meaningful under a memory budget.
+    pub pool_compaction: bool,
 }
 
 impl Default for CompileOpts {
@@ -77,6 +84,7 @@ impl Default for CompileOpts {
             swap_store: StoreKind::Host,
             swap_tuning: SwapTuning::Fixed,
             compute: ComputeKind::default(),
+            pool_compaction: false,
         }
     }
 }
@@ -115,12 +123,19 @@ fn plan_memory(
                 }
                 _ => None,
             };
-            let (pool_len, name) = if opts.planner == PlannerKind::BestFit {
-                let placer = GapBestFitPlanner { plan: &plan };
-                (crate::planner::Planner::plan(&placer, table)?, "gapfit-bestfit")
-            } else {
-                let placer = GapFitPlanner { plan: &plan };
-                (crate::planner::Planner::plan(&placer, table)?, "gapfit")
+            let (pool_len, name) = match opts.planner {
+                PlannerKind::Skyline => {
+                    let placer = GapSkylinePlanner { plan: &plan };
+                    (Planner::plan(&placer, table)?, "gapfit-skyline")
+                }
+                PlannerKind::BestFit => {
+                    let placer = GapBestFitPlanner { plan: &plan };
+                    (Planner::plan(&placer, table)?, "gapfit-bestfit")
+                }
+                _ => {
+                    let placer = GapFitPlanner { plan: &plan };
+                    (Planner::plan(&placer, table)?, "gapfit")
+                }
             };
             validate_gap_plan(table, &plan, pool_len)?;
             validate_merges(table)?;
@@ -240,7 +255,14 @@ pub fn compile_graph(
     let report = PlanReport::from_table(&ig.table, pool_len, planner_name);
     let swap = match (plan, store) {
         (Some(plan), Some(store)) => {
-            Some(SwapExec::new(&ig.table, &plan, store, calibration)?)
+            let mut sw = SwapExec::new(&ig.table, &plan, store, calibration)?;
+            sw.refresh_frag(&ig.table, pool_len);
+            if opts.pool_compaction {
+                if let Some(cp) = plan_compaction(&ig.table, &plan, pool_len) {
+                    sw.set_compaction(cp);
+                }
+            }
+            Some(sw)
         }
         _ => None,
     };

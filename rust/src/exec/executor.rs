@@ -637,6 +637,13 @@ impl Executor {
         self.swap.as_ref().map(|s| s.epoch_stats())
     }
 
+    /// Cumulative secondary-store I/O counters — rewrites, rotations,
+    /// physical vs logical bytes, peak footprint (None when no budget
+    /// was set).
+    pub fn swap_store_stats(&self) -> Option<crate::runtime::store::StoreStats> {
+        self.swap.as_ref().map(|s| s.store_stats())
+    }
+
     /// Current in-flight prefetch depth (None when no budget was set).
     pub fn swap_depth(&self) -> Option<usize> {
         self.swap.as_ref().map(|s| s.depth())
@@ -657,5 +664,37 @@ impl Executor {
     /// Mutable access to the swap runtime (tests: plan-corruption hooks).
     pub fn swap_mut(&mut self) -> Option<&mut SwapExec> {
         self.swap.as_mut()
+    }
+
+    /// Apply the parked pool-compaction plan, if any. Must be called at
+    /// a swap-quiescent barrier (between iterations, after
+    /// `end_iteration` has drained every transfer) — `rebind` refuses
+    /// otherwise. Persistent tensors (weights, optimizer state,
+    /// max-lifespan temps) have their bytes slid down in plan order —
+    /// ascending destination, every move downward, so in-place memmove
+    /// copies never clobber an unmoved source. Transient tensors carry
+    /// no live data at the barrier and only have their table regions
+    /// rewritten. The arena then truncates to the compacted peak and the
+    /// swap runtime rebinds its entries to the relocated table. Returns
+    /// `Ok(true)` when a plan was applied, `Ok(false)` when none was
+    /// parked.
+    pub fn compact_pool(&mut self) -> Result<bool> {
+        let Some(sw) = self.swap.as_mut() else {
+            return Ok(false);
+        };
+        let Some(cp) = sw.take_compaction() else {
+            return Ok(false);
+        };
+        for m in &cp.moves {
+            if m.persistent {
+                self.pool.move_region(m.from, m.to);
+            }
+            self.graph.table.get_mut(m.id).region = Some(m.to);
+        }
+        self.pool.shrink(cp.new_len);
+        let sw = self.swap.as_mut().unwrap();
+        sw.rebind(&self.graph.table)?;
+        sw.refresh_frag(&self.graph.table, cp.new_len);
+        Ok(true)
     }
 }

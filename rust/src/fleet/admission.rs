@@ -25,7 +25,7 @@ use crate::graph::NodeDesc;
 use crate::layers::{builtin_factories, Props};
 use crate::model::{DeviceProfile, TrainSpec};
 use crate::optimizer;
-use crate::runtime::store::{SecondaryStore, StoreKind};
+use crate::runtime::store::{SecondaryStore, StoreKind, StoreStats};
 
 /// The fleet's memory arithmetic, derived once at build.
 #[derive(Clone, Debug)]
@@ -195,6 +195,13 @@ impl ParkingLot {
     /// Live store slots — every parked or finished tenant holds one.
     pub fn slot_count(&self) -> usize {
         self.store.lock().unwrap().slot_count()
+    }
+
+    /// Snapshot of the backing store's cumulative I/O counters
+    /// (`StoreStats::peak_bytes` is the bench's peak-store-footprint
+    /// column; compressing stores report physical < logical bytes).
+    pub fn store_stats(&self) -> StoreStats {
+        self.store.lock().unwrap().stats()
     }
 
     pub fn kind(&self) -> &'static str {

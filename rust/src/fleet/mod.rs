@@ -765,4 +765,11 @@ impl FleetService {
     pub fn parked_slot_count(&self) -> usize {
         self.parking.slot_count()
     }
+
+    /// Cumulative I/O counters of the parking store — peak store
+    /// footprint, rewrites, physical-vs-logical bytes (the compressed
+    /// store's saving shows up here).
+    pub fn park_store_stats(&self) -> crate::runtime::store::StoreStats {
+        self.parking.store_stats()
+    }
 }

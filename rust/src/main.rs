@@ -2,7 +2,7 @@
 //! session API (`Session::from_ini_file → configure → compile_for`).
 //!
 //! ```text
-//! nntrainer plan  <model.ini> [--batch N] [--budget-mib M] [--planner sorting|naive|bestfit]
+//! nntrainer plan  <model.ini> [--batch N] [--budget-mib M] [--planner sorting|naive|bestfit|skyline]
 //!                 [--conventional] [--no-swap] [--calibrated] [--table]
 //! nntrainer train <model.ini> [--batch N] [--budget-mib M] [--epochs N] [--early-stop P]
 //!                 [--calibrated] [--save ckpt.bin] [--data digits|random]
@@ -29,7 +29,7 @@ use nntrainer::runtime::{SwapTuning, XlaRuntime};
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage:\n  nntrainer plan  <model.ini> [--batch N] [--budget-mib M] [--planner P] [--conventional] [--no-swap] [--calibrated] [--table]\n  \
+        "usage:\n  nntrainer plan  <model.ini> [--batch N] [--budget-mib M] [--planner sorting|naive|bestfit|skyline] [--conventional] [--no-swap] [--calibrated] [--table]\n  \
          nntrainer train <model.ini> [--batch N] [--budget-mib M] [--epochs N] [--early-stop P] [--val-split F] [--calibrated] [--save F] [--data digits|random]\n  \
          nntrainer zoo\n  nntrainer artifacts [--dir D]\n  nntrainer checkpoint diff <a.bin> <b.bin>"
     );

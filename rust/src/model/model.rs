@@ -90,6 +90,7 @@ impl ModelBuilder {
             conventional: opts.conventional,
             inplace: opts.inplace,
             compute: opts.compute,
+            pool_compaction: opts.pool_compaction,
             ..DeviceProfile::default()
         };
         Ok(Session::from_builder(self).configure(spec).compile_for(profile)?.into_model())

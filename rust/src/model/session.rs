@@ -130,8 +130,16 @@ pub struct DeviceProfile {
     /// background copies happen.
     pub swap_tuning: SwapTuning,
     /// Memory planner; under a budget `BestFit` selects the best-fit
-    /// gap-aware placement, anything else the first-fit default.
+    /// gap-aware placement, `Skyline` the skyline portfolio placer,
+    /// anything else the first-fit default.
     pub planner: PlannerKind,
+    /// Plan a one-shot pool compaction, applied at the first epoch
+    /// boundary: persistent tensors slide down into layout holes and the
+    /// arena truncates. Opt-in because compile-time `Region` captures
+    /// (e.g. [`CompiledSession::head_state_layout`] snapshots held by
+    /// the fleet) go stale across a relocation. Only meaningful under a
+    /// budget with swap engaged.
+    pub pool_compaction: bool,
     /// Conventional-framework allocation profile (Fig 9 baseline).
     pub conventional: bool,
     /// MV/RV in-place realization.
@@ -153,6 +161,7 @@ impl Default for DeviceProfile {
             swap_store: StoreKind::Host,
             swap_tuning: SwapTuning::Fixed,
             planner: PlannerKind::Sorting,
+            pool_compaction: false,
             conventional: false,
             inplace: true,
             max_batch: 512,
@@ -181,6 +190,14 @@ impl DeviceProfile {
     /// Same profile with bandwidth-calibrated swap tuning.
     pub fn calibrated(mut self) -> Self {
         self.swap_tuning = SwapTuning::Calibrated;
+        self
+    }
+
+    /// Same profile with epoch-boundary pool compaction enabled. Do not
+    /// combine with compile-time `Region` captures (fleet head-state
+    /// layouts) — they go stale when the pool relocates.
+    pub fn compacting(mut self) -> Self {
+        self.pool_compaction = true;
         self
     }
 
@@ -474,6 +491,7 @@ pub(crate) fn resolve_opts(batch: usize, spec: &TrainSpec, profile: &DeviceProfi
         swap_store: profile.swap_store,
         swap_tuning: profile.swap_tuning,
         compute: profile.compute,
+        pool_compaction: profile.pool_compaction,
     }
 }
 
@@ -851,9 +869,13 @@ where
                 None => println!("epoch {:>3}: loss {:.6} ({} iters)", epoch + 1, mean, batches),
             }
         }
-        // epoch boundary: snapshot the swap counters for the per-epoch
-        // trajectory, then let calibrated swap tuning react to the stall
-        // telemetry this epoch accrued (no-op under Fixed / no swap)
+        // epoch boundary: end_iteration has drained every transfer, so
+        // this is the swap-quiescent barrier — apply any parked pool
+        // compaction first (relocates regions, truncates the arena),
+        // then snapshot the swap counters for the per-epoch trajectory
+        // and let calibrated swap tuning react to the stall telemetry
+        // this epoch accrued (all no-ops under Fixed / no swap)
+        model.exec.compact_pool()?;
         if let Some(sw) = model.exec.swap_mut() {
             sw.mark_epoch();
             sw.adapt_depth();

@@ -1,0 +1,273 @@
+//! Pool compaction: a plan-time region-relocation map applied between
+//! epochs at a swap-quiescent barrier (see `Executor::compact_pool` and
+//! DESIGN.md §Memory pool & spill store).
+//!
+//! The gap planner commits the minimum-peak layout over its portfolio,
+//! but the winning candidate (often a size-descending order) can leave
+//! never-used holes below high-address tensors. Compaction re-places
+//! every tensor at the lowest feasible offset in ascending current
+//! address order — a slide-down pass over the committed layout. The
+//! resulting map has two structural properties this module's tests pin:
+//!
+//! * **Validity** — the relocated layout satisfies the same segmented
+//!   liveness constraints (checked with `validate_gap_plan` after
+//!   application).
+//! * **Monotone, downward moves** — processing in ascending source
+//!   offset, every destination is at or below its source, and no
+//!   persistent tensor's destination overlaps a later persistent
+//!   tensor's source: persistent (MAX-lifespan) tensors are live at
+//!   every EO, so their regions are pairwise space-disjoint, and an
+//!   earlier move's destination end never exceeds its own source end,
+//!   which sits at or below the next persistent source. Applying data
+//!   copies in map order is therefore memmove-safe.
+//!
+//! Only persistent tensors carry data across the barrier (weights,
+//! optimizer state, running statistics — everything with
+//! `Lifespan::MAX`); transient tensors just get new regions.
+
+use std::collections::HashSet;
+
+use crate::tensor::{Region, TensorId, TensorTable};
+
+use super::gapfit::{intervals_overlap, place_items};
+use super::offload::OffloadPlan;
+
+/// One relocation: tensor `id` moves from `from` to `to`
+/// (`to.offset < from.offset` always — see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct CompactionMove {
+    pub id: TensorId,
+    pub from: Region,
+    pub to: Region,
+    /// Whether the tensor's bytes must be copied (MAX lifespan — data
+    /// survives across iterations; transient regions hold garbage at
+    /// the epoch barrier).
+    pub persistent: bool,
+}
+
+/// A relocation map produced at plan time, applied once at the first
+/// epoch boundary (a swap-quiescent point: `SwapExec::end_iteration`
+/// has drained every transfer).
+#[derive(Clone, Debug)]
+pub struct CompactionPlan {
+    /// Moves in ascending source offset (the safe application order).
+    pub moves: Vec<CompactionMove>,
+    /// Pool length after relocation (≤ the committed length).
+    pub new_len: usize,
+    pub old_len: usize,
+}
+
+/// Fragmentation gauge over a committed layout: pool addresses never
+/// covered by any region are pure placement waste.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FragGauge {
+    pub pool_bytes: u64,
+    /// Bytes of the pool no tensor region ever covers.
+    pub unused_bytes: u64,
+    /// Longest contiguous never-covered run (includes the tail above
+    /// the highest region — the headroom a shrink reclaims).
+    pub largest_free_extent_bytes: u64,
+}
+
+impl FragGauge {
+    pub fn frag_pct(&self) -> f64 {
+        if self.pool_bytes == 0 {
+            0.0
+        } else {
+            self.unused_bytes as f64 / self.pool_bytes as f64 * 100.0
+        }
+    }
+}
+
+/// Measure the fragmentation of the committed layout: merge all root
+/// regions into covered spans and sum the holes.
+pub fn frag_gauge(table: &TensorTable, pool_len: usize) -> FragGauge {
+    let mut spans: Vec<(usize, usize)> = table
+        .iter()
+        .filter(|s| s.merged_into.is_none() && !s.eos.is_empty())
+        .filter_map(|s| s.region)
+        .map(|r| (r.offset, r.end()))
+        .collect();
+    spans.sort_unstable();
+    let mut unused = 0usize;
+    let mut largest = 0usize;
+    let mut cursor = 0usize;
+    for (a, b) in spans {
+        if a > cursor {
+            let hole = a - cursor;
+            unused += hole;
+            largest = largest.max(hole);
+        }
+        cursor = cursor.max(b);
+    }
+    if pool_len > cursor {
+        let tail = pool_len - cursor;
+        unused += tail;
+        largest = largest.max(tail);
+    }
+    FragGauge {
+        pool_bytes: (pool_len * 4) as u64,
+        unused_bytes: (unused * 4) as u64,
+        largest_free_extent_bytes: (largest * 4) as u64,
+    }
+}
+
+/// Compute the slide-down relocation map for a committed gap layout.
+/// Returns `None` when the layout is already compact (no tensor can
+/// move down).
+pub fn plan_compaction(
+    table: &TensorTable,
+    plan: &OffloadPlan,
+    pool_len: usize,
+) -> Option<CompactionPlan> {
+    let mut items = place_items(table, plan);
+    // ascending current offset; ties (space-sharing, time-disjoint
+    // tensors) broken by id for determinism
+    items.sort_by_key(|it| (table.get(it.id).region.map(|r| r.offset).unwrap_or(0), it.id));
+    let persistent: HashSet<TensorId> = table
+        .iter()
+        .filter(|s| s.lifespan.is_max())
+        .map(|s| s.id)
+        .collect();
+
+    struct Placed {
+        intervals_idx: usize,
+        offset: usize,
+        len: usize,
+    }
+    let mut placed: Vec<Placed> = Vec::with_capacity(items.len());
+    let mut moves = Vec::new();
+    let mut new_len = 0usize;
+    for (k, item) in items.iter().enumerate() {
+        let from = table.get(item.id).region.expect("compaction runs on a committed layout");
+        // first-fit against the already-relocated prefix
+        let mut forbidden: Vec<(usize, usize)> = placed
+            .iter()
+            .filter(|p| intervals_overlap(&items[p.intervals_idx].intervals, &item.intervals))
+            .map(|p| (p.offset, p.offset + p.len))
+            .collect();
+        forbidden.sort_unstable();
+        let mut offset = 0usize;
+        for &(a, b) in &forbidden {
+            if offset + item.need <= a {
+                break;
+            }
+            offset = offset.max(b);
+        }
+        debug_assert!(
+            offset <= from.offset,
+            "slide-down moved `{}` up: {} -> {offset}",
+            table.get(item.id).name,
+            from.offset
+        );
+        let to = Region { offset, len: item.need };
+        if to != from {
+            moves.push(CompactionMove {
+                id: item.id,
+                from,
+                to,
+                persistent: persistent.contains(&item.id),
+            });
+        }
+        new_len = new_len.max(to.end());
+        placed.push(Placed { intervals_idx: k, offset, len: item.need });
+    }
+    if moves.is_empty() && new_len >= pool_len {
+        return None;
+    }
+    Some(CompactionPlan { moves, new_len, old_len: pool_len })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::validate::validate_gap_plan;
+    use crate::tensor::{CreateMode, Initializer, Lifespan, TensorDim, TensorRole, TensorTable};
+
+    fn table_with(entries: &[(&str, usize, &[u32], TensorRole)]) -> TensorTable {
+        let mut t = TensorTable::new();
+        for (name, len, eos, role) in entries {
+            let id = t
+                .request(*name, TensorDim::vec(1, *len), *role, CreateMode::Create, Initializer::None)
+                .unwrap();
+            for &e in *eos {
+                t.add_eo(id, e, Lifespan::FORWARD);
+            }
+        }
+        t.finish_orders();
+        t
+    }
+
+    #[test]
+    fn frag_gauge_counts_holes_and_tail() {
+        let mut t = table_with(&[
+            ("a", 10, &[0, 3], TensorRole::Activation),
+            ("b", 5, &[0, 3], TensorRole::Activation),
+        ]);
+        t.get_mut(0).region = Some(Region { offset: 0, len: 10 });
+        t.get_mut(1).region = Some(Region { offset: 14, len: 5 });
+        let g = frag_gauge(&t, 25);
+        assert_eq!(g.pool_bytes, 100);
+        // hole 10..14 (4 elems) + tail 19..25 (6 elems)
+        assert_eq!(g.unused_bytes, 40);
+        assert_eq!(g.largest_free_extent_bytes, 24);
+        assert!((g.frag_pct() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compaction_slides_layout_down() {
+        // hand-build a fragmented committed layout: b sits above a hole
+        let mut t = table_with(&[
+            ("a", 10, &[0, 3], TensorRole::Activation),
+            ("b", 5, &[0, 3], TensorRole::Activation),
+        ]);
+        t.get_mut(0).region = Some(Region { offset: 0, len: 10 });
+        t.get_mut(1).region = Some(Region { offset: 14, len: 5 });
+        let plan = OffloadPlan::default();
+        let cp = plan_compaction(&t, &plan, 19).expect("hole must compact");
+        assert_eq!(cp.new_len, 15);
+        assert_eq!(cp.moves.len(), 1);
+        assert_eq!(cp.moves[0].to, Region { offset: 10, len: 5 });
+        assert!(!cp.moves[0].persistent, "activations carry no data across epochs");
+        // applying the map yields a valid plan
+        for m in &cp.moves {
+            t.get_mut(m.id).region = Some(m.to);
+        }
+        validate_gap_plan(&t, &plan, cp.new_len).unwrap();
+        assert_eq!(frag_gauge(&t, cp.new_len).unused_bytes, 0);
+    }
+
+    #[test]
+    fn compact_layout_yields_no_plan() {
+        let mut t = table_with(&[
+            ("a", 10, &[0, 3], TensorRole::Activation),
+            ("b", 5, &[4, 6], TensorRole::Activation),
+        ]);
+        t.get_mut(0).region = Some(Region { offset: 0, len: 10 });
+        t.get_mut(1).region = Some(Region { offset: 0, len: 5 });
+        assert!(plan_compaction(&t, &OffloadPlan::default(), 10).is_none());
+    }
+
+    #[test]
+    fn persistent_tensors_are_flagged() {
+        let mut t = TensorTable::new();
+        let w = t
+            .request("w", TensorDim::vec(1, 4), TensorRole::Weight, CreateMode::Create, Initializer::None)
+            .unwrap();
+        t.add_eo(w, 0, Lifespan::MAX);
+        t.add_eo(w, 9, Lifespan::MAX);
+        let a = t
+            .request("a", TensorDim::vec(1, 6), TensorRole::Activation, CreateMode::Create, Initializer::None)
+            .unwrap();
+        t.add_eo(a, 1, Lifespan::FORWARD);
+        t.add_eo(a, 2, Lifespan::FORWARD);
+        t.finish_orders();
+        t.get_mut(a).region = Some(Region { offset: 0, len: 6 });
+        t.get_mut(w).region = Some(Region { offset: 10, len: 4 });
+        let cp = plan_compaction(&t, &OffloadPlan::default(), 14).expect("w slides down");
+        let wm = cp.moves.iter().find(|m| m.id == w).expect("w moved");
+        assert!(wm.persistent, "weights must be flagged for data copy");
+        assert_eq!(wm.to.offset, 6);
+        assert_eq!(cp.new_len, 10);
+    }
+}

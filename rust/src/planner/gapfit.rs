@@ -12,35 +12,30 @@
 //! actually shrink to the advisor's `primary_peak_bytes` instead of
 //! merely reporting it.
 //!
-//! Placement: for each tensor, collect the address ranges of every
-//! already-placed, time-overlapping tensor, then pick a hole by one of
-//! two [`GapStrategy`] rules — *first-fit* (lowest feasible offset, the
-//! PR-1 default) or *best-fit* (smallest adequate hole between blocked
-//! ranges, reducing the fragmentation first-fit leaves behind). Two
-//! deterministic orderings are tried — schedule order (Algorithm 2's
-//! sort) and size-descending — and the layout with the smaller pool
-//! wins; on the evaluation models this lands within a few percent of the
-//! advisor's analytic live-set peak.
+//! Placement runs a *portfolio* over the [`Placer`] strategies in
+//! `planner/placer.rs` crossed with deterministic orderings, committing
+//! the layout with the smallest pool. Each `PlannerKind` tier evaluates
+//! a superset of the tier below's candidates:
+//!
+//! * [`GapFitPlanner`] — first-fit × {schedule, size-descending}.
+//! * [`GapBestFitPlanner`] — {first-fit, best-fit} × the same orders
+//!   (best-fit candidates preferred on ties).
+//! * [`GapSkylinePlanner`] — {skyline, best-fit, first-fit} ×
+//!   {schedule, size-descending, interval-area-descending} (skyline
+//!   candidates preferred on ties).
+//!
+//! The nesting makes the peak ordering skyline ≤ best-fit ≤ first-fit
+//! hold on *every* topology by construction — the property
+//! `tests/placer_props.rs` asserts across the stress generator.
 
 use std::collections::HashSet;
 
 use crate::error::Result;
-use crate::tensor::{Region, TensorId, TensorTable};
+use crate::tensor::{TensorId, TensorTable};
 
-use super::offload::{live_intervals, LeadMap, OffloadPlan};
+use super::offload::{live_intervals, OffloadPlan};
+use super::placer::{BestFitPlacer, FirstFitPlacer, PlaceItem, Placer, SkylinePlacer};
 use super::{allocatable, sort_by_schedule, Planner};
-
-/// Hole-selection rule for gap-aware placement.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
-pub enum GapStrategy {
-    /// Lowest feasible offset.
-    #[default]
-    FirstFit,
-    /// Smallest adequate hole between blocked ranges (least waste); falls
-    /// back to the open end above every blocked range. ROADMAP follow-up:
-    /// `benches/swap_runtime.rs` reports the fragmentation of both.
-    BestFit,
-}
 
 /// Planner that consumes an [`OffloadPlan`] and assigns regions under the
 /// plan's segmented liveness model using first-fit placement.
@@ -51,6 +46,12 @@ pub struct GapFitPlanner<'a> {
 /// Best-fit variant of [`GapFitPlanner`], selected under a memory budget
 /// by `CompileOpts`/`DeviceProfile` `planner = PlannerKind::BestFit`.
 pub struct GapBestFitPlanner<'a> {
+    pub plan: &'a OffloadPlan,
+}
+
+/// Skyline variant of [`GapFitPlanner`] (widest portfolio), selected
+/// under a memory budget by `planner = PlannerKind::Skyline`.
+pub struct GapSkylinePlanner<'a> {
     pub plan: &'a OffloadPlan,
 }
 
@@ -72,99 +73,81 @@ pub fn intervals_overlap(a: &[(u32, u32)], b: &[(u32, u32)]) -> bool {
     false
 }
 
-/// Placement of `ids` (in the given order) under segmented liveness;
-/// returns the pool length and each tensor's region.
-fn place(
-    table: &TensorTable,
-    offloaded: &HashSet<TensorId>,
-    leads: &LeadMap,
-    ids: &[TensorId],
-    strategy: GapStrategy,
-) -> (usize, Vec<(TensorId, Region)>) {
-    struct Placed {
-        intervals: Vec<(u32, u32)>,
-        offset: usize,
-        len: usize,
-    }
-    let mut placed: Vec<Placed> = Vec::with_capacity(ids.len());
-    let mut regions: Vec<(TensorId, Region)> = Vec::with_capacity(ids.len());
-    let mut pool_len = 0usize;
-    for &id in ids {
-        let s = table.get(id);
-        let need = s.dim.len();
-        let intervals = live_intervals(s, offloaded.contains(&id).then_some(leads));
-        // address ranges blocked by time-overlapping placements
-        let mut forbidden: Vec<(usize, usize)> = placed
-            .iter()
-            .filter(|p| intervals_overlap(&p.intervals, &intervals))
-            .map(|p| (p.offset, p.offset + p.len))
-            .collect();
-        forbidden.sort_unstable();
-        let offset = match strategy {
-            GapStrategy::FirstFit => {
-                let mut offset = 0usize;
-                for &(a, b) in &forbidden {
-                    if offset + need <= a {
-                        break;
-                    }
-                    offset = offset.max(b);
-                }
-                offset
-            }
-            GapStrategy::BestFit => {
-                // sweep the (possibly mutually overlapping) blocked ranges
-                // in address order, scoring each bounded hole by waste; the
-                // open end above everything is the fallback
-                let mut best: Option<(usize, usize)> = None; // (offset, waste)
-                let mut cursor = 0usize;
-                for &(a, b) in &forbidden {
-                    if a > cursor {
-                        let hole = a - cursor;
-                        if hole >= need {
-                            let waste = hole - need;
-                            if best.map(|(_, w)| waste < w).unwrap_or(true) {
-                                best = Some((cursor, waste));
-                            }
-                        }
-                    }
-                    cursor = cursor.max(b);
-                }
-                best.map(|(o, _)| o).unwrap_or(cursor)
-            }
-        };
-        regions.push((id, Region { offset, len: need }));
-        pool_len = pool_len.max(offset + need);
-        placed.push(Placed { intervals, offset, len: need });
-    }
-    (pool_len, regions)
-}
-
-/// Shared driver: try both deterministic orderings under `strategy`,
-/// commit the smaller layout.
-fn plan_gaps(
-    table: &mut TensorTable,
-    plan: &OffloadPlan,
-    strategy: GapStrategy,
-) -> Result<usize> {
+/// Build the placement items for every allocatable tensor: size plus
+/// lead-widened live intervals under the plan's segmented liveness.
+pub(crate) fn place_items(table: &TensorTable, plan: &OffloadPlan) -> Vec<PlaceItem> {
     let offloaded: HashSet<TensorId> = plan.entries.iter().map(|e| e.tensor).collect();
     let leads = plan.lead_map();
-    let ids = allocatable(table);
+    allocatable(table)
+        .into_iter()
+        .map(|id| {
+            let s = table.get(id);
+            PlaceItem {
+                id,
+                need: s.dim.len(),
+                intervals: live_intervals(s, offloaded.contains(&id).then_some(&leads)),
+            }
+        })
+        .collect()
+}
 
-    let mut by_schedule = ids.clone();
-    sort_by_schedule(table, &mut by_schedule);
-    let mut by_size = ids;
-    by_size.sort_by_key(|&id| {
-        let s = table.get(id);
-        (std::cmp::Reverse(s.dim.len()), s.min_eo().unwrap_or(u32::MAX), id)
-    });
+/// The deterministic orderings the portfolio crosses with each placer.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Order {
+    /// Algorithm 2's sort: first use ascending, last use descending.
+    Schedule,
+    /// Size descending (large tensors anchor low addresses).
+    SizeDesc,
+    /// Total live EO-area (size × live EOs) descending — items that
+    /// dominate the (address × time) plane place first.
+    AreaDesc,
+}
 
-    let (len_a, regions_a) = place(table, &offloaded, &leads, &by_schedule, strategy);
-    let (len_b, regions_b) = place(table, &offloaded, &leads, &by_size, strategy);
-    let (pool_len, regions) = if len_b < len_a {
-        (len_b, regions_b)
-    } else {
-        (len_a, regions_a)
-    };
+fn ordered(table: &TensorTable, items: &[PlaceItem], order: Order) -> Vec<PlaceItem> {
+    let mut ids: Vec<TensorId> = items.iter().map(|it| it.id).collect();
+    match order {
+        Order::Schedule => sort_by_schedule(table, &mut ids),
+        Order::SizeDesc => ids.sort_by_key(|&id| {
+            let s = table.get(id);
+            (std::cmp::Reverse(s.dim.len()), s.min_eo().unwrap_or(u32::MAX), id)
+        }),
+        Order::AreaDesc => {
+            let area_of = |id: TensorId| -> u64 {
+                let it = &items[items.iter().position(|x| x.id == id).unwrap()];
+                let eos: u64 = it
+                    .intervals
+                    .iter()
+                    .map(|&(a, z)| (z.saturating_sub(a) as u64) + 1)
+                    .sum();
+                it.need as u64 * eos
+            };
+            ids.sort_by_key(|&id| {
+                (std::cmp::Reverse(area_of(id)), table.get(id).min_eo().unwrap_or(u32::MAX), id)
+            });
+        }
+    }
+    ids.into_iter()
+        .map(|id| items[items.iter().position(|x| x.id == id).unwrap()].clone())
+        .collect()
+}
+
+/// Run `candidates` (placer × order pairs, in preference order) and
+/// commit the first strictly-smallest layout into the table.
+fn plan_portfolio(
+    table: &mut TensorTable,
+    plan: &OffloadPlan,
+    candidates: &[(&dyn Placer, Order)],
+) -> Result<usize> {
+    let items = place_items(table, plan);
+    let mut best: Option<(usize, Vec<(TensorId, crate::tensor::Region)>)> = None;
+    for &(placer, order) in candidates {
+        let seq = ordered(table, &items, order);
+        let (len, regions) = placer.place(&seq);
+        if best.as_ref().map(|(b, _)| len < *b).unwrap_or(true) {
+            best = Some((len, regions));
+        }
+    }
+    let (pool_len, regions) = best.expect("portfolio has at least one candidate");
     for (id, r) in regions {
         table.get_mut(id).region = Some(r);
     }
@@ -177,7 +160,11 @@ impl Planner for GapFitPlanner<'_> {
     }
 
     fn plan(&self, table: &mut TensorTable) -> Result<usize> {
-        plan_gaps(table, self.plan, GapStrategy::FirstFit)
+        plan_portfolio(
+            table,
+            self.plan,
+            &[(&FirstFitPlacer, Order::Schedule), (&FirstFitPlacer, Order::SizeDesc)],
+        )
     }
 }
 
@@ -187,7 +174,40 @@ impl Planner for GapBestFitPlanner<'_> {
     }
 
     fn plan(&self, table: &mut TensorTable) -> Result<usize> {
-        plan_gaps(table, self.plan, GapStrategy::BestFit)
+        plan_portfolio(
+            table,
+            self.plan,
+            &[
+                (&BestFitPlacer, Order::Schedule),
+                (&BestFitPlacer, Order::SizeDesc),
+                (&FirstFitPlacer, Order::Schedule),
+                (&FirstFitPlacer, Order::SizeDesc),
+            ],
+        )
+    }
+}
+
+impl Planner for GapSkylinePlanner<'_> {
+    fn name(&self) -> &'static str {
+        "gapfit-skyline"
+    }
+
+    fn plan(&self, table: &mut TensorTable) -> Result<usize> {
+        plan_portfolio(
+            table,
+            self.plan,
+            &[
+                (&SkylinePlacer, Order::Schedule),
+                (&SkylinePlacer, Order::SizeDesc),
+                (&SkylinePlacer, Order::AreaDesc),
+                (&BestFitPlacer, Order::Schedule),
+                (&BestFitPlacer, Order::SizeDesc),
+                (&BestFitPlacer, Order::AreaDesc),
+                (&FirstFitPlacer, Order::Schedule),
+                (&FirstFitPlacer, Order::SizeDesc),
+                (&FirstFitPlacer, Order::AreaDesc),
+            ],
+        )
     }
 }
 
@@ -197,7 +217,7 @@ mod tests {
     use crate::planner::offload::advise;
     use crate::planner::validate::validate_gap_plan;
     use crate::tensor::{
-        CreateMode, Initializer, Lifespan, TensorDim, TensorRole, TensorTable,
+        CreateMode, Initializer, Lifespan, Region, TensorDim, TensorRole, TensorTable,
     };
 
     fn table_with(entries: &[(&str, usize, &[u32], TensorRole)]) -> TensorTable {
@@ -272,6 +292,19 @@ mod tests {
     }
 
     #[test]
+    fn skyline_validates_and_reuses_gaps() {
+        let mut t = table_with(&[
+            ("a", 1000, &[0, 1, 10], TensorRole::Activation),
+            ("b", 1000, &[4, 5], TensorRole::Activation),
+        ]);
+        let plan = advise(&t, 1000 * 4);
+        assert!(plan.fits, "{plan:?}");
+        let pool_len = GapSkylinePlanner { plan: &plan }.plan(&mut t).unwrap();
+        assert_eq!(pool_len, 1000);
+        validate_gap_plan(&t, &plan, pool_len).unwrap();
+    }
+
+    #[test]
     fn bestfit_prefers_smallest_adequate_hole() {
         // `q` and `s` die at EO 1, carving two bounded holes (30-wide at
         // offset 5, 12-wide at offset 40) between the long-lived blockers;
@@ -285,11 +318,10 @@ mod tests {
             ("u", 8, &[0, 30], TensorRole::Activation),
             ("t", 10, &[5, 30], TensorRole::Activation),
         ]);
-        let ids: Vec<TensorId> = (0..6).collect();
-        let none = HashSet::new();
-        let leads = LeadMap::default();
-        let (_, ff) = place(&t, &none, &leads, &ids, GapStrategy::FirstFit);
-        let (_, bf) = place(&t, &none, &leads, &ids, GapStrategy::BestFit);
+        let plan = OffloadPlan::default();
+        let items = place_items(&t, &plan);
+        let (_, ff) = FirstFitPlacer.place(&items);
+        let (_, bf) = BestFitPlacer.place(&items);
         let off = |rs: &[(TensorId, Region)], id: TensorId| {
             rs.iter().find(|(i, _)| *i == id).unwrap().1.offset
         };
@@ -302,6 +334,28 @@ mod tests {
         }
         assert_eq!(off(&ff, 5), 5, "first-fit takes the lowest (30-wide) hole");
         assert_eq!(off(&bf, 5), 40, "best-fit takes the least-waste (12-wide) hole");
+    }
+
+    #[test]
+    fn tier_peaks_are_monotone() {
+        // nested portfolios: skyline tier ≤ best-fit tier ≤ first-fit
+        // tier, regardless of topology
+        let make = || {
+            table_with(&[
+                ("a", 37, &[0, 3], TensorRole::Activation),
+                ("b", 11, &[2, 8], TensorRole::Activation),
+                ("c", 23, &[4, 9], TensorRole::Activation),
+                ("d", 53, &[1, 6], TensorRole::Activation),
+                ("e", 7, &[5, 12], TensorRole::Activation),
+                ("f", 31, &[10, 14], TensorRole::Activation),
+            ])
+        };
+        let plan = OffloadPlan::default();
+        let ff = GapFitPlanner { plan: &plan }.plan(&mut make()).unwrap();
+        let bf = GapBestFitPlanner { plan: &plan }.plan(&mut make()).unwrap();
+        let sky = GapSkylinePlanner { plan: &plan }.plan(&mut make()).unwrap();
+        assert!(sky <= bf, "skyline {sky} > bestfit {bf}");
+        assert!(bf <= ff, "bestfit {bf} > firstfit {ff}");
     }
 
     #[test]

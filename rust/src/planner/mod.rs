@@ -6,12 +6,17 @@
 //!   whole-slot reuse; fragments as in Fig 8).
 //! * [`BestFitPlanner`] — the paper's stated future work: slot splitting
 //!   with best-fit selection, resolving the Fig 8 fragmentation.
+//! * [`SkylinePlanner`] — segment-tree skyline placement (see
+//!   `planner/placer.rs`), the widest portfolio tier.
 
 pub mod bestfit;
+pub mod compact;
 pub mod gapfit;
 pub mod naive;
 pub mod offload;
+pub mod placer;
 pub mod pool;
+pub mod skyline;
 pub mod sorting;
 pub mod validate;
 
@@ -19,10 +24,13 @@ use crate::error::Result;
 use crate::tensor::{TensorId, TensorTable};
 
 pub use bestfit::BestFitPlanner;
-pub use gapfit::{GapBestFitPlanner, GapFitPlanner, GapStrategy};
+pub use compact::{frag_gauge, plan_compaction, CompactionMove, CompactionPlan, FragGauge};
+pub use gapfit::{GapBestFitPlanner, GapFitPlanner, GapSkylinePlanner};
 pub use naive::NaivePlanner;
 pub use offload::{OffloadEntry, OffloadPlan};
+pub use placer::{BestFitPlacer, FirstFitPlacer, PlaceItem, Placer, SkylinePlacer};
 pub use pool::MemoryPool;
+pub use skyline::SkylinePlanner;
 pub use sorting::SortingPlanner;
 
 /// Planner selector used in model compile options.
@@ -31,6 +39,9 @@ pub enum PlannerKind {
     Naive,
     Sorting,
     BestFit,
+    /// Segment-tree skyline placement with the widest order/strategy
+    /// portfolio — never plans a larger pool than `BestFit`.
+    Skyline,
 }
 
 impl PlannerKind {
@@ -39,6 +50,7 @@ impl PlannerKind {
             PlannerKind::Naive => Box::new(NaivePlanner),
             PlannerKind::Sorting => Box::new(SortingPlanner),
             PlannerKind::BestFit => Box::new(BestFitPlanner),
+            PlannerKind::Skyline => Box::new(SkylinePlanner),
         }
     }
 
@@ -47,6 +59,7 @@ impl PlannerKind {
             "naive" => Some(PlannerKind::Naive),
             "sorting" => Some(PlannerKind::Sorting),
             "bestfit" | "best_fit" => Some(PlannerKind::BestFit),
+            "skyline" => Some(PlannerKind::Skyline),
             _ => None,
         }
     }

@@ -1,0 +1,331 @@
+//! Placement strategies for the gap-aware planner, unified behind one
+//! [`Placer`] trait (the seam `gapfit.rs` drives its order/strategy
+//! portfolio through).
+//!
+//! A placer maps an ordered list of [`PlaceItem`]s — tensors with their
+//! sizes and (possibly segmented, lead-widened) live interval lists —
+//! to pool offsets such that no two items whose intervals overlap in
+//! time overlap in address space. Three strategies:
+//!
+//! * [`FirstFitPlacer`] — lowest feasible offset (the PR-1 default).
+//! * [`BestFitPlacer`] — smallest adequate hole between blocked ranges.
+//! * [`SkylinePlacer`] — a segment tree over the EO axis tracks, for
+//!   every execution order, the highest occupied address (the
+//!   *skyline*); each item lands on top of the skyline maximum across
+//!   its own live intervals. One `O(k log E)` query replaces the
+//!   `O(n)` blocked-range scan per item, so deep randomized topologies
+//!   place in near-linear time — and the structure is exactly the free
+//!   interval map over (address × EO-lifespan) that the compaction
+//!   planner reuses.
+//!
+//! No single strategy dominates on every topology, so the gap planner
+//! runs a *portfolio* (see `gapfit.rs`): each `PlannerKind` tier
+//! evaluates a superset of the candidate layouts of the tier below and
+//! commits the minimum — which is what makes the peak ordering
+//! skyline ≤ best-fit ≤ first-fit a structural guarantee rather than a
+//! per-topology accident.
+
+use crate::tensor::{Region, TensorId};
+
+use super::gapfit::intervals_overlap;
+
+/// One tensor to place: its id, pool length, and the (sorted,
+/// inclusive) EO intervals during which it occupies its region.
+#[derive(Clone, Debug)]
+pub struct PlaceItem {
+    pub id: TensorId,
+    pub need: usize,
+    pub intervals: Vec<(u32, u32)>,
+}
+
+/// A placement strategy: assign offsets to `items` in the given order.
+/// Returns the pool length and each item's region.
+pub trait Placer {
+    fn name(&self) -> &'static str;
+    fn place(&self, items: &[PlaceItem]) -> (usize, Vec<(TensorId, Region)>);
+}
+
+/// Address ranges blocked by already-placed, time-overlapping items.
+fn blocked_ranges(
+    placed: &[(Vec<(u32, u32)>, usize, usize)],
+    intervals: &[(u32, u32)],
+) -> Vec<(usize, usize)> {
+    let mut forbidden: Vec<(usize, usize)> = placed
+        .iter()
+        .filter(|(iv, _, _)| intervals_overlap(iv, intervals))
+        .map(|&(_, off, len)| (off, off + len))
+        .collect();
+    forbidden.sort_unstable();
+    forbidden
+}
+
+/// Lowest feasible offset.
+pub struct FirstFitPlacer;
+
+impl Placer for FirstFitPlacer {
+    fn name(&self) -> &'static str {
+        "firstfit"
+    }
+
+    fn place(&self, items: &[PlaceItem]) -> (usize, Vec<(TensorId, Region)>) {
+        let mut placed: Vec<(Vec<(u32, u32)>, usize, usize)> = Vec::with_capacity(items.len());
+        let mut regions = Vec::with_capacity(items.len());
+        let mut pool_len = 0usize;
+        for item in items {
+            let forbidden = blocked_ranges(&placed, &item.intervals);
+            let mut offset = 0usize;
+            for &(a, b) in &forbidden {
+                if offset + item.need <= a {
+                    break;
+                }
+                offset = offset.max(b);
+            }
+            regions.push((item.id, Region { offset, len: item.need }));
+            pool_len = pool_len.max(offset + item.need);
+            placed.push((item.intervals.clone(), offset, item.need));
+        }
+        (pool_len, regions)
+    }
+}
+
+/// Smallest adequate hole between blocked ranges (least waste); falls
+/// back to the open end above every blocked range.
+pub struct BestFitPlacer;
+
+impl Placer for BestFitPlacer {
+    fn name(&self) -> &'static str {
+        "bestfit"
+    }
+
+    fn place(&self, items: &[PlaceItem]) -> (usize, Vec<(TensorId, Region)>) {
+        let mut placed: Vec<(Vec<(u32, u32)>, usize, usize)> = Vec::with_capacity(items.len());
+        let mut regions = Vec::with_capacity(items.len());
+        let mut pool_len = 0usize;
+        for item in items {
+            let forbidden = blocked_ranges(&placed, &item.intervals);
+            // sweep the (possibly mutually overlapping) blocked ranges
+            // in address order, scoring each bounded hole by waste; the
+            // open end above everything is the fallback
+            let mut best: Option<(usize, usize)> = None; // (offset, waste)
+            let mut cursor = 0usize;
+            for &(a, b) in &forbidden {
+                if a > cursor {
+                    let hole = a - cursor;
+                    if hole >= item.need {
+                        let waste = hole - item.need;
+                        if best.map(|(_, w)| waste < w).unwrap_or(true) {
+                            best = Some((cursor, waste));
+                        }
+                    }
+                }
+                cursor = cursor.max(b);
+            }
+            let offset = best.map(|(o, _)| o).unwrap_or(cursor);
+            regions.push((item.id, Region { offset, len: item.need }));
+            pool_len = pool_len.max(offset + item.need);
+            placed.push((item.intervals.clone(), offset, item.need));
+        }
+        (pool_len, regions)
+    }
+}
+
+/// Segment tree over the EO axis: per execution order, the highest
+/// occupied address so far. Supports range *raise* (chmax) when a
+/// region is committed over an interval, and range max query — the
+/// skyline height an item must clear to be placed "on top".
+pub struct SkylineTree {
+    len: usize,
+    max_v: Vec<usize>,
+    lazy: Vec<usize>,
+}
+
+impl SkylineTree {
+    /// Tree over `len` compressed EO coordinates.
+    pub fn new(len: usize) -> Self {
+        let n = len.max(1);
+        SkylineTree { len: n, max_v: vec![0; 4 * n], lazy: vec![0; 4 * n] }
+    }
+
+    fn push(&mut self, node: usize) {
+        let pend = self.lazy[node];
+        if pend > 0 {
+            for child in [2 * node, 2 * node + 1] {
+                self.max_v[child] = self.max_v[child].max(pend);
+                self.lazy[child] = self.lazy[child].max(pend);
+            }
+            self.lazy[node] = 0;
+        }
+    }
+
+    fn raise_rec(&mut self, node: usize, l: usize, r: usize, a: usize, b: usize, h: usize) {
+        if b < l || r < a {
+            return;
+        }
+        if a <= l && r <= b {
+            self.max_v[node] = self.max_v[node].max(h);
+            self.lazy[node] = self.lazy[node].max(h);
+            return;
+        }
+        self.push(node);
+        let mid = (l + r) / 2;
+        self.raise_rec(2 * node, l, mid, a, b, h);
+        self.raise_rec(2 * node + 1, mid + 1, r, a, b, h);
+        self.max_v[node] = self.max_v[2 * node].max(self.max_v[2 * node + 1]);
+    }
+
+    fn query_rec(&mut self, node: usize, l: usize, r: usize, a: usize, b: usize) -> usize {
+        if b < l || r < a {
+            return 0;
+        }
+        if a <= l && r <= b {
+            return self.max_v[node];
+        }
+        self.push(node);
+        let mid = (l + r) / 2;
+        self.query_rec(2 * node, l, mid, a, b)
+            .max(self.query_rec(2 * node + 1, mid + 1, r, a, b))
+    }
+
+    /// Raise the skyline to at least `h` over coordinates `[a, b]`.
+    pub fn raise(&mut self, a: usize, b: usize, h: usize) {
+        let b = b.min(self.len - 1);
+        self.raise_rec(1, 0, self.len - 1, a, b, h);
+    }
+
+    /// Highest skyline point over coordinates `[a, b]`.
+    pub fn query(&mut self, a: usize, b: usize) -> usize {
+        let b = b.min(self.len - 1);
+        self.query_rec(1, 0, self.len - 1, a, b)
+    }
+}
+
+/// Skyline placement: each item lands at the maximum skyline height
+/// across its live intervals, then raises the skyline there. Never
+/// scans other placements — feasibility is the tree invariant (every
+/// committed region raised the skyline over exactly its own
+/// intervals, so clearing the maximum clears every one of them).
+pub struct SkylinePlacer;
+
+impl Placer for SkylinePlacer {
+    fn name(&self) -> &'static str {
+        "skyline"
+    }
+
+    fn place(&self, items: &[PlaceItem]) -> (usize, Vec<(TensorId, Region)>) {
+        // coordinate-compress the EO endpoints (interval containment is
+        // preserved: every query/raise uses the same endpoints)
+        let mut coords: Vec<u32> = items
+            .iter()
+            .flat_map(|it| it.intervals.iter().flat_map(|&(a, z)| [a, z]))
+            .collect();
+        coords.sort_unstable();
+        coords.dedup();
+        let coord_of = |eo: u32| coords.binary_search(&eo).expect("endpoint is a coordinate");
+        let mut tree = SkylineTree::new(coords.len());
+        let mut regions = Vec::with_capacity(items.len());
+        let mut pool_len = 0usize;
+        for item in items {
+            let mut offset = 0usize;
+            for &(a, z) in &item.intervals {
+                offset = offset.max(tree.query(coord_of(a), coord_of(z)));
+            }
+            let top = offset + item.need;
+            for &(a, z) in &item.intervals {
+                tree.raise(coord_of(a), coord_of(z), top);
+            }
+            regions.push((item.id, Region { offset, len: item.need }));
+            pool_len = pool_len.max(top);
+        }
+        (pool_len, regions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(id: TensorId, need: usize, intervals: &[(u32, u32)]) -> PlaceItem {
+        PlaceItem { id, need, intervals: intervals.to_vec() }
+    }
+
+    /// Brute-force validity: every pair of time-overlapping items has
+    /// space-disjoint regions.
+    fn assert_valid(items: &[PlaceItem], regions: &[(TensorId, Region)]) {
+        for i in 0..items.len() {
+            for j in i + 1..items.len() {
+                if intervals_overlap(&items[i].intervals, &items[j].intervals) {
+                    let a = regions[i].1;
+                    let b = regions[j].1;
+                    assert!(
+                        !a.overlaps(&b),
+                        "items {} and {} overlap in time and space: {a:?} vs {b:?}",
+                        items[i].id,
+                        items[j].id
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_placers_produce_valid_layouts() {
+        let items = vec![
+            item(0, 10, &[(0, 3)]),
+            item(1, 10, &[(4, 6)]),
+            item(2, 4, &[(0, 6)]),
+            item(3, 7, &[(2, 5)]),
+            item(4, 3, &[(0, 1), (5, 6)]),
+        ];
+        for placer in [&FirstFitPlacer as &dyn Placer, &BestFitPlacer, &SkylinePlacer] {
+            let (len, regions) = placer.place(&items);
+            assert_valid(&items, &regions);
+            assert!(len >= 10, "{} too small: {len}", placer.name());
+            assert_eq!(len, regions.iter().map(|(_, r)| r.end()).max().unwrap());
+        }
+    }
+
+    #[test]
+    fn skyline_reuses_time_disjoint_space() {
+        // b lives strictly inside a's dead time — the skyline over b's
+        // interval is untouched by a only if a's intervals skip it
+        let items = vec![
+            item(0, 100, &[(0, 1), (8, 9)]),
+            item(1, 100, &[(3, 5)]),
+        ];
+        let (len, regions) = SkylinePlacer.place(&items);
+        assert_eq!(len, 100, "b must reuse a's address range");
+        assert_eq!(regions[0].1.offset, 0);
+        assert_eq!(regions[1].1.offset, 0);
+    }
+
+    #[test]
+    fn skyline_stacks_time_overlapping_items() {
+        let items = vec![item(0, 8, &[(0, 4)]), item(1, 8, &[(2, 6)]), item(2, 8, &[(3, 3)])];
+        let (len, regions) = SkylinePlacer.place(&items);
+        assert_valid(&items, &regions);
+        assert_eq!(len, 24, "all three are live at EO 3");
+    }
+
+    #[test]
+    fn segment_tree_raise_and_query() {
+        let mut t = SkylineTree::new(16);
+        assert_eq!(t.query(0, 15), 0);
+        t.raise(2, 5, 10);
+        t.raise(4, 9, 7);
+        assert_eq!(t.query(0, 1), 0);
+        assert_eq!(t.query(2, 3), 10);
+        assert_eq!(t.query(5, 5), 10);
+        assert_eq!(t.query(6, 9), 7);
+        assert_eq!(t.query(0, 15), 10);
+        t.raise(0, 15, 3);
+        assert_eq!(t.query(0, 1), 3);
+        assert_eq!(t.query(2, 3), 10);
+    }
+
+    #[test]
+    fn single_coordinate_tree() {
+        let mut t = SkylineTree::new(1);
+        t.raise(0, 0, 5);
+        assert_eq!(t.query(0, 0), 5);
+    }
+}

@@ -30,14 +30,28 @@ use crate::tensor::Region;
 /// uniqueness over the Vec *header* only, never over the heap bytes a
 /// raw span is reading; and (c) `SwapExec` joins the worker before the
 /// pool can drop (`Executor` declares `swap` before `pool`).
+///
+/// In debug builds the pool additionally keeps a registry of released
+/// gap regions: `release_gap`/`reacquire` must pair up on the *exact*
+/// same region, so a placer or swap-runtime bug that releases twice,
+/// reacquires something never released, or walks out of bounds panics
+/// loudly instead of silently aliasing a gap tenant. (Released regions
+/// of different entries may legitimately overlap each other — two
+/// entries whose gaps overlap in time can share addresses — so the
+/// registry matches exact regions, not overlap.)
 pub struct MemoryPool {
     buf: UnsafeCell<Vec<f32>>,
+    /// Debug-only registry of currently-released gap regions.
+    #[cfg(debug_assertions)]
+    released: UnsafeCell<Vec<Region>>,
 }
 
 impl MemoryPool {
     pub fn new(len: usize) -> Self {
         MemoryPool {
             buf: UnsafeCell::new(vec![0.0; len]),
+            #[cfg(debug_assertions)]
+            released: UnsafeCell::new(Vec::new()),
         }
     }
 
@@ -82,10 +96,26 @@ impl MemoryPool {
     /// secondary store; the gap-aware planner may hand the same address
     /// range to other tensors until the region is reacquired. In debug
     /// builds the region is poisoned with NaN so that any read of
-    /// evicted data is immediately visible in the numerics.
+    /// evicted data is immediately visible in the numerics, and the
+    /// release is recorded so a double release of the same region (an
+    /// eviction issued twice without a reacquire between) panics.
     pub fn release_gap(&self, r: Region) {
         #[cfg(debug_assertions)]
-        self.view_mut(r).fill(f32::NAN);
+        {
+            assert!(
+                r.end() <= self.len(),
+                "release_gap: region {r:?} out of pool (len {})",
+                self.len()
+            );
+            let reg = unsafe { &mut *self.released.get() };
+            assert!(
+                !reg.contains(&r),
+                "release_gap: region {r:?} released twice without a reacquire — \
+                 the swap schedule and the pool have drifted"
+            );
+            reg.push(r);
+            self.view_mut(r).fill(f32::NAN);
+        }
         #[cfg(not(debug_assertions))]
         let _ = r;
     }
@@ -93,9 +123,74 @@ impl MemoryPool {
     /// Reacquire a released region: copy the secondary-store bytes back.
     /// Any gap-sharing tenant of this address range is dead by now — the
     /// gap-aware planner reserves the range from one EO before the
-    /// owner's next use.
+    /// owner's next use. In debug builds the region must match a prior
+    /// `release_gap` exactly (same offset and length) — a mismatched
+    /// reacquire is a placer/runtime drift that would silently clobber
+    /// a tenant, so it panics instead.
     pub fn reacquire(&self, r: Region, data: &[f32]) {
+        #[cfg(debug_assertions)]
+        {
+            assert!(
+                r.end() <= self.len(),
+                "reacquire: region {r:?} out of pool (len {})",
+                self.len()
+            );
+            assert!(
+                data.len() <= r.len,
+                "reacquire: {} f32s into region {r:?}",
+                data.len()
+            );
+            let reg = unsafe { &mut *self.released.get() };
+            match reg.iter().position(|x| *x == r) {
+                Some(i) => {
+                    reg.swap_remove(i);
+                }
+                None => panic!(
+                    "reacquire: region {r:?} was never released — \
+                     the swap schedule and the pool have drifted"
+                ),
+            }
+        }
         self.view_mut(r)[..data.len()].copy_from_slice(data);
+    }
+
+    /// Copy a region's bytes to a lower destination (pool compaction).
+    /// Overlap-safe like `memmove`; the compaction planner guarantees
+    /// `to.offset <= from.offset` and equal lengths.
+    pub fn move_region(&self, from: Region, to: Region) {
+        debug_assert_eq!(from.len, to.len, "move_region: length mismatch {from:?} -> {to:?}");
+        debug_assert!(
+            to.offset <= from.offset,
+            "move_region: compaction only slides down ({from:?} -> {to:?})"
+        );
+        debug_assert!(from.end() <= self.len(), "move_region: source {from:?} out of pool");
+        unsafe {
+            let v = &mut *self.buf.get();
+            v.copy_within(from.offset..from.end(), to.offset);
+        }
+    }
+
+    /// Shrink the arena to `new_len` elements (pool compaction: every
+    /// region now ends at or below `new_len`). Must only be called at a
+    /// swap-quiescent barrier — no raw spans into the pool may be
+    /// outstanding. Never reallocates (truncate), so concurrent-read
+    /// safety questions do not arise; the freed tail stays owned by the
+    /// Vec as spare capacity.
+    pub fn shrink(&self, new_len: usize) {
+        #[cfg(debug_assertions)]
+        {
+            let reg = unsafe { &*self.released.get() };
+            assert!(
+                reg.iter().all(|r| r.end() <= new_len),
+                "shrink({new_len}): a released region is still out: {reg:?}"
+            );
+        }
+        unsafe {
+            let v = &mut *self.buf.get();
+            if new_len < v.len() {
+                v.truncate(new_len);
+            }
+        }
     }
 
     /// Zero the whole arena (used between inference/training switches).
@@ -127,5 +222,59 @@ mod tests {
     fn bytes() {
         let p = MemoryPool::new(10);
         assert_eq!(p.bytes(), 40);
+    }
+
+    #[test]
+    fn release_reacquire_roundtrip() {
+        let p = MemoryPool::new(8);
+        let r = Region { offset: 2, len: 4 };
+        p.view_mut(r).fill(3.0);
+        p.release_gap(r);
+        p.reacquire(r, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.view(r), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn move_region_slides_down_with_overlap() {
+        let p = MemoryPool::new(10);
+        let from = Region { offset: 4, len: 4 };
+        p.view_mut(from).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let to = Region { offset: 2, len: 4 };
+        p.move_region(from, to);
+        assert_eq!(p.view(to), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn shrink_truncates() {
+        let p = MemoryPool::new(10);
+        p.shrink(6);
+        assert_eq!(p.len(), 6);
+        assert_eq!(p.bytes(), 24);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "released twice")]
+    fn double_release_panics() {
+        let p = MemoryPool::new(8);
+        let r = Region { offset: 0, len: 4 };
+        p.release_gap(r);
+        p.release_gap(r);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "never released")]
+    fn unmatched_reacquire_panics() {
+        let p = MemoryPool::new(8);
+        p.reacquire(Region { offset: 0, len: 4 }, &[0.0; 4]);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "out of pool")]
+    fn release_out_of_bounds_panics() {
+        let p = MemoryPool::new(8);
+        p.release_gap(Region { offset: 6, len: 4 });
     }
 }

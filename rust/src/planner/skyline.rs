@@ -1,0 +1,60 @@
+//! Plain (non-gap) skyline planner: the segment-tree placer applied to
+//! whole `[min EO, max EO]` live intervals, with the same portfolio
+//! fallback the gap tier uses — so `PlannerKind::Skyline` works with or
+//! without a memory budget and never plans a larger pool than the
+//! best-fit planner on the same table.
+
+use crate::error::Result;
+use crate::tensor::TensorTable;
+
+use super::gapfit::GapSkylinePlanner;
+use super::offload::OffloadPlan;
+use super::Planner;
+
+pub struct SkylinePlanner;
+
+impl Planner for SkylinePlanner {
+    fn name(&self) -> &'static str {
+        "skyline"
+    }
+
+    fn plan(&self, table: &mut TensorTable) -> Result<usize> {
+        // an empty offload plan degrades the gap machinery to whole
+        // [min, max] intervals (pinned by gapfit's
+        // `no_offloads_behaves_like_plain_planner`)
+        let plan = OffloadPlan::default();
+        GapSkylinePlanner { plan: &plan }.plan(table)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::validate::validate_plan;
+    use crate::tensor::{CreateMode, Initializer, Lifespan, TensorDim, TensorRole, TensorTable};
+
+    #[test]
+    fn plans_valid_layout_and_reuses_dead_slots() {
+        let mut t = TensorTable::new();
+        for (name, len, eos) in
+            [("a", 10usize, vec![0u32, 3]), ("b", 10, vec![4, 6]), ("w", 4, vec![0, 6])]
+        {
+            let id = t
+                .request(
+                    name,
+                    TensorDim::vec(1, len),
+                    TensorRole::Activation,
+                    CreateMode::Create,
+                    Initializer::None,
+                )
+                .unwrap();
+            for e in eos {
+                t.add_eo(id, e, Lifespan::FORWARD);
+            }
+        }
+        t.finish_orders();
+        let pool_len = SkylinePlanner.plan(&mut t).unwrap();
+        assert_eq!(pool_len, 14, "b reuses a's slot; w pinned alongside");
+        validate_plan(&t, pool_len).unwrap();
+    }
+}

@@ -117,7 +117,16 @@ pub fn probe_store(
     probe_len: usize,
 ) -> Result<StoreCalibration> {
     let len = probe_len.clamp(1 << 10, 1 << 18);
-    let buf = vec![1.0f32; len];
+    // mixed-mantissa probe values in [1, 2): a constant buffer would let
+    // a compressing store (file-compressed) report its best-case RLE
+    // bandwidth instead of a representative one
+    let mut lcg = 0x9E37_79B9_7F4A_7C15u64;
+    let buf: Vec<f32> = (0..len)
+        .map(|_| {
+            lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            f32::from_bits(0x3F80_0000 | ((lcg >> 40) as u32 & 0x007F_FFFF))
+        })
+        .collect();
     let mut out = vec![0f32; len];
     // allocate the slot first, then time steady-state overwrites — the
     // write path the eviction pipeline runs every iteration

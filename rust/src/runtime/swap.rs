@@ -58,19 +58,20 @@
 //! training bitwise identical (see `rust/tests/swap_equivalence.rs` and
 //! `rust/tests/swap_stress.rs`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::planner::compact::{frag_gauge, CompactionPlan};
 use crate::planner::offload::{live_intervals, OffloadPlan};
 use crate::planner::pool::MemoryPool;
 use crate::tensor::{Region, Residency, TensorId, TensorTable};
 
 use super::calibrate::{lead_for_ns, SwapCalibration};
-use super::store::SecondaryStore;
+use super::store::{SecondaryStore, StoreStats};
 
 pub use crate::planner::offload::PREFETCH_DEPTH;
 
@@ -158,6 +159,15 @@ pub struct SwapStats {
     /// (reclaim barriers; under synchronous evictions, the writes
     /// themselves).
     pub write_stall_ns: u64,
+    /// Pool-arena size in bytes — a *gauge* (layout snapshot), not a
+    /// cumulative counter. Refreshed at build and after compaction.
+    pub pool_bytes: u64,
+    /// Pool bytes no tensor region ever covers (placement waste — the
+    /// fragmentation the `frag_pct` bench column gates).
+    pub frag_bytes: u64,
+    /// Longest contiguous never-covered run in the pool (includes the
+    /// tail a compaction shrink reclaims).
+    pub largest_free_extent_bytes: u64,
 }
 
 impl SwapStats {
@@ -178,9 +188,21 @@ impl SwapStats {
         self.write_stall_ns as f64 / 1e6
     }
 
+    /// Never-covered pool fraction, percent (gauge).
+    pub fn frag_pct(&self) -> f64 {
+        if self.pool_bytes == 0 {
+            0.0
+        } else {
+            self.frag_bytes as f64 / self.pool_bytes as f64 * 100.0
+        }
+    }
+
     /// Counter-wise difference against an earlier snapshot of the same
     /// run — the per-epoch deltas behind [`SwapExec::epoch_stats`].
     /// Saturating: a reset (new run) never underflows into garbage.
+    /// Gauges (`pool_bytes`, `frag_bytes`, `largest_free_extent_bytes`)
+    /// carry the *current* snapshot's values — a layout state has no
+    /// meaningful per-epoch difference.
     pub fn delta(&self, prev: &SwapStats) -> SwapStats {
         SwapStats {
             evictions: self.evictions.saturating_sub(prev.evictions),
@@ -190,6 +212,9 @@ impl SwapStats {
             bytes_in: self.bytes_in.saturating_sub(prev.bytes_in),
             read_stall_ns: self.read_stall_ns.saturating_sub(prev.read_stall_ns),
             write_stall_ns: self.write_stall_ns.saturating_sub(prev.write_stall_ns),
+            pool_bytes: self.pool_bytes,
+            frag_bytes: self.frag_bytes,
+            largest_free_extent_bytes: self.largest_free_extent_bytes,
         }
     }
 }
@@ -199,6 +224,60 @@ impl SwapStats {
 /// latency models, keeping one smoothing semantic across the runtime.
 pub(crate) fn ewma_update(slot: &mut f64, sample: f64, alpha: f64) {
     *slot = if *slot > 0.0 { *slot + alpha * (sample - *slot) } else { sample };
+}
+
+/// Derive every entry's placement-dependent bounds from the placed
+/// table: `max_lead` (widest safe read lead) and `reclaim_eo` (write
+/// completion barrier). Runs at construction and again after a pool
+/// compaction rebinds the regions — the bounds depend on which tensors
+/// share addresses, which is exactly what relocation changes. The floor
+/// for `max_lead` is the *plan* lead (entries correspond 1:1 with
+/// `plan.entries`, in order): the relocated layout re-validates under
+/// the plan's lead map, so the plan lead is always safe.
+fn derive_entry_bounds(entries: &mut [SwapEntry], plan: &OffloadPlan, table: &TensorTable) {
+    let leads = plan.lead_map();
+    let offloaded: HashSet<TensorId> = plan.entries.iter().map(|e| e.tensor).collect();
+    for (k, entry) in entries.iter_mut().enumerate() {
+        let mut earliest = entry.evict_after + 1;
+        let mut reclaim = u32::MAX;
+        for s in table.iter() {
+            if s.merged_into.is_some() || s.eos.is_empty() || s.id == entry.tensor {
+                continue;
+            }
+            let Some(r) = s.region else { continue };
+            let overlap = r.offset < entry.region.end() && entry.region.offset < r.end();
+            if !overlap {
+                continue;
+            }
+            for (a, z) in live_intervals(s, offloaded.contains(&s.id).then_some(&leads)) {
+                if z < entry.prefetch_before {
+                    earliest = earliest.max(z + 1);
+                }
+                if a > entry.evict_after {
+                    reclaim = reclaim.min(a);
+                }
+            }
+        }
+        entry.max_lead = (entry.prefetch_before - earliest).max(plan.entries[k].lead);
+        entry.reclaim_eo = reclaim;
+    }
+}
+
+/// Pairwise address-overlap sets over the (current) entry regions.
+fn compute_overlaps(entries: &[SwapEntry]) -> Vec<Vec<usize>> {
+    let n = entries.len();
+    let mut overlaps: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j
+                && entries[i].region.offset < entries[j].region.end()
+                && entries[j].region.offset < entries[i].region.end()
+            {
+                overlaps[i].push(j);
+            }
+        }
+    }
+    overlaps
 }
 
 /// Executable swap schedule bound to one compiled model's pool layout.
@@ -282,6 +361,11 @@ pub struct SwapExec {
     /// the perf harness reads the trajectory as per-epoch deltas
     /// (`epoch_stats`) instead of only whole-run totals.
     epoch_marks: Vec<SwapStats>,
+    /// Plan-time pool-relocation map, parked here until the executor
+    /// applies it at the first swap-quiescent epoch barrier
+    /// (`Executor::compact_pool` takes it, moves the persistent bytes,
+    /// shrinks the pool, and calls [`SwapExec::rebind`]).
+    compaction: Option<CompactionPlan>,
 }
 
 impl SwapExec {
@@ -366,45 +450,9 @@ impl SwapExec {
         //   barrier. (A tenant's plan-widened interval start is its
         //   first CPU write — an early reacquire copies into the range
         //   at exactly that EO.)
-        let leads = plan.lead_map();
-        let offloaded: std::collections::HashSet<TensorId> =
-            plan.entries.iter().map(|e| e.tensor).collect();
-        for entry in &mut entries {
-            let mut earliest = entry.evict_after + 1;
-            let mut reclaim = u32::MAX;
-            for s in table.iter() {
-                if s.merged_into.is_some() || s.eos.is_empty() || s.id == entry.tensor {
-                    continue;
-                }
-                let Some(r) = s.region else { continue };
-                let overlap = r.offset < entry.region.end() && entry.region.offset < r.end();
-                if !overlap {
-                    continue;
-                }
-                for (a, z) in live_intervals(s, offloaded.contains(&s.id).then_some(&leads)) {
-                    if z < entry.prefetch_before {
-                        earliest = earliest.max(z + 1);
-                    }
-                    if a > entry.evict_after {
-                        reclaim = reclaim.min(a);
-                    }
-                }
-            }
-            entry.max_lead = (entry.prefetch_before - earliest).max(entry.lead);
-            entry.reclaim_eo = reclaim;
-        }
+        derive_entry_bounds(&mut entries, plan, table);
         let n = entries.len();
-        let mut overlaps: Vec<Vec<usize>> = vec![Vec::new(); n];
-        for i in 0..n {
-            for j in 0..n {
-                if i != j
-                    && entries[i].region.offset < entries[j].region.end()
-                    && entries[j].region.offset < entries[i].region.end()
-                {
-                    overlaps[i].push(j);
-                }
-            }
-        }
+        let overlaps = compute_overlaps(&entries);
         let mut evict_at: HashMap<u32, Vec<usize>> = HashMap::new();
         for (i, e) in entries.iter().enumerate() {
             evict_at.entry(e.evict_after).or_default().push(i);
@@ -530,7 +578,85 @@ impl SwapExec {
             last_stall_ns: 0,
             stats: SwapStats::default(),
             epoch_marks: Vec::new(),
+            compaction: None,
         })
+    }
+
+    /// Park a pool-relocation map for the executor to apply at the next
+    /// swap-quiescent epoch barrier.
+    pub fn set_compaction(&mut self, plan: CompactionPlan) {
+        self.compaction = Some(plan);
+    }
+
+    /// Take the parked relocation map (once). Must only be consumed at a
+    /// quiescent point — see [`SwapExec::rebind`].
+    pub fn take_compaction(&mut self) -> Option<CompactionPlan> {
+        self.compaction.take()
+    }
+
+    /// Whether a compaction is still parked (diagnostics, tests).
+    pub fn has_compaction(&self) -> bool {
+        self.compaction.is_some()
+    }
+
+    /// Re-bind the schedule to a relocated pool layout. Call only at a
+    /// swap-quiescent point (after `end_iteration`: no outstanding
+    /// transfers, nothing staged) with the table's regions already
+    /// rewritten to the relocation map's destinations.
+    ///
+    /// What changes: entry regions, the placement-derived bounds
+    /// (`max_lead`, `reclaim_eo`), the address-overlap sets, and the
+    /// two barrier orders. What must NOT change: region *lengths* — the
+    /// workers captured them at spawn (staging-buffer sizing), so a
+    /// length change is a hard error, not a rebind.
+    ///
+    /// Widened runtime leads are clamped into the recomputed bounds;
+    /// the plan lead is always admissible (the relocated layout
+    /// re-validates under the plan's lead map).
+    pub fn rebind(&mut self, table: &TensorTable) -> Result<()> {
+        if self.outstanding != 0 || self.outstanding_writes != 0 || !self.staged.is_empty() {
+            return Err(Error::Runtime(
+                "swap runtime: rebind with transfers in flight".into(),
+            ));
+        }
+        for entry in self.entries.iter_mut() {
+            let s = table.get(entry.tensor);
+            let region = s.region.ok_or_else(|| {
+                Error::planner(format!("relocated tensor `{}` lost its region", s.name))
+            })?;
+            if region.len != entry.region.len {
+                return Err(Error::planner(format!(
+                    "pool compaction changed `{}`'s region length {} -> {} — relocation \
+                     may only move regions, never resize them",
+                    s.name, entry.region.len, region.len
+                )));
+            }
+            entry.region = region;
+        }
+        derive_entry_bounds(&mut self.entries, &self.plan, table);
+        for e in self.entries.iter_mut() {
+            e.lead = e.lead.clamp(1, e.max_lead);
+            e.due = e.prefetch_before.saturating_sub(e.lead);
+        }
+        self.overlaps = compute_overlaps(&self.entries);
+        self.by_prefetch
+            .sort_by_key(|&i| (self.entries[i].due, self.entries[i].prefetch_before, i));
+        self.by_reclaim.sort_by_key(|&i| (self.entries[i].reclaim_eo, i));
+        Ok(())
+    }
+
+    /// Refresh the fragmentation gauges in [`SwapStats`] from a (placed)
+    /// table — at build and again after compaction.
+    pub fn refresh_frag(&mut self, table: &TensorTable, pool_len: usize) {
+        let g = frag_gauge(table, pool_len);
+        self.stats.pool_bytes = g.pool_bytes;
+        self.stats.frag_bytes = g.unused_bytes;
+        self.stats.largest_free_extent_bytes = g.largest_free_extent_bytes;
+    }
+
+    /// Snapshot of the secondary store's cumulative I/O counters.
+    pub fn store_stats(&self) -> StoreStats {
+        self.store.lock().unwrap().stats()
     }
 
     pub fn plan(&self) -> &OffloadPlan {

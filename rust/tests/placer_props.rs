@@ -1,0 +1,351 @@
+//! Placer property suite: the three gap-aware placement tiers over the
+//! randomized stress topologies (the same four families as
+//! `tests/swap_stress.rs`), holding three contracts per sample:
+//!
+//! * **validity** — every placer's realized layout re-validates against
+//!   the offload plan over the allocated pool (`validate_gap_plan`);
+//! * **peak ordering** — the placement portfolio is nested (the skyline
+//!   tier evaluates a superset of the best-fit tier's candidates, which
+//!   supersets first-fit's), so peaks must be monotone:
+//!   `skyline <= best-fit <= first-fit` on *every* topology;
+//! * **bitwise equivalence** — training under a budget through any
+//!   placer x store combination, with an epoch-boundary pool compaction
+//!   in the middle, is bitwise identical to unswapped training (losses
+//!   every iteration, all weights at the end).
+//!
+//! Knobs: `NNTRAINER_STRESS_SEEDS` (comma-separated u64 seeds, default
+//! `20260731`) and `NNTRAINER_STRESS_SAMPLES` (topologies per seed,
+//! default 6) — the same contract as the swap-stress suite, so the CI
+//! matrix drives both.
+
+use nntrainer::compiler::CompileOpts;
+use nntrainer::graph::NodeDesc;
+use nntrainer::layers::Props;
+use nntrainer::model::{Model, ModelBuilder};
+use nntrainer::planner::offload::advise;
+use nntrainer::planner::validate::validate_gap_plan;
+use nntrainer::planner::PlannerKind;
+use nntrainer::rng::Rng;
+use nntrainer::runtime::StoreKind;
+
+fn node(name: &str, ltype: &str, pairs: &[(&str, String)]) -> NodeDesc {
+    NodeDesc::new(
+        name,
+        ltype,
+        Props::from_pairs(pairs.iter().map(|(k, v)| (*k, v.as_str()))),
+    )
+}
+
+/// One random topology out of the four families the paper's evaluation
+/// models span (kept in lockstep with `tests/swap_stress.rs::gen_model`
+/// so both suites cover the same shape space).
+fn gen_model(rng: &mut Rng) -> Vec<NodeDesc> {
+    match rng.below(4) {
+        0 => {
+            let feat = 32 + rng.below(128);
+            let depth = 2 + rng.below(3);
+            let mut nodes = vec![node(
+                "in",
+                "input",
+                &[("input_shape", format!("1:1:{feat}"))],
+            )];
+            for i in 0..depth {
+                let unit = 16 + rng.below(80);
+                nodes.push(node(
+                    &format!("h{i}"),
+                    "fully_connected",
+                    &[("unit", unit.to_string()), ("activation", "relu".into())],
+                ));
+            }
+            nodes.push(node("out", "fully_connected", &[("unit", "8".into())]));
+            nodes.push(node("loss", "mse", &[]));
+            nodes
+        }
+        1 => {
+            let c = 1 + rng.below(4);
+            let hw = [8, 12, 16][rng.below(3)];
+            let depth = 1 + rng.below(3);
+            let mut nodes = vec![node(
+                "in",
+                "input",
+                &[("input_shape", format!("{c}:{hw}:{hw}"))],
+            )];
+            for i in 0..depth {
+                let filters = 4 + rng.below(12);
+                nodes.push(node(
+                    &format!("c{i}"),
+                    "conv2d",
+                    &[
+                        ("filters", filters.to_string()),
+                        ("kernel_size", "3".into()),
+                        ("padding", "same".into()),
+                        ("activation", "relu".into()),
+                    ],
+                ));
+            }
+            nodes.push(node("flat", "flatten", &[]));
+            nodes.push(node("fc", "fully_connected", &[("unit", "10".into())]));
+            nodes.push(node("loss", "mse", &[]));
+            nodes
+        }
+        2 => {
+            let feat = 32 + rng.below(96);
+            let ua = 16 + rng.below(48);
+            let ub = 16 + rng.below(48);
+            vec![
+                node("in", "input", &[("input_shape", format!("1:1:{feat}"))]),
+                node("stem", "fully_connected", &[("unit", "48".into()), ("activation", "relu".into())]),
+                node("mo", "multiout", &[("outputs", "2".into())]),
+                node("ba", "fully_connected", &[("unit", ua.to_string()), ("activation", "relu".into()), ("input_layers", "mo(0)".into())]),
+                node("bb", "fully_connected", &[("unit", ub.to_string()), ("activation", "relu".into()), ("input_layers", "mo(1)".into())]),
+                node("cat", "concat", &[("input_layers", "ba,bb".into())]),
+                node("head", "fully_connected", &[("unit", "8".into())]),
+                node("loss", "mse", &[]),
+            ]
+        }
+        _ => {
+            let feat = 64 + rng.below(128);
+            let unit = 24 + rng.below(64);
+            vec![
+                node("in", "input", &[("input_shape", format!("1:1:{feat}"))]),
+                node("stem", "fully_connected", &[("unit", unit.to_string()), ("bias", "false".into())]),
+                node("mo", "multiout", &[("outputs", "2".into())]),
+                node("act_a", "activation", &[("act", "sigmoid".into()), ("input_layers", "mo(0)".into())]),
+                node("act_b", "activation", &[("act", "relu".into()), ("input_layers", "mo(1)".into())]),
+                node("add", "addition", &[("input_layers", "act_a,act_b".into())]),
+                node("head", "fully_connected", &[("unit", "10".into()), ("bias", "false".into())]),
+                node("loss", "mse", &[]),
+            ]
+        }
+    }
+}
+
+fn compile(nodes: Vec<NodeDesc>, opts: &CompileOpts) -> Model {
+    ModelBuilder::new()
+        .add_nodes(nodes)
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .compile(opts)
+        .unwrap()
+}
+
+fn feat_lens(m: &Model) -> (usize, usize) {
+    let in_len = m
+        .exec
+        .graph
+        .input_nodes
+        .iter()
+        .map(|&n| m.exec.graph.nodes[n].out_dims[0].feature_len())
+        .sum();
+    let lb_len = m
+        .exec
+        .graph
+        .loss_nodes
+        .iter()
+        .map(|&n| m.exec.graph.nodes[n].in_dims[0].feature_len())
+        .sum();
+    (in_len, lb_len)
+}
+
+fn env_seeds() -> Vec<u64> {
+    match std::env::var("NNTRAINER_STRESS_SEEDS") {
+        Ok(s) => {
+            let seeds: Vec<u64> = s
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().unwrap_or_else(|e| {
+                        panic!("NNTRAINER_STRESS_SEEDS part {p:?} is not a u64: {e}")
+                    })
+                })
+                .collect();
+            if seeds.is_empty() {
+                panic!("NNTRAINER_STRESS_SEEDS={s:?} names no seeds");
+            }
+            seeds
+        }
+        Err(std::env::VarError::NotPresent) => vec![20260731],
+        Err(e) => panic!("NNTRAINER_STRESS_SEEDS is set but unreadable: {e}"),
+    }
+}
+
+fn env_samples() -> usize {
+    match std::env::var("NNTRAINER_STRESS_SAMPLES") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            Ok(_) => panic!("NNTRAINER_STRESS_SAMPLES must be > 0"),
+            Err(e) => panic!("NNTRAINER_STRESS_SAMPLES={v:?} is not a usize: {e}"),
+        },
+        Err(std::env::VarError::NotPresent) => 6,
+        Err(e) => panic!("NNTRAINER_STRESS_SAMPLES is set but unreadable: {e}"),
+    }
+}
+
+/// (topology, batch, budget) for a stress sample, derived exactly as the
+/// swap-stress suite derives them so failures cross-reference.
+fn sample_setup(seed: u64, sample: usize) -> (Vec<NodeDesc>, usize, usize) {
+    let mut rng = Rng::new(seed ^ (sample as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let nodes = gen_model(&mut rng);
+    let batch = [4usize, 8][rng.below(2)];
+    let budget_pct = 60 + rng.below(31); // 60..=90 %
+    let base = compile(nodes.clone(), &CompileOpts { batch, ..Default::default() });
+    let full = advise(&base.exec.graph.table, usize::MAX).primary_peak_bytes;
+    let budget = (full * budget_pct / 100).max(1);
+    (nodes, batch, budget)
+}
+
+/// Compile under `budget` with one placer; validate the realized layout
+/// and return the achieved pool bytes.
+fn placed_peak(
+    ctx: &str,
+    nodes: Vec<NodeDesc>,
+    batch: usize,
+    budget: usize,
+    placer: PlannerKind,
+) -> usize {
+    let m = compile(
+        nodes,
+        &CompileOpts {
+            batch,
+            memory_budget_bytes: Some(budget),
+            planner: placer,
+            ..Default::default()
+        },
+    );
+    let plan = m.exec.swap_plan().unwrap().clone();
+    let pool_len = m.exec.pool.len();
+    validate_gap_plan(&m.exec.graph.table, &plan, pool_len)
+        .unwrap_or_else(|e| panic!("{ctx}: {placer:?} realized plan invalid: {e}"));
+    m.peak_pool_bytes()
+}
+
+/// Portfolio nesting made observable: for every stress topology the
+/// skyline tier's peak is at most best-fit's, which is at most
+/// first-fit's.
+#[test]
+fn placer_peaks_are_ordered_on_stress_topologies() {
+    let samples = env_samples();
+    for &seed in &env_seeds() {
+        for sample in 0..samples {
+            let ctx = format!("seed={seed} sample={sample}");
+            let (nodes, batch, budget) = sample_setup(seed, sample);
+            let ff = placed_peak(&ctx, nodes.clone(), batch, budget, PlannerKind::Sorting);
+            let bf = placed_peak(&ctx, nodes.clone(), batch, budget, PlannerKind::BestFit);
+            let sky = placed_peak(&ctx, nodes, batch, budget, PlannerKind::Skyline);
+            assert!(
+                sky <= bf,
+                "{ctx}: skyline peak {sky} exceeds best-fit {bf} — the portfolio \
+                 lost its nesting"
+            );
+            assert!(
+                bf <= ff,
+                "{ctx}: best-fit peak {bf} exceeds first-fit {ff} — the portfolio \
+                 lost its nesting"
+            );
+        }
+    }
+}
+
+/// Bitwise training equivalence through every placer x store combo with
+/// a pool compaction applied mid-run: 2 iterations, the epoch-boundary
+/// compaction (region relocation + arena truncation + swap rebind), then
+/// 2 more iterations — losses and final weights must match unswapped
+/// training exactly.
+fn run_equivalence_sample(
+    seed: u64,
+    sample: usize,
+    placer: PlannerKind,
+    store: StoreKind,
+) {
+    let ctx = format!("seed={seed} sample={sample} placer={placer:?} store={store:?}");
+    let (nodes, batch, budget) = sample_setup(seed, sample);
+
+    let mut base = compile(nodes.clone(), &CompileOpts { batch, ..Default::default() });
+    let mut swapped = compile(
+        nodes,
+        &CompileOpts {
+            batch,
+            memory_budget_bytes: Some(budget),
+            planner: placer,
+            swap_store: store,
+            pool_compaction: true,
+            ..Default::default()
+        },
+    );
+    assert!(swapped.exec.swap_active(), "{ctx}: swap runtime not engaged");
+
+    let (in_len, lb_len) = feat_lens(&base);
+    let mut data_rng = Rng::new(0xC0FFEE ^ seed);
+    let mut input = vec![0f32; in_len * batch];
+    let mut label = vec![0f32; lb_len * batch];
+    let mut compacted = false;
+    for it in 0..4 {
+        data_rng.fill_uniform(&mut input, -1.0, 1.0);
+        data_rng.fill_uniform(&mut label, 0.0, 1.0);
+        base.bind_batch(&input, &label).unwrap();
+        swapped.bind_batch(&input, &label).unwrap();
+        let l0 = base.exec.try_train_iteration().unwrap();
+        let l1 = swapped
+            .exec
+            .try_train_iteration()
+            .unwrap_or_else(|e| panic!("{ctx}: swapped iteration {it} failed: {e}"));
+        assert_eq!(
+            l0.to_bits(),
+            l1.to_bits(),
+            "{ctx}: iteration {it} loss diverged ({l0} vs {l1}, compacted={compacted})"
+        );
+        if it == 1 {
+            // the epoch boundary: end_iteration has drained every
+            // transfer, so the parked compaction may apply here
+            let before = swapped.exec.pool.len();
+            let applied = swapped
+                .exec
+                .compact_pool()
+                .unwrap_or_else(|e| panic!("{ctx}: compaction failed: {e}"));
+            compacted = applied;
+            if applied {
+                assert!(
+                    swapped.exec.pool.len() <= before,
+                    "{ctx}: compaction grew the pool ({before} -> {})",
+                    swapped.exec.pool.len()
+                );
+                // the relocated layout must still validate
+                let plan = swapped.exec.swap_plan().unwrap().clone();
+                validate_gap_plan(&swapped.exec.graph.table, &plan, swapped.exec.pool.len())
+                    .unwrap_or_else(|e| panic!("{ctx}: compacted plan invalid: {e}"));
+            }
+            assert!(
+                !swapped.exec.swap_mut().unwrap().has_compaction(),
+                "{ctx}: compaction must be one-shot"
+            );
+        }
+    }
+
+    for w in base.exec.weight_names() {
+        let a = base.exec.read_weight(&w).unwrap();
+        let b = swapped.exec.read_weight(&w).unwrap();
+        assert_eq!(a.len(), b.len(), "{ctx}: {w}: length");
+        for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{ctx}: {w}[{k}]: {x} vs {y} (compacted={compacted})"
+            );
+        }
+    }
+}
+
+#[test]
+fn training_is_bitwise_across_placers_stores_and_compaction() {
+    let placers = [PlannerKind::Sorting, PlannerKind::BestFit, PlannerKind::Skyline];
+    let stores = [StoreKind::Host, StoreKind::File, StoreKind::FileCompressed];
+    let samples = env_samples();
+    for &seed in &env_seeds() {
+        for sample in 0..samples {
+            // walk the 3x3 placer x store grid across samples so every
+            // combination appears at least once per 9 samples while each
+            // individual sample stays cheap
+            let placer = placers[sample % placers.len()];
+            let store = stores[(sample / placers.len() + sample) % stores.len()];
+            run_equivalence_sample(seed, sample, placer, store);
+        }
+    }
+}

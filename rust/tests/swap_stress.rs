@@ -16,8 +16,9 @@
 //!
 //! * `NNTRAINER_STRESS_SEEDS`   — comma-separated u64 seeds
 //!   (default `20260731`)
-//! * `NNTRAINER_STRESS_STORE`   — `host`, `file` or `both`
-//!   (default `both`)
+//! * `NNTRAINER_STRESS_STORE`   — `host`, `file`, `file-compressed`,
+//!   `both` (host+file, the default) or `all` (adds the compressed
+//!   store)
 //! * `NNTRAINER_STRESS_SAMPLES` — topologies per seed (default 6)
 
 use nntrainer::compiler::CompileOpts;
@@ -266,10 +267,14 @@ fn env_seeds() -> Vec<u64> {
 fn env_stores() -> Vec<StoreKind> {
     match std::env::var("NNTRAINER_STRESS_STORE") {
         Ok(v) => match v.trim() {
-            "host" => vec![StoreKind::Host],
-            "file" => vec![StoreKind::File],
             "both" => vec![StoreKind::Host, StoreKind::File],
-            other => panic!("NNTRAINER_STRESS_STORE={other:?} (use host|file|both)"),
+            "all" => vec![StoreKind::Host, StoreKind::File, StoreKind::FileCompressed],
+            other => vec![StoreKind::parse(other).unwrap_or_else(|| {
+                panic!(
+                    "NNTRAINER_STRESS_STORE={other:?} \
+                     (use host|file|file-compressed|both|all)"
+                )
+            })],
         },
         Err(std::env::VarError::NotPresent) => vec![StoreKind::Host, StoreKind::File],
         Err(e) => panic!("NNTRAINER_STRESS_STORE is set but unreadable: {e}"),
