@@ -36,7 +36,7 @@
 
 use nntrainer::bench_report::{finish, BenchReport, Metric};
 use nntrainer::bench_util::{
-    bench_dataset, budget_profile, fmt_mib, nntrainer_profile, train_random_swap, Table,
+    bench_dataset, budget_profile, fmt_mib, nntrainer_profile, train_random_with, Table,
 };
 use nntrainer::compiler::plan_only;
 use nntrainer::graph::NodeDesc;
@@ -44,6 +44,29 @@ use nntrainer::metrics::MIB;
 use nntrainer::model::zoo;
 use nntrainer::planner::PlannerKind;
 use nntrainer::runtime::{StoreKind, SwapTuning};
+
+/// How the iteration boundary is handled for persistent (wrap) entries.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Boundary {
+    /// No wrap entries planned (`swap_pipeline` off) — the default rows.
+    Off,
+    /// Wrap entries planned, boundary transfers overlap iterations.
+    Pipelined,
+    /// Wrap entries planned but `end_iteration` drains them and the
+    /// restores run inline at the sweep — the baseline the pipelined
+    /// row's `bstall` column must undercut.
+    Drained,
+}
+
+impl Boundary {
+    fn label(self) -> &'static str {
+        match self {
+            Boundary::Off => "-",
+            Boundary::Pipelined => "pipelined",
+            Boundary::Drained => "drained",
+        }
+    }
+}
 
 #[allow(clippy::too_many_arguments)]
 fn run_case(
@@ -56,16 +79,28 @@ fn run_case(
     placer: PlannerKind,
     tuning: SwapTuning,
     sync_evict: bool,
-) {
+    boundary: Boundary,
+) -> f64 {
     let base = plan_only(nodes.clone(), &nntrainer_profile(batch)).expect("plan");
     let target = base.pool_bytes * 70 / 100;
     let mut opts = budget_profile(batch, target);
     opts.swap_tuning = tuning;
     opts.swap_store = store;
     opts.planner = placer;
+    opts.swap_pipeline = boundary != Boundary::Off;
     let dataset = bench_dataset();
-    let (model, secs, iters) =
-        train_random_swap(nodes, &opts, dataset, 1, 0.01, sync_evict).expect("train");
+    let (model, secs, iters, _) =
+        train_random_with(nodes, &opts, dataset, 1, 0.01, |model| {
+            if let Some(sw) = model.exec.swap_mut() {
+                if sync_evict {
+                    sw.set_sync_evictions(true);
+                }
+                if boundary == Boundary::Drained {
+                    sw.set_boundary_drain(true);
+                }
+            }
+        })
+        .expect("train");
     let plan = model.exec.swap_plan().expect("swap plan").clone();
     let stats = model.exec.swap_stats().expect("swap stats");
     let st = model.exec.swap_store_stats().expect("store stats");
@@ -79,12 +114,14 @@ fn run_case(
     } else {
         0.0
     };
+    let bstall_per_iter = stats.boundary_stall_ms() / iters as f64;
     table.row(vec![
         name.to_string(),
         model.report.planner.to_string(),
         format!("{:?}", store).to_lowercase(),
         format!("{:?}", tuning).to_lowercase(),
         (if sync_evict { "sync" } else { "async" }).into(),
+        boundary.label().into(),
         fmt_mib(base.pool_bytes),
         fmt_mib(target),
         fmt_mib(plan.primary_peak_bytes),
@@ -98,6 +135,7 @@ fn run_case(
         format!("{depth}"),
         format!("{:.3}", stats.read_stall_ms() / iters as f64),
         format!("{:.3}", stats.write_stall_ms() / iters as f64),
+        format!("{:.3}", bstall_per_iter),
         format!("{:.1}", stats.sync_fetches as f64 / iters as f64),
         format!("{:.1}", secs * 1e3 / iters as f64),
     ]);
@@ -105,29 +143,48 @@ fn run_case(
     let evict = if sync_evict { "sync" } else { "async" };
     let store_s = format!("{store:?}").to_lowercase();
     let tuning_s = format!("{tuning:?}").to_lowercase();
-    let id = format!("{name}/{}/{store_s}/{tuning_s}/{evict}", model.report.planner);
-    report.push(
-        &id,
-        vec![
-            Metric::lower("advised_mib", plan.primary_peak_bytes as f64 / MIB),
-            Metric::lower("achieved_mib", achieved as f64 / MIB),
-            Metric::lower("frag_pct", frag),
-            Metric::lower("pool_frag_pct", stats.frag_pct()),
-            Metric::lower("store_rewrites", st.rewrites as f64),
-            Metric::info("store_peak_mib", st.peak_bytes as f64 / MIB),
-            Metric::info("store_physical_mib", st.physical_bytes as f64 / MIB),
-            Metric::info("fits", if plan.fits { 1.0 } else { 0.0 }),
-            Metric::info("swap_mib_per_iter", plan.swap_bytes_per_iter as f64 / MIB),
-            Metric::info("lead", lead as f64),
-            Metric::info("depth", depth as f64),
-            Metric::lower("rstall_ms_per_iter", stats.read_stall_ms() / iters as f64),
-            Metric::lower("wstall_ms_per_iter", stats.write_stall_ms() / iters as f64),
-            Metric::info("sync_fetches_per_iter", stats.sync_fetches as f64 / iters as f64),
-            Metric::lower("step_latency_ms", secs * 1e3 / iters as f64),
-            Metric::higher("iters_per_s", iters as f64 / secs.max(1e-9)),
-            Metric::info("epochs_marked", epochs_marked as f64),
-        ],
-    );
+    // boundary-off rows keep their historical ids (baseline continuity);
+    // the wrap rows get their own id namespace
+    let id = match boundary {
+        Boundary::Off => {
+            format!("{name}/{}/{store_s}/{tuning_s}/{evict}", model.report.planner)
+        }
+        b => format!(
+            "{name}/{}/{store_s}/{tuning_s}/{evict}/{}",
+            model.report.planner,
+            b.label()
+        ),
+    };
+    let mut metrics = vec![
+        Metric::lower("advised_mib", plan.primary_peak_bytes as f64 / MIB),
+        Metric::lower("achieved_mib", achieved as f64 / MIB),
+        Metric::lower("frag_pct", frag),
+        Metric::lower("pool_frag_pct", stats.frag_pct()),
+        Metric::lower("store_rewrites", st.rewrites as f64),
+        Metric::info("store_peak_mib", st.peak_bytes as f64 / MIB),
+        Metric::info("store_physical_mib", st.physical_bytes as f64 / MIB),
+        Metric::info("fits", if plan.fits { 1.0 } else { 0.0 }),
+        Metric::info("swap_mib_per_iter", plan.swap_bytes_per_iter as f64 / MIB),
+        Metric::info("lead", lead as f64),
+        Metric::info("depth", depth as f64),
+        Metric::lower("rstall_ms_per_iter", stats.read_stall_ms() / iters as f64),
+        Metric::lower("wstall_ms_per_iter", stats.write_stall_ms() / iters as f64),
+        Metric::info("sync_fetches_per_iter", stats.sync_fetches as f64 / iters as f64),
+        Metric::lower("step_latency_ms", secs * 1e3 / iters as f64),
+        Metric::higher("iters_per_s", iters as f64 / secs.max(1e-9)),
+        Metric::info("epochs_marked", epochs_marked as f64),
+    ];
+    if boundary != Boundary::Off {
+        // gated: the boundary-bubble cost per iteration. Only wrap rows
+        // carry it — on boundary-off rows it is structurally zero.
+        metrics.push(Metric::lower("boundary_stall_ms_per_iter", bstall_per_iter));
+        metrics.push(Metric::info(
+            "wrap_entries",
+            model.exec.swap_n_wrap_entries().unwrap_or(0) as f64,
+        ));
+    }
+    report.push(&id, metrics);
+    bstall_per_iter
 }
 
 fn main() {
@@ -138,6 +195,7 @@ fn main() {
         "store",
         "tuning",
         "evict",
+        "boundary",
         "unswapped",
         "target",
         "advised",
@@ -151,14 +209,15 @@ fn main() {
         "depth",
         "rstall ms/it",
         "wstall ms/it",
+        "bstall ms/it",
         "sync/it",
         "iter ms",
     ]);
     let mut report = BenchReport::new("swap_runtime", bench_dataset());
     for placer in [PlannerKind::Sorting, PlannerKind::BestFit, PlannerKind::Skyline] {
-        run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, placer, SwapTuning::Fixed, false);
-        run_case(&mut table, &mut report, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed, false);
-        run_case(&mut table, &mut report, "Model B (Conv)", zoo::model_b_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed, false);
+        run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, placer, SwapTuning::Fixed, false, Boundary::Off);
+        run_case(&mut table, &mut report, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed, false, Boundary::Off);
+        run_case(&mut table, &mut report, "Model B (Conv)", zoo::model_b_conv(), 16, StoreKind::Host, placer, SwapTuning::Fixed, false, Boundary::Off);
     }
     // the acceptance comparison: fixed vs calibrated tuning and sync vs
     // full-duplex (async) eviction on the file-spill store — the slow
@@ -166,20 +225,32 @@ fn main() {
     // the training thread
     for tuning in [SwapTuning::Fixed, SwapTuning::Calibrated] {
         for sync_evict in [true, false] {
-            run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::File, PlannerKind::Sorting, tuning, sync_evict);
+            run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::File, PlannerKind::Sorting, tuning, sync_evict, Boundary::Off);
         }
     }
     for sync_evict in [true, false] {
-        run_case(&mut table, &mut report, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::File, PlannerKind::Sorting, SwapTuning::Calibrated, sync_evict);
+        run_case(&mut table, &mut report, "Model A (Conv)", zoo::model_a_conv(), 16, StoreKind::File, PlannerKind::Sorting, SwapTuning::Calibrated, sync_evict, Boundary::Off);
     }
-    run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, PlannerKind::Sorting, SwapTuning::Calibrated, false);
+    run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::Host, PlannerKind::Sorting, SwapTuning::Calibrated, false, Boundary::Off);
     // the compressed spill store: fewer physical bytes per put (the
     // byte-shuffled RLE codec) at encode cost on the workers — run with
     // the skyline placer too so the full new stack has a perf row
     for placer in [PlannerKind::Sorting, PlannerKind::Skyline] {
-        run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::FileCompressed, placer, SwapTuning::Calibrated, false);
+        run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::FileCompressed, placer, SwapTuning::Calibrated, false, Boundary::Off);
     }
+    // cross-iteration pipelining: the same plan with wrap entries,
+    // boundary transfers either overlapped into the neighbouring
+    // iterations (pipelined) or drained-and-restored inline at
+    // `end_iteration` (the bubble baseline). Under injected store
+    // latency (NNTRAINER_STORE_DELAY_US) the pipelined row's bstall
+    // must sit strictly below the drained row's.
+    let drained = run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::File, PlannerKind::Sorting, SwapTuning::Calibrated, false, Boundary::Drained);
+    let pipelined = run_case(&mut table, &mut report, "LeNet-5", zoo::lenet5(), 32, StoreKind::File, PlannerKind::Sorting, SwapTuning::Calibrated, false, Boundary::Pipelined);
     table.print();
+    println!(
+        "\nboundary bubble: drained {drained:.3} ms/it vs pipelined {pipelined:.3} ms/it \
+         (bstall; run with NNTRAINER_STORE_DELAY_US to magnify on a fast disk)"
+    );
     println!(
         "\nachieved = gap-aware planner pool (what training actually allocates); \
          advised = live-set bound under the plan; frag% = achieved overhead \
@@ -195,7 +266,11 @@ fn main() {
          path; the rest of the traffic is hidden by the background workers.\n\
          pool frag% = internal fragmentation of the placed arena (bytes no \
          tensor ever occupies); rewrites = store-slot overwrites (the wear \
-         number slot rotation spreads; see store_peak/physical in the JSON)."
+         number slot rotation spreads; see store_peak/physical in the JSON).\n\
+         boundary: `-` = no wrap entries; pipelined/drained rows additionally \
+         spill persistent tensors across the iteration boundary, and bstall = \
+         training-thread wait attributable to those boundary restores — the \
+         drain bubble pipelining removes."
     );
     finish(&report);
 }

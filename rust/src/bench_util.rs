@@ -143,15 +143,32 @@ pub fn train_random_run(
     lr: f32,
     sync_evictions: bool,
 ) -> Result<(Model, f64, usize, Vec<f32>)> {
+    train_random_with(nodes, opts, dataset, epochs, lr, |model| {
+        if sync_evictions {
+            if let Some(sw) = model.exec.swap_mut() {
+                sw.set_sync_evictions(true);
+            }
+        }
+    })
+}
+
+/// [`train_random_run`] with an arbitrary post-compile hook: the bench
+/// rows that pin a runtime mode the compiler doesn't expose (sync
+/// evictions, drained boundary baseline) set it here, between compile
+/// and the first iteration.
+pub fn train_random_with(
+    nodes: Vec<NodeDesc>,
+    opts: &CompileOpts,
+    dataset: usize,
+    epochs: usize,
+    lr: f32,
+    setup: impl FnOnce(&mut Model),
+) -> Result<(Model, f64, usize, Vec<f32>)> {
     let mut model = ModelBuilder::new()
         .add_nodes(nodes)
         .optimizer("sgd", &[("learning_rate", &format!("{lr}"))])
         .compile(opts)?;
-    if sync_evictions {
-        if let Some(sw) = model.exec.swap_mut() {
-            sw.set_sync_evictions(true);
-        }
-    }
+    setup(&mut model);
     let in_len: usize = model
         .exec
         .graph
@@ -198,6 +215,10 @@ pub fn train_random_run(
             sw.adapt_depth();
         }
     }
+    // run end is a mandatory full-drain point: with cross-iteration
+    // pipelining the engine may still carry boundary transfers, and the
+    // callers read weights out of the pool right after this returns
+    model.exec.quiesce_swap()?;
     Ok((model, start.elapsed().as_secs_f64(), iters, epoch_losses))
 }
 

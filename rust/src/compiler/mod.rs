@@ -68,6 +68,18 @@ pub struct CompileOpts {
     /// time (e.g. the fleet's weight-layout snapshots) must leave this
     /// off. Only meaningful under a memory budget.
     pub pool_compaction: bool,
+    /// Cross-iteration swap pipelining: additionally spill persistent
+    /// tensors (weights, optimizer state) across the iteration boundary.
+    /// Their idle window wraps the schedule end — evicted after their
+    /// last real access of iteration N, restored before their first of
+    /// N+1 — so the boundary transfers overlap the adjacent iterations
+    /// instead of draining at `end_iteration`. Only effective under
+    /// per-layer apply (training without gradient clipping and without
+    /// shared weights): deferred apply keeps every persistent tensor
+    /// live to the schedule end, leaving no boundary window. Bitwise
+    /// identical to the unswapped model either way. Opt-in; only
+    /// meaningful under a memory budget.
+    pub swap_pipeline: bool,
 }
 
 impl Default for CompileOpts {
@@ -85,6 +97,7 @@ impl Default for CompileOpts {
             swap_tuning: SwapTuning::Fixed,
             compute: ComputeKind::default(),
             pool_compaction: false,
+            swap_pipeline: false,
         }
     }
 }
@@ -111,6 +124,14 @@ fn plan_memory(
     match opts.memory_budget_bytes {
         Some(budget) => {
             let mut plan = offload::advise(table, budget);
+            if opts.swap_pipeline {
+                // Boundary pass: wrap entries for persistent tensors
+                // whose true access window the assembler annotated
+                // (`boundary_window` — absent under deferred apply, so
+                // this is a structural no-op there). Runs before
+                // calibration so wrap leads get bandwidth-derived too.
+                offload::advise_boundary(table, &mut plan, budget);
+            }
             let calibration = match (opts.swap_tuning, store) {
                 (SwapTuning::Calibrated, Some(store)) if !plan.entries.is_empty() => {
                     let probe_len =

@@ -225,7 +225,7 @@ impl Executor {
         self.iter += 1;
         self.last_loss = 0.0;
         if let Some(sw) = self.swap.as_mut() {
-            sw.begin_iteration(true)?;
+            sw.begin_iteration(true, &self.pool)?;
         }
         for k in 0..self.steps.len() {
             let (eo, op) = self.steps[k];
@@ -319,7 +319,7 @@ impl Executor {
         self.iter += 1;
         let mut loss = 0f32;
         if let Some(sw) = self.swap.as_mut() {
-            sw.begin_iteration(false)?;
+            sw.begin_iteration(false, &self.pool)?;
         }
         for k in 0..self.steps.len() {
             if let (eo, StepOp::Forward(i)) = self.steps[k] {
@@ -666,6 +666,27 @@ impl Executor {
         self.swap.as_mut()
     }
 
+    /// Number of cross-iteration (wrap) offload entries in the executing
+    /// plan (None when no budget was set).
+    pub fn swap_n_wrap_entries(&self) -> Option<usize> {
+        self.swap.as_ref().map(|s| s.n_wrap_entries())
+    }
+
+    /// Fully drain the swap runtime: complete every carried boundary
+    /// transfer and restore every cross-iteration (wrap) entry into the
+    /// pool. Mandatory before reading weights out of a pipelined run,
+    /// exporting/importing checkpoint state, or anything else that
+    /// treats the pool bytes as the source of truth — under
+    /// cross-iteration pipelining `end_iteration` deliberately leaves
+    /// boundary transfers in flight. No-op without a swap runtime or
+    /// when nothing is carried.
+    pub fn quiesce_swap(&mut self) -> Result<()> {
+        match self.swap.as_mut() {
+            Some(sw) => sw.quiesce(&self.pool),
+            None => Ok(()),
+        }
+    }
+
     /// Apply the parked pool-compaction plan, if any. Must be called at
     /// a swap-quiescent barrier (between iterations, after
     /// `end_iteration` has drained every transfer) — `rebind` refuses
@@ -682,6 +703,16 @@ impl Executor {
         let Some(sw) = self.swap.as_mut() else {
             return Ok(false);
         };
+        if !sw.has_compaction() {
+            return Ok(false);
+        }
+        // Relocation moves live bytes: the engine must be fully
+        // quiescent, including carried cross-iteration transfers —
+        // a wrap eviction writing the pool from the evict worker while
+        // a region slides would race. Quiesce only when actually
+        // compacting, so ordinary epoch boundaries keep the pipeline.
+        sw.quiesce(&self.pool)?;
+        let sw = self.swap.as_mut().unwrap();
         let Some(cp) = sw.take_compaction() else {
             return Ok(false);
         };

@@ -399,6 +399,14 @@ fn assemble(
             table.add_eo(wid, 0, Lifespan::MAX);
             table.add_eo(wid, eo_apply, Lifespan::MAX);
             table.get_mut(wid).trainable = shapes[i].trainable;
+            if opts.training && !deferred && shared_from.is_none() {
+                // Under per-layer apply the weight's real accesses span its
+                // own forward read through its own apply (at CG for fused
+                // backward, at CD otherwise); the recorded `{0, eo_apply}`
+                // bracket stays in place for placement safety.
+                let last = if fused { eo.cg } else { eo.cd };
+                table.get_mut(wid).boundary_window = Some((eo.f, last));
+            }
             io.weights.push(wid);
 
             if has_grads[i] {
@@ -437,6 +445,12 @@ fn assemble(
                         )?;
                         table.add_eo(sid, 0, Lifespan::MAX);
                         table.add_eo(sid, eo_apply, Lifespan::MAX);
+                        if opts.training && !deferred {
+                            // optimizer state is touched only at its
+                            // layer's apply step
+                            let a = if fused { eo.cg } else { eo.cd };
+                            table.get_mut(sid).boundary_window = Some((a, a));
+                        }
                         slots.push(sid);
                     }
                     opt_states.push(slots);

@@ -74,6 +74,12 @@ const FLEET_EWMA_ALPHA: f64 = 0.2;
 /// issue speculative unparks for.
 const MAX_LOOKAHEAD: usize = 8;
 
+/// Default retention for the per-step latency ring. Generous — at a
+/// 10 ms step this is ~10 minutes of history — but bounded, so a
+/// long-lived service doesn't grow its latency log without limit.
+/// Tune with [`FleetService::set_step_latency_cap`].
+pub const STEP_LATENCY_CAP: usize = 65_536;
+
 /// Global configuration for a fleet.
 pub struct FleetConfig {
     /// Total RAM budget in bytes: shared pool + resident tenant states.
@@ -228,7 +234,11 @@ pub struct FleetService {
     pub(crate) ewma_step_ns: f64,
     pub(crate) ewma_unpark_ns: f64,
     pub(crate) stats: FleetStats,
-    pub(crate) step_latencies: Vec<u64>,
+    /// Per-step wall latencies (ns), most recent last. Ring-capped at
+    /// `step_latency_cap`: once full, each push drops the oldest sample
+    /// so memory stays bounded over a service's lifetime.
+    pub(crate) step_latencies: VecDeque<u64>,
+    pub(crate) step_latency_cap: usize,
     /// Reused batch-assembly buffers.
     pub(crate) in_buf: Vec<f32>,
     pub(crate) lb_buf: Vec<f32>,
@@ -337,7 +347,8 @@ impl FleetService {
             ewma_step_ns: 0.0,
             ewma_unpark_ns: 0.0,
             stats: FleetStats::default(),
-            step_latencies: Vec::new(),
+            step_latencies: VecDeque::new(),
+            step_latency_cap: STEP_LATENCY_CAP,
             in_buf: Vec::new(),
             lb_buf: Vec::new(),
         };
@@ -422,6 +433,11 @@ impl FleetService {
         if self.active == Some(id) {
             return Ok(());
         }
+        // Context switches read and rewrite head regions straight out of
+        // the pool: under cross-iteration swap pipelining the previous
+        // tenant's last step may have left boundary transfers in flight
+        // over exactly those regions, so drain them first.
+        self.session.model.exec.quiesce_swap()?;
         if let Some(prev) = self.active.take() {
             if !matches!(self.tenants[prev].phase, Phase::Departed) {
                 let mut buf = self.take_buf();
@@ -618,7 +634,10 @@ impl FleetService {
             self.session.model.bind_batch(&self.in_buf, &self.lb_buf)?;
             let loss = self.session.model.exec.try_train_iteration()?;
             let ns = t0.elapsed().as_nanos() as u64;
-            self.step_latencies.push(ns);
+            self.step_latencies.push_back(ns);
+            while self.step_latencies.len() > self.step_latency_cap {
+                self.step_latencies.pop_front();
+            }
             ewma_update(&mut self.ewma_step_ns, ns as f64, FLEET_EWMA_ALPHA);
             self.stats.steps += 1;
             let t = &mut self.tenants[id];
@@ -637,6 +656,9 @@ impl FleetService {
     /// Export a completed tenant's final state straight to the store
     /// and free its compute slot.
     fn finish_tenant(&mut self, id: TenantId) -> Result<()> {
+        // the export reads head regions out of the pool — drain any
+        // carried boundary transfers over them first
+        self.session.model.exec.quiesce_swap()?;
         let mut buf = self.take_buf();
         self.session.export_head_state(&self.layout, &mut buf);
         let (iter, applies) = self.session.model.exec.step_counters();
@@ -662,6 +684,7 @@ impl FleetService {
         loop {
             match self.tenant_state(id) {
                 TenantState::Active => {
+                    self.session.model.exec.quiesce_swap()?;
                     let mut out = Vec::new();
                     self.session.export_head_state(&self.layout, &mut out);
                     return Ok(out);
@@ -733,16 +756,33 @@ impl FleetService {
         &self.stats
     }
 
-    pub fn step_latencies_ns(&self) -> &[u64] {
-        &self.step_latencies
+    /// Recorded per-step latencies (ns), oldest first. Holds at most
+    /// the last [`step_latency_cap`](Self::step_latency_cap) samples.
+    pub fn step_latencies_ns(&self) -> Vec<u64> {
+        self.step_latencies.iter().copied().collect()
     }
 
-    /// Latency percentile (q in 0..=100) over all recorded steps.
+    /// Current retention cap on the step-latency ring.
+    pub fn step_latency_cap(&self) -> usize {
+        self.step_latency_cap
+    }
+
+    /// Resize the step-latency ring (minimum 1). Shrinking drops the
+    /// oldest samples immediately.
+    pub fn set_step_latency_cap(&mut self, cap: usize) {
+        self.step_latency_cap = cap.max(1);
+        while self.step_latencies.len() > self.step_latency_cap {
+            self.step_latencies.pop_front();
+        }
+    }
+
+    /// Latency percentile (q in 0..=100) over the retained steps (the
+    /// ring keeps the most recent `step_latency_cap` samples).
     pub fn step_latency_percentile(&self, q: f64) -> u64 {
         if self.step_latencies.is_empty() {
             return 0;
         }
-        let mut sorted = self.step_latencies.clone();
+        let mut sorted: Vec<u64> = self.step_latencies.iter().copied().collect();
         sorted.sort_unstable();
         let idx = ((q / 100.0) * (sorted.len() - 1) as f64).round() as usize;
         sorted[idx.min(sorted.len() - 1)]

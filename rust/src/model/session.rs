@@ -140,6 +140,14 @@ pub struct DeviceProfile {
     /// the fleet) go stale across a relocation. Only meaningful under a
     /// budget with swap engaged.
     pub pool_compaction: bool,
+    /// Cross-iteration swap pipelining: persistent tensors (weights,
+    /// optimizer state) additionally spill across the iteration
+    /// boundary, their transfers overlapping the adjacent iterations
+    /// instead of draining at the boundary. Only effective under
+    /// per-layer apply (no gradient clipping, no shared weights) —
+    /// otherwise a structural no-op. Bitwise identical either way.
+    /// Opt-in; only meaningful under a budget with swap engaged.
+    pub swap_pipeline: bool,
     /// Conventional-framework allocation profile (Fig 9 baseline).
     pub conventional: bool,
     /// MV/RV in-place realization.
@@ -162,6 +170,7 @@ impl Default for DeviceProfile {
             swap_tuning: SwapTuning::Fixed,
             planner: PlannerKind::Sorting,
             pool_compaction: false,
+            swap_pipeline: false,
             conventional: false,
             inplace: true,
             max_batch: 512,
@@ -205,6 +214,14 @@ impl DeviceProfile {
     /// the bitwise regression baseline for the tiered kernels.
     pub fn naive_compute(mut self) -> Self {
         self.compute = ComputeKind::Naive;
+        self
+    }
+
+    /// Same profile with cross-iteration swap pipelining: persistent
+    /// tensors stream through the store across the iteration boundary,
+    /// overlapping the boundary transfers with the adjacent iterations.
+    pub fn pipelined(mut self) -> Self {
+        self.swap_pipeline = true;
         self
     }
 
@@ -492,6 +509,7 @@ pub(crate) fn resolve_opts(batch: usize, spec: &TrainSpec, profile: &DeviceProfi
         swap_tuning: profile.swap_tuning,
         compute: profile.compute,
         pool_compaction: profile.pool_compaction,
+        swap_pipeline: profile.swap_pipeline,
     }
 }
 
@@ -869,12 +887,13 @@ where
                 None => println!("epoch {:>3}: loss {:.6} ({} iters)", epoch + 1, mean, batches),
             }
         }
-        // epoch boundary: end_iteration has drained every transfer, so
-        // this is the swap-quiescent barrier — apply any parked pool
-        // compaction first (relocates regions, truncates the arena),
-        // then snapshot the swap counters for the per-epoch trajectory
-        // and let calibrated swap tuning react to the stall telemetry
-        // this epoch accrued (all no-ops under Fixed / no swap)
+        // epoch boundary: apply any parked pool compaction first
+        // (compact_pool quiesces the swap runtime itself — including
+        // carried cross-iteration transfers — before relocating regions
+        // and truncating the arena), then snapshot the swap counters for
+        // the per-epoch trajectory and let calibrated swap tuning react
+        // to the stall telemetry this epoch accrued (all no-ops under
+        // Fixed / no swap)
         model.exec.compact_pool()?;
         if let Some(sw) = model.exec.swap_mut() {
             sw.mark_epoch();
@@ -898,6 +917,10 @@ where
             break;
         }
     }
+    // run end is a mandatory full-drain point: under cross-iteration
+    // pipelining the last iteration legitimately left boundary transfers
+    // in flight, and callers read weights straight out of the pool next
+    model.exec.quiesce_swap()?;
     summary.wall_s = timer.elapsed_s();
     Ok(summary)
 }

@@ -60,6 +60,13 @@ pub struct OffloadEntry {
     pub prefetch_before: u32,
     pub lead: u32,
     pub write_lead: u32,
+    /// Boundary (cross-iteration) entry: the idle gap wraps the schedule
+    /// end — evicted late in iteration N (`evict_after`), restored early
+    /// in iteration N+1 (`prefetch_before` ≤ `evict_after`). The swap
+    /// runtime carries the eviction/prefetch state across `end_iteration`
+    /// instead of draining it, which is what lets the fetch worker pull
+    /// iteration N+1's earliest-due entries while N's tail writes land.
+    pub wrap: bool,
 }
 
 /// Per-gap transfer leads — the lookup shared by the advisor's peak
@@ -72,6 +79,13 @@ pub struct OffloadEntry {
 pub struct LeadMap {
     read: HashMap<(TensorId, u32), u32>,
     write: HashMap<(TensorId, u32), u32>,
+    /// Boundary entries: tensor → (prefetch_before, evict_after, lead,
+    /// write_lead). A wrap tensor's effective fetch window extends into
+    /// the previous iteration, so its residency is the single interval
+    /// `[prefetch_before − lead, evict_after + write_lead]` — never the
+    /// segment gaps of its recorded EOs, which for persistent tensors are
+    /// only the conservative `{0, eo_apply}` bracket.
+    boundary: HashMap<TensorId, (u32, u32, u32, u32)>,
 }
 
 impl LeadMap {
@@ -85,6 +99,12 @@ impl LeadMap {
     /// `seg_end`.
     pub fn write_lead(&self, tensor: TensorId, seg_end: u32) -> u32 {
         self.write.get(&(tensor, seg_end)).copied().unwrap_or(WRITE_LEAD)
+    }
+
+    /// Boundary (wrap) geometry of `tensor`, if it has a cross-iteration
+    /// entry: `(prefetch_before, evict_after, lead, write_lead)`.
+    pub fn boundary(&self, tensor: TensorId) -> Option<(u32, u32, u32, u32)> {
+        self.boundary.get(&tensor).copied()
     }
 }
 
@@ -118,6 +138,12 @@ impl OffloadPlan {
                 .entries
                 .iter()
                 .map(|e| ((e.tensor, e.evict_after), e.write_lead))
+                .collect(),
+            boundary: self
+                .entries
+                .iter()
+                .filter(|e| e.wrap)
+                .map(|e| (e.tensor, (e.prefetch_before, e.evict_after, e.lead, e.write_lead)))
                 .collect(),
         }
     }
@@ -171,6 +197,30 @@ pub fn live_intervals(s: &TensorSpec, leads: Option<&LeadMap>) -> Vec<(u32, u32)
             (Some(a), Some(z)) => vec![(a, z)],
             _ => vec![],
         },
+        // Boundary (wrap) tensor: resident for the single interval from
+        // its reacquire point through its eviction-write drain. The
+        // recorded EOs are the `{0, eo_apply}` bracket — splitting on
+        // their gap would free EOs where unrecorded real accesses live,
+        // so the wrap geometry overrides segmentation entirely.
+        Some(leads) if leads.boundary(s.id).is_some() => {
+            let (pb, ea, lead, w) = leads.boundary(s.id).unwrap();
+            let start = pb.saturating_sub(lead);
+            let end = ea.saturating_add(w);
+            if start == 0 {
+                vec![(0, end)]
+            } else {
+                // The extra point at EO 0 is the tensor's *init
+                // residency*: every persistent tensor's bytes are
+                // written at t0, before the swap runtime primes it out
+                // (`SwapExec::begin_iteration`), so two wrap tensors
+                // may never time-share an address range — the second
+                // init would stomp the first. Sharing this point keeps
+                // every placer from overlapping them and charges the
+                // init-time live set to the peak truthfully; the head
+                // window open to other tenants is `[1, start)`.
+                vec![(0, 0), (start, end)]
+            }
+        }
         Some(leads) => {
             let segs = segments(&s.eos);
             let last = segs.len().saturating_sub(1);
@@ -289,6 +339,7 @@ pub fn advise(table: &TensorTable, budget_bytes: usize) -> OffloadPlan {
                     prefetch_before: w[1].0,
                     lead: PREFETCH_LEAD,
                     write_lead: WRITE_LEAD,
+                    wrap: false,
                 });
                 swap += 2 * s.dim.bytes(); // out + back in, per iteration
             }
@@ -300,6 +351,54 @@ pub fn advise(table: &TensorTable, budget_bytes: usize) -> OffloadPlan {
         swap_bytes_per_iter: swap,
         fits: peak <= budget_bytes,
         prefetch_depth: PREFETCH_DEPTH,
+    }
+}
+
+/// Cross-iteration (boundary) offload pass: spill persistent tensors —
+/// weights and optimizer state — across the iteration boundary. Eligible
+/// tensors carry a `boundary_window` annotation (their true first/last
+/// access EOs under per-layer apply); the wrap entry evicts after the
+/// last real access and restores before the first, so the region is free
+/// through the schedule tail, the boundary, and the next iteration's
+/// head. Every wrap reservation — the init point at EO 0 plus
+/// `[first − lead, last]` (see [`live_intervals`]) — is a subset of the
+/// unswapped `[0, eo_apply]` life, so adding entries can only lower the
+/// peak; all eligible tensors are offloaded (the point of the pipeline
+/// is to stream trainable state through the store, and partial spills
+/// would make plan shape depend on budget slack). Callers gate this on
+/// per-layer apply being in effect — under deferred apply the recorded
+/// bracket is the truth and there is no boundary window.
+pub fn advise_boundary(table: &TensorTable, plan: &mut OffloadPlan, budget_bytes: usize) {
+    let mut added = false;
+    for s in table.iter() {
+        if s.merged_into.is_some() || s.is_placeholder() || s.eos.is_empty() {
+            continue;
+        }
+        if !matches!(s.role, TensorRole::Weight | TensorRole::OptState) {
+            continue;
+        }
+        let Some((first, last)) = s.boundary_window else { continue };
+        // lead ≥ 1 must fit before the first access; a first access at EO
+        // 0 leaves no head window to restore into.
+        if first < 1 || first > last || s.dim.bytes() == 0 {
+            continue;
+        }
+        plan.entries.push(OffloadEntry {
+            tensor: s.id,
+            name: s.name.clone(),
+            bytes: s.dim.bytes(),
+            evict_after: last,
+            prefetch_before: first,
+            lead: PREFETCH_LEAD.min(first),
+            write_lead: WRITE_LEAD,
+            wrap: true,
+        });
+        plan.swap_bytes_per_iter += 2 * s.dim.bytes();
+        added = true;
+    }
+    if added {
+        plan.primary_peak_bytes = peak_of_plan(table, plan);
+        plan.fits = plan.primary_peak_bytes <= budget_bytes;
     }
 }
 
@@ -344,6 +443,7 @@ mod tests {
                     prefetch_before: 10,
                     lead: 3,
                     write_lead: 2,
+                    wrap: false,
                 },
                 OffloadEntry {
                     tensor: 0,
@@ -353,6 +453,7 @@ mod tests {
                     prefetch_before: 20,
                     lead: PREFETCH_LEAD,
                     write_lead: WRITE_LEAD,
+                    wrap: false,
                 },
             ],
             ..Default::default()

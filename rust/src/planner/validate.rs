@@ -75,6 +75,31 @@ pub fn validate_gap_plan(
 ) -> Result<()> {
     let offloaded: HashSet<TensorId> = plan.entries.iter().map(|e| e.tensor).collect();
     let leads = plan.lead_map();
+    // Boundary (wrap) entries: the fetch window wraps the schedule end,
+    // so the geometry constraints differ from in-iteration gaps — the
+    // restore must fit before the first real access (due ≥ 0) and the
+    // eviction-write reservation must not run past the schedule.
+    let max_eo = table.iter().filter_map(|s| s.max_eo()).max().unwrap_or(0);
+    for e in plan.entries.iter().filter(|e| e.wrap) {
+        if e.prefetch_before < 1 || e.lead > e.prefetch_before {
+            return Err(Error::planner(format!(
+                "wrap entry `{}`: lead {} does not fit before first access EO {}",
+                e.name, e.lead, e.prefetch_before
+            )));
+        }
+        if e.prefetch_before > e.evict_after {
+            return Err(Error::planner(format!(
+                "wrap entry `{}`: prefetch_before {} > evict_after {} (gap must wrap)",
+                e.name, e.prefetch_before, e.evict_after
+            )));
+        }
+        if e.evict_after.saturating_add(e.write_lead) > max_eo {
+            return Err(Error::planner(format!(
+                "wrap entry `{}`: write reservation {}+{} runs past schedule end {}",
+                e.name, e.evict_after, e.write_lead, max_eo
+            )));
+        }
+    }
     let mut live: Vec<(Vec<(u32, u32)>, usize, usize, &str)> = Vec::new();
     for s in table.iter() {
         if s.merged_into.is_some() || s.eos.is_empty() {

@@ -277,6 +277,28 @@ impl EoCostModel {
         *self.prefix.last().unwrap_or(&0.0)
     }
 
+    /// Number of modeled EOs (the schedule length).
+    pub fn n_eos(&self) -> usize {
+        self.cost_ns.len()
+    }
+
+    /// Compute window available to a *boundary-crossing* fetch: the
+    /// schedule tail after the eviction write lands (`(evict_after,
+    /// end]`) plus the next iteration's head up to the use EO
+    /// (`[prefetch_before − lead, prefetch_before)`). This is the window
+    /// a wrap entry's background fetch genuinely overlaps — iteration
+    /// N's tail, the boundary, and N+1's head.
+    pub fn boundary_window_ns(&self, evict_after: u32, prefetch_before: u32, lead: u32) -> f64 {
+        let end = self.n_eos().saturating_sub(1) as u32;
+        let tail = if evict_after < end { self.window_ns(evict_after + 1, end) } else { 0.0 };
+        let head = if lead > 0 && prefetch_before > 0 {
+            self.window_ns(prefetch_before.saturating_sub(lead), prefetch_before - 1)
+        } else {
+            0.0
+        };
+        tail + head
+    }
+
     /// Replace the absolute scale with a measured per-iteration wall
     /// time, keeping the relative per-EO shape (warmup refinement).
     pub fn rescale_to_iteration_ns(&mut self, measured_iter_ns: f64) {
@@ -370,6 +392,55 @@ pub fn write_lead_for_ns(
     w
 }
 
+/// Widest admissible lead for a *wrap* (boundary) entry: the restore
+/// barrier `due = prefetch_before − lead` must stay inside the schedule
+/// head (`due ≥ 0`), so the lead may grow up to the first real access EO
+/// itself — the fetch window behind it extends into the previous
+/// iteration's tail, which [`wrap_lead_for_ns`] accounts for.
+pub fn wrap_lead_cap(prefetch_before: u32) -> u32 {
+    prefetch_before.max(1)
+}
+
+/// Derive a wrap entry's lead from an estimated (or observed) fetch
+/// time. The available compute window crosses the schedule end
+/// ([`EoCostModel::boundary_window_ns`]): the tail after the eviction is
+/// always part of it, so a fetch that fits there needs only the minimum
+/// head lead; slower fetches widen into the head up to `prefetch_before`.
+pub fn wrap_lead_for_ns(
+    fetch_ns: f64,
+    evict_after: u32,
+    prefetch_before: u32,
+    cost: &EoCostModel,
+) -> u32 {
+    let cap = wrap_lead_cap(prefetch_before);
+    let mut lead = PREFETCH_LEAD.min(cap);
+    while lead < cap && cost.boundary_window_ns(evict_after, prefetch_before, lead) < fetch_ns {
+        lead += 1;
+    }
+    lead
+}
+
+/// Widest admissible write lead for a wrap entry: the reservation may
+/// extend to the schedule end but not past it (`evict_after + w ≤ end`)
+/// — past the end, the carried-state barriers of the next iteration
+/// cover the still-draining write, so reserving more buys nothing.
+pub fn wrap_write_lead_cap(evict_after: u32, schedule_end: u32) -> u32 {
+    schedule_end.saturating_sub(evict_after)
+}
+
+/// Derive a wrap entry's write lead: extend the in-schedule reservation
+/// past the eviction until the estimated store write fits, capped at the
+/// schedule end.
+pub fn wrap_write_lead_for_ns(evict_ns: f64, evict_after: u32, cost: &EoCostModel) -> u32 {
+    let end = cost.n_eos().saturating_sub(1) as u32;
+    let cap = wrap_write_lead_cap(evict_after, end);
+    let mut w = 0u32;
+    while w < cap && cost.window_ns(evict_after + 1, evict_after + w) < evict_ns {
+        w += 1;
+    }
+    w
+}
+
 /// Write calibrated per-entry read *and* write leads and the initial
 /// depth into the plan, then refresh its peak/fits for the widened
 /// residency (both ends of every gap).
@@ -381,14 +452,20 @@ pub fn derive_leads(
     cost: &EoCostModel,
 ) {
     for e in &mut plan.entries {
-        e.lead = lead_for(e.bytes, e.evict_after, e.prefetch_before, store, cost);
-        e.write_lead = write_lead_for_ns(
-            store.evict_ns(e.bytes),
-            e.evict_after,
-            e.prefetch_before,
-            e.lead,
-            cost,
-        );
+        if e.wrap {
+            e.lead =
+                wrap_lead_for_ns(store.fetch_ns(e.bytes), e.evict_after, e.prefetch_before, cost);
+            e.write_lead = wrap_write_lead_for_ns(store.evict_ns(e.bytes), e.evict_after, cost);
+        } else {
+            e.lead = lead_for(e.bytes, e.evict_after, e.prefetch_before, store, cost);
+            e.write_lead = write_lead_for_ns(
+                store.evict_ns(e.bytes),
+                e.evict_after,
+                e.prefetch_before,
+                e.lead,
+                cost,
+            );
+        }
     }
     plan.prefetch_depth = derive_depth(plan, store, cost);
     plan.primary_peak_bytes = peak_of_plan(table, plan);
@@ -479,6 +556,29 @@ mod tests {
         assert_eq!(lead_for(1000, 0, 40, &fast, &cost), 1);
         // cap: the lead never swallows the gap
         assert_eq!(lead_for(1_000_000, 30, 40, &store, &cost), 9);
+    }
+
+    #[test]
+    fn wrap_lead_uses_boundary_window() {
+        let cost = EoCostModel::uniform(64, 100.0);
+        // eviction at EO 60 leaves a 3-EO tail (61..=63) = 300 ns of
+        // always-available cover; a 1000 ns fetch widens the head lead
+        // until tail + head ≥ fetch (300 + 7×100)
+        assert_eq!(wrap_lead_for_ns(1000.0, 60, 20, &cost), 7);
+        // a fetch that fits in the tail + minimum head keeps lead 1
+        assert_eq!(wrap_lead_for_ns(250.0, 60, 20, &cost), 1);
+        // cap: the restore barrier never leaves the schedule head
+        assert_eq!(wrap_lead_for_ns(1e12, 60, 20, &cost), 20);
+    }
+
+    #[test]
+    fn wrap_write_lead_capped_at_schedule_end() {
+        let cost = EoCostModel::uniform(64, 100.0);
+        // one EO of cover suffices for a 50 ns write
+        assert_eq!(wrap_write_lead_for_ns(50.0, 60, &cost), 1);
+        // the reservation never runs past the schedule end (EO 63)
+        assert_eq!(wrap_write_lead_cap(60, 63), 3);
+        assert_eq!(wrap_write_lead_for_ns(1e12, 60, &cost), 3);
     }
 
     #[test]

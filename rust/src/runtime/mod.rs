@@ -30,5 +30,5 @@ pub use calibrate::{
 };
 pub use catalog::ArtifactCatalog;
 pub use client::XlaRuntime;
-pub use store::{FileStore, HostStore, SecondaryStore, StoreKind, StoreStats};
+pub use store::{DelayStore, FileStore, HostStore, SecondaryStore, StoreKind, StoreStats};
 pub use swap::{SwapExec, SwapStats};

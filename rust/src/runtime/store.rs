@@ -107,10 +107,14 @@ pub enum StoreKind {
 
 impl StoreKind {
     pub fn instance(&self) -> Result<Box<dyn SecondaryStore>> {
-        Ok(match self {
+        let store: Box<dyn SecondaryStore> = match self {
             StoreKind::Host => Box::new(HostStore::new()),
             StoreKind::File => Box::new(FileStore::in_temp_dir()?),
             StoreKind::FileCompressed => Box::new(FileStore::in_temp_dir_compressed()?),
+        };
+        Ok(match injected_store_delay_us()? {
+            0 => store,
+            us => Box::new(DelayStore::new(store, std::time::Duration::from_micros(us))),
         })
     }
 
@@ -124,6 +128,63 @@ impl StoreKind {
             }
             _ => None,
         }
+    }
+}
+
+/// Per-operation store latency from `NNTRAINER_STORE_DELAY_US`
+/// (default 0 = off). A latency-injection hook for benches and CI: on a
+/// fast development disk the spill store barely stalls, so the
+/// swap-runtime bench's stall columns (and the pipelined-vs-drained
+/// boundary comparison) inject a deterministic delay to make overlap
+/// effects measurable. An unparseable value is a loud error, matching
+/// the other bench env knobs.
+fn injected_store_delay_us() -> Result<u64> {
+    match std::env::var("NNTRAINER_STORE_DELAY_US") {
+        Ok(v) => v.trim().parse().map_err(|e| {
+            Error::Runtime(format!("NNTRAINER_STORE_DELAY_US={v:?} is not a u64: {e}"))
+        }),
+        Err(std::env::VarError::NotPresent) => Ok(0),
+        Err(e) => Err(Error::Runtime(format!(
+            "NNTRAINER_STORE_DELAY_US is set but unreadable: {e}"
+        ))),
+    }
+}
+
+/// Latency-injection wrapper: every `put`/`get` sleeps a fixed delay
+/// before delegating to the wrapped store. Never constructed on a
+/// production path — [`StoreKind::instance`] wraps with it only when
+/// `NNTRAINER_STORE_DELAY_US` is set.
+pub struct DelayStore {
+    inner: Box<dyn SecondaryStore>,
+    delay: std::time::Duration,
+}
+
+impl DelayStore {
+    pub fn new(inner: Box<dyn SecondaryStore>, delay: std::time::Duration) -> Self {
+        DelayStore { inner, delay }
+    }
+}
+
+impl SecondaryStore for DelayStore {
+    fn kind(&self) -> &'static str {
+        self.inner.kind()
+    }
+    fn put(&mut self, key: usize, data: &[f32]) -> Result<()> {
+        std::thread::sleep(self.delay);
+        self.inner.put(key, data)
+    }
+    fn get(&mut self, key: usize, out: &mut [f32]) -> Result<()> {
+        std::thread::sleep(self.delay);
+        self.inner.get(key, out)
+    }
+    fn free(&mut self, key: usize) {
+        self.inner.free(key);
+    }
+    fn slot_count(&self) -> usize {
+        self.inner.slot_count()
+    }
+    fn stats(&self) -> StoreStats {
+        self.inner.stats()
     }
 }
 

@@ -58,7 +58,7 @@
 //! training bitwise identical (see `rust/tests/swap_equivalence.rs` and
 //! `rust/tests/swap_stress.rs`).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -70,7 +70,7 @@ use crate::planner::offload::{live_intervals, OffloadPlan};
 use crate::planner::pool::MemoryPool;
 use crate::tensor::{Region, Residency, TensorId, TensorTable};
 
-use super::calibrate::{lead_for_ns, SwapCalibration};
+use super::calibrate::{lead_for_ns, wrap_lead_for_ns, SwapCalibration};
 use super::store::{SecondaryStore, StoreStats};
 
 pub use crate::planner::offload::PREFETCH_DEPTH;
@@ -78,6 +78,13 @@ pub use crate::planner::offload::PREFETCH_DEPTH;
 /// EWMA factor for observed transfer/compute times under `Fixed` tuning
 /// (telemetry only; `Calibrated` carries its own in `SwapCalibration`).
 const DEFAULT_EWMA_ALPHA: f64 = 0.25;
+
+/// Default cap on retained epoch-boundary [`SwapStats`] snapshots —
+/// generous (a mark is ~100 bytes, so the ring tops out around 100 KiB)
+/// but bounded, so a long-running fleet session cannot leak memory
+/// across thousands of epochs. Configurable per engine via
+/// [`SwapExec::set_epoch_mark_cap`].
+pub const EPOCH_MARK_CAP: usize = 1024;
 
 /// One scheduled gap of one tensor (a tensor with several idle gaps per
 /// iteration has one entry per gap).
@@ -105,6 +112,17 @@ struct SwapEntry {
     /// reclaimed — such a write never blocks compute). The plan's write
     /// lead guarantees `reclaim_eo > evict_after + write_lead`.
     reclaim_eo: u32,
+    /// Boundary (wrap) entry: the gap wraps the schedule end. Evicted at
+    /// `evict_after` late in iteration N, restored at `due` early in
+    /// iteration N+1 — the eviction/prefetch state is *carried* across
+    /// `end_iteration` instead of drained.
+    wrap: bool,
+    /// For wrap entries only: the first EO at which a tensor placed in
+    /// the schedule-*head* part of the free window writes the range —
+    /// the carried eviction write from the previous iteration must have
+    /// landed by then. `u32::MAX` when no head tenant exists. (The tail
+    /// side is `reclaim_eo`, as for any entry.)
+    head_reclaim_eo: u32,
 }
 
 /// Use points of an offloaded root tensor, for the residency guard.
@@ -143,6 +161,13 @@ enum Done {
 }
 
 /// Cumulative swap-runtime counters (whole run, not per iteration).
+///
+/// Epoch-boundary snapshots of these counters are retained in a ring
+/// buffer capped at [`EPOCH_MARK_CAP`] marks by default
+/// ([`SwapExec::set_epoch_mark_cap`] to change): a fleet session running
+/// for thousands of epochs keeps a bounded trajectory, and
+/// [`SwapExec::epoch_stats`] deltas stay correct across the wrap — the
+/// last dropped mark becomes the delta base for the oldest retained one.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SwapStats {
     pub evictions: u64,
@@ -159,6 +184,13 @@ pub struct SwapStats {
     /// (reclaim barriers; under synchronous evictions, the writes
     /// themselves).
     pub write_stall_ns: u64,
+    /// The subset of `read_stall_ns` accrued restoring *boundary* (wrap)
+    /// entries — carried prefetches completing in the first `max_lead`
+    /// EOs of an iteration. With cross-iteration pipelining the fetch
+    /// worker pulls these during the previous iteration's tail and the
+    /// boundary itself, so this approaches zero; with a full boundary
+    /// drain every wrap restore runs inline here.
+    pub boundary_stall_ns: u64,
     /// Pool-arena size in bytes — a *gauge* (layout snapshot), not a
     /// cumulative counter. Refreshed at build and after compaction.
     pub pool_bytes: u64,
@@ -188,6 +220,10 @@ impl SwapStats {
         self.write_stall_ns as f64 / 1e6
     }
 
+    pub fn boundary_stall_ms(&self) -> f64 {
+        self.boundary_stall_ns as f64 / 1e6
+    }
+
     /// Never-covered pool fraction, percent (gauge).
     pub fn frag_pct(&self) -> f64 {
         if self.pool_bytes == 0 {
@@ -212,6 +248,7 @@ impl SwapStats {
             bytes_in: self.bytes_in.saturating_sub(prev.bytes_in),
             read_stall_ns: self.read_stall_ns.saturating_sub(prev.read_stall_ns),
             write_stall_ns: self.write_stall_ns.saturating_sub(prev.write_stall_ns),
+            boundary_stall_ns: self.boundary_stall_ns.saturating_sub(prev.boundary_stall_ns),
             pool_bytes: self.pool_bytes,
             frag_bytes: self.frag_bytes,
             largest_free_extent_bytes: self.largest_free_extent_bytes,
@@ -238,8 +275,15 @@ fn derive_entry_bounds(entries: &mut [SwapEntry], plan: &OffloadPlan, table: &Te
     let leads = plan.lead_map();
     let offloaded: HashSet<TensorId> = plan.entries.iter().map(|e| e.tensor).collect();
     for (k, entry) in entries.iter_mut().enumerate() {
-        let mut earliest = entry.evict_after + 1;
+        // A wrap entry's free window wraps the boundary: the schedule
+        // head `[0, due)` is part of it, so the widest-lead floor starts
+        // at EO 0 (lead up to `prefetch_before` puts the barrier at EO
+        // 0), and tenants split into *head* (intervals before the
+        // restore) and *tail* (after the eviction) — each side gets its
+        // own write-completion barrier.
+        let mut earliest = if entry.wrap { 0 } else { entry.evict_after + 1 };
         let mut reclaim = u32::MAX;
+        let mut head_reclaim = u32::MAX;
         for s in table.iter() {
             if s.merged_into.is_some() || s.eos.is_empty() || s.id == entry.tensor {
                 continue;
@@ -256,11 +300,32 @@ fn derive_entry_bounds(entries: &mut [SwapEntry], plan: &OffloadPlan, table: &Te
                 if a > entry.evict_after {
                     reclaim = reclaim.min(a);
                 }
+                if entry.wrap && a < entry.prefetch_before {
+                    // head tenant: its first write next iteration races
+                    // the *carried* eviction write of this iteration
+                    head_reclaim = head_reclaim.min(a);
+                }
             }
         }
         entry.max_lead = (entry.prefetch_before - earliest).max(plan.entries[k].lead);
         entry.reclaim_eo = reclaim;
+        entry.head_reclaim_eo = head_reclaim;
     }
+}
+
+/// Build the write-completion barrier records: one `(reclaim_eo, i)` per
+/// entry, plus a second `(head_reclaim_eo, i)` record for wrap entries
+/// with a schedule-head tenant. Sorted by EO for the single-cursor walk.
+fn build_reclaim_records(entries: &[SwapEntry]) -> Vec<(u32, usize)> {
+    let mut records: Vec<(u32, usize)> = Vec::with_capacity(entries.len() + 4);
+    for (i, e) in entries.iter().enumerate() {
+        records.push((e.reclaim_eo, i));
+        if e.wrap && e.head_reclaim_eo != u32::MAX {
+            records.push((e.head_reclaim_eo, i));
+        }
+    }
+    records.sort_unstable();
+    records
 }
 
 /// Pairwise address-overlap sets over the (current) entry regions.
@@ -289,9 +354,14 @@ pub struct SwapExec {
     /// Entry indices sorted by barrier EO (`due`) — both the completion
     /// barrier order and the background issue order.
     by_prefetch: Vec<usize>,
-    /// Entry indices sorted by write-completion barrier EO
-    /// (`reclaim_eo`).
-    by_reclaim: Vec<usize>,
+    /// Write-completion barrier records `(barrier EO, entry)`, sorted by
+    /// EO. A non-wrap entry has one record (its `reclaim_eo`); a wrap
+    /// entry may have two — the head-tenant barrier early in the
+    /// schedule (where the *carried* write from the previous iteration
+    /// must land) and the tail-tenant barrier after its eviction. One
+    /// cursor walks the records once per iteration; a record whose entry
+    /// has no in-flight eviction write is a no-op.
+    by_reclaim: Vec<(u32, usize)>,
     /// Per entry, the other entries whose regions share addresses with
     /// it. A reacquire writes the entry's range, and observed-feedback
     /// lead widening can move it ahead of the other entry's reclaim
@@ -315,6 +385,11 @@ pub struct SwapExec {
     issue_cursor: usize,
     outstanding: usize,
     outstanding_writes: usize,
+    /// How many of `outstanding` fetches belong to wrap entries — the
+    /// transfers `end_iteration` may legitimately leave in flight.
+    wrap_fetches_inflight: usize,
+    /// How many of `outstanding_writes` belong to wrap entries.
+    wrap_writes_inflight: usize,
     store: Arc<Mutex<Box<dyn SecondaryStore>>>,
     store_kind: &'static str,
     fetch_tx: Sender<Req>,
@@ -336,6 +411,13 @@ pub struct SwapExec {
     /// identical either way; exists so benches can measure what the
     /// write pipeline takes off the critical path.
     sync_evictions: bool,
+    /// Fully drain wrap transfers at `end_iteration` and never issue
+    /// their fetches in the background — the non-pipelined boundary
+    /// baseline (every wrap restore becomes an inline fetch at its due
+    /// EO, accrued as boundary stall). Bitwise identical either way;
+    /// exists so benches can show what the cross-iteration pipeline
+    /// takes off the boundary.
+    boundary_drain: bool,
     /// Calibration state for runtime refinement (None under Fixed).
     calibration: Option<SwapCalibration>,
     ewma_alpha: f64,
@@ -359,8 +441,14 @@ pub struct SwapExec {
     pub stats: SwapStats,
     /// Cumulative-counter snapshots taken at each `mark_epoch` call —
     /// the perf harness reads the trajectory as per-epoch deltas
-    /// (`epoch_stats`) instead of only whole-run totals.
-    epoch_marks: Vec<SwapStats>,
+    /// (`epoch_stats`) instead of only whole-run totals. A bounded ring:
+    /// past `epoch_mark_cap` marks the oldest snapshot is dropped into
+    /// `epoch_base`, which keeps the first retained delta correct.
+    epoch_marks: VecDeque<SwapStats>,
+    epoch_mark_cap: usize,
+    /// The last mark dropped off the ring's front (zero until the ring
+    /// wraps) — the delta base for the oldest retained mark.
+    epoch_base: SwapStats,
     /// Plan-time pool-relocation map, parked here until the executor
     /// applies it at the first swap-quiescent epoch barrier
     /// (`Executor::compact_pool` takes it, moves the persistent bytes,
@@ -390,33 +478,62 @@ impl SwapExec {
         store: Box<dyn SecondaryStore>,
         calibration: Option<SwapCalibration>,
     ) -> Result<SwapExec> {
+        let schedule_end = table.iter().filter_map(|s| s.max_eo()).max().unwrap_or(0);
         let mut entries = Vec::with_capacity(plan.entries.len());
         let mut roots: HashMap<TensorId, RootInfo> = HashMap::new();
         let mut residency: HashMap<TensorId, Residency> = HashMap::new();
         for e in &plan.entries {
             let s = table.get(e.tensor);
-            if e.evict_after >= e.prefetch_before {
-                return Err(Error::planner(format!(
-                    "offload entry for `{}` has an empty gap ({} >= {})",
-                    s.name, e.evict_after, e.prefetch_before
-                )));
-            }
-            if e.prefetch_before <= e.evict_after.saturating_add(e.lead) {
-                return Err(Error::planner(format!(
-                    "offload entry for `{}` has lead {} swallowing its gap ({}, {}): \
-                     the prefetch barrier would fire before the eviction",
-                    s.name, e.lead, e.evict_after, e.prefetch_before
-                )));
-            }
-            if e.prefetch_before
-                <= e.evict_after.saturating_add(e.lead).saturating_add(e.write_lead)
-            {
-                return Err(Error::planner(format!(
-                    "offload entry for `{}` has write lead {} (with read lead {}) \
-                     swallowing its gap ({}, {}): the write extension would meet the \
-                     prefetch reservation",
-                    s.name, e.write_lead, e.lead, e.evict_after, e.prefetch_before
-                )));
+            if e.wrap {
+                // Boundary entry: the gap wraps the schedule end, so the
+                // geometry constraints invert — the restore barrier must
+                // fit inside the schedule head and the write reservation
+                // inside the tail.
+                if e.prefetch_before < 1 || e.lead < 1 || e.lead > e.prefetch_before {
+                    return Err(Error::planner(format!(
+                        "wrap entry for `{}` has lead {} that does not fit before its \
+                         first access EO {}",
+                        s.name, e.lead, e.prefetch_before
+                    )));
+                }
+                if e.prefetch_before > e.evict_after {
+                    return Err(Error::planner(format!(
+                        "wrap entry for `{}` does not wrap: prefetch_before {} > \
+                         evict_after {}",
+                        s.name, e.prefetch_before, e.evict_after
+                    )));
+                }
+                if e.evict_after.saturating_add(e.write_lead) > schedule_end {
+                    return Err(Error::planner(format!(
+                        "wrap entry for `{}` has write reservation {}+{} past the \
+                         schedule end {}",
+                        s.name, e.evict_after, e.write_lead, schedule_end
+                    )));
+                }
+            } else {
+                if e.evict_after >= e.prefetch_before {
+                    return Err(Error::planner(format!(
+                        "offload entry for `{}` has an empty gap ({} >= {})",
+                        s.name, e.evict_after, e.prefetch_before
+                    )));
+                }
+                if e.prefetch_before <= e.evict_after.saturating_add(e.lead) {
+                    return Err(Error::planner(format!(
+                        "offload entry for `{}` has lead {} swallowing its gap ({}, {}): \
+                         the prefetch barrier would fire before the eviction",
+                        s.name, e.lead, e.evict_after, e.prefetch_before
+                    )));
+                }
+                if e.prefetch_before
+                    <= e.evict_after.saturating_add(e.lead).saturating_add(e.write_lead)
+                {
+                    return Err(Error::planner(format!(
+                        "offload entry for `{}` has write lead {} (with read lead {}) \
+                         swallowing its gap ({}, {}): the write extension would meet the \
+                         prefetch reservation",
+                        s.name, e.write_lead, e.lead, e.evict_after, e.prefetch_before
+                    )));
+                }
             }
             let region = s.region.ok_or_else(|| {
                 Error::planner(format!("offloaded tensor `{}` has no region", s.name))
@@ -432,10 +549,23 @@ impl SwapExec {
                 max_lead: e.lead, // widened below from the placed table
                 write_lead: e.write_lead,
                 reclaim_eo: u32::MAX, // narrowed below from the placed table
+                wrap: e.wrap,
+                head_reclaim_eo: u32::MAX, // narrowed below from the placed table
             });
+            // Residency-guard use points. A wrap tensor's *recorded* EOs
+            // are the conservative whole-schedule bracket (persistent
+            // tensors are pinned `{0, last}` by the assembler), but under
+            // the boundary window its real accesses are exactly
+            // `[prefetch_before, evict_after]` — guarding the recorded
+            // EO 0 would fire on every carried entry at the first step.
+            let guard_eos = if e.wrap {
+                vec![e.prefetch_before, e.evict_after]
+            } else {
+                s.eos.clone()
+            };
             roots
                 .entry(e.tensor)
-                .or_insert_with(|| RootInfo { name: s.name.clone(), eos: s.eos.clone() });
+                .or_insert_with(|| RootInfo { name: s.name.clone(), eos: guard_eos });
             residency.insert(e.tensor, Residency::Resident);
         }
         // Per-entry bounds from the placed table. For every *other*
@@ -459,8 +589,7 @@ impl SwapExec {
         }
         let mut by_prefetch: Vec<usize> = (0..n).collect();
         by_prefetch.sort_by_key(|&i| (entries[i].due, entries[i].prefetch_before, i));
-        let mut by_reclaim: Vec<usize> = (0..n).collect();
-        by_reclaim.sort_by_key(|&i| (entries[i].reclaim_eo, i));
+        let by_reclaim = build_reclaim_records(&entries);
 
         let store_kind = store.kind();
         let store = Arc::new(Mutex::new(store));
@@ -557,6 +686,8 @@ impl SwapExec {
             issue_cursor: 0,
             outstanding: 0,
             outstanding_writes: 0,
+            wrap_fetches_inflight: 0,
+            wrap_writes_inflight: 0,
             store,
             store_kind,
             fetch_tx,
@@ -567,6 +698,7 @@ impl SwapExec {
             workers: vec![fetch_worker, evict_worker],
             depth: plan.prefetch_depth.max(PREFETCH_DEPTH),
             sync_evictions: false,
+            boundary_drain: false,
             calibration,
             ewma_alpha,
             fetch_observed_ns: vec![0.0; n],
@@ -577,7 +709,9 @@ impl SwapExec {
             iter_start: None,
             last_stall_ns: 0,
             stats: SwapStats::default(),
-            epoch_marks: Vec::new(),
+            epoch_marks: VecDeque::new(),
+            epoch_mark_cap: EPOCH_MARK_CAP,
+            epoch_base: SwapStats::default(),
             compaction: None,
         })
     }
@@ -619,6 +753,12 @@ impl SwapExec {
                 "swap runtime: rebind with transfers in flight".into(),
             ));
         }
+        if self.entries.iter().enumerate().any(|(i, e)| e.wrap && self.evicted[i]) {
+            return Err(Error::Runtime(
+                "swap runtime: rebind with boundary entries still carried — quiesce first"
+                    .into(),
+            ));
+        }
         for entry in self.entries.iter_mut() {
             let s = table.get(entry.tensor);
             let region = s.region.ok_or_else(|| {
@@ -641,7 +781,7 @@ impl SwapExec {
         self.overlaps = compute_overlaps(&self.entries);
         self.by_prefetch
             .sort_by_key(|&i| (self.entries[i].due, self.entries[i].prefetch_before, i));
-        self.by_reclaim.sort_by_key(|&i| (self.entries[i].reclaim_eo, i));
+        self.by_reclaim = build_reclaim_records(&self.entries);
         Ok(())
     }
 
@@ -692,24 +832,86 @@ impl SwapExec {
         self.sync_evictions = on;
     }
 
-    /// Reset per-iteration state. Every entry must have been restored by
-    /// the previous iteration's `end_iteration`. `full_schedule` is true
-    /// for training iterations (every EO runs): only those are timed for
-    /// the observed-feedback loop — a forward-only pass covers a
-    /// fraction of the schedule and would skew the compute estimate.
-    pub fn begin_iteration(&mut self, full_schedule: bool) -> Result<()> {
-        if self.outstanding != 0 || self.outstanding_writes != 0 || !self.staged.is_empty() {
+    /// Reset per-iteration state. Every *in-iteration* entry must have
+    /// been restored by the previous iteration's `end_iteration`;
+    /// boundary (wrap) entries may legitimately arrive mid-cycle — their
+    /// eviction from the previous iteration carried across the boundary,
+    /// with its write and/or restore fetch still in flight (tracked by
+    /// the wrap in-flight counters). Anything *else* in flight is stale
+    /// and fails loudly. A wrap entry whose bytes are still resident
+    /// (first iteration after init, or after a partial pass / drained
+    /// sweep) is *primed*: synchronously evicted here, so the boundary
+    /// cycle is in its steady state — evicted, restore due at `due` —
+    /// at every iteration start. `full_schedule` is true for training iterations
+    /// (every EO runs): only those are timed for the observed-feedback
+    /// loop — a forward-only pass covers a fraction of the schedule and
+    /// would skew the compute estimate.
+    pub fn begin_iteration(&mut self, full_schedule: bool, pool: &MemoryPool) -> Result<()> {
+        if self.outstanding != self.wrap_fetches_inflight
+            || self.outstanding_writes != self.wrap_writes_inflight
+            || self.staged.keys().any(|&i| !self.entries[i].wrap)
+        {
             return Err(Error::Runtime(
                 "swap runtime: stale transfers at iteration start".into(),
             ));
         }
-        self.evicted.iter_mut().for_each(|v| *v = false);
-        self.evict_done.iter_mut().for_each(|v| *v = false);
-        self.issued.iter_mut().for_each(|v| *v = false);
-        self.restored.iter_mut().for_each(|v| *v = false);
-        self.residency.values_mut().for_each(|r| *r = Residency::Resident);
-        self.failed.clear();
-        self.write_failed.clear();
+        for i in 0..self.entries.len() {
+            // a carried wrap entry stays mid-cycle: evicted last
+            // iteration, restore due early in this one
+            if self.entries[i].wrap && self.evicted[i] && !self.restored[i] {
+                continue;
+            }
+            self.evicted[i] = false;
+            self.evict_done[i] = false;
+            self.issued[i] = false;
+            self.restored[i] = false;
+            self.residency.insert(self.entries[i].tensor, Residency::Resident);
+        }
+        // Prime the boundary cycle: a wrap entry whose bytes are still
+        // in the pool at an iteration start (the first iteration after
+        // init, or after a partial pass / boundary-drained sweep that
+        // restored it) is evicted *now*, synchronously. Its freed head
+        // window may be handed to a tenant before the restore barrier;
+        // skipping the eviction and taking the unevicted-restore
+        // shortcut at `due` would then hand the tenant's bytes to
+        // compute. Two phases — every snapshot is taken before any
+        // region is released — so entries whose (manually planned)
+        // regions overlap snapshot mutually-consistent bytes; placed
+        // plans keep wrap regions disjoint via the EO-0 init point in
+        // `live_intervals`. Steady-state pipelined iterations prime
+        // nothing: every wrap entry arrives carried.
+        let alpha = self.ewma_alpha;
+        let mut primed = false;
+        for i in 0..self.entries.len() {
+            let e = &self.entries[i];
+            if e.wrap && !self.evicted[i] {
+                let t0 = Instant::now();
+                self.store.lock().unwrap().put(i, pool.view(e.region))?;
+                let ns = t0.elapsed().as_nanos() as u64;
+                self.stats.write_stall_ns += ns;
+                ewma_update(&mut self.evict_observed_ns[i], ns as f64, alpha);
+                self.stats.evictions += 1;
+                self.stats.bytes_out += (e.region.len * 4) as u64;
+                primed = true;
+            }
+        }
+        if primed {
+            for i in 0..self.entries.len() {
+                let e = &self.entries[i];
+                if e.wrap && !self.evicted[i] {
+                    pool.release_gap(e.region);
+                    self.evicted[i] = true;
+                    self.evict_done[i] = true;
+                    self.issued[i] = false;
+                    self.restored[i] = false;
+                    self.residency.insert(e.tensor, Residency::Evicted);
+                }
+            }
+        }
+        // a carried fetch/write failure must survive into this iteration
+        // to surface at its barrier
+        self.failed.retain(|&i, _| self.entries[i].wrap);
+        self.write_failed.retain(|&i, _| self.entries[i].wrap);
         self.next_due = 0;
         self.next_reclaim = 0;
         self.issue_cursor = 0;
@@ -728,8 +930,8 @@ impl SwapExec {
     /// possibly still-draining range.
     pub fn pre_step(&mut self, eo: u32, pool: &MemoryPool) -> Result<()> {
         while self.next_reclaim < self.by_reclaim.len() {
-            let idx = self.by_reclaim[self.next_reclaim];
-            if self.entries[idx].reclaim_eo > eo {
+            let (barrier_eo, idx) = self.by_reclaim[self.next_reclaim];
+            if barrier_eo > eo {
                 break;
             }
             if self.evicted[idx] && !self.evict_done[idx] {
@@ -777,6 +979,7 @@ impl SwapExec {
         if let Some(idxs) = self.evict_at.get(&eo) {
             for &idx in idxs {
                 let e = &self.entries[idx];
+                self.evict_done[idx] = false;
                 if sync {
                     let t0 = Instant::now();
                     self.store.lock().unwrap().put(idx, pool.view(e.region))?;
@@ -791,11 +994,23 @@ impl SwapExec {
                         return Err(Error::Runtime("swap evict thread died".into()));
                     }
                     self.outstanding_writes += 1;
+                    if e.wrap {
+                        self.wrap_writes_inflight += 1;
+                    }
                 }
                 self.evicted[idx] = true;
                 self.residency.insert(e.tensor, Residency::Evicted);
                 self.stats.evictions += 1;
                 self.stats.bytes_out += (e.region.len * 4) as u64;
+                if e.wrap {
+                    // fresh boundary cycle: the restore is due early next
+                    // iteration, and the issue cursor rewinds so the pump
+                    // can reach this entry's schedule-head queue position
+                    // once the write lands
+                    self.restored[idx] = false;
+                    self.issued[idx] = false;
+                    self.issue_cursor = 0;
+                }
             }
         }
         self.drain_completions(pool);
@@ -803,26 +1018,101 @@ impl SwapExec {
         Ok(())
     }
 
-    /// Restore everything still out (e.g. a final gap whose prefetch EO
-    /// has no step in this schedule), then drain every in-flight
-    /// transfer so weights/outputs can be read and the next iteration
-    /// starts clean.
+    /// Restore every in-iteration entry still out (e.g. a final gap
+    /// whose prefetch EO has no step in this schedule), then drain the
+    /// in-flight transfers so the next iteration starts clean.
+    ///
+    /// Boundary (wrap) entries are exempt unless the boundary drain is
+    /// on: their eviction writes and restore fetches are *carried*
+    /// across the boundary — that is the cross-iteration pipeline — and
+    /// `begin_iteration` accepts exactly those (the wrap in-flight
+    /// counters). After the drain the issue cursor rewinds and the pump
+    /// runs once, so a wrap fetch whose eviction write has already
+    /// landed overlaps the boundary work itself.
+    ///
+    /// A sweep failure no longer returns early: every transfer is
+    /// drained (and carried entries force-restored) *first*, so the
+    /// original error propagates instead of being masked by a
+    /// misleading "stale transfers at iteration start" on the next
+    /// iteration.
     pub fn end_iteration(&mut self, pool: &MemoryPool) -> Result<()> {
+        let mut first_err: Option<Error> = None;
         for k in 0..self.by_prefetch.len() {
             let idx = self.by_prefetch[k];
+            if self.entries[idx].wrap && !self.boundary_drain {
+                continue; // carried across the boundary
+            }
             if !self.restored[idx] {
-                self.finish_prefetch(idx, pool, None)?;
+                if let Err(err) = self.finish_prefetch(idx, pool, None) {
+                    first_err.get_or_insert(err);
+                }
             }
         }
         self.next_due = self.by_prefetch.len();
         self.next_reclaim = self.by_reclaim.len();
-        while self.outstanding > 0 || self.outstanding_writes > 0 {
+        let pipelined = !self.boundary_drain && first_err.is_none();
+        loop {
+            let (keep_f, keep_w) = if pipelined {
+                (self.wrap_fetches_inflight, self.wrap_writes_inflight)
+            } else {
+                (0, 0)
+            };
+            if self.outstanding <= keep_f && self.outstanding_writes <= keep_w {
+                break;
+            }
             match self.done_rx.recv() {
                 Ok(done) => self.apply_done(done, pool),
                 Err(_) => return Err(Error::Runtime("swap worker thread died".into())),
             }
         }
-        self.staged.clear();
+        if let Some(err) = first_err {
+            // Error path: park the pump, force-restore any carried entry
+            // (secondary errors lose to the original), and leave the
+            // engine coherent for whoever inspects it after the failure.
+            self.issue_cursor = self.by_prefetch.len();
+            for k in 0..self.by_prefetch.len() {
+                let idx = self.by_prefetch[k];
+                if self.entries[idx].wrap && self.evicted[idx] && !self.restored[idx] {
+                    let _ = self.finish_prefetch(idx, pool, None);
+                }
+            }
+            while self.outstanding > 0 || self.outstanding_writes > 0 {
+                match self.done_rx.recv() {
+                    Ok(done) => self.apply_done(done, pool),
+                    Err(_) => break,
+                }
+            }
+            self.staged.clear();
+            // A non-wrap entry whose restore failed (or whose staged
+            // fetch was just discarded) still holds the pool claim from
+            // its landed eviction; the next iteration re-evicts the same
+            // region and would double-release. Its data is transient —
+            // the next iteration regenerates it before any read — so
+            // drop the claim now (debug poison stays visible until the
+            // regenerating write). Wrap entries keep theirs: the store
+            // copy is the live weights, and the carried-state path in
+            // `begin_iteration`/`finish_prefetch` restores it. A
+            // write-failed entry never released (the release rides the
+            // write's success), so it is excluded.
+            for idx in 0..self.entries.len() {
+                if !self.entries[idx].wrap
+                    && self.evicted[idx]
+                    && !self.restored[idx]
+                    && !self.write_failed.contains_key(&idx)
+                {
+                    pool.reacquire(self.entries[idx].region, &[]);
+                    self.restored[idx] = true;
+                }
+            }
+            return Err(err);
+        }
+        if pipelined {
+            self.staged.retain(|&i, _| self.entries[i].wrap);
+            self.issue_cursor = 0;
+            self.pump_issues();
+        } else {
+            self.staged.clear();
+        }
         if let Some(&idx) = self.write_failed.keys().next() {
             return Err(self.write_failed.remove(&idx).unwrap());
         }
@@ -884,7 +1174,11 @@ impl SwapExec {
             } else {
                 cal.store.evict_ns(e.region.len * 4)
             };
-            let derived = lead_for_ns(est, e.evict_after, e.prefetch_before, &cal.cost);
+            let derived = if e.wrap {
+                wrap_lead_for_ns(est, e.evict_after, e.prefetch_before, &cal.cost)
+            } else {
+                lead_for_ns(est, e.evict_after, e.prefetch_before, &cal.cost)
+            };
             let derived = derived.clamp(1, e.max_lead);
             if derived != e.lead {
                 e.lead = derived;
@@ -904,6 +1198,67 @@ impl SwapExec {
         self.depth = self.depth.max(derived);
     }
 
+    /// Full drain: complete every carried boundary transfer and restore
+    /// every carried wrap entry, leaving the engine with all data in
+    /// primary memory and nothing in flight. Mandatory before anything
+    /// that must observe a quiescent pool — the end of a run (weights
+    /// are read out), `compact_pool` (regions move), and checkpoint /
+    /// state export (the pool bytes are the source of truth). A no-op
+    /// when nothing is carried, so callers may invoke it defensively.
+    pub fn quiesce(&mut self, pool: &MemoryPool) -> Result<()> {
+        while self.outstanding > 0 || self.outstanding_writes > 0 {
+            match self.done_rx.recv() {
+                Ok(done) => self.apply_done(done, pool),
+                Err(_) => return Err(Error::Runtime("swap worker thread died".into())),
+            }
+        }
+        let mut first_err: Option<Error> = None;
+        for k in 0..self.by_prefetch.len() {
+            let idx = self.by_prefetch[k];
+            if self.entries[idx].wrap && self.evicted[idx] && !self.restored[idx] {
+                if let Err(err) = self.finish_prefetch(idx, pool, None) {
+                    first_err.get_or_insert(err);
+                }
+            }
+        }
+        self.staged.clear();
+        if let Some(err) = first_err {
+            return Err(err);
+        }
+        if let Some(&idx) = self.write_failed.keys().next() {
+            return Err(self.write_failed.remove(&idx).unwrap());
+        }
+        Ok(())
+    }
+
+    /// Whether any boundary transfer or carried eviction is live —
+    /// diagnostics and tests ("did the pipeline actually carry state?").
+    pub fn has_carried_state(&self) -> bool {
+        self.outstanding > 0
+            || self.outstanding_writes > 0
+            || !self.staged.is_empty()
+            || self
+                .entries
+                .iter()
+                .enumerate()
+                .any(|(i, e)| e.wrap && self.evicted[i] && !self.restored[i])
+    }
+
+    /// Disable cross-iteration pipelining: `end_iteration` drains wrap
+    /// transfers like everything else and the pump never issues their
+    /// fetches, so every boundary restore runs inline at its due EO
+    /// (accrued as `boundary_stall_ns`). Bitwise identical either way —
+    /// the switch exists so benches can show what the pipeline takes off
+    /// the boundary. Flip only at a quiescent point (before the first
+    /// iteration, or after [`SwapExec::quiesce`]).
+    pub fn set_boundary_drain(&mut self, on: bool) {
+        self.boundary_drain = on;
+    }
+
+    pub fn boundary_drain(&self) -> bool {
+        self.boundary_drain
+    }
+
     /// Epoch-boundary depth adaptation (Calibrated): while stall time
     /// keeps accruing, double the in-flight fetch budget, up to one
     /// fetch per entry. No-op under Fixed tuning.
@@ -920,16 +1275,41 @@ impl SwapExec {
     /// Record an epoch boundary: snapshot the cumulative counters so
     /// per-epoch deltas stay recoverable. The shared training loop
     /// (`session::run_training`) and the bench harness call this right
-    /// before `adapt_depth` at every epoch boundary.
+    /// before `adapt_depth` at every epoch boundary. The snapshots live
+    /// in a bounded ring ([`EPOCH_MARK_CAP`] by default): past the cap
+    /// the oldest mark is dropped into the delta base, so a fleet
+    /// session marking thousands of epochs holds a bounded trajectory
+    /// instead of growing without limit.
     pub fn mark_epoch(&mut self) {
-        self.epoch_marks.push(self.stats);
+        self.epoch_marks.push_back(self.stats);
+        while self.epoch_marks.len() > self.epoch_mark_cap {
+            self.epoch_base = self.epoch_marks.pop_front().unwrap();
+        }
     }
 
-    /// Per-epoch [`SwapStats`] deltas, one entry per `mark_epoch` call —
-    /// the trajectory view of the counters (a regression confined to a
-    /// late epoch is invisible in whole-run totals dominated by warmup).
+    /// Change the epoch-mark ring capacity (minimum 1). Shrinking below
+    /// the current length drops the oldest marks into the delta base
+    /// immediately, exactly as if they had aged out.
+    pub fn set_epoch_mark_cap(&mut self, cap: usize) {
+        self.epoch_mark_cap = cap.max(1);
+        while self.epoch_marks.len() > self.epoch_mark_cap {
+            self.epoch_base = self.epoch_marks.pop_front().unwrap();
+        }
+    }
+
+    pub fn epoch_mark_cap(&self) -> usize {
+        self.epoch_mark_cap
+    }
+
+    /// Per-epoch [`SwapStats`] deltas, one entry per *retained*
+    /// `mark_epoch` call — the trajectory view of the counters (a
+    /// regression confined to a late epoch is invisible in whole-run
+    /// totals dominated by warmup). After the ring wraps, the window
+    /// covers the most recent [`SwapExec::epoch_mark_cap`] epochs and
+    /// the oldest retained delta is taken against the last dropped mark,
+    /// so every delta stays a true single-epoch difference.
     pub fn epoch_stats(&self) -> Vec<SwapStats> {
-        let mut prev = SwapStats::default();
+        let mut prev = self.epoch_base;
         let mut out = Vec::with_capacity(self.epoch_marks.len());
         for mark in &self.epoch_marks {
             out.push(mark.delta(&prev));
@@ -959,6 +1339,24 @@ impl SwapExec {
         self.entries[entry].reclaim_eo
     }
 
+    /// A wrap entry's schedule-head write barrier EO — `u32::MAX` when
+    /// no head tenant exists or the entry does not wrap (diagnostics,
+    /// tests).
+    pub fn head_reclaim_eo_of(&self, entry: usize) -> u32 {
+        self.entries[entry].head_reclaim_eo
+    }
+
+    /// Whether an entry's gap wraps the iteration boundary
+    /// (diagnostics, tests).
+    pub fn is_wrap(&self, entry: usize) -> bool {
+        self.entries[entry].wrap
+    }
+
+    /// Number of boundary (wrap) entries in the schedule.
+    pub fn n_wrap_entries(&self) -> usize {
+        self.entries.iter().filter(|e| e.wrap).count()
+    }
+
     /// An entry's observed fetch EWMA, ns (0 until a background fetch
     /// completed; diagnostics, tests).
     pub fn observed_fetch_ns(&self, entry: usize) -> f64 {
@@ -984,6 +1382,9 @@ impl SwapExec {
         match done {
             Done::Fetch(i, res, ns) => {
                 self.outstanding -= 1;
+                if self.entries[i].wrap {
+                    self.wrap_fetches_inflight -= 1;
+                }
                 ewma_update(&mut self.fetch_observed_ns[i], ns as f64, self.ewma_alpha);
                 match res {
                     Ok(data) => {
@@ -996,6 +1397,9 @@ impl SwapExec {
             }
             Done::Write(i, res, ns) => {
                 self.outstanding_writes -= 1;
+                if self.entries[i].wrap {
+                    self.wrap_writes_inflight -= 1;
+                }
                 ewma_update(&mut self.evict_observed_ns[i], ns as f64, self.ewma_alpha);
                 self.evict_done[i] = true;
                 match res {
@@ -1036,13 +1440,23 @@ impl SwapExec {
             // eviction strand it in the store and the next iteration
             // would silently train on the gap tenant's leftovers; fail
             // loudly instead (regression: schedule-head gap-1 edge).
+            // A wrap entry's eviction EO is always at or past its
+            // restore barrier's EO (the gap wraps), so for it this arm
+            // fires whenever `begin_iteration`'s priming was bypassed —
+            // its head window may already belong to a tenant, and the
+            // shortcut below would hand those bytes to compute.
             if let Some(eo) = at_eo {
                 if self.entries[idx].evict_after >= eo {
                     let e = &self.entries[idx];
+                    let cause = if e.wrap {
+                        "the boundary cycle was not primed at iteration start"
+                    } else {
+                        "lead swallows the gap"
+                    };
                     return Err(Error::Runtime(format!(
                         "swap schedule inconsistent: prefetch barrier for `{}` fired at \
-                         EO {eo} before its eviction at EO {} — lead {} swallows the \
-                         gap ({}, {})",
+                         EO {eo} before its eviction at EO {} — {cause} (lead {}, gap \
+                         ({}, {}))",
                         e.name, e.evict_after, e.lead, e.evict_after, e.prefetch_before
                     )));
                 }
@@ -1080,7 +1494,11 @@ impl SwapExec {
                 if let Some(data) = self.staged.remove(&idx) {
                     pool.reacquire(self.entries[idx].region, &data);
                     let _ = self.recycle_tx.send(data);
-                    self.stats.read_stall_ns += t0.elapsed().as_nanos() as u64;
+                    let ns = t0.elapsed().as_nanos() as u64;
+                    self.stats.read_stall_ns += ns;
+                    if self.entries[idx].wrap {
+                        self.stats.boundary_stall_ns += ns;
+                    }
                     break;
                 }
                 match self.done_rx.recv() {
@@ -1107,12 +1525,24 @@ impl SwapExec {
             self.store.lock().unwrap().get(idx, &mut self.inline_buf)?;
             pool.reacquire(region, &self.inline_buf);
             self.stats.sync_fetches += 1;
-            self.stats.read_stall_ns += t0.elapsed().as_nanos() as u64;
+            let ns = t0.elapsed().as_nanos() as u64;
+            self.stats.read_stall_ns += ns;
+            if self.entries[idx].wrap {
+                self.stats.boundary_stall_ns += ns;
+            }
         }
         self.restored[idx] = true;
         self.residency.insert(self.entries[idx].tensor, Residency::Resident);
         self.stats.prefetches += 1;
         self.stats.bytes_in += (self.entries[idx].region.len * 4) as u64;
+        if self.entries[idx].wrap {
+            // the carried boundary cycle is complete — reset the
+            // eviction flags so this iteration's own eviction at
+            // `evict_after` starts a fresh cycle
+            self.evicted[idx] = false;
+            self.evict_done[idx] = false;
+            self.issued[idx] = false;
+        }
         self.pump_issues();
         Ok(())
     }
@@ -1124,27 +1554,60 @@ impl SwapExec {
     }
 
     /// Issue background fetches in barrier-deadline (`due`) order, up to
-    /// the current depth in flight. An entry whose eviction write has
-    /// not landed blocks the queue — its store slot may not exist yet,
-    /// and issuing later-deadline entries first would let a slow fetch
-    /// starve an earlier barrier.
+    /// the current depth in flight.
+    ///
+    /// An entry whose eviction write has not landed is not yet issuable
+    /// — its store slot may not exist. It used to block the whole queue
+    /// (head-of-line): one slow eviction write starved every
+    /// later-deadline entry of its background fetch, turning them into
+    /// inline sync fetches. Instead the pump *skips over* such entries,
+    /// bounded by the in-flight depth (never more than `depth` pending
+    /// entries deep), and never reorders two *issuable* entries — the
+    /// scan stays in deadline order, so ready fetches still issue
+    /// earliest-barrier first. The cursor itself only advances past
+    /// consumed entries, so a skipped entry is re-examined on every
+    /// pump until it becomes issuable.
     fn pump_issues(&mut self) {
-        while self.outstanding < self.depth && self.issue_cursor < self.by_prefetch.len() {
-            let idx = self.by_prefetch[self.issue_cursor];
-            if self.restored[idx] || self.issued[idx] {
-                self.issue_cursor += 1;
+        let mut k = self.issue_cursor;
+        let mut pending_skipped = 0usize;
+        while self.outstanding < self.depth && k < self.by_prefetch.len() {
+            let idx = self.by_prefetch[k];
+            // consumed for this cycle: nothing left to issue here. A wrap
+            // entry whose eviction has not happened yet (data resident)
+            // is consumed too — its eviction rewinds the cursor — as is
+            // any wrap entry under the boundary drain, whose restore
+            // always runs inline at the sweep.
+            let consumed = self.restored[idx]
+                || self.issued[idx]
+                || (self.entries[idx].wrap && (self.boundary_drain || !self.evicted[idx]));
+            if consumed {
+                if k == self.issue_cursor {
+                    self.issue_cursor += 1;
+                }
+                k += 1;
                 continue;
             }
             if !self.evict_done[idx] || self.write_failed.contains_key(&idx) {
-                break;
+                pending_skipped += 1;
+                if pending_skipped >= self.depth {
+                    break;
+                }
+                k += 1;
+                continue;
             }
             if self.fetch_tx.send(Req::Fetch(idx)).is_err() {
                 break; // worker gone; the sync fallback will surface it
             }
             self.issued[idx] = true;
+            if self.entries[idx].wrap {
+                self.wrap_fetches_inflight += 1;
+            }
             self.residency.insert(self.entries[idx].tensor, Residency::Fetching);
             self.outstanding += 1;
-            self.issue_cursor += 1;
+            if k == self.issue_cursor {
+                self.issue_cursor += 1;
+            }
+            k += 1;
         }
     }
 
@@ -1226,6 +1689,7 @@ mod tests {
                 prefetch_before,
                 lead,
                 write_lead: WRITE_LEAD,
+                wrap: false,
             }],
             primary_peak_bytes: bytes,
             swap_bytes_per_iter: 2 * bytes,
@@ -1306,6 +1770,7 @@ mod tests {
             prefetch_before: 12, // due at EO 11 — later than a's despite earlier deadline
             lead: 1,
             write_lead: WRITE_LEAD,
+            wrap: false,
         });
         let sw = SwapExec::new(&t, &plan, Box::new(HostStore::new()), None).unwrap();
         assert_eq!(sw.entry_tensor_name(sw.by_prefetch[0]), "a");
@@ -1337,5 +1802,38 @@ mod tests {
         t.get_mut(1).region = Some(Region { offset: 8, len: 8 });
         let sw = SwapExec::new(&t, &plan_one(0, 10, 1, 32), Box::new(HostStore::new()), None).unwrap();
         assert_eq!(sw.reclaim_eo_of(0), u32::MAX);
+    }
+
+    /// Regression (unbounded epoch marks): `mark_epoch` used to push
+    /// forever — a fleet session running thousands of epochs leaked a
+    /// snapshot per epoch. The ring caps retention, and the per-epoch
+    /// deltas stay correct across the wrap: the oldest retained delta is
+    /// taken against the last *dropped* mark, not zero.
+    #[test]
+    fn epoch_marks_are_ring_capped_with_correct_deltas() {
+        let t = table_one(&[0, 10], 16);
+        let mut sw =
+            SwapExec::new(&t, &plan_one(0, 10, 1, 64), Box::new(HostStore::new()), None).unwrap();
+        sw.set_epoch_mark_cap(4);
+        for i in 1..=10u64 {
+            // monotone counter: epoch i ends with `prefetches == i²`
+            sw.stats.prefetches = i * i;
+            sw.mark_epoch();
+        }
+        let deltas = sw.epoch_stats();
+        assert_eq!(deltas.len(), 4, "ring keeps only the newest cap marks");
+        // epochs 7..=10 survive; delta of epoch i is i² − (i−1)², even
+        // for the oldest retained one (its base is the dropped epoch 6)
+        let expect: Vec<u64> = (7..=10u64).map(|i| i * i - (i - 1) * (i - 1)).collect();
+        let got: Vec<u64> = deltas.iter().map(|d| d.prefetches).collect();
+        assert_eq!(got, expect);
+
+        // shrinking the cap drops the oldest marks immediately, keeping
+        // the base in sync
+        sw.set_epoch_mark_cap(2);
+        let deltas = sw.epoch_stats();
+        assert_eq!(deltas.len(), 2);
+        let got: Vec<u64> = deltas.iter().map(|d| d.prefetches).collect();
+        assert_eq!(got, vec![81 - 64, 100 - 81], "base moved to epoch 8's mark");
     }
 }

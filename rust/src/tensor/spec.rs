@@ -85,6 +85,16 @@ pub struct TensorSpec {
     pub region: Option<Region>,
     /// Weights of frozen (non-trainable) layers skip gradient allocation.
     pub trainable: bool,
+    /// True first/last access EOs under per-layer apply, for persistent
+    /// tensors whose recorded `eos` are a conservative full-iteration
+    /// bracket (`{0, eo_apply}`). A weight's real accesses span its
+    /// layer's forward EO through its layer's apply EO; optimizer state is
+    /// touched only at the apply. The gap from `last` across the iteration
+    /// boundary back to `first` is a genuine idle window the boundary
+    /// offload pass (`advise_boundary`) can spill across. `None` when the
+    /// true window is unknown (non-persistent tensors, or deferred-apply
+    /// graphs where the bracket is the truth).
+    pub boundary_window: Option<(u32, u32)>,
 }
 
 impl TensorSpec {
@@ -161,6 +171,7 @@ impl TensorTable {
             merged_into: None,
             region: None,
             trainable: true,
+            boundary_window: None,
         });
         self.by_name.insert(name, id);
         Ok(id)

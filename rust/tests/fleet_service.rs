@@ -314,3 +314,52 @@ fn depart_releases_parked_store_slots() {
     });
     assert!(fleet.tenant_head_state(fresh).is_err());
 }
+
+// ------------------------------------------------------ latency retention
+
+/// The step-latency log is a ring: a long-lived service records only the
+/// most recent `step_latency_cap` samples instead of growing without
+/// bound, and shrinking the cap drops the oldest samples immediately.
+#[test]
+fn step_latency_log_is_ring_capped() {
+    let (ckpt, in_len, lb_len) = vendor_checkpoint("latency");
+    let mut fleet = FleetService::build(
+        conv_net(),
+        OPT.0,
+        OPT.1,
+        frozen_spec(4, 2),
+        DeviceProfile::unconstrained(),
+        FleetConfig {
+            checkpoint: Some(ckpt.clone()),
+            ..FleetConfig::new(usize::MAX / 2, vec!["head".into()])
+        },
+    )
+    .unwrap();
+    fleet.set_step_latency_cap(5);
+    assert_eq!(fleet.step_latency_cap(), 5);
+    for seed in [1u64, 2] {
+        let d = tenant_samples(seed, 16, in_len, lb_len);
+        fleet.admit(TenantSpec {
+            seed,
+            epochs: 2,
+            make_producer: Box::new(move || Box::new(CachedProducer::new(d.clone()))),
+        });
+    }
+    let stats = fleet.run().unwrap();
+    let _ = std::fs::remove_file(&ckpt);
+    // 2 tenants x 2 epochs x 4 batches — far more steps than the cap
+    assert!(stats.steps > 5, "fixture should overflow the ring: {stats:?}");
+    assert_eq!(
+        fleet.step_latencies_ns().len(),
+        5,
+        "ring must retain exactly the cap"
+    );
+    assert!(fleet.step_latency_percentile(50.0) > 0);
+    assert!(
+        fleet.step_latency_percentile(99.0) >= fleet.step_latency_percentile(0.0)
+    );
+    // shrinking trims the oldest samples immediately
+    let tail = fleet.step_latencies_ns()[3..].to_vec();
+    fleet.set_step_latency_cap(2);
+    assert_eq!(fleet.step_latencies_ns(), tail);
+}

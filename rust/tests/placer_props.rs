@@ -13,6 +13,14 @@
 //!   in the middle, is bitwise identical to unswapped training (losses
 //!   every iteration, all weights at the end).
 //!
+//! Odd samples compile with cross-iteration swap pipelining
+//! (`swap_pipeline`): the plans then carry wrap entries, so all three
+//! contracts also cover the boundary geometry — wrap placement validity,
+//! peak nesting over wrap intervals, and bitwise equivalence while
+//! transfers carry across `end_iteration` (compaction quiesces them
+//! first; the run end drains via `quiesce_swap` before weights are
+//! read).
+//!
 //! Knobs: `NNTRAINER_STRESS_SEEDS` (comma-separated u64 seeds, default
 //! `20260731`) and `NNTRAINER_STRESS_SAMPLES` (topologies per seed,
 //! default 6) — the same contract as the swap-stress suite, so the CI
@@ -200,6 +208,7 @@ fn placed_peak(
     batch: usize,
     budget: usize,
     placer: PlannerKind,
+    pipeline: bool,
 ) -> usize {
     let m = compile(
         nodes,
@@ -207,6 +216,7 @@ fn placed_peak(
             batch,
             memory_budget_bytes: Some(budget),
             planner: placer,
+            swap_pipeline: pipeline,
             ..Default::default()
         },
     );
@@ -225,11 +235,16 @@ fn placer_peaks_are_ordered_on_stress_topologies() {
     let samples = env_samples();
     for &seed in &env_seeds() {
         for sample in 0..samples {
-            let ctx = format!("seed={seed} sample={sample}");
+            // odd samples plan boundary (wrap) entries too: the nesting
+            // must hold over their wrap-interval reservations as well
+            let pipeline = sample % 2 == 1;
+            let ctx = format!("seed={seed} sample={sample} pipeline={pipeline}");
             let (nodes, batch, budget) = sample_setup(seed, sample);
-            let ff = placed_peak(&ctx, nodes.clone(), batch, budget, PlannerKind::Sorting);
-            let bf = placed_peak(&ctx, nodes.clone(), batch, budget, PlannerKind::BestFit);
-            let sky = placed_peak(&ctx, nodes, batch, budget, PlannerKind::Skyline);
+            let ff =
+                placed_peak(&ctx, nodes.clone(), batch, budget, PlannerKind::Sorting, pipeline);
+            let bf =
+                placed_peak(&ctx, nodes.clone(), batch, budget, PlannerKind::BestFit, pipeline);
+            let sky = placed_peak(&ctx, nodes, batch, budget, PlannerKind::Skyline, pipeline);
             assert!(
                 sky <= bf,
                 "{ctx}: skyline peak {sky} exceeds best-fit {bf} — the portfolio \
@@ -254,8 +269,11 @@ fn run_equivalence_sample(
     sample: usize,
     placer: PlannerKind,
     store: StoreKind,
+    pipeline: bool,
 ) {
-    let ctx = format!("seed={seed} sample={sample} placer={placer:?} store={store:?}");
+    let ctx = format!(
+        "seed={seed} sample={sample} placer={placer:?} store={store:?} pipeline={pipeline}"
+    );
     let (nodes, batch, budget) = sample_setup(seed, sample);
 
     let mut base = compile(nodes.clone(), &CompileOpts { batch, ..Default::default() });
@@ -267,6 +285,7 @@ fn run_equivalence_sample(
             planner: placer,
             swap_store: store,
             pool_compaction: true,
+            swap_pipeline: pipeline,
             ..Default::default()
         },
     );
@@ -319,6 +338,15 @@ fn run_equivalence_sample(
         }
     }
 
+    // run end is a mandatory full-drain point: under pipelining the
+    // engine may still carry boundary transfers over weight regions
+    if pipeline {
+        swapped
+            .exec
+            .quiesce_swap()
+            .unwrap_or_else(|e| panic!("{ctx}: quiesce failed: {e}"));
+    }
+
     for w in base.exec.weight_names() {
         let a = base.exec.read_weight(&w).unwrap();
         let b = swapped.exec.read_weight(&w).unwrap();
@@ -345,7 +373,8 @@ fn training_is_bitwise_across_placers_stores_and_compaction() {
             // individual sample stays cheap
             let placer = placers[sample % placers.len()];
             let store = stores[(sample / placers.len() + sample) % stores.len()];
-            run_equivalence_sample(seed, sample, placer, store);
+            // odd samples additionally run the cross-iteration pipeline
+            run_equivalence_sample(seed, sample, placer, store, sample % 2 == 1);
         }
     }
 }

@@ -1,0 +1,473 @@
+//! Cross-iteration (boundary) swap pipeline suite:
+//!
+//! * a boundary restore whose address range is covered by a *carried*
+//!   in-flight eviction write must **wait** the write out (boundary
+//!   hazard), never corrupt either side — and the carried round trip is
+//!   bitwise;
+//! * a failing restore in the `end_iteration` sweep must propagate the
+//!   *original* store error after draining every transfer — the next
+//!   `begin_iteration` starts clean instead of masking it with "stale
+//!   transfers at iteration start";
+//! * a not-yet-writable entry at the head of the prefetch queue must
+//!   not starve later-deadline entries of their background fetches
+//!   (prefetch head-of-line blocking);
+//! * model-level: training with `swap_pipeline` on is bitwise identical
+//!   to the unswapped model, carries state across `end_iteration`, and
+//!   fully drains on `quiesce_swap`.
+
+use std::time::Duration;
+
+use nntrainer::compiler::CompileOpts;
+use nntrainer::graph::NodeDesc;
+use nntrainer::layers::Props;
+use nntrainer::model::{Model, ModelBuilder};
+use nntrainer::planner::offload::{advise, OffloadEntry, OffloadPlan, PREFETCH_DEPTH};
+use nntrainer::planner::MemoryPool;
+use nntrainer::rng::Rng;
+use nntrainer::runtime::{HostStore, SecondaryStore, SwapExec};
+use nntrainer::tensor::{
+    CreateMode, Initializer, Lifespan, Region, Residency, TensorDim, TensorRole, TensorTable,
+};
+
+/// Host store with per-key fault/latency injection: `put` sleeps
+/// `put_delay` for keys in `slow_put_keys`; `get` sleeps `get_delay`
+/// for keys in `slow_get_keys` and fails (once per charge) for keys
+/// with charges in `fail_gets`.
+#[derive(Default)]
+struct FaultStore {
+    inner: HostStore,
+    slow_put_keys: Vec<usize>,
+    put_delay: Duration,
+    slow_get_keys: Vec<usize>,
+    get_delay: Duration,
+    /// `(key, remaining failures)` — decremented per injected failure.
+    fail_gets: Vec<(usize, usize)>,
+}
+
+impl SecondaryStore for FaultStore {
+    fn kind(&self) -> &'static str {
+        "fault-host"
+    }
+    fn put(&mut self, key: usize, data: &[f32]) -> nntrainer::Result<()> {
+        if self.slow_put_keys.contains(&key) {
+            std::thread::sleep(self.put_delay);
+        }
+        self.inner.put(key, data)
+    }
+    fn get(&mut self, key: usize, out: &mut [f32]) -> nntrainer::Result<()> {
+        if let Some(slot) = self.fail_gets.iter_mut().find(|(k, n)| *k == key && *n > 0) {
+            slot.1 -= 1;
+            return Err(nntrainer::Error::Runtime(format!(
+                "injected get failure for slot {key}"
+            )));
+        }
+        if self.slow_get_keys.contains(&key) {
+            std::thread::sleep(self.get_delay);
+        }
+        self.inner.get(key, out)
+    }
+    fn free(&mut self, key: usize) {
+        self.inner.free(key);
+    }
+    fn slot_count(&self) -> usize {
+        self.inner.slot_count()
+    }
+}
+
+fn entry(tensor: usize, name: &str, bytes: usize, ea: u32, pb: u32, wrap: bool) -> OffloadEntry {
+    OffloadEntry {
+        tensor,
+        name: name.into(),
+        bytes,
+        evict_after: ea,
+        prefetch_before: pb,
+        lead: 1,
+        write_lead: 0,
+        wrap,
+    }
+}
+
+fn plan_of(entries: Vec<OffloadEntry>, peak: usize) -> OffloadPlan {
+    let swap_bytes = entries.iter().map(|e| 2 * e.bytes).sum();
+    OffloadPlan {
+        entries,
+        primary_peak_bytes: peak,
+        swap_bytes_per_iter: swap_bytes,
+        fits: true,
+        prefetch_depth: PREFETCH_DEPTH,
+    }
+}
+
+fn manual_tensor(
+    t: &mut TensorTable,
+    name: &str,
+    len: usize,
+    eos: &[u32],
+    region: Region,
+) -> usize {
+    let id = t
+        .request(name, TensorDim::vec(1, len), TensorRole::Weight, CreateMode::Create, Initializer::None)
+        .unwrap();
+    for &e in eos {
+        t.add_eo(id, e, Lifespan::FORWARD);
+    }
+    t.get_mut(id).region = Some(region);
+    id
+}
+
+fn drive_iteration(sw: &mut SwapExec, pool: &MemoryPool, last_eo: u32) {
+    sw.begin_iteration(true, pool).unwrap();
+    for eo in 0..=last_eo {
+        sw.pre_step(eo, pool).unwrap();
+        sw.post_step(eo, pool).unwrap();
+    }
+    sw.end_iteration(pool).unwrap();
+}
+
+// ------------------------------------------------- boundary write hazard
+
+/// Two wrap entries on overlapping address ranges: `a` lives late in the
+/// schedule (EOs 4..6, slow carried eviction write), `c` early (EOs
+/// 1..2, restore barrier at EO 0). Iteration N+1's restore of `c`
+/// reacquires addresses `a`'s *carried* iteration-N eviction write is
+/// still reading — the schedule-head write barrier must wait the write
+/// out (write stall accrues) and both tensors' bytes must round-trip
+/// bitwise.
+#[test]
+fn boundary_restore_waits_out_carried_overlapping_write() {
+    let len = 256usize;
+    let pool_len = 384usize;
+    let mut t = TensorTable::new();
+    // a: [0, 256) — carried eviction at EO 6 (schedule end), restore at 4
+    let a = manual_tensor(&mut t, "a", len, &[4, 6], Region { offset: 0, len });
+    // c: [128, 384) — evicted at EO 2, restore barrier at EO 0 (due)
+    let c = manual_tensor(&mut t, "c", len, &[1, 2], Region { offset: 128, len });
+    t.finish_orders();
+    let plan = plan_of(
+        vec![
+            entry(a, "a", len * 4, 6, 4, true), // key 0: slow put
+            entry(c, "c", len * 4, 2, 1, true), // key 1: fast
+        ],
+        pool_len * 4,
+    );
+    let store = FaultStore {
+        slow_put_keys: vec![0],
+        put_delay: Duration::from_millis(120),
+        ..Default::default()
+    };
+    let pool = MemoryPool::new(pool_len);
+    let mut sw = SwapExec::new(&t, &plan, Box::new(store), None).unwrap();
+    assert_eq!(sw.n_wrap_entries(), 2);
+    assert!(sw.is_wrap(0) && sw.is_wrap(1));
+    // a has a schedule-head tenant (c's restore at EO 0): the carried
+    // write's completion barrier sits at the very first step
+    assert_eq!(sw.head_reclaim_eo_of(0), 0);
+
+    let full = Region { offset: 0, len: pool_len };
+    let pattern: Vec<f32> = (0..pool_len).map(|i| (i as f32) * 0.25 - 11.5).collect();
+    pool.view_mut(full).copy_from_slice(&pattern);
+
+    // iteration N: both entries evict; a's write is slow and carries
+    drive_iteration(&mut sw, &pool, 6);
+    assert!(
+        sw.has_carried_state(),
+        "boundary evictions must carry across end_iteration"
+    );
+
+    // iteration N+1: the EO-0 write barrier covers a's in-flight write
+    sw.begin_iteration(true, &pool).unwrap();
+    let stall0 = sw.stats.write_stall_ns;
+    sw.pre_step(0, &pool).unwrap();
+    assert!(
+        sw.stats.write_stall_ns > stall0,
+        "restore over a carried in-flight write must wait it out, got {:?}",
+        sw.stats
+    );
+    // c is back, bitwise, despite the overlap with a's eviction
+    for (k, (x, y)) in pool.view(Region { offset: 128, len }).iter().zip(&pattern[128..]).enumerate()
+    {
+        assert_eq!(x.to_bits(), y.to_bits(), "c[{k}] corrupted: {x} vs {y}");
+    }
+    for eo in 0..=6 {
+        if eo > 0 {
+            sw.pre_step(eo, &pool).unwrap();
+        }
+        if eo == 3 {
+            // a's restore barrier (due = 4 - 1) has completed: its full
+            // range carries the original bytes
+            for (k, (x, y)) in
+                pool.view(Region { offset: 0, len }).iter().zip(&pattern[..len]).enumerate()
+            {
+                assert_eq!(x.to_bits(), y.to_bits(), "a[{k}] corrupted: {x} vs {y}");
+            }
+        }
+        sw.post_step(eo, &pool).unwrap();
+    }
+    sw.end_iteration(&pool).unwrap();
+    assert!(sw.has_carried_state());
+
+    // mandatory full drain: everything lands back in the pool
+    sw.quiesce(&pool).unwrap();
+    assert!(!sw.has_carried_state(), "quiesce must clear carried state");
+    for (k, (x, y)) in pool.view(full).iter().zip(&pattern).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "pool[{k}] after quiesce: {x} vs {y}");
+    }
+    assert!(sw.stats.boundary_stall_ns <= sw.stats.read_stall_ns);
+    // 6 each: the first begin_iteration primes both wrap entries (2
+    // evictions), each iteration evicts both (2×2), and every eviction
+    // is matched by a restore (2 per iteration + 2 at quiesce).
+    assert_eq!(sw.stats.evictions, 6);
+    assert_eq!(sw.stats.prefetches, 6);
+}
+
+// ------------------------------------- end_iteration error propagation
+
+/// A store failure surfacing in the `end_iteration` restore sweep used
+/// to return early with other transfers still in flight: the *next*
+/// `begin_iteration` then failed with "stale transfers at iteration
+/// start", masking the real error. The sweep must drain everything and
+/// propagate the original failure — and the engine must start the next
+/// iteration clean.
+#[test]
+fn end_iteration_failure_propagates_original_error_and_drains() {
+    let len = 64usize;
+    let mut t = TensorTable::new();
+    let a = manual_tensor(&mut t, "a", len, &[0, 6], Region { offset: 0, len });
+    let b = manual_tensor(&mut t, "b", len, &[1, 7], Region { offset: len, len });
+    t.finish_orders();
+    let plan = plan_of(
+        vec![entry(a, "a", len * 4, 0, 6, false), entry(b, "b", len * 4, 1, 7, false)],
+        2 * len * 4,
+    );
+    let store = FaultStore {
+        // a's first restore fails; b's restore is slow enough to still be
+        // in flight when the sweep hits a's error
+        fail_gets: vec![(0, 1)],
+        slow_get_keys: vec![1],
+        get_delay: Duration::from_millis(80),
+        ..Default::default()
+    };
+    let pool = MemoryPool::new(2 * len);
+    let mut sw = SwapExec::new(&t, &plan, Box::new(store), None).unwrap();
+
+    sw.begin_iteration(true, &pool).unwrap();
+    // partial pass: both entries evict, neither reaches its restore
+    // barrier — the end-of-iteration sweep does the restores
+    for eo in 0..=3 {
+        sw.pre_step(eo, &pool).unwrap();
+        sw.post_step(eo, &pool).unwrap();
+    }
+    let err = sw.end_iteration(&pool).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("injected get failure"),
+        "the original store error must propagate, got: {msg}"
+    );
+
+    // the regression: the engine drained everything before propagating,
+    // so the next iteration starts clean instead of erroring with
+    // "stale transfers at iteration start"
+    sw.begin_iteration(true, &pool)
+        .expect("begin_iteration after a drained end_iteration failure");
+    // and a full iteration now runs end-to-end (the injected failure was
+    // single-shot)
+    for eo in 0..=7 {
+        sw.pre_step(eo, &pool).unwrap();
+        sw.post_step(eo, &pool).unwrap();
+    }
+    sw.end_iteration(&pool).unwrap();
+}
+
+// ------------------------------------------- prefetch head-of-line fix
+
+/// A not-yet-writable entry at the head of the prefetch queue (its
+/// eviction still ahead, its store slot not yet written) used to block
+/// every later-deadline entry's background fetch — they all fell back
+/// to inline sync fetches at their barriers. The pump must skip over
+/// the unready head and issue the ready entry behind it.
+#[test]
+fn unready_queue_head_does_not_starve_later_fetches() {
+    let len = 64usize;
+    let mut t = TensorTable::new();
+    // e0 heads the queue (due 5) but evicts late (EO 2) with a slow
+    // write; e1 (due 7) evicts at EO 0 and its write lands immediately
+    let t0 = manual_tensor(&mut t, "t0", len, &[2, 6], Region { offset: 0, len });
+    let t1 = manual_tensor(&mut t, "t1", len, &[0, 8], Region { offset: len, len });
+    t.finish_orders();
+    let plan = plan_of(
+        vec![entry(t0, "t0", len * 4, 2, 6, false), entry(t1, "t1", len * 4, 0, 8, false)],
+        2 * len * 4,
+    );
+    let store = FaultStore {
+        slow_put_keys: vec![0],
+        put_delay: Duration::from_millis(100),
+        ..Default::default()
+    };
+    let pool = MemoryPool::new(2 * len);
+    let mut sw = SwapExec::new(&t, &plan, Box::new(store), None).unwrap();
+
+    sw.begin_iteration(true, &pool).unwrap();
+    sw.pre_step(0, &pool).unwrap();
+    sw.post_step(0, &pool).unwrap(); // e1 evicts; its write ticket lands fast
+    std::thread::sleep(Duration::from_millis(20));
+    sw.pre_step(1, &pool).unwrap();
+    sw.post_step(1, &pool).unwrap(); // drain observes e1's write; pump runs
+    assert_eq!(
+        sw.residency_of(t1),
+        Some(Residency::Fetching),
+        "the pump must skip the unready queue head and issue t1's fetch"
+    );
+    for eo in 2..=8 {
+        sw.pre_step(eo, &pool).unwrap();
+        sw.post_step(eo, &pool).unwrap();
+    }
+    sw.end_iteration(&pool).unwrap();
+    // only e0 (whose own write really was slow) fell back to an inline
+    // fetch at its barrier; pre-fix both did
+    assert_eq!(sw.stats.sync_fetches, 1, "{:?}", sw.stats);
+    assert!(
+        sw.observed_fetch_ns(1) > 0.0,
+        "t1's fetch must have completed in the background"
+    );
+    assert_eq!(sw.observed_fetch_ns(0), 0.0);
+}
+
+// -------------------------------------------- model-level equivalence
+
+fn conv_stack() -> Vec<NodeDesc> {
+    let node = |name: &str, ltype: &str, pairs: &[(&str, &str)]| {
+        NodeDesc::new(name, ltype, Props::from_pairs(pairs.iter().copied()))
+    };
+    vec![
+        node("in", "input", &[("input_shape", "4:12:12")]),
+        node("c0", "conv2d", &[("filters", "8"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("c1", "conv2d", &[("filters", "8"), ("kernel_size", "3"), ("padding", "same"), ("activation", "relu")]),
+        node("flat", "flatten", &[]),
+        node("fc", "fully_connected", &[("unit", "10")]),
+        node("loss", "mse", &[]),
+    ]
+}
+
+fn compile(batch: usize, budget: Option<usize>, pipeline: bool) -> Model {
+    ModelBuilder::new()
+        .add_nodes(conv_stack())
+        .optimizer("sgd", &[("learning_rate", "0.05")])
+        .compile(&CompileOpts {
+            batch,
+            memory_budget_bytes: budget,
+            swap_pipeline: pipeline,
+            ..Default::default()
+        })
+        .unwrap()
+}
+
+fn io_lens(m: &Model) -> (usize, usize) {
+    let in_len = m
+        .exec
+        .graph
+        .input_nodes
+        .iter()
+        .map(|&n| m.exec.graph.nodes[n].out_dims[0].feature_len())
+        .sum();
+    let lb_len = m
+        .exec
+        .graph
+        .loss_nodes
+        .iter()
+        .map(|&n| m.exec.graph.nodes[n].in_dims[0].feature_len())
+        .sum();
+    (in_len, lb_len)
+}
+
+/// The acceptance gate: training under a budget with cross-iteration
+/// pipelining on — persistent tensors streaming through the store
+/// across iteration boundaries — is bitwise identical to the unswapped
+/// model, while actually carrying transfers across `end_iteration`.
+#[test]
+fn pipelined_training_is_bitwise_identical_to_unswapped() {
+    let batch = 8usize;
+    let full = advise(&compile(batch, None, false).exec.graph.table, usize::MAX)
+        .primary_peak_bytes;
+    let mut base = compile(batch, None, false);
+    let mut piped = compile(batch, Some(full * 75 / 100), true);
+    assert!(
+        piped.exec.swap_n_wrap_entries().unwrap_or(0) > 0,
+        "swap_pipeline under per-layer apply must plan wrap entries"
+    );
+
+    let (in_len, lb_len) = io_lens(&base);
+    let mut rng = Rng::new(0xB0B0);
+    let mut input = vec![0f32; in_len * batch];
+    let mut label = vec![0f32; lb_len * batch];
+    let mut carried_seen = false;
+    for it in 0..4 {
+        rng.fill_uniform(&mut input, -1.0, 1.0);
+        rng.fill_uniform(&mut label, 0.0, 1.0);
+        base.bind_batch(&input, &label).unwrap();
+        piped.bind_batch(&input, &label).unwrap();
+        let l0 = base.exec.try_train_iteration().unwrap();
+        let l1 = piped.exec.try_train_iteration().unwrap();
+        assert_eq!(l0.to_bits(), l1.to_bits(), "iteration {it}: {l0} vs {l1}");
+        carried_seen |= piped
+            .exec
+            .swap_mut()
+            .map(|sw| sw.has_carried_state())
+            .unwrap_or(false);
+    }
+    assert!(
+        carried_seen,
+        "the pipeline never carried a boundary transfer across end_iteration"
+    );
+
+    // run end is a mandatory full-drain point: quiesce, then the pool is
+    // the source of truth for every weight
+    piped.exec.quiesce_swap().unwrap();
+    assert!(!piped.exec.swap_mut().unwrap().has_carried_state());
+    for w in base.exec.weight_names() {
+        let x = base.exec.read_weight(&w).unwrap();
+        let y = piped.exec.read_weight(&w).unwrap();
+        for (k, (p, q)) in x.iter().zip(y.iter()).enumerate() {
+            assert_eq!(p.to_bits(), q.to_bits(), "{w}[{k}]: {p} vs {q}");
+        }
+    }
+}
+
+/// The drained-boundary baseline (`set_boundary_drain`) is bitwise
+/// identical too — it only moves *when* the boundary copies happen (the
+/// switch the bench's pipelined-vs-drained rows rely on).
+#[test]
+fn boundary_drain_mode_is_bitwise_identical() {
+    let batch = 8usize;
+    let full = advise(&compile(batch, None, false).exec.graph.table, usize::MAX)
+        .primary_peak_bytes;
+    let budget = Some(full * 75 / 100);
+    let mut piped = compile(batch, budget, true);
+    let mut drained = compile(batch, budget, true);
+    drained.exec.swap_mut().unwrap().set_boundary_drain(true);
+
+    let (in_len, lb_len) = io_lens(&piped);
+    let mut rng = Rng::new(0xD1CE);
+    let mut input = vec![0f32; in_len * batch];
+    let mut label = vec![0f32; lb_len * batch];
+    for it in 0..3 {
+        rng.fill_uniform(&mut input, -1.0, 1.0);
+        rng.fill_uniform(&mut label, 0.0, 1.0);
+        piped.bind_batch(&input, &label).unwrap();
+        drained.bind_batch(&input, &label).unwrap();
+        let l0 = piped.exec.try_train_iteration().unwrap();
+        let l1 = drained.exec.try_train_iteration().unwrap();
+        assert_eq!(l0.to_bits(), l1.to_bits(), "iteration {it}: {l0} vs {l1}");
+    }
+    assert!(
+        !drained.exec.swap_mut().unwrap().has_carried_state(),
+        "the drained baseline must not carry state across end_iteration"
+    );
+    piped.exec.quiesce_swap().unwrap();
+    for w in piped.exec.weight_names() {
+        let x = piped.exec.read_weight(&w).unwrap();
+        let y = drained.exec.read_weight(&w).unwrap();
+        for (k, (p, q)) in x.iter().zip(y.iter()).enumerate() {
+            assert_eq!(p.to_bits(), q.to_bits(), "{w}[{k}]: {p} vs {q}");
+        }
+    }
+}

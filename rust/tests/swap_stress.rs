@@ -14,12 +14,16 @@
 //! context so a CI failure pins the exact topology. The seed matrix and
 //! store set are environment-tunable for the CI stress job:
 //!
-//! * `NNTRAINER_STRESS_SEEDS`   — comma-separated u64 seeds
+//! * `NNTRAINER_STRESS_SEEDS`    — comma-separated u64 seeds
 //!   (default `20260731`)
-//! * `NNTRAINER_STRESS_STORE`   — `host`, `file`, `file-compressed`,
+//! * `NNTRAINER_STRESS_STORE`    — `host`, `file`, `file-compressed`,
 //!   `both` (host+file, the default) or `all` (adds the compressed
 //!   store)
-//! * `NNTRAINER_STRESS_SAMPLES` — topologies per seed (default 6)
+//! * `NNTRAINER_STRESS_SAMPLES`  — topologies per seed (default 6)
+//! * `NNTRAINER_STRESS_PIPELINE` — `on`, `off` or `mixed` (default):
+//!   whether samples compile with cross-iteration swap pipelining
+//!   (`swap_pipeline`, wrap entries carried across `end_iteration`);
+//!   `mixed` alternates it across samples so one run covers both
 
 use nntrainer::compiler::CompileOpts;
 use nntrainer::graph::NodeDesc;
@@ -155,8 +159,9 @@ fn feat_lens(m: &Model) -> (usize, usize) {
 /// One stress sample: generate a topology, train it unswapped and under
 /// a random tight budget with identical data, and hold the bitwise +
 /// plan-validity contract.
-fn run_sample(seed: u64, sample: usize, store: StoreKind, tuning: SwapTuning) {
-    let ctx = format!("seed={seed} sample={sample} store={store:?} tuning={tuning:?}");
+fn run_sample(seed: u64, sample: usize, store: StoreKind, tuning: SwapTuning, pipeline: bool) {
+    let ctx =
+        format!("seed={seed} sample={sample} store={store:?} tuning={tuning:?} pipeline={pipeline}");
     let mut rng = Rng::new(seed ^ (sample as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
     let nodes = gen_model(&mut rng);
     let batch = [4usize, 8][rng.below(2)];
@@ -175,6 +180,7 @@ fn run_sample(seed: u64, sample: usize, store: StoreKind, tuning: SwapTuning) {
             memory_budget_bytes: Some(budget),
             swap_store: store,
             swap_tuning: tuning,
+            swap_pipeline: pipeline,
             ..Default::default()
         },
     );
@@ -207,6 +213,15 @@ fn run_sample(seed: u64, sample: usize, store: StoreKind, tuning: SwapTuning) {
         );
     }
 
+    // run end is a mandatory full-drain point: under pipelining the
+    // engine may still carry boundary transfers over weight regions
+    if pipeline {
+        swapped
+            .exec
+            .quiesce_swap()
+            .unwrap_or_else(|e| panic!("{ctx}: quiesce failed: {e}"));
+    }
+
     for w in base.exec.weight_names() {
         let a = base.exec.read_weight(&w).unwrap();
         let b = swapped.exec.read_weight(&w).unwrap();
@@ -230,9 +245,20 @@ fn run_sample(seed: u64, sample: usize, store: StoreKind, tuning: SwapTuning) {
             stats.bytes_out, stats.bytes_in,
             "{ctx}: swap traffic asymmetric: {stats:?}"
         );
+        // Each wrap entry pays one extra one-way trip on top of the
+        // per-iteration cycle: the first `begin_iteration` primes it out
+        // (eviction), and `quiesce_swap` restores the carried copy after
+        // the last iteration (prefetch). Non-pipelined plans have no
+        // wrap entries, so this reduces to the old exact formula.
+        let wrap_oneway: u64 = plan
+            .entries
+            .iter()
+            .filter(|e| e.wrap)
+            .map(|e| e.bytes as u64)
+            .sum();
         assert_eq!(
             stats.bytes_out,
-            iters as u64 * (plan.swap_bytes_per_iter / 2) as u64,
+            iters as u64 * (plan.swap_bytes_per_iter / 2) as u64 + wrap_oneway,
             "{ctx}: traffic does not match the advised per-iteration swap bytes"
         );
     }
@@ -281,6 +307,39 @@ fn env_stores() -> Vec<StoreKind> {
     }
 }
 
+/// Per-sample pipelining: forced on/off, or alternating across samples.
+#[derive(Clone, Copy)]
+enum PipelineMode {
+    On,
+    Off,
+    Mixed,
+}
+
+impl PipelineMode {
+    fn for_sample(self, sample: usize) -> bool {
+        match self {
+            PipelineMode::On => true,
+            PipelineMode::Off => false,
+            // pair with the tuning alternation (sample % 2) so four
+            // consecutive samples cover the full tuning x pipeline cross
+            PipelineMode::Mixed => (sample / 2) % 2 == 1,
+        }
+    }
+}
+
+fn env_pipeline() -> PipelineMode {
+    match std::env::var("NNTRAINER_STRESS_PIPELINE") {
+        Ok(v) => match v.trim() {
+            "on" | "1" => PipelineMode::On,
+            "off" | "0" => PipelineMode::Off,
+            "mixed" => PipelineMode::Mixed,
+            other => panic!("NNTRAINER_STRESS_PIPELINE={other:?} (use on|off|mixed)"),
+        },
+        Err(std::env::VarError::NotPresent) => PipelineMode::Mixed,
+        Err(e) => panic!("NNTRAINER_STRESS_PIPELINE is set but unreadable: {e}"),
+    }
+}
+
 fn env_samples() -> usize {
     match std::env::var("NNTRAINER_STRESS_SAMPLES") {
         Ok(v) => match v.trim().parse::<usize>() {
@@ -296,12 +355,13 @@ fn env_samples() -> usize {
 #[test]
 fn randomized_topology_swap_equivalence() {
     let samples = env_samples();
+    let pipeline_mode = env_pipeline();
     for &seed in &env_seeds() {
         for &store in &env_stores() {
             for sample in 0..samples {
                 // alternate tunings so both engines cover every family
                 let tuning = if sample % 2 == 0 { SwapTuning::Fixed } else { SwapTuning::Calibrated };
-                run_sample(seed, sample, store, tuning);
+                run_sample(seed, sample, store, tuning, pipeline_mode.for_sample(sample));
             }
         }
     }

@@ -84,6 +84,7 @@ fn shared_range_setup() -> (TensorTable, OffloadPlan, Region) {
             prefetch_before: 6,
             lead: 1,
             write_lead: 0,
+            wrap: false,
         }],
         primary_peak_bytes: len * 4,
         swap_bytes_per_iter: 2 * len * 4,
@@ -114,7 +115,7 @@ fn reclaimed_gap_blocks_until_write_lands() {
     let pattern: Vec<f32> = (0..region.len).map(|i| (i as f32) * 0.5 - 7.25).collect();
     pool.view_mut(region).copy_from_slice(&pattern);
 
-    sw.begin_iteration(true).unwrap();
+    sw.begin_iteration(true, &pool).unwrap();
     sw.pre_step(0, &pool).unwrap();
     sw.check_residency(0).unwrap();
     sw.post_step(0, &pool).unwrap(); // ticket issued, write in flight
@@ -169,7 +170,7 @@ fn mid_iteration_drop_joins_and_frees_slots() {
     .unwrap();
     let store: Arc<Mutex<Box<dyn SecondaryStore>>> = sw.store_handle();
     let mut sw = sw;
-    sw.begin_iteration(true).unwrap();
+    sw.begin_iteration(true, &pool).unwrap();
     sw.pre_step(0, &pool).unwrap();
     sw.post_step(0, &pool).unwrap(); // write in flight
     drop(sw); // must not deadlock; joins both workers
